@@ -1,0 +1,17 @@
+use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
+use gcn_noc::util::rng::SplitMix64;
+use std::time::Instant;
+fn main() {
+    let mut rng = SplitMix64::new(1);
+    let waves: Vec<MulticastRequest> = (0..2000).map(|_| {
+        let mut s = Vec::new();
+        for _ in 0..4 { s.extend(rng.permutation(16).iter().map(|&x| x as u8)); }
+        let d: Vec<u8> = (0..64).map(|_| rng.gen_range(16) as u8).collect();
+        MulticastRequest::new(s, d)
+    }).collect();
+    for _ in 0..2 { for w in &waves { std::hint::black_box(route_parallel_multicast(w, &mut rng).unwrap()); } }
+    let t0 = Instant::now();
+    for w in &waves { std::hint::black_box(route_parallel_multicast(w, &mut rng).unwrap()); }
+    let dt = t0.elapsed().as_secs_f64() / waves.len() as f64;
+    println!("route only: {:.2} us/wave ({:.0} waves/s)", dt*1e6, 1.0/dt);
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the five-minute tour of the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! 1. generate a small labeled graph,
+//! 2. route one multicast wave over the 4-D hypercube (Algorithm 1),
+//! 3. run one PJRT training step through the AOT-compiled GCN artifact,
+//! 4. ask the sequence estimator which Table-1 ordering to use.
+
+use gcn_noc::config::artifact_dir;
+use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
+use gcn_noc::graph::datasets::by_name;
+use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A Flickr-statistics synthetic graph, 2k nodes.
+    let mut rng = SplitMix64::new(42);
+    let spec = by_name("Flickr").unwrap();
+    let graph = spec.instantiate(2048, &mut rng);
+    println!(
+        "graph: {} nodes, {} directed edges, {} classes",
+        graph.num_nodes(),
+        graph.num_edges(),
+        graph.num_classes
+    );
+
+    // 2. One multicast wave: 16 messages, random destinations.
+    let sources: Vec<u8> = rng.permutation(16).iter().map(|&x| x as u8).collect();
+    let dests: Vec<u8> = (0..16).map(|_| rng.gen_range(16) as u8).collect();
+    let req = MulticastRequest::new(sources, dests);
+    let out = route_parallel_multicast(&req, &mut rng)?;
+    println!(
+        "routed 16 messages over the hypercube in {} cycles ({} stalls)",
+        out.table.total_cycles(),
+        out.table.total_stalls()
+    );
+
+    // 3. A short PJRT-backed training run (the full three-layer stack).
+    let cfg = TrainerConfig { steps: 20, log_every: 5, ..Default::default() };
+    let mut trainer = Trainer::new(&graph, cfg, artifact_dir(None))?;
+    let curve = trainer.train()?;
+    let (head, tail) = curve.head_tail_means(5);
+    println!("loss: {head:.3} -> {tail:.3} over {} steps", curve.len());
+
+    // 4. Which ordering would the controller program for this shape?
+    let est = SequenceEstimator::new(ShapeParams {
+        b: 1024, n: 11_000, nbar: 40_000, d: 500, h: 256, c: 7, e: 110_000,
+    });
+    println!(
+        "sequence estimator: {} (CoAg total {} ops vs Ours-CoAg {} ops)",
+        est.best_ours().name(),
+        est.time(Ordering::CoAg).total(),
+        est.time(Ordering::OursCoAg).total()
+    );
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT compiler: lower every model variant to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts and their I/O contracts are recorded in ``manifest.txt`` — a
+line-oriented ``key=value`` format the Rust runtime parses without a JSON
+dependency.  Input order is part of the contract:
+
+- ``gcn_train``:  x a1 a2 w1 w2 yhot row_mask nvalid lr → w1' w2' loss
+- ``gcn_eval``:   x a1 a2 w1 w2 yhot row_mask nvalid    → loss correct
+- ``sage_train``: x a1 a2 ws1 wn1 ws2 wn2 yhot row_mask nvalid lr
+                  → ws1' wn1' ws2' wn2' loss
+- ``layer``:      a x w e → z dx dw   (Table-1 single-layer orderings)
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import dataflows, model
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue
+# ---------------------------------------------------------------------------
+
+# (name, b, n1, n2, d, h, c) — shapes per DESIGN.md §5.
+GCN_CONFIGS = [
+    ("small", 64, 256, 1024, 64, 32, 8),
+    ("base", 128, 512, 2048, 256, 256, 64),
+]
+SAGE_CONFIGS = [
+    ("small", 64, 256, 1024, 64, 32, 8),
+]
+# Table-1 layer bench shapes: n dst, n̄ src, d in, h out.
+LAYER_SHAPE = (512, 1024, 128, 64)
+
+
+def build_catalogue():
+    """Yield (name, lowered_fn_thunk, manifest_fields) for every artifact."""
+    entries = []
+
+    for tag, b, n1, n2, d, h, c in GCN_CONFIGS:
+        for ordering in ("coag", "agco"):
+            name = f"gcn2_train_step_{tag}_{ordering}"
+            fn = functools.partial(model.gcn2_train_step, ordering=ordering)
+            args = (
+                spec(n2, d), spec(n1, n2), spec(b, n1),   # x a1 a2
+                spec(d, h), spec(h, c),                   # w1 w2
+                spec(b, c), spec(b), spec(), spec(),      # yhot mask nvalid lr
+            )
+            fields = dict(
+                kind="gcn_train", ordering=ordering,
+                b=b, n1=n1, n2=n2, d=d, h=h, c=c,
+            )
+            entries.append((name, fn, args, fields))
+
+        # Momentum variant (small tag only — extension feature).
+        if tag == "small":
+            name = f"gcn2_train_step_{tag}_mom"
+            fn = functools.partial(model.gcn2_train_step_momentum, ordering="coag")
+            args = (
+                spec(n2, d), spec(n1, n2), spec(b, n1),
+                spec(d, h), spec(h, c), spec(d, h), spec(h, c),  # w1 w2 v1 v2
+                spec(b, c), spec(b), spec(), spec(), spec(),     # + lr mu
+            )
+            entries.append((
+                name, fn, args,
+                dict(kind="gcn_train_mom", ordering="coag",
+                     b=b, n1=n1, n2=n2, d=d, h=h, c=c),
+            ))
+
+        name = f"gcn2_eval_{tag}"
+        args = (
+            spec(n2, d), spec(n1, n2), spec(b, n1),
+            spec(d, h), spec(h, c),
+            spec(b, c), spec(b), spec(),
+        )
+        entries.append((
+            name, model.gcn2_eval, args,
+            dict(kind="gcn_eval", ordering="coag",
+                 b=b, n1=n1, n2=n2, d=d, h=h, c=c),
+        ))
+
+    for tag, b, n1, n2, d, h, c in SAGE_CONFIGS:
+        name = f"sage2_train_step_{tag}"
+        args = (
+            spec(n2, d), spec(n1, n2), spec(b, n1),
+            spec(d, h), spec(d, h), spec(h, c), spec(h, c),
+            spec(b, c), spec(b), spec(), spec(),
+        )
+        entries.append((
+            name, model.sage2_train_step, args,
+            dict(kind="sage_train", ordering="agco",
+                 b=b, n1=n1, n2=n2, d=d, h=h, c=c),
+        ))
+
+    n, nbar, d, h = LAYER_SHAPE
+    for row, fn in dataflows.LAYER_ORDERINGS.items():
+        name = f"layer_{row}"
+        args = (spec(n, nbar), spec(nbar, d), spec(d, h), spec(n, h))
+        entries.append((
+            name, fn, args,
+            dict(kind="layer", ordering=row, b=0, n1=n, n2=nbar, d=d, h=h, c=0),
+        ))
+
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="artifact output directory")
+    parser.add_argument("--only", default=None,
+                        help="comma-separated artifact-name filter (testing)")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest_lines = []
+    for name, fn, arg_specs, fields in build_catalogue():
+        if only is not None and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        kv = " ".join(f"{k}={v}" for k, v in fields.items())
+        manifest_lines.append(f"artifact {name} {kv} file={name}.hlo.txt")
+        print(f"  {name}: {len(text)} chars")
+
+    if only is None:
+        with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+            f.write("# generated by python -m compile.aot — do not edit\n")
+            f.write("\n".join(manifest_lines) + "\n")
+        print(f"wrote {len(manifest_lines)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Single-GCN-layer dataflows — the four execution orderings of Table 1.
+
+The paper's Table 1 compares forward/backward/gradient orderings:
+
+==========  =============  ======================  ===================
+row         forward        backward                gradient
+==========  =============  ======================  ===================
+CoAg        ``A(XW)``      ``(AᵀE)Wᵀ``             ``Xᵀ(AᵀE)``
+AgCo        ``(AX)W``      ``Aᵀ(EWᵀ)``             ``(AX)ᵀE``
+Ours-CoAg   ``A(XW)``      ``W(EᵀA)``              ``(EᵀA)X``
+Ours-AgCo   ``(AX)W``      ``(WEᵀ)A``              ``Eᵀ(AX)``
+==========  =============  ======================  ===================
+
+The two *Ours* rows carry the error **transposed** through the whole
+backward pass: the only transposes left are the loss-layer error
+(``O(bc)``) and the weights (``O(hd)``) — never the large ``Xᵀ`` (CoAg,
+``O(n̄d)``) or ``(AX)ᵀ`` (AgCo, ``O(nd)``) materializations, and never
+``Aᵀ`` (the Rust Graph Converter's column-major reordering job, ``O(n̄e)``).
+
+All four rows are numerically identical (tests assert this and check them
+against ``jax.grad``); what differs is which matrices must be materialized
+— exactly the storage/time complexities the Rust
+``coordinator::sequence_estimator`` reproduces analytically.
+
+Shapes (Table 1 notation): ``A ∈ R[n, n̄]`` aggregates the n̄ source nodes
+into n destination nodes, ``X ∈ R[n̄, d]``, ``W ∈ R[d, h]``, upstream error
+``E ∈ R[n, h]``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import mac_gemm, spmm_agg
+
+# ---------------------------------------------------------------------------
+# Forward orderings
+# ---------------------------------------------------------------------------
+
+
+def fwd_coag(a, x, w):
+    """Combination→aggregation: ``A (X W)``."""
+    return spmm_agg(a, mac_gemm(x, w))
+
+
+def fwd_agco(a, x, w):
+    """Aggregation→combination: ``(A X) W``."""
+    return mac_gemm(spmm_agg(a, x), w)
+
+
+# ---------------------------------------------------------------------------
+# Backward + gradient per Table-1 row.
+# Each returns (dx, dw) given the upstream error e = ∂L/∂Z, Z = fwd(a, x, w).
+# Baseline rows consume/materialize the transposed large matrices; "ours"
+# rows return *transposed* (dxt, dwt) without them.
+# ---------------------------------------------------------------------------
+
+
+def bwd_coag(a, x, w, e):
+    """Baseline CoAg backward: needs Aᵀ, Wᵀ and the stored Xᵀ."""
+    at = jnp.transpose(a)          # Graph Converter column-major pass, O(n̄e)
+    xt = jnp.transpose(x)          # the SFBP Xᵀ the paper stores in HBM, O(n̄d)
+    ae = spmm_agg(at, e)           # AᵀE            [n̄, h]
+    dx = mac_gemm(ae, jnp.transpose(w))   # (AᵀE)Wᵀ  [n̄, d]
+    dw = mac_gemm(xt, ae)          # Xᵀ(AᵀE)        [d, h]
+    return dx, dw
+
+
+def bwd_agco(a, x, w, e):
+    """Baseline AgCo backward: needs Aᵀ and the stored (AX)ᵀ."""
+    at = jnp.transpose(a)
+    ax = spmm_agg(a, x)            # recompute/fetch AX    [n, d]
+    axt = jnp.transpose(ax)        # the stored (AX)ᵀ, O(nd)
+    ewt = mac_gemm(e, jnp.transpose(w))   # EWᵀ     [n, d]
+    dx = spmm_agg(at, ewt)         # Aᵀ(EWᵀ)        [n̄, d]
+    dw = mac_gemm(axt, e)          # (AX)ᵀE         [d, h]
+    return dx, dw
+
+
+def bwd_ours_coag(a, x, w, et):
+    """Ours-CoAg: error arrives transposed (``et = Eᵀ``, [h, n]).
+
+    Returns transposed ``(dxt, dwt)`` — ``[d, n̄]`` and ``[h, d]`` — using
+    only ``A`` in its forward (row-major) orientation and the small ``W``.
+    """
+    eta = spmm_agg(et, a)          # EᵀA            [h, n̄]
+    dxt = mac_gemm(w, eta)         # W(EᵀA)         [d, n̄]
+    dwt = mac_gemm(eta, x)         # (EᵀA)X         [h, d]
+    return dxt, dwt
+
+
+def bwd_ours_agco(a, x, w, et):
+    """Ours-AgCo: transposed error, AgCo forward caching ``AX``."""
+    ax = spmm_agg(a, x)            # AX             [n, d]
+    wet = mac_gemm(w, et)          # WEᵀ            [d, n]
+    dxt = spmm_agg(wet, a)         # (WEᵀ)A         [d, n̄]
+    dwt = mac_gemm(et, ax)         # Eᵀ(AX)         [h, d]
+    return dxt, dwt
+
+
+# ---------------------------------------------------------------------------
+# Fused single-layer experiments for the Table-1 measurement bench: forward,
+# backward and gradient of one layer under each ordering, as one jittable
+# function per row (AOT-lowered by aot.py into layer_<row>.hlo.txt).
+# ---------------------------------------------------------------------------
+
+
+def layer_coag(a, x, w, e):
+    z = fwd_coag(a, x, w)
+    dx, dw = bwd_coag(a, x, w, e)
+    return z, dx, dw
+
+
+def layer_agco(a, x, w, e):
+    z = fwd_agco(a, x, w)
+    dx, dw = bwd_agco(a, x, w, e)
+    return z, dx, dw
+
+
+def layer_ours_coag(a, x, w, e):
+    # The only extra transpose "ours" ever pays: the loss-layer error, O(nh)
+    # here standing in for the paper's O(bc) (E^L)ᵀ at the network output.
+    z = fwd_coag(a, x, w)
+    dxt, dwt = bwd_ours_coag(a, x, w, jnp.transpose(e))
+    return z, dxt, dwt
+
+
+def layer_ours_agco(a, x, w, e):
+    z = fwd_agco(a, x, w)
+    dxt, dwt = bwd_ours_agco(a, x, w, jnp.transpose(e))
+    return z, dxt, dwt
+
+
+LAYER_ORDERINGS = {
+    "coag": layer_coag,
+    "agco": layer_agco,
+    "ours_coag": layer_ours_coag,
+    "ours_agco": layer_ours_agco,
+}

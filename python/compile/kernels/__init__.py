@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels for the GCN-training accelerator reproduction.
+
+Each kernel models one hardware unit of the paper's per-core datapath:
+
+- :mod:`.mac_gemm`  — the 2-D MAC array + adder tree (dense combination,
+  ``GM`` in the paper's notation), expressed as a VMEM-tiled matmul.
+- :mod:`.spmm_agg`  — the Aggregate-Buffer accumulation path (``SM``):
+  dense-block adjacency aggregation with a grid-carried accumulator.
+- :mod:`.sgd`       — the Weight Bank update (fused SGD step).
+- :mod:`.ref`       — pure-``jnp`` oracles used by pytest for correctness.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend (the Rust coordinator uses the CPU client).  Real-TPU
+lowering would emit Mosaic custom-calls the CPU plugin cannot execute; the
+BlockSpecs are nevertheless written as the TPU schedule (see
+DESIGN.md §Hardware-Adaptation).
+"""
+
+from .mac_gemm import mac_gemm
+from .spmm_agg import spmm_agg
+from .sgd import sgd_update
+
+__all__ = ["mac_gemm", "spmm_agg", "sgd_update"]

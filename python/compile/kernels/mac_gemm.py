@@ -1,0 +1,82 @@
+"""Tiled MAC-array GEMM kernel (the paper's ``GM`` / combination engine).
+
+The paper's core computes dense combination ``X @ W`` on a 2-D array of 256
+TF32 multipliers feeding 256 FP32 accumulators through an adder tree, with
+Feature/Output buffers operated in ping-pong.  The TPU-shaped equivalent is
+an MXU-tiled matmul: the grid's first two axes walk output tiles (the
+ping-pong between Output Buffer halves), the third axis streams reduction
+blocks through VMEM (the Feature Buffer refills), and the accumulator lives
+in the output ref across the K steps (the FP32 accumulator bank).
+
+VMEM footprint per step is ``bm*bk + bk*bn + bm*bn`` f32 words; with the
+default 128³ tiling that is 192 KiB — far below a TPU core's ~16 MiB VMEM,
+leaving room for double buffering (see DESIGN.md §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM tile edge.  128 matches the MXU systolic edge; every artifact
+# shape in aot.py is a multiple of 32 so the divisor-clamping below always
+# finds an exact tiling without padding.
+DEFAULT_BLOCK = 128
+
+
+def _clamp_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is ``<= want`` (tiles must be exact)."""
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, acc_steps: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j].
+
+    The output ref is revisited for every k, so it serves as the FP32
+    accumulator bank; it is zeroed on the first reduction step only.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mac_gemm(x, w, *, bm=DEFAULT_BLOCK, bn=DEFAULT_BLOCK, bk=DEFAULT_BLOCK):
+    """Dense ``x @ w`` through the MAC-array Pallas kernel.
+
+    Args:
+      x: ``[m, k]`` activation block (any float dtype; accumulated in f32).
+      w: ``[k, n]`` weight block.
+      bm, bn, bk: requested VMEM tile sizes; clamped to exact divisors.
+
+    Returns:
+      ``[m, n]`` f32 product.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    bm = _clamp_block(m, bm)
+    bn = _clamp_block(n, bn)
+    bk = _clamp_block(k, bk)
+    acc_steps = k // bk
+    kernel = functools.partial(_gemm_kernel, acc_steps=acc_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, acc_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,114 @@
+"""Optimizer update kernels beyond plain SGD (extension features).
+
+The paper trains with SGD (Eq. 4); momentum-SGD and Adam are the obvious
+production extensions and exercise the same Weight-Bank update path with
+extra per-weight state living in the GP region.  Both are tiled elementwise
+Pallas kernels like :mod:`.sgd`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _clamp_block(dim: int, want: int) -> int:
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _momentum_kernel(w_ref, g_ref, v_ref, lr_ref, mu_ref, wo_ref, vo_ref):
+    v_new = mu_ref[0, 0] * v_ref[...] + g_ref[...]
+    vo_ref[...] = v_new
+    wo_ref[...] = w_ref[...] - lr_ref[0, 0] * v_new
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj"))
+def momentum_update(w, g, v, lr, mu, *, bi=TILE, bj=TILE):
+    """Heavy-ball momentum: ``v ← μv + g``; ``w ← w − ηv``.
+
+    Returns ``(w', v')``.
+    """
+    if w.shape != g.shape or w.shape != v.shape:
+        raise ValueError(f"shape mismatch: {w.shape} {g.shape} {v.shape}")
+    r, c = w.shape
+    bi = _clamp_block(r, bi)
+    bj = _clamp_block(c, bj)
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    mu2 = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    scalar = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    tile = pl.BlockSpec((bi, bj), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _momentum_kernel,
+        grid=(r // bi, c // bj),
+        in_specs=[tile, tile, tile, scalar, scalar],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+            jax.ShapeDtypeStruct((r, c), jnp.float32),
+        ],
+        interpret=True,
+    )(w, g, v, lr2, mu2)
+
+
+def _adam_kernel(w_ref, g_ref, m_ref, v_ref, sc_ref, wo_ref, mo_ref, vo_ref):
+    # sc packs [lr, beta1, beta2, eps, bias1, bias2] as a (1, 8) row.
+    lr = sc_ref[0, 0]
+    b1 = sc_ref[0, 1]
+    b2 = sc_ref[0, 2]
+    eps = sc_ref[0, 3]
+    bias1 = sc_ref[0, 4]
+    bias2 = sc_ref[0, 5]
+    g = g_ref[...]
+    m_new = b1 * m_ref[...] + (1.0 - b1) * g
+    v_new = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+    m_hat = m_new / bias1
+    v_hat = v_new / bias2
+    wo_ref[...] = w_ref[...] - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj"))
+def adam_update(w, g, m, v, lr, beta1, beta2, eps, step, *, bi=TILE, bj=TILE):
+    """Adam with bias correction.  ``step`` is the 1-based step count.
+
+    Returns ``(w', m', v')``.
+    """
+    if not (w.shape == g.shape == m.shape == v.shape):
+        raise ValueError("shape mismatch")
+    r, c = w.shape
+    bi = _clamp_block(r, bi)
+    bj = _clamp_block(c, bj)
+    b1 = jnp.asarray(beta1, jnp.float32)
+    b2 = jnp.asarray(beta2, jnp.float32)
+    t = jnp.asarray(step, jnp.float32)
+    bias1 = 1.0 - jnp.power(b1, t)
+    bias2 = 1.0 - jnp.power(b2, t)
+    sc = jnp.stack(
+        [
+            jnp.asarray(lr, jnp.float32),
+            b1,
+            b2,
+            jnp.asarray(eps, jnp.float32),
+            bias1,
+            bias2,
+            jnp.float32(0.0),
+            jnp.float32(0.0),
+        ]
+    ).reshape(1, 8)
+    tile = pl.BlockSpec((bi, bj), lambda i, j: (i, j))
+    scalars = pl.BlockSpec((1, 8), lambda i, j: (0, 0))
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=(r // bi, c // bj),
+        in_specs=[tile, tile, tile, tile, scalars],
+        out_specs=[tile, tile, tile],
+        out_shape=[jax.ShapeDtypeStruct((r, c), jnp.float32)] * 3,
+        interpret=True,
+    )(w, g, m, v, sc)

@@ -1,0 +1,55 @@
+"""Pure-``jnp`` oracles for the Pallas kernels and the model math.
+
+These are the correctness reference for pytest (`assert_allclose` against
+the kernels) and the ground truth for the manual transposed backward
+(checked against ``jax.grad`` in python/tests/test_backward.py).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_gemm(x, w):
+    """Dense combination ``x @ w`` in f32."""
+    return jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_agg(a, h):
+    """Dense-block aggregation ``a @ h`` in f32."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        h.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def ref_sgd(w, g, lr):
+    """SGD step ``w - lr * g``."""
+    return w.astype(jnp.float32) - jnp.float32(lr) * g.astype(jnp.float32)
+
+
+def ref_relu(z):
+    return jnp.maximum(z, 0.0)
+
+
+def ref_softmax_xent(logits, yhot, row_mask, nvalid):
+    """Masked mean softmax cross-entropy.
+
+    Padding rows carry ``row_mask == 0`` and all-zero one-hot rows, so they
+    contribute nothing; the mean divides by the true batch size ``nvalid``.
+    """
+    z = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logp = z - jnp.log(jnp.sum(jnp.exp(z), axis=-1, keepdims=True))
+    per_row = -jnp.sum(yhot * logp, axis=-1) * row_mask
+    return jnp.sum(per_row) / nvalid
+
+
+def ref_gcn2_fwd(x, a1, a2, w1, w2):
+    """Two-layer GCN forward (CoAg ordering), returning all activations."""
+    z1 = ref_agg(a1, ref_gemm(x, w1))
+    h1 = ref_relu(z1)
+    z2 = ref_agg(a2, ref_gemm(h1, w2))
+    return z1, h1, z2

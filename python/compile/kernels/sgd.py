@@ -1,0 +1,56 @@
+"""Fused SGD weight update (the paper's Weight Bank synchronization).
+
+The paper's Weight Bank applies ``W ← W − η·G`` after gradient computation
+and broadcasts the result to every HBM pseudo-channel's GP (global
+parameter) region.  The kernel is a tiled elementwise FMA; the learning
+rate rides along as a (1, 1) block so the same compiled artifact serves any
+``η`` (the Rust coordinator passes it per step).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _clamp_block(dim: int, want: int) -> int:
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _sgd_kernel(w_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0, 0] * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj"))
+def sgd_update(w, g, lr, *, bi=TILE, bj=TILE):
+    """Return ``w - lr * g`` tile by tile.
+
+    Args:
+      w: ``[r, c]`` weights.
+      g: ``[r, c]`` gradient (same shape).
+      lr: scalar learning rate (traced; reshaped to (1, 1) internally).
+    """
+    if w.shape != g.shape:
+        raise ValueError(f"shape mismatch: {w.shape} vs {g.shape}")
+    r, c = w.shape
+    bi = _clamp_block(r, bi)
+    bj = _clamp_block(c, bj)
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(r // bi, c // bj),
+        in_specs=[
+            pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+            pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,
+    )(w, g, lr2)

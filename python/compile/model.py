@@ -1,0 +1,260 @@
+"""Layer-2 models: two-layer GCN and GraphSAGE with the paper's dataflow.
+
+Forward follows Eq. 1 (``X⁽ˡ⁺¹⁾ = σ(SM(Ã, GM(X⁽ˡ⁾, W⁽ˡ⁾)))``) in either the
+CoAg or AgCo ordering (selected per dataset by the Rust sequence
+estimator, §4.4).  Backward is the paper's **re-engineered transposed
+dataflow** (Table 1, "Ours" rows): the loss-layer error is transposed once
+(``O(bc)``) and the entire backward pass is carried in transposed form, so
+no ``Xᵀ``/``(AX)ᵀ`` is ever materialized and ``Ã`` is only used in its
+forward orientation (sparing the Graph Converter's column-major pass).
+
+Mini-batch shapes (GraphSAGE neighbor sampling, fanouts 25/10):
+
+- ``x  : [n2, d]``  2-hop frontier features (zero-padded rows),
+- ``a1 : [n1, n2]`` layer-1 normalized adjacency block,
+- ``a2 : [b,  n1]`` layer-2 normalized adjacency block,
+- ``yhot : [b, c]`` one-hot labels (all-zero rows for padding),
+- ``row_mask : [b]`` 1.0 for real batch rows, ``nvalid`` their count.
+
+Padding correctness: padded rows/columns of ``a1``/``a2`` are zero, so they
+aggregate to zero; zero rows of ``x`` combine to zero; masked loss rows
+contribute no error.  Tests assert padding invariance exactly.
+
+Everything here is traced once by aot.py and shipped as HLO text; the Rust
+runtime feeds buffers and scalars (``lr``, ``nvalid``) per step.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .dataflows import fwd_agco, fwd_coag
+from .kernels import mac_gemm, spmm_agg, sgd_update
+from .kernels.ref import ref_softmax_xent
+
+# ---------------------------------------------------------------------------
+# Loss heads
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent_and_error(z2, yhot, row_mask, nvalid):
+    """Masked softmax cross-entropy loss and its error ``∂L/∂Z2``.
+
+    Single-label head (Flickr / Reddit style).  Returns ``(loss, dz2)``.
+    """
+    zmax = jnp.max(z2, axis=-1, keepdims=True)
+    zs = z2 - zmax
+    sumexp = jnp.sum(jnp.exp(zs), axis=-1, keepdims=True)
+    logp = zs - jnp.log(sumexp)
+    loss = jnp.sum(-jnp.sum(yhot * logp, axis=-1) * row_mask) / nvalid
+    p = jnp.exp(logp)
+    dz2 = (p - yhot) * (row_mask[:, None] / nvalid)
+    return loss, dz2
+
+
+def sigmoid_bce_and_error(z2, ymulti, row_mask, nvalid):
+    """Masked multi-label sigmoid BCE (Yelp / AmazonProducts style)."""
+    # Numerically stable BCE-with-logits.
+    relu_z = jnp.maximum(z2, 0.0)
+    bce = relu_z - z2 * ymulti + jnp.log1p(jnp.exp(-jnp.abs(z2)))
+    c = z2.shape[-1]
+    loss = jnp.sum(jnp.sum(bce, axis=-1) * row_mask) / (nvalid * c)
+    p = jax.nn.sigmoid(z2)
+    dz2 = (p - ymulti) * (row_mask[:, None] / (nvalid * c))
+    return loss, dz2
+
+
+LOSS_HEADS = {"softmax": softmax_xent_and_error, "bce": sigmoid_bce_and_error}
+
+# ---------------------------------------------------------------------------
+# Two-layer GCN
+# ---------------------------------------------------------------------------
+
+
+def gcn2_fwd(x, a1, a2, w1, w2, *, ordering="coag"):
+    """Forward pass returning ``(z1, h1, z2)`` (activations kept for bwd —
+    the paper's SFBP region)."""
+    fwd = fwd_coag if ordering == "coag" else fwd_agco
+    z1 = fwd(a1, x, w1)
+    h1 = jnp.maximum(z1, 0.0)
+    z2 = fwd(a2, h1, w2)
+    return z1, h1, z2
+
+
+def gcn2_backward_ours(x, a1, a2, w1, w2, z1, h1, dz2, *, ordering="coag"):
+    """The paper's transposed backward for the 2-layer GCN.
+
+    ``dz2`` is the loss error ``E^L = ∂L/∂Z2``; the single transpose below
+    is the ``(E^L)ᵀ`` of Table 1 (cost ``O(bc)``).  Everything downstream
+    stays transposed; gradients come back as ``G2ᵀ [c,h]`` / ``G1ᵀ [h,d]``
+    and are un-transposed only at the (small) weight update — the ``Wᵀ``
+    transpose the paper budgets at ``O(hd)``.
+    """
+    t2 = jnp.transpose(dz2)                     # (E^L)ᵀ      [c, b]
+    if ordering == "coag":
+        # Layer 2 (CoAg fwd Z2 = A2(H1 W2)):
+        s2 = spmm_agg(t2, a2)                   # EᵀA         [c, n1]
+        g2t = mac_gemm(s2, h1)                  # (EᵀA)X      [c, h]
+        dh1t = mac_gemm(w2, s2)                 # W(EᵀA)      [h, n1]
+    else:
+        # Layer 2 (AgCo fwd Z2 = (A2 H1) W2):
+        ah = spmm_agg(a2, h1)                   # AX cached   [b, h]
+        g2t = mac_gemm(t2, ah)                  # Eᵀ(AX)      [c, h]
+        wet = mac_gemm(w2, t2)                  # WEᵀ         [h, b]
+        dh1t = spmm_agg(wet, a2)                # (WEᵀ)A      [h, n1]
+    # ReLU mask applied in transposed orientation (address-order read on
+    # the FPGA; a layout transpose for XLA).
+    dz1t = dh1t * jnp.transpose(z1 > 0.0).astype(dh1t.dtype)   # [h, n1]
+    if ordering == "coag":
+        s1 = spmm_agg(dz1t, a1)                 # EᵀA         [h, n2]
+        g1t = mac_gemm(s1, x)                   # (EᵀA)X      [h, d]
+    else:
+        ax = spmm_agg(a1, x)                    # AX cached   [n1, d]
+        g1t = mac_gemm(dz1t, ax)                # Eᵀ(AX)      [h, d]
+    return g1t, g2t
+
+
+def gcn2_train_step(
+    x, a1, a2, w1, w2, yhot, row_mask, nvalid, lr,
+    *, ordering="coag", loss="softmax",
+):
+    """One fused training step: fwd → loss → transposed bwd → SGD.
+
+    Returns ``(w1', w2', loss)``.  AOT-lowered once per (shape, ordering)
+    pair; the Rust hot path only swaps input buffers.
+    """
+    z1, h1, z2 = gcn2_fwd(x, a1, a2, w1, w2, ordering=ordering)
+    loss_val, dz2 = LOSS_HEADS[loss](z2, yhot, row_mask, nvalid)
+    g1t, g2t = gcn2_backward_ours(
+        x, a1, a2, w1, w2, z1, h1, dz2, ordering=ordering
+    )
+    # Weight update: un-transpose the (small) gradients — O(dh)+O(hc).
+    w1n = sgd_update(w1, jnp.transpose(g1t), lr)
+    w2n = sgd_update(w2, jnp.transpose(g2t), lr)
+    return w1n, w2n, loss_val
+
+
+def gcn2_train_step_momentum(
+    x, a1, a2, w1, w2, v1, v2, yhot, row_mask, nvalid, lr, mu,
+    *, ordering="coag", loss="softmax",
+):
+    """Training step with heavy-ball momentum (extension feature).
+
+    Same fused fwd/transposed-bwd as :func:`gcn2_train_step`, with the
+    Weight Bank carrying per-weight velocity state (``v1``/``v2`` live in
+    the GP region alongside the weights).  Returns
+    ``(w1', w2', v1', v2', loss)``.
+    """
+    from .kernels.optim import momentum_update
+
+    z1, h1, z2 = gcn2_fwd(x, a1, a2, w1, w2, ordering=ordering)
+    loss_val, dz2 = LOSS_HEADS[loss](z2, yhot, row_mask, nvalid)
+    g1t, g2t = gcn2_backward_ours(
+        x, a1, a2, w1, w2, z1, h1, dz2, ordering=ordering
+    )
+    w1n, v1n = momentum_update(w1, jnp.transpose(g1t), v1, lr, mu)
+    w2n, v2n = momentum_update(w2, jnp.transpose(g2t), v2, lr, mu)
+    return w1n, w2n, v1n, v2n, loss_val
+
+
+def gcn2_eval(x, a1, a2, w1, w2, yhot, row_mask, nvalid, *, ordering="coag"):
+    """Evaluation pass: ``(loss, correct_count)`` for accuracy tracking."""
+    _, _, z2 = gcn2_fwd(x, a1, a2, w1, w2, ordering=ordering)
+    loss_val = ref_softmax_xent(z2, yhot, row_mask, nvalid)
+    pred = jnp.argmax(z2, axis=-1)
+    label = jnp.argmax(yhot, axis=-1)
+    correct = jnp.sum((pred == label).astype(jnp.float32) * row_mask)
+    return loss_val, correct
+
+
+# ---------------------------------------------------------------------------
+# Two-layer GraphSAGE (mean aggregator, self/neighbor weight split)
+# ---------------------------------------------------------------------------
+
+
+def sage_layer_fwd(x, a_mean, ws, wn, n_dst):
+    """GraphSAGE-mean layer: ``Z = X_self·Ws + (Ā·X)·Wn``.
+
+    The destination nodes are (by sampler construction) the first ``n_dst``
+    rows of ``x``; ``a_mean`` is the row-normalized (mean) adjacency.
+    Returns ``(z, ax)`` with ``ax`` cached for the transposed backward.
+    """
+    x_self = jax.lax.slice_in_dim(x, 0, n_dst, axis=0)
+    ax = spmm_agg(a_mean, x)
+    z = mac_gemm(x_self, ws) + mac_gemm(ax, wn)
+    return z, ax
+
+
+def sage_layer_bwd_t(x, a_mean, ws, wn, ax, et, n_src):
+    """Transposed backward of one SAGE layer.
+
+    ``et = dZᵀ [h_out, n_dst]``; returns ``(dxt [d_in, n_src], gst, gnt)``
+    with both weight grads transposed.  Uses only the forward-orientation
+    ``a_mean`` (the Ours-AgCo trick applied to the neighbor branch).
+    """
+    n_dst = et.shape[1]
+    x_self = jax.lax.slice_in_dim(x, 0, n_dst, axis=0)
+    gst = mac_gemm(et, x_self)             # dWsᵀ = Eᵀ·X_self   [h, d]
+    gnt = mac_gemm(et, ax)                 # dWnᵀ = Eᵀ·(ĀX)     [h, d]
+    wet = mac_gemm(wn, et)                 # WnEᵀ               [d, n_dst]
+    dxt_n = spmm_agg(wet, a_mean)          # (WnEᵀ)Ā            [d, n_src]
+    dxt_s = mac_gemm(ws, et)               # WsEᵀ               [d, n_dst]
+    # Self-branch error lands on the first n_dst source columns.
+    pad = n_src - n_dst
+    dxt = dxt_n + jnp.pad(dxt_s, ((0, 0), (0, pad)))
+    return dxt, gst, gnt
+
+
+def sage2_train_step(
+    x, a1, a2, ws1, wn1, ws2, wn2, yhot, row_mask, nvalid, lr,
+    *, loss="softmax",
+):
+    """Fused 2-layer GraphSAGE training step (NS-SAGE in Table 2)."""
+    n2 = x.shape[0]
+    n1 = a1.shape[0]
+    b = a2.shape[0]
+    z1, ax1 = sage_layer_fwd(x, a1, ws1, wn1, n1)
+    h1 = jnp.maximum(z1, 0.0)
+    z2, ax2 = sage_layer_fwd(h1, a2, ws2, wn2, b)
+    loss_val, dz2 = LOSS_HEADS[loss](z2, yhot, row_mask, nvalid)
+
+    t2 = jnp.transpose(dz2)                                    # O(bc)
+    dh1t, gs2t, gn2t = sage_layer_bwd_t(h1, a2, ws2, wn2, ax2, t2, n1)
+    dz1t = dh1t * jnp.transpose(z1 > 0.0).astype(dh1t.dtype)
+    _, gs1t, gn1t = sage_layer_bwd_t(x, a1, ws1, wn1, ax1, dz1t, n2)
+
+    ws1n = sgd_update(ws1, jnp.transpose(gs1t), lr)
+    wn1n = sgd_update(wn1, jnp.transpose(gn1t), lr)
+    ws2n = sgd_update(ws2, jnp.transpose(gs2t), lr)
+    wn2n = sgd_update(wn2, jnp.transpose(gn2t), lr)
+    return ws1n, wn1n, ws2n, wn2n, loss_val
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp oracles for jax.grad cross-checking (tests only; never lowered).
+# These deliberately avoid the Pallas kernels: jax.grad cannot trace through
+# interpret-mode pallas_call, and an oracle should be independent anyway.
+# ---------------------------------------------------------------------------
+
+
+def gcn2_loss_ref(params, batch, *, ordering="coag", loss="softmax"):
+    """Reference loss as a function of (w1, w2) for ``jax.grad``."""
+    w1, w2 = params
+    x, a1, a2, yhot, row_mask, nvalid = batch
+    z1 = a1 @ (x @ w1) if ordering == "coag" else (a1 @ x) @ w1
+    h1 = jnp.maximum(z1, 0.0)
+    z2 = a2 @ (h1 @ w2) if ordering == "coag" else (a2 @ h1) @ w2
+    loss_val, _ = LOSS_HEADS[loss](z2, yhot, row_mask, nvalid)
+    return loss_val
+
+
+def sage2_loss_ref(params, batch, *, loss="softmax"):
+    """Reference SAGE loss as a function of the four weights."""
+    ws1, wn1, ws2, wn2 = params
+    x, a1, a2, yhot, row_mask, nvalid = batch
+    n1 = a1.shape[0]
+    b = a2.shape[0]
+    z1 = x[:n1] @ ws1 + (a1 @ x) @ wn1
+    h1 = jnp.maximum(z1, 0.0)
+    z2 = h1[:b] @ ws2 + (a2 @ h1) @ wn2
+    loss_val, _ = LOSS_HEADS[loss](z2, yhot, row_mask, nvalid)
+    return loss_val

@@ -1,0 +1,49 @@
+"""Shared fixtures: deterministic RNG + batch builders for the model tests."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make the `compile` package importable whether pytest runs from python/ or
+# the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xF96A)
+
+
+def make_adj(rng, n_dst, n_src, density=0.02, normalized=True):
+    """Random padded normalized-adjacency block (zero pad rows/cols)."""
+    a = (rng.random((n_dst, n_src)) < density).astype(np.float32)
+    # Ensure at least one neighbor per destination row (paper's sampler
+    # always returns >=1 neighbor: the node itself via A+I).
+    a[np.arange(n_dst), rng.integers(0, n_src, n_dst)] = 1.0
+    if normalized:
+        deg = a.sum(axis=1, keepdims=True)
+        a = a / np.maximum(deg, 1.0)
+    return a
+
+
+def make_gcn_batch(rng, b=16, n1=32, n2=64, d=24, h=12, c=6, nvalid=None):
+    """Small random GCN mini-batch with padding in the last rows."""
+    nvalid = nvalid if nvalid is not None else b
+    x = rng.standard_normal((n2, d)).astype(np.float32)
+    a1 = make_adj(rng, n1, n2)
+    a2 = make_adj(rng, b, n1)
+    w1 = (rng.standard_normal((d, h)) * 0.1).astype(np.float32)
+    w2 = (rng.standard_normal((h, c)) * 0.1).astype(np.float32)
+    labels = rng.integers(0, c, b)
+    yhot = np.zeros((b, c), np.float32)
+    row_mask = np.zeros(b, np.float32)
+    yhot[np.arange(nvalid), labels[:nvalid]] = 1.0
+    row_mask[:nvalid] = 1.0
+    # Padded batch rows must not aggregate anything.
+    a2[nvalid:, :] = 0.0
+    return dict(
+        x=x, a1=a1, a2=a2, w1=w1, w2=w2, yhot=yhot,
+        row_mask=row_mask, nvalid=np.float32(nvalid),
+    )

@@ -1,0 +1,86 @@
+"""AOT pipeline: catalogue sanity, HLO text validity, determinism."""
+
+import os
+import re
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+
+ART_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+    "artifacts",
+)
+
+
+class TestCatalogue:
+    def test_expected_artifacts_present(self):
+        names = {name for name, *_ in aot.build_catalogue()}
+        assert "gcn2_train_step_small_coag" in names
+        assert "gcn2_train_step_base_agco" in names
+        assert "sage2_train_step_small" in names
+        assert {"layer_coag", "layer_agco", "layer_ours_coag",
+                "layer_ours_agco"} <= names
+
+    def test_shapes_are_tileable(self):
+        """Every artifact dim must be a multiple of 32 (clean MXU tiling)."""
+        for name, _, args, fields in aot.build_catalogue():
+            for s in args:
+                for dim in s.shape:
+                    assert dim % 32 == 0 or dim < 32, (name, s.shape)
+
+    def test_manifest_fields_complete(self):
+        for name, _, _, fields in aot.build_catalogue():
+            assert {"kind", "ordering", "b", "n1", "n2", "d", "h", "c"} <= set(
+                fields
+            ), name
+
+
+class TestLowering:
+    def test_hlo_text_is_parseable_entry(self):
+        """Lower the smallest artifact and sanity-check the HLO text."""
+        entries = [e for e in aot.build_catalogue() if e[0] == "layer_coag"]
+        name, fn, args, _ = entries[0]
+        lowered = jax.jit(fn).lower(*args)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ROOT" in text
+        # return_tuple=True → root is a tuple instruction.
+        assert re.search(r"ROOT\s+\S+\s*=\s*\(", text), text[-400:]
+
+    def test_lowering_is_deterministic(self):
+        entries = [e for e in aot.build_catalogue() if e[0] == "layer_agco"]
+        name, fn, args, _ = entries[0]
+        t1 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        t2 = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert t1 == t2
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    def test_manifest_lines_match_files(self):
+        with open(os.path.join(ART_DIR, "manifest.txt")) as f:
+            lines = [
+                ln for ln in f.read().splitlines()
+                if ln and not ln.startswith("#")
+            ]
+        assert len(lines) == len(list(aot.build_catalogue()))
+        for ln in lines:
+            assert ln.startswith("artifact ")
+            fname = dict(
+                kv.split("=", 1) for kv in ln.split()[2:]
+            )["file"]
+            assert os.path.exists(os.path.join(ART_DIR, fname)), fname
+
+    def test_artifact_headers(self):
+        for fname in os.listdir(ART_DIR):
+            if fname.endswith(".hlo.txt"):
+                with open(os.path.join(ART_DIR, fname)) as f:
+                    head = f.read(64)
+                assert head.startswith("HloModule"), fname

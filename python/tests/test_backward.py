@@ -1,0 +1,174 @@
+"""The paper's transposed backward vs ``jax.grad`` ground truth."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from tests.conftest import make_gcn_batch, make_adj
+
+jax.config.update("jax_enable_x64", False)
+
+
+def batch_tuple(b):
+    return (b["x"], b["a1"], b["a2"], b["yhot"], b["row_mask"], b["nvalid"])
+
+
+class TestGcn2Backward:
+    @pytest.mark.parametrize("ordering", ["coag", "agco"])
+    @pytest.mark.parametrize("loss", ["softmax", "bce"])
+    def test_grads_match_jax_grad(self, rng, ordering, loss):
+        b = make_gcn_batch(rng)
+        z1, h1, z2 = model.gcn2_fwd(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"], ordering=ordering
+        )
+        _, dz2 = model.LOSS_HEADS[loss](z2, b["yhot"], b["row_mask"], b["nvalid"])
+        g1t, g2t = model.gcn2_backward_ours(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"], z1, h1, dz2,
+            ordering=ordering,
+        )
+        ref_g = jax.grad(model.gcn2_loss_ref)(
+            (b["w1"], b["w2"]), batch_tuple(b), ordering=ordering, loss=loss
+        )
+        assert_allclose(np.asarray(g1t).T, ref_g[0], rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(g2t).T, ref_g[1], rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("ordering", ["coag", "agco"])
+    def test_train_step_applies_sgd(self, rng, ordering):
+        b = make_gcn_batch(rng)
+        lr = np.float32(0.1)
+        w1n, w2n, loss = model.gcn2_train_step(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"],
+            b["yhot"], b["row_mask"], b["nvalid"], lr, ordering=ordering,
+        )
+        ref_g = jax.grad(model.gcn2_loss_ref)(
+            (b["w1"], b["w2"]), batch_tuple(b), ordering=ordering
+        )
+        assert_allclose(
+            np.asarray(w1n), b["w1"] - lr * np.asarray(ref_g[0]),
+            rtol=1e-4, atol=1e-5,
+        )
+        assert_allclose(
+            np.asarray(w2n), b["w2"] - lr * np.asarray(ref_g[1]),
+            rtol=1e-4, atol=1e-5,
+        )
+        ref_loss = model.gcn2_loss_ref(
+            (b["w1"], b["w2"]), batch_tuple(b), ordering=ordering
+        )
+        assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+
+    def test_orderings_numerically_identical(self, rng):
+        """CoAg and AgCo differ only in execution order, never in value."""
+        b = make_gcn_batch(rng)
+        outs = {}
+        for ordering in ("coag", "agco"):
+            outs[ordering] = model.gcn2_train_step(
+                b["x"], b["a1"], b["a2"], b["w1"], b["w2"],
+                b["yhot"], b["row_mask"], b["nvalid"], np.float32(0.05),
+                ordering=ordering,
+            )
+        for got, want in zip(outs["coag"], outs["agco"]):
+            assert_allclose(np.asarray(got), np.asarray(want),
+                            rtol=1e-4, atol=1e-5)
+
+    def test_loss_decreases_over_steps(self, rng):
+        b = make_gcn_batch(rng, b=32, n1=64, n2=128, d=16, h=16, c=4)
+        w1, w2 = b["w1"], b["w2"]
+        losses = []
+        for _ in range(30):
+            w1, w2, loss = model.gcn2_train_step(
+                b["x"], b["a1"], b["a2"], w1, w2,
+                b["yhot"], b["row_mask"], b["nvalid"], np.float32(0.5),
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+    def test_padding_invariance(self, rng):
+        """Doubling the padded region must not change weights or loss."""
+        bsmall = make_gcn_batch(rng, b=16, n1=32, n2=64, nvalid=12)
+        x2 = np.pad(bsmall["x"], ((0, 64), (0, 0)))
+        a1_2 = np.pad(bsmall["a1"], ((0, 32), (0, 64)))
+        a2_2 = np.pad(bsmall["a2"], ((0, 16), (0, 32)))
+        y2 = np.pad(bsmall["yhot"], ((0, 16), (0, 0)))
+        m2 = np.pad(bsmall["row_mask"], (0, 16))
+        base = model.gcn2_train_step(
+            bsmall["x"], bsmall["a1"], bsmall["a2"], bsmall["w1"], bsmall["w2"],
+            bsmall["yhot"], bsmall["row_mask"], bsmall["nvalid"], np.float32(0.1),
+        )
+        padded = model.gcn2_train_step(
+            x2, a1_2, a2_2, bsmall["w1"], bsmall["w2"],
+            y2, m2, bsmall["nvalid"], np.float32(0.1),
+        )
+        for got, want in zip(padded, base):
+            assert_allclose(np.asarray(got), np.asarray(want),
+                            rtol=1e-5, atol=1e-6)
+
+
+class TestSage2Backward:
+    def make_sage(self, rng, b=16, n1=32, n2=64, d=24, h=12, c=6):
+        base = make_gcn_batch(rng, b, n1, n2, d, h, c)
+        # Row-normalized (mean) adjacency for SAGE.
+        for k in ("a1", "a2"):
+            a = base[k]
+            deg = a.sum(axis=1, keepdims=True)
+            base[k] = (a / np.maximum(deg, 1e-9)).astype(np.float32)
+        ws1 = (rng.standard_normal((d, h)) * 0.1).astype(np.float32)
+        wn1 = (rng.standard_normal((d, h)) * 0.1).astype(np.float32)
+        ws2 = (rng.standard_normal((h, c)) * 0.1).astype(np.float32)
+        wn2 = (rng.standard_normal((h, c)) * 0.1).astype(np.float32)
+        base.update(ws1=ws1, wn1=wn1, ws2=ws2, wn2=wn2)
+        return base
+
+    @pytest.mark.parametrize("loss", ["softmax", "bce"])
+    def test_grads_match_jax_grad(self, rng, loss):
+        b = self.make_sage(rng)
+        lr = np.float32(0.2)
+        outs = model.sage2_train_step(
+            b["x"], b["a1"], b["a2"], b["ws1"], b["wn1"], b["ws2"], b["wn2"],
+            b["yhot"], b["row_mask"], b["nvalid"], lr, loss=loss,
+        )
+        params = (b["ws1"], b["wn1"], b["ws2"], b["wn2"])
+        ref_g = jax.grad(model.sage2_loss_ref)(
+            params, batch_tuple(b), loss=loss
+        )
+        for wn, w, g in zip(outs[:4], params, ref_g):
+            assert_allclose(np.asarray(wn), w - lr * np.asarray(g),
+                            rtol=1e-4, atol=1e-5)
+
+    def test_loss_decreases(self, rng):
+        b = self.make_sage(rng)
+        ws1, wn1, ws2, wn2 = b["ws1"], b["wn1"], b["ws2"], b["wn2"]
+        losses = []
+        for _ in range(25):
+            ws1, wn1, ws2, wn2, loss = model.sage2_train_step(
+                b["x"], b["a1"], b["a2"], ws1, wn1, ws2, wn2,
+                b["yhot"], b["row_mask"], b["nvalid"], np.float32(0.5),
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.9, losses
+
+
+class TestEval:
+    def test_eval_counts_correct(self, rng):
+        b = make_gcn_batch(rng)
+        loss, correct = model.gcn2_eval(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"],
+            b["yhot"], b["row_mask"], b["nvalid"],
+        )
+        assert 0.0 <= float(correct) <= float(b["nvalid"])
+        assert float(loss) > 0.0
+
+    def test_perfect_predictions_count_all(self, rng):
+        # Logits equal to one-hot labels scaled up → argmax == label.
+        b = make_gcn_batch(rng, b=8, n1=16, n2=32, d=4, h=4, c=3)
+        z2 = b["yhot"] * 100.0
+        import jax.numpy as jnp
+        pred = jnp.argmax(z2, axis=-1)
+        label = jnp.argmax(b["yhot"], axis=-1)
+        correct = float(
+            jnp.sum((pred == label).astype(jnp.float32) * b["row_mask"])
+        )
+        assert correct == float(b["nvalid"])

@@ -1,0 +1,81 @@
+"""Table-1 single-layer orderings: numerical equivalence + transpose algebra."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import dataflows
+from tests.conftest import make_adj
+
+
+@pytest.fixture
+def layer_inputs(rng):
+    n, nbar, d, h = 32, 64, 24, 12
+    a = make_adj(rng, n, nbar)
+    x = rng.standard_normal((nbar, d)).astype(np.float32)
+    w = (rng.standard_normal((d, h)) * 0.1).astype(np.float32)
+    e = rng.standard_normal((n, h)).astype(np.float32)
+    return a, x, w, e
+
+
+class TestForwardOrderings:
+    def test_coag_equals_agco(self, layer_inputs):
+        a, x, w, _ = layer_inputs
+        z1 = np.asarray(dataflows.fwd_coag(a, x, w))
+        z2 = np.asarray(dataflows.fwd_agco(a, x, w))
+        assert_allclose(z1, z2, rtol=1e-4, atol=1e-5)
+
+    def test_fwd_matches_dense(self, layer_inputs):
+        a, x, w, _ = layer_inputs
+        want = a @ (x @ w)
+        assert_allclose(np.asarray(dataflows.fwd_coag(a, x, w)), want,
+                        rtol=1e-4, atol=1e-4)
+
+
+class TestBackwardRows:
+    def grad_oracle(self, a, x, w, e):
+        """d/dx and d/dw of <A(XW), e> via jax autodiff (pure jnp — jax.grad
+        cannot trace interpret-mode pallas_call)."""
+        def inner(x_, w_):
+            return jnp.sum((a @ (x_ @ w_)) * e)
+
+        return jax.grad(inner, argnums=(0, 1))(x, w)
+
+    def test_bwd_coag_matches_autodiff(self, layer_inputs):
+        a, x, w, e = layer_inputs
+        dx, dw = dataflows.bwd_coag(a, x, w, e)
+        rx, rw = self.grad_oracle(a, x, w, e)
+        assert_allclose(np.asarray(dx), rx, rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(dw), rw, rtol=1e-4, atol=1e-5)
+
+    def test_bwd_agco_matches_autodiff(self, layer_inputs):
+        a, x, w, e = layer_inputs
+        dx, dw = dataflows.bwd_agco(a, x, w, e)
+        rx, rw = self.grad_oracle(a, x, w, e)
+        assert_allclose(np.asarray(dx), rx, rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(dw), rw, rtol=1e-4, atol=1e-5)
+
+    def test_ours_rows_are_transposed_baselines(self, layer_inputs):
+        a, x, w, e = layer_inputs
+        dx, dw = dataflows.bwd_coag(a, x, w, e)
+        dxt, dwt = dataflows.bwd_ours_coag(a, x, w, jnp.transpose(e))
+        assert_allclose(np.asarray(dxt).T, np.asarray(dx), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(dwt).T, np.asarray(dw), rtol=1e-4, atol=1e-5)
+
+        dx2, dw2 = dataflows.bwd_agco(a, x, w, e)
+        dxt2, dwt2 = dataflows.bwd_ours_agco(a, x, w, jnp.transpose(e))
+        assert_allclose(np.asarray(dxt2).T, np.asarray(dx2), rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(dwt2).T, np.asarray(dw2), rtol=1e-4, atol=1e-5)
+
+    def test_all_layer_fns_agree_on_z(self, layer_inputs):
+        a, x, w, e = layer_inputs
+        zs = {
+            row: np.asarray(fn(a, x, w, e)[0])
+            for row, fn in dataflows.LAYER_ORDERINGS.items()
+        }
+        base = zs["coag"]
+        for row, z in zs.items():
+            assert_allclose(z, base, rtol=1e-4, atol=1e-5, err_msg=row)

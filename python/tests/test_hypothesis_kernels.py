@@ -1,0 +1,76 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/dtype space.
+
+The paper's PE array must be correct for *any* block shape the partitioner
+emits; hypothesis explores the (m, k, n) × dtype × tile-size space far
+beyond the hand-picked cases in test_kernels.py.
+"""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mac_gemm, spmm_agg, sgd_update
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=96)
+TILES = st.sampled_from([8, 16, 32, 64, 128])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+DTYPES = st.sampled_from([np.float32, jnp.bfloat16])
+
+
+def _tol(dt):
+    return dict(rtol=5e-2, atol=5e-1) if dt == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, bm=TILES, bn=TILES, bk=TILES, seed=SEEDS,
+       dt=DTYPES)
+def test_mac_gemm_any_shape(m, k, n, bm, bn, bk, seed, dt):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(
+        mac_gemm(jnp.asarray(x, dt), jnp.asarray(w, dt), bm=bm, bn=bn, bk=bk)
+    )
+    assert got.shape == (m, n)
+    assert got.dtype == np.float32
+    assert_allclose(got, ref.ref_gemm(x, w), **_tol(dt))
+
+
+@settings(max_examples=30, deadline=None)
+@given(nd=DIMS, ns=DIMS, f=DIMS, seed=SEEDS)
+def test_spmm_agg_any_shape(nd, ns, f, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((nd, ns)) < 0.3).astype(np.float32)
+    h = rng.standard_normal((ns, f)).astype(np.float32)
+    got = np.asarray(spmm_agg(a, h))
+    assert got.shape == (nd, f)
+    assert_allclose(got, ref.ref_agg(a, h), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(r=DIMS, c=DIMS, lr=st.floats(0.0, 10.0), seed=SEEDS)
+def test_sgd_any_shape(r, c, lr, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((r, c)).astype(np.float32)
+    g = rng.standard_normal((r, c)).astype(np.float32)
+    got = np.asarray(sgd_update(w, g, np.float32(lr)))
+    assert_allclose(got, ref.ref_sgd(w, g, np.float32(lr)),
+                    rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=SEEDS)
+def test_gemm_linearity(seed):
+    """Property: GEMM is linear — f(x+y, w) == f(x, w) + f(y, w)."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((32, 48)).astype(np.float32)
+    y = rng.standard_normal((32, 48)).astype(np.float32)
+    w = rng.standard_normal((48, 16)).astype(np.float32)
+    lhs = np.asarray(mac_gemm(x + y, w))
+    rhs = np.asarray(mac_gemm(x, w)) + np.asarray(mac_gemm(y, w))
+    assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)

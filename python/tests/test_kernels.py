@@ -1,0 +1,110 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import mac_gemm, spmm_agg, sgd_update
+from compile.kernels.mac_gemm import _clamp_block
+from compile.kernels import ref
+
+
+class TestMacGemm:
+    @pytest.mark.parametrize(
+        "m,k,n", [(32, 32, 32), (64, 96, 128), (128, 64, 32), (256, 256, 64)]
+    )
+    def test_matches_ref(self, rng, m, k, n):
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        got = np.asarray(mac_gemm(x, w))
+        assert_allclose(got, ref.ref_gemm(x, w), rtol=1e-5, atol=1e-4)
+
+    def test_non_square_blocks(self, rng):
+        x = rng.standard_normal((48, 80)).astype(np.float32)
+        w = rng.standard_normal((80, 112)).astype(np.float32)
+        got = np.asarray(mac_gemm(x, w, bm=16, bn=16, bk=16))
+        assert_allclose(got, ref.ref_gemm(x, w), rtol=1e-5, atol=1e-4)
+
+    def test_ragged_dims_fall_back_to_divisors(self, rng):
+        # 60 = 2^2·3·5 has no 128 divisor; clamping must find one.
+        x = rng.standard_normal((60, 36)).astype(np.float32)
+        w = rng.standard_normal((36, 44)).astype(np.float32)
+        got = np.asarray(mac_gemm(x, w))
+        assert_allclose(got, ref.ref_gemm(x, w), rtol=1e-5, atol=1e-4)
+
+    def test_bf16_inputs_f32_accumulate(self, rng):
+        # TF32-mult/FP32-acc analogue: bf16 in, f32 out.
+        x = rng.standard_normal((64, 64)).astype(np.float32)
+        w = rng.standard_normal((64, 64)).astype(np.float32)
+        got = np.asarray(
+            mac_gemm(jnp.asarray(x, jnp.bfloat16), jnp.asarray(w, jnp.bfloat16))
+        )
+        assert got.dtype == np.float32
+        assert_allclose(got, ref.ref_gemm(x, w), rtol=5e-2, atol=5e-1)
+
+    def test_shape_mismatch_raises(self, rng):
+        x = rng.standard_normal((8, 8)).astype(np.float32)
+        w = rng.standard_normal((4, 8)).astype(np.float32)
+        with pytest.raises(ValueError, match="contraction"):
+            mac_gemm(x, w)
+
+    def test_clamp_block(self):
+        assert _clamp_block(256, 128) == 128
+        assert _clamp_block(60, 128) == 60
+        assert _clamp_block(96, 64) == 48
+        assert _clamp_block(7, 128) == 7
+        assert _clamp_block(1, 128) == 1
+
+
+class TestSpmmAgg:
+    @pytest.mark.parametrize("nd,ns,f", [(64, 128, 32), (128, 1024, 64)])
+    def test_matches_ref(self, rng, nd, ns, f):
+        from tests.conftest import make_adj
+
+        a = make_adj(rng, nd, ns)
+        h = rng.standard_normal((ns, f)).astype(np.float32)
+        got = np.asarray(spmm_agg(a, h))
+        assert_allclose(got, ref.ref_agg(a, h), rtol=1e-5, atol=1e-4)
+
+    def test_zero_padding_is_noop(self, rng):
+        from tests.conftest import make_adj
+
+        a = make_adj(rng, 32, 64)
+        h = rng.standard_normal((64, 16)).astype(np.float32)
+        base = np.asarray(spmm_agg(a, h))
+        # Pad sources with zero columns/rows: result identical.
+        a_pad = np.pad(a, ((0, 0), (0, 64)))
+        h_pad = np.pad(h, ((0, 64), (0, 0)))
+        padded = np.asarray(spmm_agg(a_pad, h_pad))
+        assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
+
+    def test_identity_aggregation(self, rng):
+        h = rng.standard_normal((64, 32)).astype(np.float32)
+        eye = np.eye(64, dtype=np.float32)
+        assert_allclose(np.asarray(spmm_agg(eye, h)), h, rtol=1e-6)
+
+    def test_shape_mismatch_raises(self, rng):
+        with pytest.raises(ValueError, match="aggregation"):
+            spmm_agg(np.zeros((4, 8), np.float32), np.zeros((4, 8), np.float32))
+
+
+class TestSgdUpdate:
+    @pytest.mark.parametrize("r,c", [(32, 32), (64, 128), (60, 44)])
+    def test_matches_ref(self, rng, r, c):
+        w = rng.standard_normal((r, c)).astype(np.float32)
+        g = rng.standard_normal((r, c)).astype(np.float32)
+        got = np.asarray(sgd_update(w, g, 0.05))
+        assert_allclose(got, ref.ref_sgd(w, g, 0.05), rtol=1e-6, atol=1e-6)
+
+    def test_zero_lr_is_identity(self, rng):
+        w = rng.standard_normal((16, 16)).astype(np.float32)
+        g = rng.standard_normal((16, 16)).astype(np.float32)
+        assert_allclose(np.asarray(sgd_update(w, g, 0.0)), w)
+
+    def test_shape_mismatch_raises(self, rng):
+        with pytest.raises(ValueError, match="mismatch"):
+            sgd_update(
+                np.zeros((4, 4), np.float32), np.zeros((4, 8), np.float32), 0.1
+            )

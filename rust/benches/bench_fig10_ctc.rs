@@ -1,0 +1,44 @@
+//! **Fig. 10 reproduction** — per-core message-passing : compute ratio
+//! for each dataset (the paper plots 16-core scatter + the dataset
+//! averages 1:1.02 / 1:1.05 / 1:0.99 / 1:0.94).
+
+mod common;
+
+use common::banner;
+use gcn_noc::config::bench_epoch_config;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
+use gcn_noc::graph::datasets::PAPER_DATASETS;
+use gcn_noc::perf::utilization::PAPER_CTC;
+use gcn_noc::report::plot::ascii_bars;
+use gcn_noc::report::table::Table;
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() {
+    banner("Fig. 10: message passing vs combination+aggregation per core");
+    let cfg = bench_epoch_config();
+    let mut table = Table::new(vec!["dataset", "avg ctc (ours)", "avg ctc (paper)"]);
+    for spec in &PAPER_DATASETS {
+        let mut rng = SplitMix64::new(0xF16_10);
+        let rep = EpochModel::new(spec, ModelKind::Gcn, cfg).run(&mut rng);
+        let paper = PAPER_CTC
+            .iter()
+            .find(|(n, _)| *n == spec.name)
+            .map(|(_, v)| format!("1:{v:.2}"))
+            .unwrap_or_default();
+        table.row(vec![
+            spec.name.to_string(),
+            format!("1:{:.2}", rep.avg_ctc_ratio),
+            paper,
+        ]);
+        // Per-core scatter (one measured batch), the figure's content.
+        let bars: Vec<(String, f64)> = rep
+            .per_core_ctc
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (format!("core {i:>2}"), r))
+            .collect();
+        println!("\n{} per-core message-passing:compute ratios:", spec.name);
+        print!("{}", ascii_bars(&bars, 30));
+    }
+    println!("\n{}", table.render());
+}

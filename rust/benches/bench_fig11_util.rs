@@ -1,0 +1,46 @@
+//! **Fig. 11(b,c) reproduction** — average multi-core utilization per
+//! dataset (b) and NoC bandwidth utilization over aggregation progress at
+//! 10 time points (c, decreasing trend).
+
+mod common;
+
+use common::banner;
+use gcn_noc::config::bench_epoch_config;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
+use gcn_noc::graph::datasets::PAPER_DATASETS;
+use gcn_noc::perf::utilization::{trace_to_fig11c, trend_is_decreasing};
+use gcn_noc::report::plot::{ascii_bars, ascii_series};
+use gcn_noc::report::table::Table;
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() {
+    let cfg = bench_epoch_config();
+    let mut reports = Vec::new();
+    for spec in &PAPER_DATASETS {
+        let mut rng = SplitMix64::new(0xF16_11);
+        reports.push(EpochModel::new(spec, ModelKind::Gcn, cfg).run(&mut rng));
+    }
+
+    banner("Fig. 11(b): average multi-core utilization per dataset");
+    let bars: Vec<(String, f64)> = reports
+        .iter()
+        .map(|r| (r.dataset.to_string(), r.avg_core_utilization))
+        .collect();
+    print!("{}", ascii_bars(&bars, 40));
+    println!(
+        "paper mechanism check: power-law-skewed sets (Yelp/Amazon) should sit below Reddit"
+    );
+
+    banner("Fig. 11(c): NoC utilization across aggregation progress (10 points)");
+    let mut table = Table::new(vec!["dataset", "trace (0-9 scale)", "decreasing?"]);
+    for r in &reports {
+        let pts = trace_to_fig11c(&r.link_utilization_trace);
+        table.row(vec![
+            r.dataset.to_string(),
+            ascii_series(&pts),
+            if trend_is_decreasing(&pts) { "yes (paper: yes)" } else { "no (paper: yes)" }
+                .to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+}

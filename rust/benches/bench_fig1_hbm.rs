@@ -1,0 +1,69 @@
+//! **Fig. 1 reproduction** — HBM read bandwidth vs burst length for (a)
+//! local AXI access and (b,c,d) 2/4/6 concurrent remote requesters at
+//! port distances 2/6/10, including the paper's exact percentage drops.
+
+mod common;
+
+use common::banner;
+use gcn_noc::hbm::contention::{bandwidth_drop, CALIBRATION};
+use gcn_noc::hbm::simulator::{AccessPattern, HbmSimulator, Request};
+use gcn_noc::report::plot::ascii_bars;
+use gcn_noc::report::table::Table;
+
+fn main() {
+    let sim = HbmSimulator::default();
+
+    banner("Fig. 1(a): local AXI read bandwidth vs burst length (GB/s)");
+    let bursts = [4usize, 8, 16, 32, 64, 128, 256];
+    let bars: Vec<(String, f64)> = bursts
+        .iter()
+        .map(|&b| (format!("burst {b:>3}"), sim.scenario_bandwidth(AccessPattern::Local, b)))
+        .collect();
+    print!("{}", ascii_bars(&bars, 40));
+
+    banner("Fig. 1(b,c,d): concurrent non-local requesters (GB/s)");
+    let mut table = Table::new(vec!["burst", "local", "2@d2", "4@d2,6", "6@d2,6,10"]);
+    for &b in &[16usize, 32, 64, 128, 256] {
+        table.row(vec![
+            b.to_string(),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Local, b)),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Remote2, b)),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Remote4, b)),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Remote6, b)),
+        ]);
+    }
+    println!("{}", table.render());
+
+    banner("calibration vs the paper's published drops");
+    let mut cal = Table::new(vec!["scenario", "burst", "paper drop", "model drop"]);
+    for point in CALIBRATION {
+        for (burst, paper) in [(64usize, point.drop_b64), (128, point.drop_b128)] {
+            let model = bandwidth_drop(point.distances, burst);
+            cal.row(vec![
+                format!("{} requesters", point.requesters),
+                burst.to_string(),
+                format!("{:.1}%", paper * 100.0),
+                format!("{:.1}%", model * 100.0),
+            ]);
+        }
+    }
+    println!("{}", cal.render());
+
+    banner("event simulator: aggregation-style random access makespan");
+    // 8 ports hammering 2 channels (the pre-NUMA pathology) vs the NUMA
+    // layout (each port its own channel) — the motivation for §4.1.
+    let bytes = 1u64 << 24;
+    let contended: Vec<Request> = (0..8)
+        .map(|i| Request { port: i * 4, channel: i % 2, burst_len: 64, bytes })
+        .collect();
+    let numa: Vec<Request> =
+        (0..8).map(|i| Request { port: i, channel: i, burst_len: 64, bytes }).collect();
+    let t_contended = sim.serve(&contended);
+    let t_numa = sim.serve(&numa);
+    println!(
+        "8 x 16 MiB reads | shared 2 channels: {:.2} ms | NUMA channels: {:.2} ms | {:.1}x win",
+        t_contended * 1e3,
+        t_numa * 1e3,
+        t_contended / t_numa
+    );
+}

@@ -1,0 +1,83 @@
+//! **Fig. 9 reproduction** — routing cycles of the parallel multicast
+//! algorithm under random start-point stimuli, Fuse1..Fuse4 (16..64
+//! parallel messages), 1000 trials each; plus §5.2's bandwidth numbers
+//! (2.96 TB/s effective aggregate / 189.4 GB/s raw at 250 MHz).
+
+mod common;
+
+use common::{banner, fmt_time, time_it};
+use gcn_noc::core_model::CLOCK_HZ;
+use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
+use gcn_noc::noc::simulator::{
+    effective_bandwidth_bytes_per_sec, raw_bandwidth_bytes_per_sec,
+};
+use gcn_noc::report::plot::ascii_series;
+use gcn_noc::report::table::Table;
+use gcn_noc::util::rng::SplitMix64;
+use gcn_noc::util::stats::Summary;
+
+const TRIALS: usize = 1000;
+
+fn random_wave(fuse: usize, rng: &mut SplitMix64) -> MulticastRequest {
+    let mut sources = Vec::with_capacity(16 * fuse);
+    for _ in 0..fuse {
+        sources.extend(rng.permutation(16).iter().map(|&x| x as u8));
+    }
+    let dests: Vec<u8> = (0..16 * fuse).map(|_| rng.gen_range(16) as u8).collect();
+    MulticastRequest::new(sources, dests)
+}
+
+fn main() {
+    banner("Fig. 9: routing cycles under random test (1000 trials/fuse)");
+    let mut table = Table::new(vec![
+        "fuse", "msgs", "avg cycles (paper-style)", "min", "max", "first 50 trials",
+    ]);
+    let mut fuse_means = Vec::new();
+    for fuse in 1..=4usize {
+        let mut rng = SplitMix64::new(0x919 + fuse as u64);
+        let mut cycles = Vec::with_capacity(TRIALS);
+        for _ in 0..TRIALS {
+            let req = random_wave(fuse, &mut rng);
+            let out = route_parallel_multicast(&req, &mut rng).expect("routes");
+            cycles.push(out.table.total_cycles() as f64);
+        }
+        let s = Summary::of(cycles.iter().copied());
+        fuse_means.push(s.mean);
+        table.row(vec![
+            format!("Fuse{fuse}"),
+            format!("{}", 16 * fuse),
+            format!("{:.2}", s.mean),
+            format!("{:.0}", s.min),
+            format!("{:.0}", s.max),
+            ascii_series(&cycles[..50]),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper: +~1 cycle per added group Fuse2->Fuse4; measured deltas: {:.2}, {:.2}",
+        fuse_means[2] - fuse_means[1],
+        fuse_means[3] - fuse_means[2]
+    );
+
+    banner("S5.2: aggregate bandwidth at 250 MHz");
+    let avg_cycles = fuse_means[3];
+    let period_ns = avg_cycles / CLOCK_HZ * 1e9;
+    let raw = raw_bandwidth_bytes_per_sec(64, avg_cycles.round() as u64, CLOCK_HZ);
+    let eff = effective_bandwidth_bytes_per_sec(64, avg_cycles.round() as u64, CLOCK_HZ, 16.0);
+    println!("avg routing period (Fuse4): {period_ns:.2} ns   (paper: 20.13 ns)");
+    println!("raw NoC bandwidth:          {:.1} GB/s (paper: 189.4 GB/s)", raw / 1e9);
+    println!("effective (16x compressed): {:.2} TB/s (paper: 2.96 TB/s)", eff / 1e12);
+
+    banner("throughput of the routing engine itself (perf)");
+    let mut rng = SplitMix64::new(1);
+    let t = time_it(50, 2000, || {
+        let req = random_wave(4, &mut rng);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        std::hint::black_box(out.table.total_cycles());
+    });
+    println!(
+        "route_parallel_multicast(64 msgs): {} / wave  ({:.0} waves/s)",
+        fmt_time(t),
+        1.0 / t
+    );
+}

@@ -1,0 +1,116 @@
+//! **Runtime/perf bench** — PJRT train-step latency and the Layer-3 hot
+//! path breakdown: sampling, staging (padding + normalization), PJRT
+//! execution.  The §Perf target is staging overhead < 20 % of the PJRT
+//! step (EXPERIMENTS.md records before/after).
+
+mod common;
+
+use common::{banner, fmt_time, time_it};
+use gcn_noc::config::artifact_dir;
+use gcn_noc::graph::datasets::by_name;
+use gcn_noc::graph::sampler::NeighborSampler;
+use gcn_noc::report::table::Table;
+use gcn_noc::runtime::executor::{Executor, TensorIn};
+use gcn_noc::train::batch::stage;
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() {
+    let dir = artifact_dir(None);
+    if Executor::new(&dir).is_err() {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        return;
+    }
+
+    let mut rng = SplitMix64::new(0xB13);
+    let spec = by_name("Flickr").unwrap();
+    let graph = spec.instantiate(4096, &mut rng);
+
+    banner("hot-path breakdown (small artifact, batch 32)");
+    let mut exec = Executor::new(&dir).unwrap();
+    let meta = exec.meta("gcn2_train_step_small_coag").unwrap().clone();
+    let sampler = NeighborSampler::new(&graph.adj, vec![4, 4]);
+
+    let t_sample = time_it(5, 200, || {
+        let ids: Vec<u32> = (0..32).map(|_| rng.gen_range(graph.num_nodes()) as u32).collect();
+        std::hint::black_box(sampler.sample(&ids, &mut rng));
+    });
+    let ids: Vec<u32> = (0..32).map(|_| rng.gen_range(graph.num_nodes()) as u32).collect();
+    let batch = sampler.sample(&ids, &mut rng);
+    let t_stage = time_it(5, 200, || {
+        std::hint::black_box(stage(&batch, &graph, &meta, false).unwrap());
+    });
+    let staged = stage(&batch, &graph, &meta, false).unwrap();
+    let w1 = TensorIn::matrix(meta.d, meta.h, vec![0.01; meta.d * meta.h]);
+    let w2 = TensorIn::matrix(meta.h, meta.c, vec![0.01; meta.h * meta.c]);
+    let inputs = vec![
+        staged.x.clone(),
+        staged.a1.clone(),
+        staged.a2.clone(),
+        w1,
+        w2,
+        staged.yhot.clone(),
+        staged.row_mask.clone(),
+        staged.nvalid.clone(),
+        TensorIn::scalar(0.05),
+    ];
+    exec.load("gcn2_train_step_small_coag").unwrap();
+    let t_pjrt = time_it(5, 50, || {
+        std::hint::black_box(exec.run("gcn2_train_step_small_coag", &inputs).unwrap());
+    });
+
+    let mut t = Table::new(vec!["phase", "time", "% of PJRT step"]);
+    for (name, v) in [("sample", t_sample), ("stage+pad", t_stage), ("PJRT step", t_pjrt)] {
+        t.row(vec![
+            name.to_string(),
+            fmt_time(v),
+            format!("{:.1}%", 100.0 * v / t_pjrt),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "staging overhead target <20% of PJRT step: {}",
+        if (t_sample + t_stage) / t_pjrt < 0.20 { "PASS" } else { "MISS" }
+    );
+
+    banner("full trainer step (sample+stage+execute+commit)");
+    let cfg = TrainerConfig { steps: 30, log_every: 0, ..Default::default() };
+    let mut trainer = Trainer::new(&graph, cfg, &dir).unwrap();
+    let curve = trainer.train().unwrap();
+    println!(
+        "mean step: {} | artifact {}",
+        fmt_time(curve.mean_step_seconds()),
+        trainer.artifact()
+    );
+
+    banner("base artifact (b=128, n2=2048, d=256, h=256) single-step latency");
+    let meta_b = exec.meta("gcn2_train_step_base_coag").unwrap().clone();
+    let zeros = |r: usize, c: usize| TensorIn::matrix(r, c, vec![0.01; r * c]);
+    let base_inputs = vec![
+        zeros(meta_b.n2, meta_b.d),
+        zeros(meta_b.n1, meta_b.n2),
+        zeros(meta_b.b, meta_b.n1),
+        zeros(meta_b.d, meta_b.h),
+        zeros(meta_b.h, meta_b.c),
+        zeros(meta_b.b, meta_b.c),
+        TensorIn::vector(vec![1.0; meta_b.b]),
+        TensorIn::scalar(meta_b.b as f32),
+        TensorIn::scalar(0.05),
+    ];
+    exec.load("gcn2_train_step_base_coag").unwrap();
+    let t_base = time_it(2, 10, || {
+        std::hint::black_box(exec.run("gcn2_train_step_base_coag", &base_inputs).unwrap());
+    });
+    // FLOP estimate: fwd 2(n2 d h + n1 n2 h + n1 h c + b n1 c) × ~3 for bwd.
+    let flops = 3.0
+        * 2.0
+        * (meta_b.n2 as f64 * meta_b.d as f64 * meta_b.h as f64
+            + meta_b.n1 as f64 * meta_b.n2 as f64 * meta_b.h as f64
+            + meta_b.n1 as f64 * meta_b.h as f64 * meta_b.c as f64
+            + meta_b.b as f64 * meta_b.n1 as f64 * meta_b.c as f64);
+    println!(
+        "base step: {} (~{:.1} GFLOP/s on CPU PJRT)",
+        fmt_time(t_base),
+        flops / t_base / 1e9
+    );
+}

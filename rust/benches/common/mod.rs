@@ -1,0 +1,37 @@
+//! Shared bench harness (criterion is unavailable in this offline build;
+//! each bench is a `harness = false` binary using these helpers).
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` warmups; returns mean
+/// seconds per iteration.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Pretty duration.
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.2} us", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+/// Section banner.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}

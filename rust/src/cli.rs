@@ -1,0 +1,117 @@
+//! Hand-rolled CLI argument parsing (no external crates in this build
+//! environment): `gcn-noc <command> [--flag value]... [--switch]...`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                anyhow::bail!("unexpected positional argument '{tok}'");
+            };
+            // `--flag=value`, `--flag value`, or bare `--switch`.
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+            }
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --dataset flickr --steps 100 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("flickr"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("route --fuse=4 --trials=1000");
+        assert_eq!(a.get_usize("fuse", 1).unwrap(), 4);
+        assert_eq!(a.get_usize("trials", 0).unwrap(), 1000);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("epoch");
+        assert_eq!(a.get_or("dataset", "flickr"), "flickr");
+        assert_eq!(a.get_f64("lr", 0.05).unwrap(), 0.05);
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(["train".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse("x --steps abc");
+        assert!(a.get_usize("steps", 1).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

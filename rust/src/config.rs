@@ -1,0 +1,65 @@
+//! Top-level run configuration shared by the CLI and the examples.
+
+use crate::coordinator::epoch::TrainConfig;
+
+/// Default artifact directory, overridable via `--artifacts` or the
+/// `GCN_NOC_ARTIFACTS` environment variable.
+pub fn artifact_dir(flag: Option<&str>) -> std::path::PathBuf {
+    if let Some(f) = flag {
+        return f.into();
+    }
+    if let Ok(env) = std::env::var("GCN_NOC_ARTIFACTS") {
+        return env.into();
+    }
+    // Walk up from cwd looking for artifacts/manifest.txt (so examples run
+    // from anywhere inside the repo).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// Fast epoch-model configuration for interactive runs.
+pub fn quick_epoch_config() -> TrainConfig {
+    TrainConfig {
+        batch_size: 1024,
+        fanouts: [25, 10],
+        hidden_dim: 256,
+        measured_batches: 2,
+        replica_nodes: 8_192,
+    }
+}
+
+/// Thorough configuration for bench runs.
+pub fn bench_epoch_config() -> TrainConfig {
+    TrainConfig {
+        batch_size: 1024,
+        fanouts: [25, 10],
+        hidden_dim: 256,
+        measured_batches: 3,
+        replica_nodes: 16_384,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn artifact_dir_flag_wins() {
+        let d = super::artifact_dir(Some("/tmp/zzz"));
+        assert_eq!(d, std::path::PathBuf::from("/tmp/zzz"));
+    }
+
+    #[test]
+    fn configs_differ_in_fidelity() {
+        assert!(
+            super::bench_epoch_config().replica_nodes
+                > super::quick_epoch_config().replica_nodes
+        );
+    }
+}

@@ -1,0 +1,11 @@
+//! The system controller (paper §4.1/§4.4): execution-order estimation,
+//! global weight synchronization, and the end-to-end epoch pipeline.
+
+pub mod epoch;
+pub mod sequence_estimator;
+pub mod system;
+pub mod weight_bank;
+
+pub use epoch::{EpochModel, EpochReport, ModelKind, TrainConfig};
+pub use sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
+pub use weight_bank::WeightBank;

@@ -1,0 +1,251 @@
+//! The sequence estimator (paper §4.4, Table 1).
+//!
+//! Before a training run, the system controller is configured with the
+//! dataset hyper-parameters (batch size `b`, frontier sizes `n`/`n̄`,
+//! feature length `d`, hidden `h`, classes `c`, non-zeros `e`) and picks
+//! the execution ordering with the lowest total time complexity; the
+//! storage complexity decides how much HBM the SFBP region needs.
+//!
+//! Table 1 notation (one layer, k-th from the bottom):
+//! `A ∈ R[n, n̄]`, `X ∈ R[n̄, d]`, `W ∈ R[d, h]`, `E` the (k+1)-layer error,
+//! `E^L` the loss-layer error (`b × c`).
+
+/// The four execution orderings of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Ordering {
+    CoAg,
+    AgCo,
+    OursCoAg,
+    OursAgCo,
+}
+
+impl Ordering {
+    pub const ALL: [Ordering; 4] =
+        [Ordering::CoAg, Ordering::AgCo, Ordering::OursCoAg, Ordering::OursAgCo];
+
+    pub fn is_ours(self) -> bool {
+        matches!(self, Ordering::OursCoAg | Ordering::OursAgCo)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Ordering::CoAg => "CoAg",
+            Ordering::AgCo => "AgCo",
+            Ordering::OursCoAg => "Ours-CoAg",
+            Ordering::OursAgCo => "Ours-AgCo",
+        }
+    }
+
+    /// The artifact-name suffix of the forward ordering this row uses.
+    pub fn forward(self) -> &'static str {
+        match self {
+            Ordering::CoAg | Ordering::OursCoAg => "coag",
+            Ordering::AgCo | Ordering::OursAgCo => "agco",
+        }
+    }
+}
+
+/// Layer shape parameters (Table 1 symbols).
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeParams {
+    /// Batch size (loss-layer rows).
+    pub b: u64,
+    /// Destination nodes of this layer (k−1-hop frontier), `n`.
+    pub n: u64,
+    /// Source nodes (1-hop neighbors of `n`), `n̄`.
+    pub nbar: u64,
+    /// Input feature length `d`.
+    pub d: u64,
+    /// Output feature length `h`.
+    pub h: u64,
+    /// Classes `c`.
+    pub c: u64,
+    /// Non-zeros of `A`, `e`.
+    pub e: u64,
+}
+
+/// Time/storage complexity decomposition of one Table-1 row (abstract op
+/// counts / matrix elements — the same units the paper's O(·) terms use).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Complexity {
+    pub forward: u64,
+    pub transpose: u64,
+    pub backward: u64,
+    pub gradient: u64,
+}
+
+impl Complexity {
+    pub fn total(&self) -> u64 {
+        self.forward + self.transpose + self.backward + self.gradient
+    }
+}
+
+/// The estimator: evaluates Table 1 for given shapes.
+#[derive(Clone, Copy, Debug)]
+pub struct SequenceEstimator {
+    pub shape: ShapeParams,
+}
+
+impl SequenceEstimator {
+    pub fn new(shape: ShapeParams) -> Self {
+        Self { shape }
+    }
+
+    /// Time complexity of one ordering (Table 1 "Time Complexity" rows).
+    pub fn time(&self, o: Ordering) -> Complexity {
+        let ShapeParams { b, n, nbar, d, h, c, e } = self.shape;
+        match o {
+            // A(XW); Aᵀ,Wᵀ; (AᵀE)Wᵀ; Xᵀ(AᵀE); Xᵀ
+            // Transpose column: the Aᵀ edge-reorder pass (Table 1 writes
+            // O(n̄e); the Graph Converter's sort is one pass over the e
+            // edges with n̄ buckets — we count its op term `e`), plus Wᵀ
+            // (hd) and the stored-Xᵀ pass (n̄d).
+            Ordering::CoAg => Complexity {
+                forward: nbar * d * h + e * h,
+                transpose: e + h * d + nbar * d,
+                backward: e * h + nbar * d * h,
+                gradient: nbar * d * h,
+            },
+            // (AX)W; Aᵀ,Wᵀ; Aᵀ(EWᵀ); (AX)ᵀE; (AX)ᵀ
+            Ordering::AgCo => Complexity {
+                forward: e * d + n * d * h,
+                transpose: e + h * d + n * d, // O(n̄e)→edge pass + O(hd) + O(nd)
+                backward: n * d * h + e * d,
+                gradient: n * d * h,
+            },
+            // A(XW); Wᵀ; W(EᵀA); (EᵀA)X; (E^L)ᵀ
+            Ordering::OursCoAg => Complexity {
+                forward: nbar * d * h + e * h,
+                transpose: h * d + b * c,
+                backward: e * h + nbar * d * h,
+                gradient: nbar * d * h,
+            },
+            // (AX)W; Wᵀ; (W(Eᵀ))A; Eᵀ(AX); (E^L)ᵀ
+            Ordering::OursAgCo => Complexity {
+                forward: e * d + n * d * h,
+                transpose: h * d + b * c,
+                backward: n * d * h + e * d,
+                gradient: n * d * h,
+            },
+        }
+    }
+
+    /// Storage complexity (Table 1 "Storage Complexity" rows), in matrix
+    /// elements resident in HBM during the layer.
+    pub fn storage(&self, o: Ordering) -> u64 {
+        let ShapeParams { n, nbar, d, h, e, .. } = self.shape;
+        match o {
+            // fwd O(n̄d)+O(n̄h)+O(e); transpose O(e); bwd O(n̄h)+O(nh); Xᵀ O(n̄d)
+            Ordering::CoAg => (nbar * d + nbar * h + e) + e + (nbar * h + n * h) + nbar * d,
+            // fwd O(n̄d)+O(nd)+O(e); transpose O(e); bwd O(nd)+O(nh); (AX)ᵀ O(nd)
+            Ordering::AgCo => (nbar * d + n * d + e) + e + (n * d + n * h) + n * d,
+            // fwd same; no Aᵀ copy, no Xᵀ
+            Ordering::OursCoAg => (nbar * d + nbar * h + e) + (nbar * h + n * h),
+            Ordering::OursAgCo => (nbar * d + n * d + e) + (n * d + n * h),
+        }
+    }
+
+    /// The ordering the controller programs into the pipeline: minimum
+    /// total time complexity, storage as tie-break.
+    pub fn best(&self) -> Ordering {
+        *Ordering::ALL
+            .iter()
+            .min_by_key(|&&o| (self.time(o).total(), self.storage(o)))
+            .unwrap()
+    }
+
+    /// Best ordering restricted to the paper's optimized rows (the
+    /// production choice — CoAg vs AgCo per Table 1's "Ours" variants).
+    pub fn best_ours(&self) -> Ordering {
+        if self.time(Ordering::OursCoAg).total() <= self.time(Ordering::OursAgCo).total() {
+            Ordering::OursCoAg
+        } else {
+            Ordering::OursAgCo
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> ShapeParams {
+        // Typical layer-1 shape at batch 1024, fanouts 25/10, Flickr-ish.
+        ShapeParams { b: 1024, n: 11_000, nbar: 40_000, d: 500, h: 256, c: 7, e: 110_000 }
+    }
+
+    #[test]
+    fn eq5_ours_coag_beats_coag() {
+        // TC(CoAg − OursCoAg) = O(n̄(e+d)) − O(bc) > 0 — strictly positive
+        // in time for any realistic shape.
+        let est = SequenceEstimator::new(shape());
+        assert!(est.time(Ordering::CoAg).total() > est.time(Ordering::OursCoAg).total());
+    }
+
+    #[test]
+    fn eq6_ours_agco_beats_agco() {
+        let est = SequenceEstimator::new(shape());
+        assert!(est.time(Ordering::AgCo).total() > est.time(Ordering::OursAgCo).total());
+    }
+
+    #[test]
+    fn eq7_eq8_storage_gap_is_e_plus_nbar_d() {
+        // SC(CoAg − OursCoAg) = O(e) + O(n̄d) exactly, per Table 1.
+        let s = shape();
+        let est = SequenceEstimator::new(s);
+        let gap = est.storage(Ordering::CoAg) - est.storage(Ordering::OursCoAg);
+        assert_eq!(gap, s.e + s.nbar * s.d);
+        let gap2 = est.storage(Ordering::AgCo) - est.storage(Ordering::OursAgCo);
+        assert_eq!(gap2, s.e + s.n * s.d);
+    }
+
+    #[test]
+    fn best_is_always_ours() {
+        for (n, nbar, e) in [(1_000, 5_000, 20_000), (50_000, 200_000, 800_000)] {
+            let est = SequenceEstimator::new(ShapeParams {
+                b: 1024,
+                n,
+                nbar,
+                d: 256,
+                h: 256,
+                c: 41,
+                e,
+            });
+            assert!(est.best().is_ours(), "{:?}", est.best());
+        }
+    }
+
+    #[test]
+    fn ordering_choice_tracks_dimensionality() {
+        // When aggregation-first shrinks the matrix a lot (n ≪ n̄) and d is
+        // small, AgCo wins; with large d and mild shrink, CoAg wins.
+        let agco_friendly = SequenceEstimator::new(ShapeParams {
+            b: 1024, n: 2_000, nbar: 50_000, d: 64, h: 256, c: 7, e: 60_000,
+        });
+        assert_eq!(agco_friendly.best_ours(), Ordering::OursAgCo);
+        let coag_friendly = SequenceEstimator::new(ShapeParams {
+            b: 1024, n: 45_000, nbar: 50_000, d: 600, h: 64, c: 7, e: 2_000_000,
+        });
+        assert_eq!(coag_friendly.best_ours(), Ordering::OursCoAg);
+    }
+
+    #[test]
+    fn transposed_dataflow_never_stores_more() {
+        let est = SequenceEstimator::new(shape());
+        assert!(est.storage(Ordering::OursCoAg) < est.storage(Ordering::CoAg));
+        assert!(est.storage(Ordering::OursAgCo) < est.storage(Ordering::AgCo));
+    }
+
+    #[test]
+    fn forward_cost_identical_between_baseline_and_ours() {
+        let est = SequenceEstimator::new(shape());
+        assert_eq!(
+            est.time(Ordering::CoAg).forward,
+            est.time(Ordering::OursCoAg).forward
+        );
+        assert_eq!(
+            est.time(Ordering::AgCo).forward,
+            est.time(Ordering::OursAgCo).forward
+        );
+    }
+}

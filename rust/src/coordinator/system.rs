@@ -1,0 +1,94 @@
+//! The system controller: ties the sequence estimator, weight bank and
+//! per-batch pipeline together (paper Fig. 2's "System Controller" +
+//! "Weight Bank" + "Graph Converter" complex), and drives the *numerical*
+//! training through the PJRT runtime.
+
+use crate::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
+use crate::coordinator::weight_bank::WeightBank;
+use crate::util::matrix::Matrix;
+
+/// Controller state for one training run.
+pub struct SystemController {
+    pub weight_bank: WeightBank,
+    /// Orderings chosen per layer by the estimator (configured once the
+    /// dataset registers are programmed, §4.4).
+    pub layer_orderings: Vec<Ordering>,
+    /// Batches processed.
+    pub step: u64,
+    /// Weight-sync cadence (steps between GP broadcasts).
+    pub sync_every: u64,
+    /// HBM bytes written by weight synchronization so far.
+    pub sync_bytes: u64,
+}
+
+impl SystemController {
+    /// Program the controller: pick per-layer orderings from the dataset
+    /// hyper-parameters.
+    pub fn program(weights: Vec<Matrix>, layer_shapes: &[ShapeParams], sync_every: u64) -> Self {
+        let layer_orderings = layer_shapes
+            .iter()
+            .map(|&sp| SequenceEstimator::new(sp).best_ours())
+            .collect();
+        Self {
+            weight_bank: WeightBank::new(weights),
+            layer_orderings,
+            step: 0,
+            sync_every: sync_every.max(1),
+            sync_bytes: 0,
+        }
+    }
+
+    /// Record one optimizer step; synchronize the GP regions on cadence.
+    pub fn commit_step(&mut self, new_weights: Vec<Matrix>) {
+        self.weight_bank.update(new_weights);
+        self.step += 1;
+        if self.step % self.sync_every == 0 {
+            self.sync_bytes += self.weight_bank.synchronize();
+        }
+    }
+
+    /// The forward-ordering artifact suffix for layer `l` ("coag"/"agco").
+    pub fn forward_ordering(&self, l: usize) -> &'static str {
+        self.layer_orderings[l].forward()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<ShapeParams> {
+        vec![
+            ShapeParams { b: 1024, n: 11_000, nbar: 40_000, d: 500, h: 256, c: 7, e: 110_000 },
+            ShapeParams { b: 1024, n: 1024, nbar: 11_000, d: 256, h: 7, c: 7, e: 26_000 },
+        ]
+    }
+
+    #[test]
+    fn program_picks_ours_orderings() {
+        let ctl = SystemController::program(
+            vec![Matrix::zeros(4, 4), Matrix::zeros(4, 2)],
+            &shapes(),
+            4,
+        );
+        assert_eq!(ctl.layer_orderings.len(), 2);
+        assert!(ctl.layer_orderings.iter().all(|o| o.is_ours()));
+        assert!(matches!(ctl.forward_ordering(0), "coag" | "agco"));
+    }
+
+    #[test]
+    fn sync_happens_on_cadence() {
+        let mut ctl = SystemController::program(
+            vec![Matrix::zeros(4, 4)],
+            &shapes()[..1],
+            2,
+        );
+        ctl.commit_step(vec![Matrix::zeros(4, 4)]);
+        assert_eq!(ctl.sync_bytes, 0); // step 1: not yet
+        ctl.commit_step(vec![Matrix::zeros(4, 4)]);
+        assert!(ctl.sync_bytes > 0); // step 2: broadcast
+        let after_two = ctl.sync_bytes;
+        ctl.commit_step(vec![Matrix::zeros(4, 4)]);
+        assert_eq!(ctl.sync_bytes, after_two); // step 3: not yet
+    }
+}

@@ -1,0 +1,95 @@
+//! The Weight Bank (paper §4.1): holds the global weights, applies
+//! updates, and periodically re-broadcasts them into every HBM channel
+//! pair's GP region so cores always combine with fresh parameters.
+
+use crate::util::matrix::Matrix;
+
+/// Versioned global parameter store.
+#[derive(Clone, Debug)]
+pub struct WeightBank {
+    weights: Vec<Matrix>,
+    version: u64,
+    /// Which version each core's GP region currently holds.
+    core_versions: Vec<u64>,
+}
+
+impl WeightBank {
+    pub fn new(weights: Vec<Matrix>) -> Self {
+        let cores = crate::core_model::NUM_CORES;
+        Self { weights, version: 0, core_versions: vec![0; cores] }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn weights(&self) -> &[Matrix] {
+        &self.weights
+    }
+
+    /// Replace the weights after an optimizer step (bumps the version).
+    pub fn update(&mut self, new_weights: Vec<Matrix>) {
+        assert_eq!(new_weights.len(), self.weights.len(), "weight count fixed");
+        for (n, o) in new_weights.iter().zip(&self.weights) {
+            assert_eq!(n.shape(), o.shape(), "weight shapes fixed");
+        }
+        self.weights = new_weights;
+        self.version += 1;
+    }
+
+    /// Broadcast to all GP regions; returns bytes written to HBM.
+    pub fn synchronize(&mut self) -> u64 {
+        let bytes: u64 =
+            self.weights.iter().map(|w| (w.rows * w.cols * 4) as u64).sum();
+        let mut written = 0;
+        for v in &mut self.core_versions {
+            if *v != self.version {
+                *v = self.version;
+                written += bytes;
+            }
+        }
+        written
+    }
+
+    /// True when every core sees the latest weights.
+    pub fn is_synchronized(&self) -> bool {
+        self.core_versions.iter().all(|&v| v == self.version)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bank() -> WeightBank {
+        WeightBank::new(vec![Matrix::zeros(4, 8), Matrix::zeros(8, 2)])
+    }
+
+    #[test]
+    fn update_bumps_version_and_desyncs() {
+        let mut b = bank();
+        assert!(b.is_synchronized());
+        b.update(vec![Matrix::eye(4).pad_to(4, 8), Matrix::zeros(8, 2)]);
+        assert_eq!(b.version(), 1);
+        assert!(!b.is_synchronized());
+    }
+
+    #[test]
+    fn synchronize_writes_once_per_stale_core() {
+        let mut b = bank();
+        b.update(vec![Matrix::zeros(4, 8), Matrix::zeros(8, 2)]);
+        let bytes = b.synchronize();
+        let per_core = (4 * 8 + 8 * 2) * 4;
+        assert_eq!(bytes, per_core * 16);
+        assert!(b.is_synchronized());
+        // Second sync is a no-op.
+        assert_eq!(b.synchronize(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "weight shapes fixed")]
+    fn shape_change_rejected() {
+        let mut b = bank();
+        b.update(vec![Matrix::zeros(5, 8), Matrix::zeros(8, 2)]);
+    }
+}

@@ -1,0 +1,119 @@
+//! The per-core buffer complex (paper §4.2): Feature, Output, Neighbor and
+//! Aggregate buffers (the first two ping-pong'd), the Transfer / Reduced
+//! register files, and the Neighbor/Input FIFOs.
+//!
+//! Sizes are budgeted against the on-chip RAM the paper reports (Table 3:
+//! 24.5 MB BRAM+URAM for the whole accelerator) — the unit tests keep the
+//! configuration honest.
+
+use crate::noc::message::{NODES_PER_CORE, Packet};
+
+/// Static buffer configuration of one core.
+#[derive(Clone, Copy, Debug)]
+pub struct BufferConfig {
+    /// Feature width (f32 lanes) each buffer row stores.
+    pub feat_dim: usize,
+    /// Rows in the Feature Buffer (input features / weights staging).
+    pub feature_rows: usize,
+    /// Rows in the Neighbor Buffer (per-core node slice: 64).
+    pub neighbor_rows: usize,
+    /// Rows in the Aggregate Buffer (destination slice: 64).
+    pub aggregate_rows: usize,
+    /// Rows in the Output Buffer.
+    pub output_rows: usize,
+    /// Neighbor FIFO depth (packets).
+    pub fifo_depth: usize,
+    /// Transfer / Reduced register file entries.
+    pub regfile_entries: usize,
+}
+
+impl Default for BufferConfig {
+    fn default() -> Self {
+        Self {
+            feat_dim: 512,
+            feature_rows: 2 * NODES_PER_CORE, // ping-pong halves
+            neighbor_rows: NODES_PER_CORE,
+            aggregate_rows: NODES_PER_CORE,
+            output_rows: 2 * NODES_PER_CORE, // ping-pong halves
+            fifo_depth: 64,
+            regfile_entries: 16,
+        }
+    }
+}
+
+impl BufferConfig {
+    /// Bytes of on-chip RAM one core's buffer complex occupies.
+    pub fn bytes_per_core(&self) -> u64 {
+        let row = (self.feat_dim * 4) as u64;
+        let buffers = (self.feature_rows
+            + self.neighbor_rows
+            + self.aggregate_rows
+            + self.output_rows) as u64
+            * row;
+        let fifo = (self.fifo_depth * Packet::BITS / 8) as u64;
+        let regs = (self.regfile_entries * Packet::BITS / 8) as u64 * 2;
+        buffers + fifo + regs
+    }
+
+    /// Whole-accelerator on-chip RAM (16 cores + routing tables).
+    pub fn total_bytes(&self, routing_table_bytes: u64) -> u64 {
+        self.bytes_per_core() * crate::core_model::NUM_CORES as u64 + routing_table_bytes
+    }
+}
+
+/// Runtime ping-pong state of one double-buffered bank.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PingPong {
+    active: bool,
+}
+
+impl PingPong {
+    /// Bank currently owned by the producer (0 or 1).
+    pub fn write_bank(&self) -> usize {
+        self.active as usize
+    }
+
+    /// Bank currently owned by the consumer.
+    pub fn read_bank(&self) -> usize {
+        1 - self.active as usize
+    }
+
+    /// Swap producer/consumer banks (end of a phase).
+    pub fn flip(&mut self) {
+        self.active = !self.active;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_fits_table3_budget() {
+        // Table 3: 24.5 MB BRAM+URAM total. Routing tables get the rest.
+        let cfg = BufferConfig::default();
+        let per_core = cfg.bytes_per_core();
+        let total = cfg.total_bytes(4 << 20);
+        assert!(per_core < 2 << 20, "per-core {per_core} over 2 MiB");
+        assert!(total < 25_700_000, "total {total} exceeds 24.5 MB budget");
+        assert!(total > 10_000_000, "suspiciously small: {total}");
+    }
+
+    #[test]
+    fn ping_pong_alternates() {
+        let mut pp = PingPong::default();
+        assert_ne!(pp.read_bank(), pp.write_bank());
+        let w0 = pp.write_bank();
+        pp.flip();
+        assert_eq!(pp.read_bank(), w0);
+        pp.flip();
+        assert_eq!(pp.write_bank(), w0);
+    }
+
+    #[test]
+    fn bytes_scale_with_feat_dim() {
+        let small = BufferConfig { feat_dim: 128, ..Default::default() };
+        let big = BufferConfig { feat_dim: 512, ..Default::default() };
+        assert!(big.bytes_per_core() > 3 * small.bytes_per_core());
+    }
+}

@@ -1,0 +1,37 @@
+//! Per-core compute model (paper §4.2, Fig. 3): the 2-D MAC adder tree,
+//! the buffer complex, and the phase timing equations (Eq. 9/10).
+
+pub mod buffers;
+pub mod pipeline;
+pub mod pe_array;
+pub mod timing;
+
+pub use pe_array::PeArray;
+pub use timing::{CoreTiming, LayerPhaseTimes};
+
+/// System clock (paper §5.1: "the entire system operates at 250 MHz").
+pub const CLOCK_HZ: f64 = 250.0e6;
+/// Multiplier units per core (TF32).
+pub const MACS_PER_CORE: usize = 256;
+/// Accumulator units per core (FP32).
+pub const ACCS_PER_CORE: usize = 256;
+/// The MAC array edge: 256 units arranged 16×16.
+pub const ARRAY_EDGE: usize = 16;
+/// Compute cores.
+pub const NUM_CORES: usize = crate::noc::topology::NUM_CORES;
+
+/// Peak throughput of the full accelerator in FLOP/s
+/// (2 ops per MAC per cycle × 256 × 16 cores × 250 MHz ≈ 2 TFLOPS,
+/// matching Table 2's "Peak Perf" row).
+pub fn peak_flops() -> f64 {
+    2.0 * MACS_PER_CORE as f64 * NUM_CORES as f64 * CLOCK_HZ
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn peak_matches_table2() {
+        let tflops = super::peak_flops() / 1e12;
+        assert!((tflops - 2.048).abs() < 0.01, "{tflops}");
+    }
+}

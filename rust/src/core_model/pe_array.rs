@@ -1,0 +1,85 @@
+//! The 16×16 MAC array + adder tree (paper Fig. 3).
+//!
+//! Two operating modes, switched by the Arbiter:
+//!
+//! - **matrix mode** (combination): block matmul — each cycle the array
+//!   consumes a 16-wide reduction slice of a 16×16 output tile;
+//! - **vector mode** (aggregation): 256-lane multiply-accumulate over a
+//!   neighbor feature vector arriving from the Neighbor FIFO.
+
+use super::{ARRAY_EDGE, CLOCK_HZ, MACS_PER_CORE};
+
+/// One core's PE array.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeArray;
+
+impl PeArray {
+    /// Cycles for a dense `m×k @ k×n` matmul in matrix mode: every 16×16
+    /// output tile streams its `k` reduction slices through the array
+    /// (one slice per cycle), plus an adder-tree drain per tile.
+    pub fn gemm_cycles(m: usize, n: usize, k: usize) -> u64 {
+        let tiles_m = m.div_ceil(ARRAY_EDGE) as u64;
+        let tiles_n = n.div_ceil(ARRAY_EDGE) as u64;
+        let drain = 4; // log2(16) adder-tree stages, pipelined per tile
+        tiles_m * tiles_n * (k as u64 + drain)
+    }
+
+    /// Cycles to aggregate `edges` neighbor contributions of `feat_dim`
+    /// f32 features in vector mode (256 parallel MAC lanes).
+    pub fn aggregate_cycles(edges: usize, feat_dim: usize) -> u64 {
+        let slices = feat_dim.div_ceil(MACS_PER_CORE) as u64;
+        edges as u64 * slices
+    }
+
+    /// Seconds for a gemm at the system clock.
+    pub fn gemm_time(m: usize, n: usize, k: usize) -> f64 {
+        Self::gemm_cycles(m, n, k) as f64 / CLOCK_HZ
+    }
+
+    /// Achieved FLOP/s of a gemm (utilization × peak-per-core).
+    pub fn gemm_utilization(m: usize, n: usize, k: usize) -> f64 {
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let cycles = Self::gemm_cycles(m, n, k) as f64;
+        let peak_per_cycle = 2.0 * MACS_PER_CORE as f64;
+        (flops / cycles) / peak_per_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_tiles_near_peak() {
+        // 256×256×256: all tiles full, drain amortized → > 95 % utilization.
+        let u = PeArray::gemm_utilization(256, 256, 256);
+        assert!(u > 0.95, "{u}");
+    }
+
+    #[test]
+    fn ragged_tiles_lose_utilization() {
+        let full = PeArray::gemm_utilization(64, 64, 64);
+        let ragged = PeArray::gemm_utilization(65, 65, 64);
+        assert!(ragged < full);
+    }
+
+    #[test]
+    fn gemm_cycles_scale_linearly_in_k() {
+        let c1 = PeArray::gemm_cycles(64, 64, 100);
+        let c2 = PeArray::gemm_cycles(64, 64, 200);
+        assert!(c2 > c1 && c2 < 2 * c1 + 100);
+    }
+
+    #[test]
+    fn aggregate_cycles_one_slice_per_edge_small_feat() {
+        assert_eq!(PeArray::aggregate_cycles(100, 256), 100);
+        assert_eq!(PeArray::aggregate_cycles(100, 257), 200);
+        assert_eq!(PeArray::aggregate_cycles(0, 64), 0);
+    }
+
+    #[test]
+    fn time_consistent_with_cycles() {
+        let t = PeArray::gemm_time(64, 64, 64);
+        assert!((t - PeArray::gemm_cycles(64, 64, 64) as f64 / CLOCK_HZ).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,227 @@
+//! Cycle-level model of one core's execution pipeline (paper §4.2).
+//!
+//! The analytic [`timing`](super::timing) model gives phase totals; this
+//! simulator executes the §4.2 *mechanism* cycle by cycle:
+//!
+//! - the PE array alternates between **matrix tasks** (combination tiles
+//!   from the Input Data FIFO / Feature Buffer) and **scalar MAC tasks**
+//!   (aggregating neighbor packets from the Neighbor FIFO);
+//! - the **Arbiter** switches the datapath to the Neighbor FIFO whenever
+//!   packets are waiting (aggregation is latency-critical: the NoC barrier
+//!   can only release when all cores drain their FIFOs);
+//! - NoC deliveries arrive on a schedule (from the routing table replay)
+//!   and are dropped into the Neighbor FIFO, which has finite depth — a
+//!   full FIFO back-pressures the network (counted, paper's stall case);
+//! - Feature/Output buffers ping-pong per combination tile.
+//!
+//! Used by tests to validate the analytic model: total busy cycles must
+//! match `gemm_cycles + aggregate_cycles` exactly, and wall cycles must
+//! be ≥ the Eq. 9 bound.
+
+use crate::core_model::pe_array::PeArray;
+use crate::core_model::buffers::PingPong;
+
+/// One core's workload for a stage.
+#[derive(Clone, Debug)]
+pub struct StageWork {
+    /// Combination tiles: each costs `tile_cycles` on the PE array.
+    pub comb_tiles: usize,
+    pub tile_cycles: u64,
+    /// Aggregation packets delivered by the NoC: `(arrival_cycle, cost)`;
+    /// must be sorted by arrival.
+    pub packets: Vec<(u64, u64)>,
+    /// Neighbor FIFO depth (packets).
+    pub fifo_depth: usize,
+}
+
+/// Simulation result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineResult {
+    /// Total wall cycles until both task streams drain.
+    pub wall_cycles: u64,
+    /// Cycles the PE array was busy (either mode).
+    pub busy_cycles: u64,
+    /// Cycles spent in aggregation (scalar) mode.
+    pub agg_cycles: u64,
+    /// Packets that found the FIFO full on delivery (back-pressure).
+    pub fifo_stalls: u64,
+    /// Ping-pong buffer flips observed.
+    pub buffer_flips: u64,
+}
+
+impl PipelineResult {
+    /// PE utilization over the stage.
+    pub fn utilization(&self) -> f64 {
+        if self.wall_cycles == 0 {
+            return 0.0;
+        }
+        self.busy_cycles as f64 / self.wall_cycles as f64
+    }
+}
+
+/// Simulate one core through a stage.
+pub fn simulate_stage(work: &StageWork) -> PipelineResult {
+    let mut now: u64 = 0;
+    let mut busy: u64 = 0;
+    let mut agg: u64 = 0;
+    let mut stalls: u64 = 0;
+    let mut flips: u64 = 0;
+    let mut pingpong = PingPong::default();
+
+    let mut fifo: std::collections::VecDeque<u64> = std::collections::VecDeque::new();
+    let mut next_pkt = 0usize; // index into work.packets
+    let mut tiles_left = work.comb_tiles;
+
+    loop {
+        // Deliver every packet that has arrived by `now`.
+        while next_pkt < work.packets.len() && work.packets[next_pkt].0 <= now {
+            if fifo.len() >= work.fifo_depth {
+                // Back-pressure: the packet waits on the link one cycle at
+                // a time (we re-check after the next event).
+                stalls += 1;
+                break;
+            }
+            fifo.push_back(work.packets[next_pkt].1);
+            next_pkt += 1;
+        }
+
+        // Arbiter: neighbor FIFO first (drain aggregation), else a
+        // combination tile, else idle until the next arrival.
+        if let Some(cost) = fifo.pop_front() {
+            now += cost;
+            busy += cost;
+            agg += cost;
+        } else if tiles_left > 0 {
+            now += work.tile_cycles;
+            busy += work.tile_cycles;
+            tiles_left -= 1;
+            pingpong.flip(); // output tile handed to the other bank
+            flips += 1;
+        } else if next_pkt < work.packets.len() {
+            // Idle: jump to the next packet arrival.
+            now = now.max(work.packets[next_pkt].0);
+        } else {
+            break;
+        }
+    }
+
+    PipelineResult {
+        wall_cycles: now,
+        busy_cycles: busy,
+        agg_cycles: agg,
+        fifo_stalls: stalls,
+        buffer_flips: flips,
+    }
+}
+
+/// Convenience: build a [`StageWork`] from matrix/edge counts, with NoC
+/// packets arriving uniformly over `delivery_window` cycles.
+pub fn stage_work_from_counts(
+    m: usize,
+    n: usize,
+    k: usize,
+    edges: usize,
+    feat_dim: usize,
+    delivery_window: u64,
+    fifo_depth: usize,
+) -> StageWork {
+    let tiles = m.div_ceil(16) * n.div_ceil(16);
+    let tile_cycles = if tiles == 0 { 0 } else { PeArray::gemm_cycles(m, n, k) / tiles as u64 };
+    let per_edge = PeArray::aggregate_cycles(1, feat_dim);
+    let packets = (0..edges)
+        .map(|i| {
+            let at = if edges <= 1 {
+                0
+            } else {
+                delivery_window * i as u64 / (edges as u64 - 1).max(1)
+            };
+            (at, per_edge)
+        })
+        .collect();
+    StageWork { comb_tiles: tiles, tile_cycles, packets, fifo_depth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_combination_matches_analytic() {
+        let work = stage_work_from_counts(64, 64, 64, 0, 256, 0, 16);
+        let res = simulate_stage(&work);
+        assert_eq!(res.wall_cycles, PeArray::gemm_cycles(64, 64, 64));
+        assert_eq!(res.busy_cycles, res.wall_cycles);
+        assert_eq!(res.agg_cycles, 0);
+        assert!((res.utilization() - 1.0).abs() < 1e-12);
+        assert_eq!(res.buffer_flips, 16); // 4×4 output tiles
+    }
+
+    #[test]
+    fn pure_aggregation_matches_analytic() {
+        let work = stage_work_from_counts(0, 0, 0, 100, 256, 0, 1024);
+        let res = simulate_stage(&work);
+        assert_eq!(res.busy_cycles, PeArray::aggregate_cycles(100, 256));
+        assert_eq!(res.agg_cycles, res.busy_cycles);
+    }
+
+    #[test]
+    fn busy_cycles_are_exactly_the_analytic_sum() {
+        let work = stage_work_from_counts(128, 64, 96, 500, 256, 1000, 64);
+        let res = simulate_stage(&work);
+        let want = PeArray::gemm_cycles(128, 64, 96) + PeArray::aggregate_cycles(500, 256);
+        assert_eq!(res.busy_cycles, want);
+    }
+
+    #[test]
+    fn communication_hides_behind_compute() {
+        // Eq. 9: when combination work dominates and packets arrive early,
+        // wall ≈ busy (no idle).
+        let work = stage_work_from_counts(256, 256, 256, 50, 256, 100, 64);
+        let res = simulate_stage(&work);
+        assert_eq!(res.wall_cycles, res.busy_cycles, "no idle expected");
+    }
+
+    #[test]
+    fn late_arrivals_create_idle() {
+        // Packets arriving long after compute drains leave the PE idle —
+        // the comm-bound branch of Eq. 9.
+        let mut work = stage_work_from_counts(16, 16, 16, 4, 256, 0, 64);
+        let far = 100_000u64;
+        for (i, p) in work.packets.iter_mut().enumerate() {
+            p.0 = far + i as u64 * 10;
+        }
+        let res = simulate_stage(&work);
+        assert!(res.wall_cycles >= far);
+        assert!(res.utilization() < 0.1);
+    }
+
+    #[test]
+    fn fifo_back_pressure_counted() {
+        // 1-deep FIFO with a burst of simultaneous arrivals → stalls.
+        let work = StageWork {
+            comb_tiles: 0,
+            tile_cycles: 0,
+            packets: (0..16).map(|_| (0u64, 4u64)).collect(),
+            fifo_depth: 1,
+        };
+        let res = simulate_stage(&work);
+        assert!(res.fifo_stalls > 0);
+        // Everything still drains.
+        assert_eq!(res.agg_cycles, 16 * 4);
+    }
+
+    #[test]
+    fn arbiter_prioritizes_neighbor_fifo() {
+        // With packets available at t=0 and tiles pending, aggregation
+        // cycles must be front-loaded: wall = agg burst then tiles.
+        let work = StageWork {
+            comb_tiles: 2,
+            tile_cycles: 100,
+            packets: vec![(0, 7), (0, 7)],
+            fifo_depth: 8,
+        };
+        let res = simulate_stage(&work);
+        assert_eq!(res.wall_cycles, 14 + 200);
+        assert_eq!(res.agg_cycles, 14);
+    }
+}

@@ -1,0 +1,162 @@
+//! Phase timing — Eq. 9 and Eq. 10 of the paper.
+//!
+//! For a single core in one GCN layer:
+//!
+//! ```text
+//!   t_singlecore = max(t_message_passing, t_combination + t_aggregation)
+//! ```
+//!
+//! (communication hides behind compute when the MAC time dominates); in
+//! the multi-core setting, synchronization makes the layer time the
+//! maximum over cores:
+//!
+//! ```text
+//!   t_multicore = max_i(t_singlecore_i)
+//! ```
+
+use super::pe_array::PeArray;
+use super::CLOCK_HZ;
+
+/// Store-and-forward expansion of the flit schedule: a packet occupies the
+/// Transfer Register File of each intermediate core for a full cycle per
+/// flit (no cross-hop wormhole pipelining in the paper's switch), and the
+/// Route Receiver's decode adds a cycle — ≈ 2× the ideal pipelined count
+/// at the hypercube's average path length.
+pub const STORE_FORWARD_FACTOR: f64 = 2.25;
+
+/// Per-core phase times for one layer (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerPhaseTimes {
+    pub combination: f64,
+    pub aggregation: f64,
+    pub message_passing: f64,
+}
+
+impl LayerPhaseTimes {
+    /// Eq. 9.
+    pub fn single_core(&self) -> f64 {
+        self.message_passing.max(self.combination + self.aggregation)
+    }
+
+    /// Communication-to-computation balance (Fig. 10's plotted ratio:
+    /// message passing : combination+aggregation).
+    pub fn ctc_ratio(&self) -> f64 {
+        self.message_passing / (self.combination + self.aggregation).max(1e-30)
+    }
+
+    /// Utilization of this core over the layer: fraction of the wall time
+    /// the MAC array is busy.
+    pub fn core_utilization(&self) -> f64 {
+        (self.combination + self.aggregation) / self.single_core().max(1e-30)
+    }
+}
+
+/// Eq. 10: multi-core layer time (barrier across cores).
+pub fn multicore_layer_time(cores: &[LayerPhaseTimes]) -> f64 {
+    cores.iter().map(|c| c.single_core()).fold(0.0, f64::max)
+}
+
+/// Average multi-core utilization (Fig. 11(b)): each core's busy time over
+/// the synchronized layer time.
+pub fn multicore_utilization(cores: &[LayerPhaseTimes]) -> f64 {
+    let wall = multicore_layer_time(cores);
+    if wall <= 0.0 {
+        return 0.0;
+    }
+    let busy: f64 = cores.iter().map(|c| c.combination + c.aggregation).sum();
+    busy / (wall * cores.len() as f64)
+}
+
+/// Timing helper bundling the hardware parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CoreTiming {
+    pub clock_hz: f64,
+}
+
+impl Default for CoreTiming {
+    fn default() -> Self {
+        Self { clock_hz: CLOCK_HZ }
+    }
+}
+
+impl CoreTiming {
+    /// Combination phase: this core's share of a `m×k @ k×n` matmul,
+    /// bounded by its HBM read time for the operands.
+    pub fn combination_time(&self, m: usize, n: usize, k: usize, hbm_read_s: f64) -> f64 {
+        let compute = PeArray::gemm_cycles(m, n, k) as f64 / self.clock_hz;
+        compute.max(hbm_read_s)
+    }
+
+    /// Aggregation phase: `edges` contributions of `feat_dim` features.
+    pub fn aggregation_time(&self, edges: usize, feat_dim: usize) -> f64 {
+        PeArray::aggregate_cycles(edges, feat_dim) as f64 / self.clock_hz
+    }
+
+    /// Message-passing phase: `noc_cycles` routing cycles, where each
+    /// message carries `feat_dim` f32 features split into 64-byte flits
+    /// (the 512-bit feature word of the 518-bit packet), and each hop
+    /// stores-and-forwards through the Transfer Register File (the packet
+    /// must be resident before the Route Receiver decodes the next
+    /// instruction), costing [`STORE_FORWARD_FACTOR`]× the pipelined count.
+    pub fn message_passing_time(&self, noc_cycles: u64, feat_dim: usize) -> f64 {
+        let flits = feat_dim.div_ceil(16) as u64; // 16 f32 lanes per flit
+        (noc_cycles * flits) as f64 * STORE_FORWARD_FACTOR / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq9_takes_max() {
+        let t = LayerPhaseTimes { combination: 3.0, aggregation: 1.0, message_passing: 2.0 };
+        assert_eq!(t.single_core(), 4.0); // compute-bound: mp hidden
+        let t2 = LayerPhaseTimes { combination: 1.0, aggregation: 0.5, message_passing: 9.0 };
+        assert_eq!(t2.single_core(), 9.0); // comm-bound
+    }
+
+    #[test]
+    fn eq10_is_max_over_cores() {
+        let cores = vec![
+            LayerPhaseTimes { combination: 1.0, aggregation: 0.0, message_passing: 0.0 },
+            LayerPhaseTimes { combination: 5.0, aggregation: 0.0, message_passing: 0.0 },
+        ];
+        assert_eq!(multicore_layer_time(&cores), 5.0);
+    }
+
+    #[test]
+    fn utilization_drops_when_one_core_lags() {
+        // The Fig. 11(b) mechanism: a straggler makes everyone wait.
+        let balanced = vec![
+            LayerPhaseTimes { combination: 1.0, aggregation: 1.0, message_passing: 0.5 };
+            16
+        ];
+        let mut skewed = balanced.clone();
+        skewed[0].aggregation = 5.0;
+        assert!(multicore_utilization(&balanced) > 0.99);
+        assert!(multicore_utilization(&skewed) < 0.5);
+    }
+
+    #[test]
+    fn ctc_ratio_matches_definition() {
+        let t = LayerPhaseTimes { combination: 2.0, aggregation: 2.0, message_passing: 4.0 };
+        assert!((t.ctc_ratio() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn message_passing_time_scales_with_features() {
+        let ct = CoreTiming::default();
+        let t64 = ct.message_passing_time(100, 64);
+        let t512 = ct.message_passing_time(100, 512);
+        assert!((t512 / t64 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn combination_hbm_bound() {
+        let ct = CoreTiming::default();
+        let compute_only = ct.combination_time(64, 64, 64, 0.0);
+        let hbm_bound = ct.combination_time(64, 64, 64, 1.0);
+        assert!(hbm_bound == 1.0 && compute_only < 1.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! The Graph Converter (paper §4.1): switches COO edge order between
+//! row-major (forward aggregation) and column-major (backward aggregation)
+//! so edges are stored once.
+//!
+//! The paper's "Ours" backward dataflow eliminates the column-major pass
+//! for the *error* path (the adjacency is only ever consumed row-major);
+//! the converter remains for the baseline dataflows and for the diagonal
+//! block-queue sort inside Router-St.
+
+use crate::graph::coo::Coo;
+
+/// Edge traversal order for an aggregation stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeOrder {
+    /// Forward: aggregate row-wise (destination-major).
+    RowMajor,
+    /// Backward (baseline dataflow): aggregate column-wise — equivalent to
+    /// traversing Aᵀ row-wise without materializing it.
+    ColMajor,
+}
+
+/// Sort `coo`'s parallel arrays in the requested order (stable within the
+/// major key so per-block sequences stay deterministic).
+pub fn convert(coo: &mut Coo, order: EdgeOrder) {
+    let n = coo.nnz();
+    let mut perm: Vec<usize> = (0..n).collect();
+    match order {
+        EdgeOrder::RowMajor => perm.sort_by_key(|&i| (coo.rows[i], coo.cols[i])),
+        EdgeOrder::ColMajor => perm.sort_by_key(|&i| (coo.cols[i], coo.rows[i])),
+    }
+    apply_perm(&mut coo.rows, &perm);
+    apply_perm(&mut coo.cols, &perm);
+    apply_perm(&mut coo.vals, &perm);
+}
+
+/// True if `coo`'s edges already follow `order`.
+pub fn is_sorted(coo: &Coo, order: EdgeOrder) -> bool {
+    let key = |i: usize| match order {
+        EdgeOrder::RowMajor => (coo.rows[i], coo.cols[i]),
+        EdgeOrder::ColMajor => (coo.cols[i], coo.rows[i]),
+    };
+    (1..coo.nnz()).all(|i| key(i - 1) <= key(i))
+}
+
+fn apply_perm<T: Copy>(xs: &mut [T], perm: &[usize]) {
+    let orig: Vec<T> = xs.to_vec();
+    for (dst, &src) in perm.iter().enumerate() {
+        xs[dst] = orig[src];
+    }
+}
+
+/// Cost model of one conversion pass (the `O(n̄e)` "Transpose" row of
+/// Table 1): a radix-sort pass over `e` edges with `n` major buckets.
+pub fn conversion_cost_ops(n_major: usize, edges: usize) -> u64 {
+    (n_major as u64) + 2 * (edges as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        Coo::from_edges(4, 4, &[(2, 1), (0, 3), (1, 0), (0, 1), (3, 2), (1, 2)])
+    }
+
+    #[test]
+    fn row_major_sorts_by_destination() {
+        let mut c = sample();
+        convert(&mut c, EdgeOrder::RowMajor);
+        assert!(is_sorted(&c, EdgeOrder::RowMajor));
+        assert_eq!(c.rows, vec![0, 0, 1, 1, 2, 3]);
+        assert_eq!(c.cols, vec![1, 3, 0, 2, 1, 2]);
+    }
+
+    #[test]
+    fn col_major_sorts_by_source() {
+        let mut c = sample();
+        convert(&mut c, EdgeOrder::ColMajor);
+        assert!(is_sorted(&c, EdgeOrder::ColMajor));
+        assert_eq!(c.cols, vec![0, 1, 1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn conversion_is_idempotent() {
+        let mut c = sample();
+        convert(&mut c, EdgeOrder::RowMajor);
+        let once = c.clone();
+        convert(&mut c, EdgeOrder::RowMajor);
+        assert_eq!(c, once);
+    }
+
+    #[test]
+    fn conversion_preserves_edge_multiset() {
+        let orig = sample();
+        let mut c = orig.clone();
+        convert(&mut c, EdgeOrder::ColMajor);
+        let mut a: Vec<_> = orig.iter().map(|(r, col, _)| (r, col)).collect();
+        let mut b: Vec<_> = c.iter().map(|(r, col, _)| (r, col)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn values_travel_with_edges() {
+        let mut c = Coo::new(2, 2);
+        c.push(1, 0, 10.0);
+        c.push(0, 1, 20.0);
+        convert(&mut c, EdgeOrder::RowMajor);
+        assert_eq!(c.vals, vec![20.0, 10.0]);
+    }
+
+    #[test]
+    fn cost_model_monotone_in_edges() {
+        assert!(conversion_cost_ops(16, 100) < conversion_cost_ops(16, 1000));
+    }
+}

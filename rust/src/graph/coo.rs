@@ -1,0 +1,201 @@
+//! COO sparse matrix — the paper's on-accelerator edge format.
+//!
+//! The adjacency is stored once in COO and re-sorted between row-major
+//! (forward aggregation) and column-major (backward aggregation) order by
+//! the Graph Converter, "to avoid redundant storage of edges" (§4.1).
+
+use crate::graph::csr::Csr;
+
+/// Coordinate-format sparse matrix with f32 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Coo { n_rows, n_cols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn from_edges(n_rows: usize, n_cols: usize, edges: &[(u32, u32)]) -> Self {
+        let mut c = Coo::new(n_rows, n_cols);
+        for &(r, col) in edges {
+            c.push(r, col, 1.0);
+        }
+        c
+    }
+
+    pub fn push(&mut self, row: u32, col: u32, val: f32) {
+        debug_assert!((row as usize) < self.n_rows && (col as usize) < self.n_cols);
+        self.rows.push(row);
+        self.cols.push(col);
+        self.vals.push(val);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        self.rows
+            .iter()
+            .zip(&self.cols)
+            .zip(&self.vals)
+            .map(|((&r, &c), &v)| (r, c, v))
+    }
+
+    /// Out-degree of each row.
+    pub fn row_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.n_rows];
+        for &r in &self.rows {
+            deg[r as usize] += 1;
+        }
+        deg
+    }
+
+    /// Transpose (swaps rows/cols; used by baseline dataflows that need Aᵀ
+    /// — the "Ours" dataflow never calls this on the big adjacency).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            n_rows: self.n_cols,
+            n_cols: self.n_rows,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Convert to CSR (sorts row-major internally).
+    pub fn to_csr(&self) -> Csr {
+        let mut indptr = vec![0usize; self.n_rows + 1];
+        for &r in &self.rows {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut vals = vec![0f32; self.nnz()];
+        let mut next = indptr.clone();
+        for ((&r, &c), &v) in self.rows.iter().zip(&self.cols).zip(&self.vals) {
+            let slot = next[r as usize];
+            indices[slot] = c;
+            vals[slot] = v;
+            next[r as usize] += 1;
+        }
+        Csr { n_rows: self.n_rows, n_cols: self.n_cols, indptr, indices, vals }
+    }
+
+    /// Symmetric GCN normalization on a bipartite sampled block:
+    /// `Ã[i,j] = A[i,j] / sqrt(deg_row(i) * deg_col(j))` (the sampled-block
+    /// analogue of D̃^{-1/2}(A+I)D̃^{-1/2}; self-loops must already be
+    /// present as explicit edges).
+    pub fn gcn_normalized(&self) -> Coo {
+        let mut rdeg = vec![0f32; self.n_rows];
+        let mut cdeg = vec![0f32; self.n_cols];
+        for (r, c, _) in self.iter() {
+            rdeg[r as usize] += 1.0;
+            cdeg[c as usize] += 1.0;
+        }
+        let mut out = self.clone();
+        for i in 0..out.nnz() {
+            let r = out.rows[i] as usize;
+            let c = out.cols[i] as usize;
+            out.vals[i] /= (rdeg[r] * cdeg[c]).sqrt().max(1e-12);
+        }
+        out
+    }
+
+    /// Row-mean normalization (GraphSAGE mean aggregator): each row sums
+    /// to 1 over its neighbors.
+    pub fn row_normalized(&self) -> Coo {
+        let mut rdeg = vec![0f32; self.n_rows];
+        for &r in &self.rows {
+            rdeg[r as usize] += 1.0;
+        }
+        let mut out = self.clone();
+        for i in 0..out.nnz() {
+            out.vals[i] /= rdeg[out.rows[i] as usize].max(1.0);
+        }
+        out
+    }
+
+    /// Densify into a row-major `rows × cols` f32 buffer (padding with
+    /// zeros up to `(pad_rows, pad_cols)`) — the staging step that feeds
+    /// the fixed-shape PJRT artifacts.
+    pub fn to_dense_padded(&self, pad_rows: usize, pad_cols: usize) -> Vec<f32> {
+        assert!(pad_rows >= self.n_rows && pad_cols >= self.n_cols);
+        let mut out = vec![0f32; pad_rows * pad_cols];
+        for (r, c, v) in self.iter() {
+            out[r as usize * pad_cols + c as usize] += v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        Coo::from_edges(3, 4, &[(0, 0), (0, 2), (1, 1), (2, 3), (2, 0)])
+    }
+
+    #[test]
+    fn nnz_and_degrees() {
+        let c = sample();
+        assert_eq!(c.nnz(), 5);
+        assert_eq!(c.row_degrees(), vec![2, 1, 2]);
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let t = sample().transpose();
+        assert_eq!(t.n_rows, 4);
+        assert_eq!(t.n_cols, 3);
+        assert_eq!(t.transpose(), sample());
+    }
+
+    #[test]
+    fn to_csr_roundtrip_content() {
+        let csr = sample().to_csr();
+        assert_eq!(csr.indptr, vec![0, 2, 3, 5]);
+        assert_eq!(csr.row(0).0, &[0, 2]);
+        assert_eq!(csr.row(2).0, &[3, 0]);
+    }
+
+    #[test]
+    fn gcn_normalization_symmetric() {
+        // 2x2 with all edges: degrees 2 everywhere → every value 1/2.
+        let c = Coo::from_edges(2, 2, &[(0, 0), (0, 1), (1, 0), (1, 1)]);
+        let n = c.gcn_normalized();
+        for (_, _, v) in n.iter() {
+            assert!((v - 0.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn row_normalization_sums_to_one() {
+        let n = sample().row_normalized();
+        let mut sums = vec![0f32; 3];
+        for (r, _, v) in n.iter() {
+            sums[r as usize] += v;
+        }
+        for s in sums {
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dense_padding_zero_fills() {
+        let d = sample().to_dense_padded(4, 6);
+        assert_eq!(d.len(), 24);
+        assert_eq!(d[0 * 6 + 0], 1.0);
+        assert_eq!(d[2 * 6 + 3], 1.0);
+        assert_eq!(d[3 * 6 + 5], 0.0); // padded row
+    }
+}

@@ -1,0 +1,74 @@
+//! CSR sparse matrix — the host-side format for fast neighbor lookup
+//! during GraphSAGE sampling.
+
+/// Compressed sparse row matrix with f32 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Neighbor (indices, values) of `row`.
+    #[inline]
+    pub fn row(&self, row: usize) -> (&[u32], &[f32]) {
+        let (s, e) = (self.indptr[row], self.indptr[row + 1]);
+        (&self.indices[s..e], &self.vals[s..e])
+    }
+
+    #[inline]
+    pub fn degree(&self, row: usize) -> usize {
+        self.indptr[row + 1] - self.indptr[row]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sparse-matrix × dense-matrix (rows of `x` are features). Reference
+    /// implementation for cross-checking the dense PJRT path.
+    pub fn spmm(&self, x: &crate::util::Matrix) -> crate::util::Matrix {
+        assert_eq!(self.n_cols, x.rows);
+        let mut out = crate::util::Matrix::zeros(self.n_rows, x.cols);
+        for r in 0..self.n_rows {
+            let (cols, vals) = self.row(r);
+            let orow = out.row_mut(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                for (o, &xv) in orow.iter_mut().zip(x.row(c as usize)) {
+                    *o += v * xv;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::coo::Coo;
+    use crate::util::Matrix;
+
+    #[test]
+    fn row_access() {
+        let coo = Coo::from_edges(3, 3, &[(0, 1), (1, 0), (1, 2), (2, 2)]);
+        let csr = coo.to_csr();
+        assert_eq!(csr.degree(0), 1);
+        assert_eq!(csr.degree(1), 2);
+        assert_eq!(csr.row(1).0, &[0, 2]);
+        assert_eq!(csr.nnz(), 4);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let coo = Coo::from_edges(3, 3, &[(0, 0), (0, 1), (1, 2), (2, 0)]);
+        let csr = coo.to_csr();
+        let x = Matrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let dense = Matrix::from_vec(3, 3, coo.to_dense_padded(3, 3));
+        let want = dense.matmul(&x);
+        let got = csr.spmm(&x);
+        assert!(got.max_abs_diff(&want) < 1e-6);
+    }
+}

@@ -1,0 +1,144 @@
+//! The paper's evaluation datasets, as published statistics + scaled
+//! synthetic instantiations.
+//!
+//! Absolute epoch times in Table 2 are driven by these statistics (node /
+//! edge counts set the number of mini-batches and the aggregation load);
+//! the synthetic generator only has to match them, not the actual edges.
+
+use crate::graph::generate::{community_graph, LabeledGraph};
+use crate::util::rng::SplitMix64;
+
+/// Published statistics of one evaluation dataset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub nodes: u64,
+    /// Undirected edge count as published.
+    pub edges: u64,
+    pub feat_dim: usize,
+    pub classes: usize,
+    /// Multi-label (sigmoid head) vs single-label (softmax head).
+    pub multilabel: bool,
+    /// Power-law exponent used for the synthetic stand-in.
+    pub alpha: f64,
+}
+
+impl DatasetSpec {
+    pub fn avg_degree(&self) -> f64 {
+        2.0 * self.edges as f64 / self.nodes as f64
+    }
+
+    /// Mini-batches per epoch at the paper's batch size (1024).
+    pub fn batches_per_epoch(&self, batch_size: usize) -> u64 {
+        self.nodes.div_ceil(batch_size as u64)
+    }
+
+    /// Instantiate a scaled synthetic replica with ~`target_nodes` nodes,
+    /// preserving average degree, feature dim and class count.
+    pub fn instantiate(&self, target_nodes: usize, rng: &mut SplitMix64) -> LabeledGraph {
+        community_graph(
+            target_nodes,
+            self.avg_degree().min(64.0), // cap: sampling clips fanout at 25 anyway
+            self.alpha,
+            self.feat_dim.min(256),      // cap feature dim for in-memory runs
+            self.classes.min(64),
+            0.5,
+            rng,
+        )
+    }
+}
+
+/// Flickr, Reddit, Yelp, AmazonProducts — §5.1 of the paper
+/// (statistics as published in GraphSAINT / GraphSAGE).
+pub const PAPER_DATASETS: [DatasetSpec; 4] = [
+    DatasetSpec {
+        name: "Flickr",
+        nodes: 89_250,
+        edges: 899_756,
+        feat_dim: 500,
+        classes: 7,
+        multilabel: false,
+        alpha: 2.4,
+    },
+    DatasetSpec {
+        name: "Reddit",
+        nodes: 232_965,
+        edges: 11_606_919,
+        feat_dim: 602,
+        classes: 41,
+        multilabel: false,
+        alpha: 2.1,
+    },
+    DatasetSpec {
+        name: "Yelp",
+        nodes: 716_847,
+        edges: 6_977_410,
+        feat_dim: 300,
+        classes: 100,
+        multilabel: true,
+        alpha: 2.3,
+    },
+    DatasetSpec {
+        name: "AmazonProducts",
+        nodes: 1_569_960,
+        edges: 132_169_734,
+        feat_dim: 200,
+        classes: 107,
+        multilabel: true,
+        alpha: 2.0,
+    },
+];
+
+/// Look up a paper dataset by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+    PAPER_DATASETS.iter().find(|d| d.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("reddit").unwrap().name, "Reddit");
+        assert_eq!(by_name("FLICKR").unwrap().name, "Flickr");
+        assert!(by_name("cora").is_none());
+    }
+
+    #[test]
+    fn average_degrees_match_published_scale() {
+        // Reddit is the densest of the four single/multi-label graphs.
+        let reddit = by_name("reddit").unwrap();
+        assert!(reddit.avg_degree() > 90.0);
+        let flickr = by_name("flickr").unwrap();
+        assert!(flickr.avg_degree() > 15.0 && flickr.avg_degree() < 25.0);
+    }
+
+    #[test]
+    fn batches_per_epoch_at_paper_batch_size() {
+        let flickr = by_name("flickr").unwrap();
+        assert_eq!(flickr.batches_per_epoch(1024), 88);
+        let amazon = by_name("amazonproducts").unwrap();
+        assert_eq!(amazon.batches_per_epoch(1024), 1534);
+    }
+
+    #[test]
+    fn instantiate_produces_scaled_replica() {
+        let mut rng = SplitMix64::new(1);
+        let spec = by_name("flickr").unwrap();
+        let g = spec.instantiate(1500, &mut rng);
+        assert_eq!(g.num_nodes(), 1500);
+        assert_eq!(g.num_classes, 7);
+        assert_eq!(g.features.cols, 256.min(spec.feat_dim));
+        let avg = g.num_edges() as f64 / 1500.0;
+        assert!(avg > 5.0, "avg degree {avg} too low for Flickr replica");
+    }
+
+    #[test]
+    fn multilabel_flags() {
+        assert!(!by_name("flickr").unwrap().multilabel);
+        assert!(!by_name("reddit").unwrap().multilabel);
+        assert!(by_name("yelp").unwrap().multilabel);
+        assert!(by_name("amazonproducts").unwrap().multilabel);
+    }
+}

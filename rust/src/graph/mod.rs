@@ -1,0 +1,25 @@
+//! Graph substrate: storage, synthetic datasets, sampling, partitioning.
+//!
+//! - [`coo`] / [`csr`] — sparse adjacency storage with the normalizations
+//!   the GCN/SAGE layers need (Ã = D̃^{-1/2}(A+I)D̃^{-1/2}, row-mean).
+//! - [`converter`] — the Graph Converter: row-major (forward) vs
+//!   column-major (backward) edge ordering over shared COO storage.
+//! - [`generate`] — power-law + community synthetic graph generators.
+//! - [`datasets`] — Flickr/Reddit/Yelp/AmazonProducts statistics and
+//!   scaled instantiations.
+//! - [`sampler`] — GraphSAGE neighbor sampler (fanouts 25/10).
+//! - [`partition`] — 1024-node subgraph → 16 cores × 64 nodes, 16×16 block
+//!   grid, diagonal-group schedule, block-message compression.
+
+pub mod converter;
+pub mod coo;
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+pub mod partition;
+pub mod sampler;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use datasets::{DatasetSpec, PAPER_DATASETS};
+pub use sampler::{NeighborSampler, SampledBatch, SampledLayer};

@@ -1,0 +1,211 @@
+//! Subgraph partitioning onto the 16-core accelerator (paper §4.3.3,
+//! Fig. 6(a)).
+//!
+//! A (≤ 1024-node) subgraph is split across 16 cores, 64 nodes each: node
+//! id's high 4 bits select the core, the low 6 bits the buffer row — the
+//! same encoding the block messages carry.  The 16×16 grid of 64×64
+//! adjacency blocks is scheduled as **4 stages × 4 diagonals × 16 blocks**:
+//! diagonal `k` contains blocks `(i, (i + k) mod 16)`, so within a
+//! diagonal every source core and every destination core appears exactly
+//! once — the property that lets the start-point generator issue 4 groups
+//! (64 messages) per wave without exceeding any core's send budget.
+
+use crate::graph::coo::Coo;
+use crate::noc::message::{encode_node, BlockMessage, NODES_PER_CORE, SUBGRAPH_NODES};
+use crate::noc::topology::NUM_CORES;
+
+/// Number of pipeline stages per subgraph (16 diagonals / 4 per stage).
+pub const STAGES: usize = 4;
+/// Diagonal groups processed in parallel per stage.
+pub const GROUPS_PER_STAGE: usize = 4;
+
+/// The diagonal-group schedule of one subgraph's aggregation.
+#[derive(Clone, Debug)]
+pub struct PartitionedSubgraph {
+    /// `stages[s][g]` = the block messages of diagonal `4s + g`.
+    pub stages: Vec<Vec<Vec<BlockMessage>>>,
+    /// Total edges partitioned (diagnostics).
+    pub edges: usize,
+    /// Edges whose source and destination live on the same core.
+    pub local_edges: usize,
+}
+
+impl PartitionedSubgraph {
+    /// All block messages of one stage, grouped per diagonal — the input
+    /// shape `RouterSt::new` expects.
+    pub fn stage_groups(&self, s: usize) -> Vec<Vec<BlockMessage>> {
+        self.stages[s].clone()
+    }
+
+    /// Total NoC messages after compression, across all stages.
+    pub fn total_messages(&self) -> usize {
+        self.stages
+            .iter()
+            .flatten()
+            .flatten()
+            .filter(|bm| bm.src_core != bm.dst_core)
+            .map(|bm| bm.n())
+            .sum()
+    }
+}
+
+/// Node id → (core, buffer row): high 4 bits / low 6 bits.
+#[inline]
+pub fn node_core(node: u32) -> u8 {
+    debug_assert!((node as usize) < SUBGRAPH_NODES);
+    (node as usize / NODES_PER_CORE) as u8
+}
+
+/// Partition a (≤1024 × ≤1024) adjacency into the diagonal-group schedule.
+///
+/// Works for rectangular sampled blocks too: rows are destinations (their
+/// core from the row id), columns sources.
+pub fn partition(adj: &Coo) -> PartitionedSubgraph {
+    assert!(
+        adj.n_rows <= SUBGRAPH_NODES && adj.n_cols <= SUBGRAPH_NODES,
+        "subgraph exceeds the 1024-node per-pass capacity"
+    );
+    // Bucket edges into the 16×16 block grid.
+    let mut blocks: Vec<Vec<(u16, u16)>> = vec![Vec::new(); NUM_CORES * NUM_CORES];
+    let mut local_edges = 0usize;
+    for (r, c, _) in adj.iter() {
+        let dst_core = node_core(r);
+        let src_core = node_core(c);
+        if dst_core == src_core {
+            local_edges += 1;
+        }
+        let row_encoded = encode_node(dst_core, (r as usize % NODES_PER_CORE) as u8);
+        let col_encoded = encode_node(src_core, (c as usize % NODES_PER_CORE) as u8);
+        blocks[dst_core as usize * NUM_CORES + src_core as usize].push((row_encoded, col_encoded));
+    }
+    // Schedule diagonals: stage s, group g → diagonal d = 4s + g, blocks
+    // (i, (i + d) mod 16).
+    let mut stages = Vec::with_capacity(STAGES);
+    for s in 0..STAGES {
+        let mut groups = Vec::with_capacity(GROUPS_PER_STAGE);
+        for g in 0..GROUPS_PER_STAGE {
+            let d = s * GROUPS_PER_STAGE + g;
+            let mut group = Vec::new();
+            for i in 0..NUM_CORES {
+                let j = (i + d) % NUM_CORES;
+                let edges = &blocks[i * NUM_CORES + j];
+                if let Some(bm) = BlockMessage::compress(edges) {
+                    group.push(bm);
+                }
+            }
+            groups.push(group);
+        }
+        stages.push(groups);
+    }
+    PartitionedSubgraph { stages, edges: adj.nnz(), local_edges }
+}
+
+/// Diagonal ("upper triangular") storage saving for undirected graphs
+/// (paper §4.3.3): fraction of a symmetric adjacency that must be stored
+/// when only one triangle is kept.
+pub fn diagonal_storage_ratio(n_edges_directed: usize, n_self_loops: usize) -> f64 {
+    let off_diag = n_edges_directed - n_self_loops;
+    (off_diag / 2 + n_self_loops) as f64 / n_edges_directed.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn random_subgraph(n: usize, nnz: usize, seed: u64) -> Coo {
+        let mut rng = SplitMix64::new(seed);
+        let mut coo = Coo::new(n, n);
+        for _ in 0..nnz {
+            coo.push(rng.gen_range(n) as u32, rng.gen_range(n) as u32, 1.0);
+        }
+        coo
+    }
+
+    #[test]
+    fn every_edge_lands_in_exactly_one_block() {
+        let adj = random_subgraph(1024, 5000, 1);
+        let p = partition(&adj);
+        let scheduled: usize = p
+            .stages
+            .iter()
+            .flatten()
+            .flatten()
+            .map(|bm| bm.entries.iter().map(|e| e.neighbors.len()).sum::<usize>())
+            .sum();
+        assert_eq!(scheduled, adj.nnz());
+        assert_eq!(p.edges, adj.nnz());
+    }
+
+    #[test]
+    fn diagonal_groups_have_unique_cores() {
+        let adj = random_subgraph(1024, 8000, 2);
+        let p = partition(&adj);
+        for stage in &p.stages {
+            for group in stage {
+                let mut src_seen = [false; NUM_CORES];
+                let mut dst_seen = [false; NUM_CORES];
+                for bm in group {
+                    assert!(!src_seen[bm.src_core as usize]);
+                    assert!(!dst_seen[bm.dst_core as usize]);
+                    src_seen[bm.src_core as usize] = true;
+                    dst_seen[bm.dst_core as usize] = true;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stage_count_is_four_by_four() {
+        let adj = random_subgraph(512, 2000, 3);
+        let p = partition(&adj);
+        assert_eq!(p.stages.len(), STAGES);
+        assert!(p.stages.iter().all(|s| s.len() == GROUPS_PER_STAGE));
+    }
+
+    #[test]
+    fn diagonal_offset_matches_block_position() {
+        let mut adj = Coo::new(1024, 1024);
+        // One edge in block (2, 7) → diagonal (7-2) mod 16 = 5 → stage 1, group 1.
+        adj.push(2 * 64 + 3, 7 * 64 + 9, 1.0);
+        let p = partition(&adj);
+        let bm = &p.stages[1][1][0];
+        assert_eq!(bm.dst_core, 2);
+        assert_eq!(bm.src_core, 7);
+        assert_eq!(p.stages[0].iter().flatten().count(), 0);
+    }
+
+    #[test]
+    fn local_edges_counted() {
+        let mut adj = Coo::new(1024, 1024);
+        adj.push(5, 6, 1.0); // core 0 → core 0
+        adj.push(100, 700, 1.0); // core 1 ← core 10 (remote)
+        let p = partition(&adj);
+        assert_eq!(p.local_edges, 1);
+    }
+
+    #[test]
+    fn rectangular_sampled_block() {
+        let mut adj = Coo::new(256, 1024, );
+        adj.push(0, 1000, 1.0);
+        adj.push(255, 0, 1.0);
+        let p = partition(&adj);
+        assert_eq!(p.edges, 2);
+        // dst cores only in 0..4 (256 rows / 64).
+        for stage in &p.stages {
+            for group in stage {
+                for bm in group {
+                    assert!(bm.dst_core < 4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_ratio_halves_symmetric_part() {
+        // 10 directed edges, 2 self loops → (4 + 2) / 10.
+        assert!((diagonal_storage_ratio(10, 2) - 0.6).abs() < 1e-12);
+        // Pure symmetric, no self loops → exactly half.
+        assert!((diagonal_storage_ratio(100, 0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,231 @@
+//! GraphSAGE neighbor sampler (paper §5.1: fanouts 25 for 1-hop, 10 for
+//! 2-hop, batch size 1024).
+//!
+//! A sampled mini-batch is a two-level bipartite structure:
+//!
+//! ```text
+//!   layer 2:  batch nodes b      ←  a2 [b, n1]   ←  1-hop frontier n1
+//!   layer 1:  frontier   n1      ←  a1 [n1, n2]  ←  2-hop frontier n2
+//! ```
+//!
+//! Destination nodes are always a **prefix** of the source frontier (each
+//! node samples itself first — the self-loop of Ã / the self branch of
+//! SAGE), which is what lets the L2 model slice `x[:n_dst]` for the SAGE
+//! self path.
+
+use crate::graph::coo::Coo;
+use crate::graph::csr::Csr;
+use crate::util::rng::SplitMix64;
+
+/// One bipartite sampled layer.
+#[derive(Clone, Debug)]
+pub struct SampledLayer {
+    /// Global ids of destination nodes (== first `dst.len()` entries of `src`).
+    pub dst: Vec<u32>,
+    /// Global ids of source nodes (destinations first, then new frontier).
+    pub src: Vec<u32>,
+    /// Local-index adjacency `[dst.len(), src.len()]` (unnormalized,
+    /// includes the self edge).
+    pub adj: Coo,
+}
+
+/// A full k-hop sampled mini-batch (`layers[0]` = outermost hop / layer 1).
+#[derive(Clone, Debug)]
+pub struct SampledBatch {
+    pub batch_nodes: Vec<u32>,
+    /// Innermost (closest to the loss) layer last.
+    pub layers: Vec<SampledLayer>,
+}
+
+impl SampledBatch {
+    /// Source frontier of the outermost layer (the nodes whose features
+    /// are fetched from HBM NF regions).
+    pub fn input_nodes(&self) -> &[u32] {
+        &self.layers[0].src
+    }
+
+    /// (n2, n1, b) for a 2-layer batch.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        assert_eq!(self.layers.len(), 2);
+        (self.layers[0].src.len(), self.layers[1].src.len(), self.layers[1].dst.len())
+    }
+}
+
+/// Uniform neighbor sampler over a CSR graph.
+pub struct NeighborSampler<'g> {
+    graph: &'g Csr,
+    /// Fanout per hop, outermost (layer-1 / 2-hop) first — the paper's
+    /// (10, 25) is expressed as `fanouts = [25, 10]` layer-major: 25
+    /// neighbors for the 1-hop layer, 10 for the 2-hop layer.
+    fanouts: Vec<usize>,
+}
+
+impl<'g> NeighborSampler<'g> {
+    pub fn new(graph: &'g Csr, fanouts: Vec<usize>) -> Self {
+        assert!(!fanouts.is_empty());
+        Self { graph, fanouts }
+    }
+
+    /// Paper defaults: two hops, 25 neighbors at hop 1, 10 at hop 2.
+    pub fn paper_default(graph: &'g Csr) -> Self {
+        Self::new(graph, vec![25, 10])
+    }
+
+    /// Sample one bipartite layer for `dst` destinations with `fanout`.
+    fn sample_layer(&self, dst: &[u32], fanout: usize, rng: &mut SplitMix64) -> SampledLayer {
+        let mut src: Vec<u32> = dst.to_vec();
+        let mut local: std::collections::HashMap<u32, u32> =
+            dst.iter().enumerate().map(|(i, &g)| (g, i as u32)).collect();
+        // Edges buffered as (row, col) until the source frontier is final
+        // (the Coo bounds-checks against its column count).
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for (di, &d) in dst.iter().enumerate() {
+            // Self edge first (the +I term / SAGE self path).
+            edges.push((di as u32, di as u32));
+            let (neigh_raw, _) = self.graph.row(d as usize);
+            if neigh_raw.is_empty() {
+                continue;
+            }
+            // Deduplicate the neighbor list first: generators may emit
+            // parallel edges, and a rejection loop over a multi-set would
+            // never find `fanout` *distinct* values.
+            let mut neigh: Vec<u32> = neigh_raw.to_vec();
+            neigh.sort_unstable();
+            neigh.dedup();
+            let take = fanout.min(neigh.len());
+            // Sample without replacement when the neighborhood is small,
+            // with replacement + dedupe otherwise (uniform either way).
+            let mut chosen: Vec<u32> = if neigh.len() <= fanout {
+                neigh
+            } else {
+                // Rejection sampling into an order-preserving Vec (a
+                // HashSet would iterate in per-instance random order and
+                // break seeded determinism); fanout ≤ 25 keeps the
+                // contains() scan trivial.
+                let mut picks: Vec<u32> = Vec::with_capacity(take);
+                while picks.len() < take {
+                    let v = neigh[rng.gen_range(neigh.len())];
+                    if !picks.contains(&v) {
+                        picks.push(v);
+                    }
+                }
+                picks
+            };
+            chosen.retain(|&v| v != d); // self edge already present
+            for v in chosen {
+                let li = *local.entry(v).or_insert_with(|| {
+                    src.push(v);
+                    (src.len() - 1) as u32
+                });
+                edges.push((di as u32, li));
+            }
+        }
+        let mut adj = Coo::new(dst.len(), src.len());
+        for (r, c) in edges {
+            adj.push(r, c, 1.0);
+        }
+        SampledLayer { dst: dst.to_vec(), src, adj }
+    }
+
+    /// Sample a full mini-batch for `batch_nodes`.
+    pub fn sample(&self, batch_nodes: &[u32], rng: &mut SplitMix64) -> SampledBatch {
+        let mut layers_rev = Vec::with_capacity(self.fanouts.len());
+        let mut dst: Vec<u32> = batch_nodes.to_vec();
+        // Innermost layer (closest to loss) samples with the *largest*
+        // fanout (25 for 1-hop), matching the paper's setup.
+        for &fanout in self.fanouts.iter().rev() {
+            let layer = self.sample_layer(&dst, fanout, rng);
+            dst = layer.src.clone();
+            layers_rev.push(layer);
+        }
+        layers_rev.reverse();
+        SampledBatch { batch_nodes: batch_nodes.to_vec(), layers: layers_rev }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::power_law_graph;
+
+    fn graph() -> Csr {
+        let mut rng = SplitMix64::new(42);
+        power_law_graph(500, 12.0, 2.2, &mut rng)
+    }
+
+    #[test]
+    fn batch_structure_and_prefix_property() {
+        let g = graph();
+        let sampler = NeighborSampler::paper_default(&g);
+        let mut rng = SplitMix64::new(1);
+        let batch: Vec<u32> = (0..32).collect();
+        let sb = sampler.sample(&batch, &mut rng);
+        assert_eq!(sb.layers.len(), 2);
+        let (n2, n1, b) = sb.dims();
+        assert_eq!(b, 32);
+        assert!(n1 >= b, "dst must be a prefix of src");
+        assert!(n2 >= n1);
+        // Prefix property at both layers.
+        assert_eq!(&sb.layers[1].src[..b], &sb.layers[1].dst[..]);
+        assert_eq!(&sb.layers[0].src[..n1], &sb.layers[0].dst[..]);
+        // Layer-2 dst are the batch nodes.
+        assert_eq!(sb.layers[1].dst, batch);
+    }
+
+    #[test]
+    fn fanout_bounds_respected() {
+        let g = graph();
+        let sampler = NeighborSampler::new(&g, vec![5, 3]);
+        let mut rng = SplitMix64::new(2);
+        let sb = sampler.sample(&(0..16).collect::<Vec<_>>(), &mut rng);
+        for layer in &sb.layers {
+            let deg = layer.adj.row_degrees();
+            let fanout_plus_self = if layer.dst.len() == 16 { 3 + 1 } else { 5 + 1 };
+            for &d in &deg {
+                assert!(d as usize <= fanout_plus_self + 1, "deg {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn self_edge_always_present() {
+        let g = graph();
+        let sampler = NeighborSampler::new(&g, vec![4]);
+        let mut rng = SplitMix64::new(3);
+        let sb = sampler.sample(&[7, 9, 11], &mut rng);
+        let layer = &sb.layers[0];
+        for (i, _) in layer.dst.iter().enumerate() {
+            assert!(
+                layer.adj.iter().any(|(r, c, _)| r == i as u32 && c == i as u32),
+                "missing self edge for dst {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_indices_in_range() {
+        let g = graph();
+        let sampler = NeighborSampler::paper_default(&g);
+        let mut rng = SplitMix64::new(4);
+        let sb = sampler.sample(&(0..64).collect::<Vec<_>>(), &mut rng);
+        for layer in &sb.layers {
+            assert_eq!(layer.adj.n_rows, layer.dst.len());
+            assert_eq!(layer.adj.n_cols, layer.src.len());
+            for (r, c, _) in layer.adj.iter() {
+                assert!((r as usize) < layer.dst.len());
+                assert!((c as usize) < layer.src.len());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = graph();
+        let sampler = NeighborSampler::paper_default(&g);
+        let b: Vec<u32> = (100..132).collect();
+        let s1 = sampler.sample(&b, &mut SplitMix64::new(9));
+        let s2 = sampler.sample(&b, &mut SplitMix64::new(9));
+        assert_eq!(s1.layers[0].src, s2.layers[0].src);
+        assert_eq!(s1.layers[1].adj, s2.layers[1].adj);
+    }
+}

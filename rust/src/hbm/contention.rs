@@ -1,0 +1,156 @@
+//! Cross-channel contention model, calibrated to Fig. 1(b,c,d).
+//!
+//! The paper measures read-bandwidth loss when non-local AXI ports issue
+//! concurrent requests to one pseudo-channel through the built-in switch
+//! network:
+//!
+//! | scenario | requesters | port distances | drop @burst 64 | @burst 128 |
+//! |----------|-----------:|---------------:|---------------:|-----------:|
+//! | Fig 1(b) | 2          | 2              | 13.7 %         | 6.8 %      |
+//! | Fig 1(c) | 4          | 2, 6           | 21.1 %         | 19.6 %     |
+//! | Fig 1(d) | 6          | 2, 6, 10       | 35.1 %         | 24.4 %     |
+//!
+//! The model interpolates those calibration points: each concurrent
+//! requester contributes a penalty that grows with its switch-network
+//! distance, and longer bursts amortize switching overhead (smaller
+//! drops).  Exact published points are reproduced by construction; other
+//! (requesters, distance, burst) combinations interpolate smoothly.
+
+/// One calibration measurement from Fig. 1.
+#[derive(Clone, Copy, Debug)]
+pub struct CalPoint {
+    pub requesters: usize,
+    pub distances: &'static [usize],
+    pub drop_b64: f64,
+    pub drop_b128: f64,
+}
+
+/// The paper's published degradation points.
+pub const CALIBRATION: [CalPoint; 3] = [
+    CalPoint { requesters: 2, distances: &[2, 2], drop_b64: 0.137, drop_b128: 0.068 },
+    CalPoint { requesters: 4, distances: &[2, 2, 6, 6], drop_b64: 0.211, drop_b128: 0.196 },
+    CalPoint { requesters: 6, distances: &[2, 2, 6, 6, 10, 10], drop_b64: 0.351, drop_b128: 0.244 },
+];
+
+/// Per-requester distance weight, fit to the three calibration rows
+/// (piecewise-linear in distance).
+fn distance_weight(dist: usize) -> f64 {
+    // Weights chosen so Σ weight(d_i) · burst_factor(b) reproduces the
+    // calibration table exactly at burst 64 (see unit tests).
+    match dist {
+        0 => 0.0,
+        d if d <= 2 => 0.0685,          // 2 × 0.0685 = 0.137 (Fig 1b)
+        d if d <= 6 => 0.037,           // 0.137 + 2×0.037 = 0.211 (Fig 1c)
+        d if d <= 10 => 0.070,          // 0.211 + 2×0.070 = 0.351 (Fig 1d)
+        _ => 0.080,                     // extrapolation beyond Fig 1
+    }
+}
+
+/// The burst-128 drop as a piecewise-linear function of the burst-64 drop
+/// (`base`), through the calibration rows ((0,0), (.137,.068),
+/// (.211,.196), (.351,.244)); extrapolated proportionally beyond.  Both
+/// endpoints of every segment increase in `base`, so the interpolation is
+/// monotone — adding a requester can never *reduce* the drop (a property
+/// the earlier per-count-bucket formulation violated; caught by
+/// `prop_contention_monotone_in_requesters`).
+fn drop128_from_base(base: f64) -> f64 {
+    const PTS: [(f64, f64); 4] =
+        [(0.0, 0.0), (0.137, 0.068), (0.211, 0.196), (0.351, 0.244)];
+    for w in PTS.windows(2) {
+        let (x0, y0) = w[0];
+        let (x1, y1) = w[1];
+        if base <= x1 {
+            let t = (base - x0) / (x1 - x0);
+            return y0 + t * (y1 - y0);
+        }
+    }
+    // Beyond the last calibration point: keep the final ratio.
+    base * (0.244 / 0.351)
+}
+
+/// Fractional bandwidth drop (0..1) for a channel receiving concurrent
+/// requests from ports at the given switch distances.
+///
+/// `base` (the burst-64 column) comes from the distance weights; other
+/// burst lengths interpolate between the burst-64 and burst-128 columns,
+/// with a mild short-burst boost below 64 and a mild decay above 128.
+pub fn bandwidth_drop(distances: &[usize], burst_len: usize) -> f64 {
+    let base: f64 = distances.iter().map(|&d| distance_weight(d)).sum();
+    let drop = match burst_len {
+        0..=64 => {
+            let short_boost = (64.0 / burst_len.max(8) as f64).sqrt().min(1.6);
+            base * short_boost
+        }
+        65..=128 => {
+            let t = (burst_len - 64) as f64 / 64.0;
+            base * (1.0 - t) + drop128_from_base(base) * t
+        }
+        _ => drop128_from_base(base) * (128.0 / burst_len as f64).max(0.5),
+    };
+    drop.min(0.95)
+}
+
+/// Effective channel bandwidth under contention (GB/s).
+pub fn contended_bandwidth_gbps(
+    peak_local_gbps: f64,
+    distances: &[usize],
+    burst_len: usize,
+) -> f64 {
+    peak_local_gbps * (1.0 - bandwidth_drop(distances, burst_len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_fig1b() {
+        assert!((bandwidth_drop(&[2, 2], 64) - 0.137).abs() < 1e-9);
+        assert!((bandwidth_drop(&[2, 2], 128) - 0.068).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reproduces_fig1c() {
+        assert!((bandwidth_drop(&[2, 2, 6, 6], 64) - 0.211).abs() < 1e-9);
+        assert!((bandwidth_drop(&[2, 2, 6, 6], 128) - 0.196).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reproduces_fig1d() {
+        assert!((bandwidth_drop(&[2, 2, 6, 6, 10, 10], 64) - 0.351).abs() < 1e-9);
+        assert!((bandwidth_drop(&[2, 2, 6, 6, 10, 10], 128) - 0.244).abs() < 1e-3);
+    }
+
+    #[test]
+    fn more_requesters_more_drop() {
+        let d2 = bandwidth_drop(&[2, 2], 64);
+        let d4 = bandwidth_drop(&[2, 2, 6, 6], 64);
+        let d6 = bandwidth_drop(&[2, 2, 6, 6, 10, 10], 64);
+        assert!(d2 < d4 && d4 < d6);
+    }
+
+    #[test]
+    fn longer_bursts_amortize() {
+        for dists in [&[2usize, 2][..], &[2, 2, 6, 6][..]] {
+            assert!(bandwidth_drop(dists, 128) < bandwidth_drop(dists, 64));
+        }
+    }
+
+    #[test]
+    fn local_access_no_drop() {
+        assert_eq!(bandwidth_drop(&[], 64), 0.0);
+        assert_eq!(bandwidth_drop(&[0, 0], 64), 0.0);
+    }
+
+    #[test]
+    fn drop_capped_below_one() {
+        let many: Vec<usize> = vec![12; 32];
+        assert!(bandwidth_drop(&many, 16) <= 0.95);
+    }
+
+    #[test]
+    fn contended_bandwidth_consistent() {
+        let bw = contended_bandwidth_gbps(14.4, &[2, 2], 64);
+        assert!((bw - 14.4 * (1.0 - 0.137)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,30 @@
+//! HBM2 subsystem model (paper §3, Fig. 1): 32 pseudo-channels behind AXI
+//! ports, with burst-length efficiency and cross-channel contention
+//! penalties calibrated to the paper's measurements.
+//!
+//! - [`channel`] — per-pseudo-channel service model (burst efficiency).
+//! - [`contention`] — the Fig. 1(b,c,d) degradation under concurrent
+//!   non-local requesters.
+//! - [`numa`] — the NUMA memory map: 2 pseudo-channels per core, with the
+//!   NF / SE / SFBP / SPR / GP regions and per-dataset footprints
+//!   (Table 3's HBM row).
+//! - [`simulator`] — an event-driven request simulator over the above,
+//!   used by `bench_fig1_hbm` to regenerate the plots.
+
+pub mod channel;
+pub mod contention;
+pub mod numa;
+pub mod simulator;
+
+pub use channel::PseudoChannel;
+pub use numa::{MemoryMap, Region};
+pub use simulator::{AccessPattern, HbmSimulator};
+
+/// Pseudo-channels on the VCU128's HBM2 stacks.
+pub const NUM_PSEUDO_CHANNELS: usize = 32;
+/// Pseudo-channels owned exclusively by each core (NUMA property).
+pub const CHANNELS_PER_CORE: usize = 2;
+/// Peak per-pseudo-channel bandwidth (GB/s): 460.8 GB/s / 32 channels.
+pub const CHANNEL_PEAK_GBPS: f64 = 14.4;
+/// AXI data width per port (bytes) at 450 MHz kernel clock.
+pub const AXI_BYTES_PER_BEAT: usize = 32;

@@ -1,0 +1,179 @@
+//! Event-driven HBM request simulator.
+//!
+//! Replays access patterns against the channel + contention models and
+//! reports achieved bandwidth — the harness behind `bench_fig1_hbm`, and
+//! the provider of combination-phase read times for the epoch model.
+
+use crate::hbm::channel::PseudoChannel;
+use crate::hbm::contention::contended_bandwidth_gbps;
+use crate::hbm::{NUM_PSEUDO_CHANNELS};
+
+/// A batch of read requests from one AXI port to one pseudo-channel.
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    /// Issuing AXI port id (0..32; port i is local to channel i).
+    pub port: usize,
+    /// Target pseudo-channel.
+    pub channel: usize,
+    /// AXI burst length in beats.
+    pub burst_len: usize,
+    /// Total bytes to move.
+    pub bytes: u64,
+}
+
+/// Canonical access patterns from Fig. 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Fig 1(a): one local port reading its own channel.
+    Local,
+    /// Fig 1(b): two ports at distance 2 from the target channel.
+    Remote2,
+    /// Fig 1(c): four ports at distances 2 and 6 (two each).
+    Remote4,
+    /// Fig 1(d): six ports at distances 2, 6, 10 (two each).
+    Remote6,
+}
+
+impl AccessPattern {
+    /// Port distances of the concurrent requesters.
+    pub fn distances(self) -> &'static [usize] {
+        match self {
+            AccessPattern::Local => &[],
+            AccessPattern::Remote2 => &[2, 2],
+            AccessPattern::Remote4 => &[2, 2, 6, 6],
+            AccessPattern::Remote6 => &[2, 2, 6, 6, 10, 10],
+        }
+    }
+}
+
+/// The simulator: a bank of pseudo-channels.
+#[derive(Clone, Debug)]
+pub struct HbmSimulator {
+    pub channels: [PseudoChannel; NUM_PSEUDO_CHANNELS],
+}
+
+impl Default for HbmSimulator {
+    fn default() -> Self {
+        Self { channels: [PseudoChannel::default(); NUM_PSEUDO_CHANNELS] }
+    }
+}
+
+impl HbmSimulator {
+    /// Achieved read bandwidth (GB/s) for one of the Fig. 1 scenarios at a
+    /// given burst length.
+    pub fn scenario_bandwidth(&self, pattern: AccessPattern, burst_len: usize) -> f64 {
+        let local = self.channels[0].local_bandwidth_gbps(burst_len);
+        contended_bandwidth_gbps(local, pattern.distances(), burst_len)
+    }
+
+    /// Serve a set of concurrent requests; returns the makespan (seconds).
+    ///
+    /// Requests to the same channel share it: each sees the contended
+    /// bandwidth computed from the *other* requesters' port distances, and
+    /// the channel time-multiplexes among them.
+    pub fn serve(&self, reqs: &[Request]) -> f64 {
+        let mut makespan: f64 = 0.0;
+        for ch in 0..NUM_PSEUDO_CHANNELS {
+            let on_ch: Vec<&Request> = reqs.iter().filter(|r| r.channel == ch).collect();
+            if on_ch.is_empty() {
+                continue;
+            }
+            // Port distance of each requester to the channel's home port.
+            let distances: Vec<usize> =
+                on_ch.iter().map(|r| r.port.abs_diff(r.channel)).collect();
+            let mut t = 0.0;
+            for (i, r) in on_ch.iter().enumerate() {
+                // Everyone else's distance degrades requester i.
+                let others: Vec<usize> = distances
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(_, &d)| d)
+                    .collect();
+                let own_penalty = if distances[i] > 0 { &distances[i..=i] } else { &[][..] };
+                let all: Vec<usize> =
+                    others.iter().chain(own_penalty.iter()).copied().collect();
+                let local = self.channels[ch].local_bandwidth_gbps(r.burst_len);
+                let bw = contended_bandwidth_gbps(local, &all, r.burst_len);
+                // Fair time-multiplexing across the sharers.
+                t += r.bytes as f64 / (bw * 1e9 / on_ch.len() as f64) / on_ch.len() as f64;
+            }
+            makespan = makespan.max(t);
+        }
+        makespan
+    }
+
+    /// Sequential-read time (seconds) for the combination phase: `bytes`
+    /// striped evenly over `channels_used` channels at long bursts with no
+    /// contention (the NUMA layout guarantees locality).
+    pub fn sequential_read_time(&self, bytes: u64, channels_used: usize, burst_len: usize) -> f64 {
+        let per_channel = bytes as f64 / channels_used.max(1) as f64;
+        per_channel / (self.channels[0].local_bandwidth_gbps(burst_len) * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_scenarios_ordered() {
+        let sim = HbmSimulator::default();
+        for burst in [64, 128] {
+            let a = sim.scenario_bandwidth(AccessPattern::Local, burst);
+            let b = sim.scenario_bandwidth(AccessPattern::Remote2, burst);
+            let c = sim.scenario_bandwidth(AccessPattern::Remote4, burst);
+            let d = sim.scenario_bandwidth(AccessPattern::Remote6, burst);
+            assert!(a > b && b > c && c > d, "burst {burst}: {a} {b} {c} {d}");
+        }
+    }
+
+    #[test]
+    fn fig1b_drop_percentages() {
+        let sim = HbmSimulator::default();
+        let local = sim.scenario_bandwidth(AccessPattern::Local, 64);
+        let remote = sim.scenario_bandwidth(AccessPattern::Remote2, 64);
+        assert!(((local - remote) / local - 0.137).abs() < 1e-6);
+    }
+
+    #[test]
+    fn serve_local_matches_service_time() {
+        let sim = HbmSimulator::default();
+        let req = Request { port: 3, channel: 3, burst_len: 128, bytes: 1 << 24 };
+        let t = sim.serve(&[req]);
+        let want = sim.channels[3].service_time(1 << 24, 128);
+        assert!((t - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn serve_contended_slower_than_isolated() {
+        let sim = HbmSimulator::default();
+        let bytes = 1 << 22;
+        let solo = sim.serve(&[Request { port: 5, channel: 5, burst_len: 64, bytes }]);
+        let duo = sim.serve(&[
+            Request { port: 3, channel: 5, burst_len: 64, bytes },
+            Request { port: 7, channel: 5, burst_len: 64, bytes },
+        ]);
+        assert!(duo > solo * 1.5, "duo={duo} solo={solo}");
+    }
+
+    #[test]
+    fn independent_channels_overlap() {
+        let sim = HbmSimulator::default();
+        let bytes = 1 << 22;
+        let t2 = sim.serve(&[
+            Request { port: 1, channel: 1, burst_len: 64, bytes },
+            Request { port: 2, channel: 2, burst_len: 64, bytes },
+        ]);
+        let t1 = sim.serve(&[Request { port: 1, channel: 1, burst_len: 64, bytes }]);
+        assert!((t2 - t1).abs() / t1 < 1e-9, "parallel channels should not serialize");
+    }
+
+    #[test]
+    fn sequential_read_scales_with_channels() {
+        let sim = HbmSimulator::default();
+        let t1 = sim.sequential_read_time(1 << 30, 1, 128);
+        let t32 = sim.sequential_read_time(1 << 30, 32, 128);
+        assert!((t1 / t32 - 32.0).abs() < 1e-9);
+    }
+}

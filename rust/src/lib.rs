@@ -1,0 +1,34 @@
+//! # gcn-noc — GCN training on an HBM FPGA with a hypercube on-chip network
+//!
+//! Reproduction of *"Efficient Message Passing Architecture for GCN Training
+//! on HBM-based FPGAs with Orthogonal Topology On-Chip Networks"* (FPGA '24).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//!
+//! - [`runtime`] loads HLO-text artifacts AOT-compiled from JAX/Pallas
+//!   (`python/compile/`) and executes them on a PJRT CPU client — the
+//!   *numerical* GCN/GraphSAGE training computation.
+//! - Everything else models the paper's *hardware*: the 16-core accelerator
+//!   ([`core_model`]), its NUMA HBM subsystem ([`hbm`]), the 4-D hypercube
+//!   on-chip network with the parallel multicast routing algorithm
+//!   ([`noc`]), graph partitioning and block-message compression
+//!   ([`graph`]), the system controller with the Table-1 sequence estimator
+//!   ([`coordinator`]), baselines ([`baselines`]) and power/resource models
+//!   ([`perf`]).
+//!
+//! See `DESIGN.md` for the experiment index (which bench regenerates which
+//! paper table/figure) and `EXPERIMENTS.md` for measured results.
+
+pub mod baselines;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod core_model;
+pub mod graph;
+pub mod hbm;
+pub mod noc;
+pub mod perf;
+pub mod report;
+pub mod runtime;
+pub mod train;
+pub mod util;

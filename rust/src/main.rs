@@ -1,0 +1,301 @@
+//! `gcn-noc` — the leader binary: CLI over the full system.
+//!
+//! ```text
+//! gcn-noc train     --dataset flickr --steps 200 --batch 48 --lr 0.05
+//! gcn-noc route     --fuse 4 --trials 1000
+//! gcn-noc hbm
+//! gcn-noc epoch     --dataset reddit --model gcn
+//! gcn-noc table2
+//! gcn-noc resources
+//! gcn-noc power
+//! gcn-noc estimate  --n 11000 --nbar 40000 --d 500 --h 256 --e 110000
+//! ```
+
+use gcn_noc::baselines::{paper_row, GpuBaseline, HpGnnBaseline};
+use gcn_noc::cli::Args;
+use gcn_noc::config;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
+use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
+use gcn_noc::graph::datasets::{by_name, PAPER_DATASETS};
+use gcn_noc::hbm::simulator::{AccessPattern, HbmSimulator};
+use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
+use gcn_noc::perf::power::{PowerModel, A100_TRAIN_W};
+use gcn_noc::perf::resources;
+use gcn_noc::report::table::Table;
+use gcn_noc::train::trainer::{Optimizer, Trainer, TrainerConfig};
+use gcn_noc::util::rng::SplitMix64;
+use gcn_noc::util::stats::Summary;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "route" => cmd_route(args),
+        "hbm" => cmd_hbm(),
+        "epoch" => cmd_epoch(args),
+        "table2" => cmd_table2(args),
+        "resources" => cmd_resources(),
+        "power" => cmd_power(),
+        "estimate" => cmd_estimate(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `gcn-noc help`)"),
+    }
+}
+
+const HELP: &str = "\
+gcn-noc — GCN training accelerator simulator + PJRT runtime (FPGA'24 repro)
+
+commands:
+  train      end-to-end mini-batch GCN training through PJRT artifacts
+  route      Fig. 9 routing-cycle experiment (Fuse 1..4)
+  hbm        Fig. 1 HBM bandwidth scenarios
+  epoch      Table 2 single row (ours vs HP-GNN vs GPU)
+  table2     Table 2, all datasets x both models
+  resources  Table 3 resource consumption
+  power      Fig. 11(a)/Fig. 12 power analysis
+  estimate   Table 1 sequence estimator for given layer shapes
+  help       this text
+";
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.get_or("dataset", "flickr");
+    let spec = by_name(dataset).ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let nodes = args.get_usize("nodes", 4096)?;
+    let seed = args.get_u64("seed", 0xF00D)?;
+    let mut rng = SplitMix64::new(seed);
+    eprintln!("instantiating {dataset} replica ({nodes} nodes)...");
+    let graph = spec.instantiate(nodes, &mut rng);
+    let optimizer = match args.get_or("optimizer", "sgd") {
+        "sgd" => Optimizer::Sgd,
+        "momentum" => Optimizer::Momentum { mu: args.get_f64("mu", 0.9)? as f32 },
+        other => anyhow::bail!("unknown optimizer '{other}' (sgd|momentum)"),
+    };
+    let cfg = TrainerConfig {
+        artifact_tag: args.get_or("tag", "small").to_string(),
+        optimizer,
+        lr: args.get_f64("lr", 0.05)? as f32,
+        batch_size: args.get_usize("batch", 32)?,
+        fanouts: vec![args.get_usize("fanout1", 4)?, args.get_usize("fanout2", 4)?],
+        steps: args.get_usize("steps", 200)?,
+        seed,
+        log_every: args.get_usize("log-every", 10)?,
+    };
+    let dir = config::artifact_dir(args.get("artifacts"));
+    let mut trainer = Trainer::new(&graph, cfg, &dir)?;
+    eprintln!("artifact: {} (ordering chosen by the sequence estimator)", trainer.artifact());
+    let curve = trainer.train()?;
+    let (head, tail) = curve.head_tail_means(10);
+    println!(
+        "trained {} steps: loss {head:.4} -> {tail:.4} ({:.1} ms/step)",
+        curve.len(),
+        curve.mean_step_seconds() * 1e3
+    );
+    let (eval_loss, acc) = trainer.evaluate(256)?;
+    println!("eval: loss {eval_loss:.4}, accuracy {:.1}%", acc * 100.0);
+    if let Some(path) = args.get("csv") {
+        curve.write_csv(path)?;
+        println!("loss curve written to {path}");
+    }
+    if let Some(path) = args.get("checkpoint") {
+        trainer.checkpoint().save(path)?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_route(args: &Args) -> anyhow::Result<()> {
+    let trials = args.get_usize("trials", 1000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let mut table = Table::new(vec!["fuse", "messages", "avg cycles", "min", "max"]);
+    for fuse in 1..=4usize {
+        let only = args.get_usize("fuse", 0)?;
+        if only != 0 && only != fuse {
+            continue;
+        }
+        let mut rng = SplitMix64::new(seed + fuse as u64);
+        let mut cycles = Vec::with_capacity(trials);
+        for _ in 0..trials {
+            let mut sources = Vec::with_capacity(16 * fuse);
+            for _ in 0..fuse {
+                sources.extend(rng.permutation(16).iter().map(|&x| x as u8));
+            }
+            let dests: Vec<u8> = (0..16 * fuse).map(|_| rng.gen_range(16) as u8).collect();
+            let req = MulticastRequest::new(sources, dests);
+            let out = route_parallel_multicast(&req, &mut rng)?;
+            cycles.push(out.table.total_cycles() as f64);
+        }
+        let s = Summary::of(cycles.iter().copied());
+        table.row(vec![
+            format!("Fuse{fuse}"),
+            format!("{}", 16 * fuse),
+            format!("{:.2}", s.mean),
+            format!("{}", s.min),
+            format!("{}", s.max),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_hbm() -> anyhow::Result<()> {
+    let sim = HbmSimulator::default();
+    let mut table = Table::new(vec!["burst", "local", "2 remote", "4 remote", "6 remote"]);
+    for burst in [16usize, 32, 64, 128, 256] {
+        table.row(vec![
+            format!("{burst}"),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Local, burst)),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Remote2, burst)),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Remote4, burst)),
+            format!("{:.2}", sim.scenario_bandwidth(AccessPattern::Remote6, burst)),
+        ]);
+    }
+    println!("per-pseudo-channel read bandwidth (GB/s):\n{}", table.render());
+    Ok(())
+}
+
+fn model_kind(s: &str) -> anyhow::Result<ModelKind> {
+    match s {
+        "gcn" => Ok(ModelKind::Gcn),
+        "sage" => Ok(ModelKind::Sage),
+        other => anyhow::bail!("unknown model '{other}' (gcn|sage)"),
+    }
+}
+
+fn cmd_epoch(args: &Args) -> anyhow::Result<()> {
+    let dataset = args.get_or("dataset", "flickr");
+    let spec = by_name(dataset).ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let model = model_kind(args.get_or("model", "gcn"))?;
+    let cfg = config::quick_epoch_config();
+    let mut rng = SplitMix64::new(args.get_u64("seed", 7)?);
+    let rep = EpochModel::new(spec, model, cfg).run(&mut rng);
+    let hp = HpGnnBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
+    let gpu = GpuBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
+    println!(
+        "{dataset} ({model:?}): ours {:.3} s/epoch | HP-GNN {hp:.3} | GPU {gpu:.3} | speedup vs HP-GNN {:.2}x",
+        rep.seconds_per_epoch,
+        hp / rep.seconds_per_epoch
+    );
+    println!(
+        "ordering {} | core util {:.1}% | ctc 1:{:.2}",
+        rep.ordering.name(),
+        rep.avg_core_utilization * 100.0,
+        rep.avg_ctc_ratio
+    );
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> anyhow::Result<()> {
+    let cfg = config::quick_epoch_config();
+    let mut table =
+        Table::new(vec!["model", "dataset", "GPU", "HP-GNN", "Ours", "speedup", "paper"]);
+    for (model, mname) in [(ModelKind::Gcn, "NS-GCN"), (ModelKind::Sage, "NS-SAGE")] {
+        for spec in &PAPER_DATASETS {
+            let mut rng = SplitMix64::new(args.get_u64("seed", 7)?);
+            let ours = EpochModel::new(spec, model, cfg).run(&mut rng).seconds_per_epoch;
+            let hp = HpGnnBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
+            let gpu = GpuBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
+            let paper = paper_row(spec.name, mname)
+                .map(|r| format!("{:.2}x", r.hpgnn / r.ours))
+                .unwrap_or_default();
+            table.row(vec![
+                mname.to_string(),
+                spec.name.to_string(),
+                format!("{gpu:.2}"),
+                format!("{hp:.2}"),
+                format!("{ours:.2}"),
+                format!("{:.2}x", hp / ours),
+                paper,
+            ]);
+        }
+    }
+    println!("s/epoch, batch 1024 (speedup = HP-GNN / Ours):\n{}", table.render());
+    Ok(())
+}
+
+fn cmd_resources() -> anyhow::Result<()> {
+    let mut table = Table::new(vec!["resource", "ours", "HP-GNN", "derived"]);
+    let o = resources::OURS_RESOURCES;
+    let h = resources::HPGNN_RESOURCES;
+    table.row(vec!["LUTs".to_string(), o.luts.to_string(), h.luts.to_string(), "-".to_string()]);
+    table.row(vec![
+        "DSPs".to_string(),
+        o.dsps.to_string(),
+        h.dsps.to_string(),
+        resources::derived_dsps().to_string(),
+    ]);
+    table.row(vec!["FFs".to_string(), o.ffs.to_string(), "NA".to_string(), "-".to_string()]);
+    table.row(vec![
+        "BRAM+URAM".to_string(),
+        format!("{:.1} MB", o.onchip_ram_bytes as f64 / 1e6),
+        format!("{:.1} MB", h.onchip_ram_bytes as f64 / 1e6),
+        format!("{:.1} MB", resources::derived_onchip_ram() as f64 / 1e6),
+    ]);
+    println!("{}", table.render());
+
+    let mut hbm = Table::new(vec!["dataset", "HBM (modeled)", "HBM (paper)"]);
+    for (name, paper_gb) in resources::PAPER_HBM_GB {
+        let spec = by_name(name).unwrap();
+        hbm.row(vec![
+            name.to_string(),
+            format!("{:.1} GB", resources::hbm_footprint_gb(spec)),
+            format!("{paper_gb:.1} GB"),
+        ]);
+    }
+    println!("{}", hbm.render());
+    Ok(())
+}
+
+fn cmd_power() -> anyhow::Result<()> {
+    let m = PowerModel::default();
+    println!("dynamic on-chip power split (Fig. 12):");
+    for (name, w) in m.component_watts() {
+        println!("  {name:<6} {w:>6.1} W ({:.1}%)", 100.0 * w / m.dynamic_full_w);
+    }
+    let busy = m.board_power(0.85, 0.9);
+    println!("\nboard power at training activity: {busy:.0} W (A100 reference {A100_TRAIN_W:.0} W)");
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+    let sp = ShapeParams {
+        b: args.get_u64("b", 1024)?,
+        n: args.get_u64("n", 11_000)?,
+        nbar: args.get_u64("nbar", 40_000)?,
+        d: args.get_u64("d", 500)?,
+        h: args.get_u64("h", 256)?,
+        c: args.get_u64("c", 7)?,
+        e: args.get_u64("e", 110_000)?,
+    };
+    let est = SequenceEstimator::new(sp);
+    let mut table = Table::new(vec!["ordering", "time (ops)", "storage (elems)"]);
+    for o in Ordering::ALL {
+        table.row(vec![
+            o.name().to_string(),
+            est.time(o).total().to_string(),
+            est.storage(o).to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("controller choice: {}", est.best_ours().name());
+    Ok(())
+}

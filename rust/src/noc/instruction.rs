@@ -1,0 +1,123 @@
+//! 25-bit routing instructions (paper §4.3.3, "Instruction Generator").
+//!
+//! The paper specifies the fields — Head, Receive Signal (4), Send ID (4),
+//! Open Channel (sending channel id + virtual/real flag), Destination ID
+//! (4) — and a 25-bit total, without publishing the exact packing.  We use
+//! the following layout (documented assumption; the total is exactly 25):
+//!
+//! ```text
+//!  bit 24      : HEAD        — 1 if this is a routing-table header
+//!  bits 23..20 : RECV_SIGNAL — one bit per in-channel to open this cycle
+//!  bits 19..16 : SEND_ID     — core id whose storage channel receives
+//!  bits 15..12 : OPEN_CH     — one-hot out-channel (dimension) to drive
+//!  bit  11     : VC_FLAG     — data comes from the virtual (1) or real (0)
+//!                              channel buffer
+//!  bits 10..7  : DEST_ID     — final destination core of the message
+//!  bits  6..1  : AGG_BASE    — aggregate-node base address (6 bits)
+//!  bit   0     : PARITY      — even parity over bits 24..1
+//! ```
+
+/// A decoded routing instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Instruction {
+    pub head: bool,
+    /// Bitmask of in-channels (dimensions) to open for receiving.
+    pub recv_signal: u8,
+    /// Core id whose storage channel the received message is delivered to.
+    pub send_id: u8,
+    /// One-hot out-channel (dimension) mask; 0 = nothing to send.
+    pub open_channel: u8,
+    /// Source buffer for the outgoing word: virtual (true) or real (false).
+    pub virtual_channel: bool,
+    /// Final destination core id of the forwarded message.
+    pub dest_id: u8,
+    /// Aggregate-node base address in the destination Aggregate Buffer.
+    pub agg_base: u8,
+}
+
+pub const INSTRUCTION_BITS: u32 = 25;
+
+impl Instruction {
+    /// Encode into the low 25 bits of a u32.
+    pub fn encode(&self) -> u32 {
+        assert!(self.recv_signal < 16 && self.send_id < 16);
+        assert!(self.open_channel < 16 && self.dest_id < 16 && self.agg_base < 64);
+        let mut w = 0u32;
+        w |= (self.head as u32) << 24;
+        w |= (self.recv_signal as u32) << 20;
+        w |= (self.send_id as u32) << 16;
+        w |= (self.open_channel as u32) << 12;
+        w |= (self.virtual_channel as u32) << 11;
+        w |= (self.dest_id as u32) << 7;
+        w |= (self.agg_base as u32) << 1;
+        let parity = (w >> 1).count_ones() & 1;
+        w | parity
+    }
+
+    /// Decode; returns `None` on parity failure.
+    pub fn decode(w: u32) -> Option<Instruction> {
+        if w >> INSTRUCTION_BITS != 0 {
+            return None;
+        }
+        let parity = (w >> 1).count_ones() & 1;
+        if parity != (w & 1) {
+            return None;
+        }
+        Some(Instruction {
+            head: (w >> 24) & 1 == 1,
+            recv_signal: ((w >> 20) & 0xF) as u8,
+            send_id: ((w >> 16) & 0xF) as u8,
+            open_channel: ((w >> 12) & 0xF) as u8,
+            virtual_channel: (w >> 11) & 1 == 1,
+            dest_id: ((w >> 7) & 0xF) as u8,
+            agg_base: ((w >> 1) & 0x3F) as u8,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn random_instr(rng: &mut SplitMix64) -> Instruction {
+        Instruction {
+            head: rng.gen_range(2) == 1,
+            recv_signal: rng.gen_range(16) as u8,
+            send_id: rng.gen_range(16) as u8,
+            open_channel: 1 << rng.gen_range(4),
+            virtual_channel: rng.gen_range(2) == 1,
+            dest_id: rng.gen_range(16) as u8,
+            agg_base: rng.gen_range(64) as u8,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..500 {
+            let instr = random_instr(&mut rng);
+            let w = instr.encode();
+            assert!(w >> INSTRUCTION_BITS == 0, "fits in 25 bits");
+            assert_eq!(Instruction::decode(w), Some(instr));
+        }
+    }
+
+    #[test]
+    fn parity_detects_single_bit_flip() {
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..100 {
+            let w = random_instr(&mut rng).encode();
+            let bit = rng.gen_range(INSTRUCTION_BITS as usize);
+            let corrupted = w ^ (1 << bit);
+            // A single flipped bit always breaks even parity.
+            assert_eq!(Instruction::decode(corrupted), None);
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_words() {
+        assert_eq!(Instruction::decode(1 << 25), None);
+        assert_eq!(Instruction::decode(u32::MAX), None);
+    }
+}

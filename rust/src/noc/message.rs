@@ -1,0 +1,172 @@
+//! Block messages and data packets (paper §4.3.3, Fig. 7).
+//!
+//! A 1024-node subgraph's adjacency block (64×64 COO) is compressed into a
+//! **Block Message**: all edges in a block share the destination core id
+//! (`A`, the row index's high 4 bits) and the source core id (`C`, the
+//! column index's high 4 bits); the remaining 6+6 bits address the
+//! Aggregate Buffer row (`B`) and Neighbor Buffer row (`D`).  Edges with
+//! the same aggregate node `B` are merged — locally reduced at the source
+//! core before transmission — so a block contributes `N` = number of
+//! *distinct* B values messages, not `nnz` messages.
+
+use crate::noc::topology::NUM_CORES;
+
+/// 10-bit node id = 4-bit core id + 6-bit buffer address.
+pub const CORE_BITS: u32 = 4;
+pub const ADDR_BITS: u32 = 6;
+/// Nodes held per core buffer (2^ADDR_BITS).
+pub const NODES_PER_CORE: usize = 1 << ADDR_BITS;
+/// Max nodes per partitioned subgraph (16 cores × 64 nodes).
+pub const SUBGRAPH_NODES: usize = NUM_CORES * NODES_PER_CORE;
+
+/// Split a subgraph-local node id into (core id, buffer address).
+#[inline]
+pub fn decode_node(node: u16) -> (u8, u8) {
+    debug_assert!((node as usize) < SUBGRAPH_NODES);
+    ((node >> ADDR_BITS) as u8, (node & (NODES_PER_CORE as u16 - 1)) as u8)
+}
+
+/// Re-assemble a node id from (core id, buffer address).
+#[inline]
+pub fn encode_node(core: u8, addr: u8) -> u16 {
+    debug_assert!((core as usize) < NUM_CORES && (addr as usize) < NODES_PER_CORE);
+    ((core as u16) << ADDR_BITS) | addr as u16
+}
+
+/// One merged message of a Block Message: aggregate node `B` (destination
+/// buffer row) plus the source-core neighbor rows `D` merged into it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MergedEntry {
+    /// Aggregate node id (B) — base address in the destination core's
+    /// Aggregate Buffer.
+    pub agg_node: u8,
+    /// Neighbor Buffer rows (D) locally reduced before transmission.
+    pub neighbors: Vec<u8>,
+}
+
+/// A compressed `A+C+N` Block Message (Fig. 7).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockMessage {
+    /// Destination core id (A).
+    pub dst_core: u8,
+    /// Source core id (C).
+    pub src_core: u8,
+    /// Merged per-aggregate-node entries; `N = entries.len()` is the number
+    /// of times A and C must communicate.
+    pub entries: Vec<MergedEntry>,
+}
+
+impl BlockMessage {
+    /// Compress one 64×64 block's COO edge list.
+    ///
+    /// `edges` are (row, col) pairs in subgraph-local 10-bit ids; all rows
+    /// must decode to the same destination core and all cols to the same
+    /// source core (the block invariant).  Edges sharing an aggregate node
+    /// id are merged into a single entry.
+    pub fn compress(edges: &[(u16, u16)]) -> Option<BlockMessage> {
+        let (&(r0, c0), _rest) = edges.split_first()?;
+        let (dst_core, _) = decode_node(r0);
+        let (src_core, _) = decode_node(c0);
+        // Bucket by aggregate node id (B), preserving first-seen order —
+        // the hardware traverses B in block storage order.
+        let mut order: Vec<u8> = Vec::new();
+        let mut buckets: Vec<Vec<u8>> = vec![Vec::new(); NODES_PER_CORE];
+        for &(r, c) in edges {
+            let (rc, b) = decode_node(r);
+            let (cc, d) = decode_node(c);
+            assert_eq!(rc, dst_core, "block invariant: shared dst core");
+            assert_eq!(cc, src_core, "block invariant: shared src core");
+            if buckets[b as usize].is_empty() {
+                order.push(b);
+            }
+            buckets[b as usize].push(d);
+        }
+        let entries = order
+            .into_iter()
+            .map(|b| MergedEntry { agg_node: b, neighbors: std::mem::take(&mut buckets[b as usize]) })
+            .collect();
+        Some(BlockMessage { dst_core, src_core, entries })
+    }
+
+    /// N — number of messages this block contributes to the wave.
+    pub fn n(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Compression ratio achieved by local merging (edges per message).
+    pub fn compression(&self) -> f64 {
+        let edges: usize = self.entries.iter().map(|e| e.neighbors.len()).sum();
+        edges as f64 / self.entries.len().max(1) as f64
+    }
+}
+
+/// The 518-bit data packet: a 512-bit (64-byte) merged feature vector plus
+/// the 6-bit aggregate node id it accumulates into (paper §4.3.3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Packet {
+    pub agg_node: u8,
+    pub feature: [u8; Packet::FEATURE_BYTES],
+}
+
+impl Packet {
+    pub const FEATURE_BYTES: usize = 64;
+    pub const BITS: usize = Self::FEATURE_BYTES * 8 + ADDR_BITS as usize; // 518
+
+    pub fn new(agg_node: u8) -> Self {
+        Packet { agg_node, feature: [0u8; Self::FEATURE_BYTES] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_codec_roundtrip() {
+        for core in 0..NUM_CORES as u8 {
+            for addr in 0..NODES_PER_CORE as u8 {
+                let n = encode_node(core, addr);
+                assert_eq!(decode_node(n), (core, addr));
+            }
+        }
+    }
+
+    #[test]
+    fn packet_is_518_bits() {
+        assert_eq!(Packet::BITS, 518);
+    }
+
+    #[test]
+    fn compress_merges_same_aggregate_node() {
+        // Block (dst core 3, src core 7): two edges into agg node 5, one
+        // into agg node 9 → N = 2 messages, not 3.
+        let edges = [
+            (encode_node(3, 5), encode_node(7, 1)),
+            (encode_node(3, 5), encode_node(7, 2)),
+            (encode_node(3, 9), encode_node(7, 4)),
+        ];
+        let bm = BlockMessage::compress(&edges).unwrap();
+        assert_eq!(bm.dst_core, 3);
+        assert_eq!(bm.src_core, 7);
+        assert_eq!(bm.n(), 2);
+        assert_eq!(bm.entries[0].agg_node, 5);
+        assert_eq!(bm.entries[0].neighbors, vec![1, 2]);
+        assert_eq!(bm.entries[1].agg_node, 9);
+        assert!((bm.compression() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compress_empty_is_none() {
+        assert!(BlockMessage::compress(&[]).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "block invariant")]
+    fn compress_rejects_mixed_cores() {
+        let edges = [
+            (encode_node(3, 5), encode_node(7, 1)),
+            (encode_node(4, 5), encode_node(7, 2)),
+        ];
+        BlockMessage::compress(&edges);
+    }
+}

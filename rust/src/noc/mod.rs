@@ -1,0 +1,28 @@
+//! The 4-D hypercube on-chip network and the parallel multicast routing
+//! algorithm (paper §4.3).
+//!
+//! Pipeline, mirroring the Router-St hardware of Fig. 6:
+//!
+//! 1. [`topology`] — the strictly orthogonal 4-D hypercube: 16 nodes, each
+//!    link flips exactly one bit of the 4-bit node coordinate.
+//! 2. [`message`] — block messages (`A+C+N` compressed COO) and the 518-bit
+//!    data packets (512-bit feature + 6-bit aggregate-node id).
+//! 3. [`routing`] — **Algorithm 1**: XOR Array, Sorter, Routing Set Filter,
+//!    Routing Table Filler, Routing Set Remover, virtual-channel stalls.
+//! 4. [`instruction`] — 25-bit per-core routing instructions.
+//! 5. [`router`] — the Router-St front end: start-point generation from
+//!    block-message groups (≤ 4 messages per source core per wave).
+//! 6. [`simulator`] — cycle-accurate replay of a routing table on the
+//!    switch model, verifying both constraints and measuring utilization.
+
+pub mod ablation;
+pub mod instruction;
+pub mod message;
+pub mod router;
+pub mod routing;
+pub mod simulator;
+pub mod topology;
+
+pub use message::{BlockMessage, Packet};
+pub use routing::{MulticastRequest, RouteEntry, RoutingOutcome, RoutingTable, route_parallel_multicast};
+pub use topology::{Hypercube, DIMS, NUM_CORES};

@@ -1,0 +1,315 @@
+//! Router-St: the street-router front end (paper Fig. 6).
+//!
+//! Consumes the partitioner's diagonal groups of [`BlockMessage`]s and
+//! drives Algorithm 1 wave by wave:
+//!
+//! 1. **Message Start Point Generator** — per wave, pull at most one
+//!    pending message from each group's 16 block queues.  Within a group
+//!    every source core id is unique (a diagonal hits each core exactly
+//!    once), so with 4 groups a core originates at most 4 messages per
+//!    wave — exactly the switch model's send budget.
+//! 2. **Routing computation** — [`route_parallel_multicast`].
+//! 3. **Instruction Generator** — 25-bit per-core instruction streams.
+
+use crate::noc::instruction::Instruction;
+use crate::noc::message::BlockMessage;
+use crate::noc::routing::{
+    route_parallel_multicast, MulticastRequest, RouteEntry, RoutingError,
+};
+use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
+use crate::util::rng::SplitMix64;
+
+/// A queue of pending merged messages for one block (one (dst, src) pair).
+#[derive(Clone, Debug)]
+struct BlockQueue {
+    dst_core: u8,
+    src_core: u8,
+    /// Aggregate-node ids still awaiting transmission (front = next).
+    pending: std::collections::VecDeque<u8>,
+}
+
+/// Statistics for one routed wave.
+#[derive(Clone, Debug)]
+pub struct WaveStats {
+    pub messages: usize,
+    pub cycles: u32,
+    pub stalls: usize,
+    /// Per-cycle hop counts (for link-utilization traces).
+    pub hops_per_cycle: Vec<usize>,
+}
+
+/// Aggregate statistics for a full aggregation stage.
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    pub waves: Vec<WaveStats>,
+    pub total_messages: usize,
+    pub total_cycles: u64,
+    /// Total edges represented (pre-compression).
+    pub total_edges: usize,
+}
+
+impl RouterStats {
+    pub fn avg_cycles_per_wave(&self) -> f64 {
+        if self.waves.is_empty() {
+            0.0
+        } else {
+            self.total_cycles as f64 / self.waves.len() as f64
+        }
+    }
+
+    /// Edge-to-message compression achieved by local merging.
+    pub fn compression_ratio(&self) -> f64 {
+        self.total_edges as f64 / self.total_messages.max(1) as f64
+    }
+
+    /// Mean link utilization: hops per cycle / directed links.
+    pub fn link_utilization(&self) -> f64 {
+        let hops: usize = self.waves.iter().flat_map(|w| &w.hops_per_cycle).sum();
+        let cycles: usize = self.waves.iter().map(|w| w.hops_per_cycle.len()).sum();
+        if cycles == 0 {
+            0.0
+        } else {
+            hops as f64 / (cycles * NUM_CORES * DIMS) as f64
+        }
+    }
+}
+
+/// The Router-St engine for one aggregation stage.
+pub struct RouterSt {
+    groups: Vec<Vec<BlockQueue>>,
+    total_edges: usize,
+}
+
+impl RouterSt {
+    /// Build from up-to-4 groups of block messages (one diagonal each).
+    /// Within a group, source core ids (and destination core ids) must be
+    /// unique — the diagonal-storage property the start-point generator
+    /// relies on.
+    pub fn new(groups: Vec<Vec<BlockMessage>>) -> Self {
+        assert!(groups.len() <= DIMS, "at most 4 diagonal groups per stage");
+        let mut total_edges = 0;
+        let qgroups = groups
+            .into_iter()
+            .map(|group| {
+                let mut seen_src = [false; NUM_CORES];
+                let mut seen_dst = [false; NUM_CORES];
+                group
+                    .into_iter()
+                    .map(|bm| {
+                        assert!(
+                            !seen_src[bm.src_core as usize] && !seen_dst[bm.dst_core as usize],
+                            "diagonal groups must have unique src/dst core ids"
+                        );
+                        seen_src[bm.src_core as usize] = true;
+                        seen_dst[bm.dst_core as usize] = true;
+                        total_edges += bm.entries.iter().map(|e| e.neighbors.len()).sum::<usize>();
+                        BlockQueue {
+                            dst_core: bm.dst_core,
+                            src_core: bm.src_core,
+                            pending: bm.entries.iter().map(|e| e.agg_node).collect(),
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { groups: qgroups, total_edges }
+    }
+
+    /// Pull the next wave's (sources, dests, agg ids); empty when drained.
+    fn next_wave(&mut self) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
+        let mut src = Vec::new();
+        let mut dst = Vec::new();
+        let mut agg = Vec::new();
+        for group in &mut self.groups {
+            for q in group.iter_mut() {
+                if let Some(b) = q.pending.pop_front() {
+                    // Intra-core messages aggregate locally (the Reduced
+                    // Register File path) and never enter the network.
+                    if q.src_core != q.dst_core {
+                        src.push(q.src_core);
+                        dst.push(q.dst_core);
+                        agg.push(b);
+                    }
+                }
+            }
+        }
+        (src, dst, agg)
+    }
+
+    /// Route every pending message; returns stats and (optionally) the
+    /// 25-bit instruction streams per wave.
+    pub fn run(&mut self, rng: &mut SplitMix64) -> Result<RouterStats, RoutingError> {
+        let mut stats = RouterStats { total_edges: self.total_edges, ..Default::default() };
+        loop {
+            let (src, dst, _agg) = self.next_wave();
+            if src.is_empty() {
+                // Either fully drained or only local messages remained.
+                if self.groups.iter().all(|g| g.iter().all(|q| q.pending.is_empty())) {
+                    break;
+                }
+                continue;
+            }
+            let req = MulticastRequest::new(src, dst);
+            let out = route_parallel_multicast(&req, rng)?;
+            let hops_per_cycle: Vec<usize> =
+                (0..out.table.cycles.len()).map(|t| out.table.hops_in_cycle(t)).collect();
+            stats.total_messages += req.len();
+            stats.total_cycles += out.table.total_cycles() as u64;
+            stats.waves.push(WaveStats {
+                messages: req.len(),
+                cycles: out.table.total_cycles(),
+                stalls: out.table.total_stalls(),
+                hops_per_cycle,
+            });
+        }
+        Ok(stats)
+    }
+}
+
+/// Instruction Generator: translate one wave's routing table into per-core
+/// 25-bit instruction streams (`result[cycle][core]`).
+pub fn emit_instructions(
+    req: &MulticastRequest,
+    table: &crate::noc::routing::RoutingTable,
+    agg_base: &[u8],
+) -> Vec<Vec<Instruction>> {
+    let mut pos = req.sources.clone();
+    let mut out = Vec::with_capacity(table.cycles.len());
+    for (t, cycle) in table.cycles.iter().enumerate() {
+        let mut per_core: Vec<Instruction> = (0..NUM_CORES)
+            .map(|_| Instruction {
+                head: t == 0,
+                recv_signal: 0,
+                send_id: 0,
+                open_channel: 0,
+                virtual_channel: false,
+                dest_id: 0,
+                agg_base: 0,
+            })
+            .collect();
+        for (i, e) in cycle.iter().enumerate() {
+            match e {
+                RouteEntry::Hop(next) => {
+                    let from = pos[i];
+                    let dim = Hypercube::link_dim(from, *next).expect("adjacent hop");
+                    let tx = &mut per_core[from as usize];
+                    tx.open_channel |= 1 << dim;
+                    tx.dest_id = req.dests[i];
+                    tx.agg_base = agg_base.get(i).copied().unwrap_or(0);
+                    let rx = &mut per_core[*next as usize];
+                    rx.recv_signal |= 1 << dim;
+                    rx.send_id = req.sources[i];
+                    pos[i] = *next;
+                }
+                RouteEntry::Stall => {
+                    // Data waits in the virtual channel of its current node.
+                    per_core[pos[i] as usize].virtual_channel = true;
+                }
+                RouteEntry::Done => {}
+            }
+        }
+        out.push(per_core);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::message::{encode_node, MergedEntry};
+
+    fn diag_group(diag: u8, n_per_block: usize) -> Vec<BlockMessage> {
+        (0..NUM_CORES as u8)
+            .map(|dst| BlockMessage {
+                dst_core: dst,
+                src_core: (dst + diag) % NUM_CORES as u8,
+                entries: (0..n_per_block)
+                    .map(|j| MergedEntry { agg_node: j as u8, neighbors: vec![j as u8] })
+                    .collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn start_points_respect_send_budget() {
+        let mut router = RouterSt::new(vec![
+            diag_group(1, 3),
+            diag_group(2, 3),
+            diag_group(3, 3),
+            diag_group(4, 3),
+        ]);
+        let (src, _dst, _aggs) = router.next_wave();
+        let mut count = [0usize; NUM_CORES];
+        for &s in &src {
+            count[s as usize] += 1;
+        }
+        assert!(count.iter().all(|&c| c <= 4));
+        assert_eq!(src.len(), 64);
+    }
+
+    #[test]
+    fn run_drains_all_messages() {
+        let mut router = RouterSt::new(vec![diag_group(1, 2), diag_group(5, 2)]);
+        let mut rng = SplitMix64::new(7);
+        let stats = router.run(&mut rng).unwrap();
+        // 2 groups × 16 blocks × 2 messages, none local (diag != 0).
+        assert_eq!(stats.total_messages, 64);
+        assert_eq!(stats.waves.len(), 2);
+        assert!(stats.avg_cycles_per_wave() >= 1.0);
+    }
+
+    #[test]
+    fn local_messages_bypass_network() {
+        // Diagonal 0: src == dst for every block → nothing routed.
+        let mut router = RouterSt::new(vec![diag_group(0, 4)]);
+        let mut rng = SplitMix64::new(8);
+        let stats = router.run(&mut rng).unwrap();
+        assert_eq!(stats.total_messages, 0);
+        assert!(stats.waves.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "unique src/dst")]
+    fn duplicate_src_in_group_rejected() {
+        let mut g = diag_group(1, 1);
+        g[1].src_core = g[0].src_core;
+        RouterSt::new(vec![g]);
+    }
+
+    #[test]
+    fn instruction_emission_covers_all_hops() {
+        let req = MulticastRequest::new(vec![0, 1, 2], vec![7, 6, 5]);
+        let mut rng = SplitMix64::new(9);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        let instrs = emit_instructions(&req, &out.table, &[10, 20, 30]);
+        assert_eq!(instrs.len(), out.table.cycles.len());
+        // Every encoded instruction must round-trip through the 25-bit word.
+        for cycle in &instrs {
+            assert_eq!(cycle.len(), NUM_CORES);
+            for ins in cycle {
+                assert_eq!(Instruction::decode(ins.encode()), Some(*ins));
+            }
+        }
+        // First cycle carries the header bit.
+        assert!(instrs[0].iter().all(|i| i.head));
+        // Some core opened an out-channel in cycle 0.
+        assert!(instrs[0].iter().any(|i| i.open_channel != 0));
+    }
+
+    #[test]
+    fn compression_ratio_counts_merged_edges() {
+        let bm = BlockMessage::compress(&[
+            (encode_node(2, 1), encode_node(3, 0)),
+            (encode_node(2, 1), encode_node(3, 5)),
+            (encode_node(2, 1), encode_node(3, 9)),
+            (encode_node(2, 2), encode_node(3, 1)),
+        ])
+        .unwrap();
+        let mut router = RouterSt::new(vec![vec![bm]]);
+        let mut rng = SplitMix64::new(10);
+        let stats = router.run(&mut rng).unwrap();
+        assert_eq!(stats.total_messages, 2);
+        assert_eq!(stats.total_edges, 4);
+        assert!((stats.compression_ratio() - 2.0).abs() < 1e-12);
+    }
+}

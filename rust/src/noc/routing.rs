@@ -1,0 +1,452 @@
+//! **Algorithm 1 — Parallel Multicast Routing** (paper §4.3.3, Fig. 8).
+//!
+//! Given up to 64 messages (4 groups × 16) with source vector `A` and
+//! destination vector `B`, compute a per-cycle routing table such that
+//!
+//! - **Constraint 1**: a core receives at most [`MAX_RECV_PER_CYCLE`] (= 4)
+//!   messages per cycle (one per in-channel / dimension);
+//! - **Constraint 2**: a core never receives two messages from the same
+//!   core in one cycle (equivalently: each directed link carries at most
+//!   one message per cycle);
+//! - every hop strictly reduces Hamming distance to the destination
+//!   (single-step shortest paths only — no misrouting, hence no livelock);
+//! - messages whose path set empties out stall one cycle in the **virtual
+//!   channel** at their current node ("×" in the paper).
+//!
+//! The implementation follows the paper's hardware blocks: XOR Array →
+//! Sorter → Routing Set Filter → Routing Table Filler → Routing Set
+//! Remover, iterated until `Step_Seq` is all-zero.
+
+use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
+use crate::util::rng::SplitMix64;
+
+/// Constraint 1: max simultaneous receives per core per cycle.
+pub const MAX_RECV_PER_CYCLE: usize = DIMS;
+/// Max messages originating from one core per wave (the start-point
+/// generator unrolls the start vector so no core id occurs more than 4×).
+pub const MAX_SEND_PER_CORE: usize = DIMS;
+
+/// One multicast wave: parallel (source, destination) pairs.
+#[derive(Clone, Debug)]
+pub struct MulticastRequest {
+    pub sources: Vec<u8>,
+    pub dests: Vec<u8>,
+}
+
+impl MulticastRequest {
+    pub fn new(sources: Vec<u8>, dests: Vec<u8>) -> Self {
+        assert_eq!(sources.len(), dests.len());
+        assert!(
+            sources.iter().chain(&dests).all(|&c| (c as usize) < NUM_CORES),
+            "core ids must be < 16"
+        );
+        Self { sources, dests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sources.is_empty()
+    }
+}
+
+/// A message's action in one cycle of the routing table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteEntry {
+    /// Move to the adjacent node (real channel).
+    Hop(u8),
+    /// Stall in the virtual channel at the current node ("×").
+    Stall,
+    /// Already delivered in an earlier cycle.
+    Done,
+}
+
+/// The computed routing table: `cycles[t][i]` is message `i`'s action in
+/// cycle `t` (Fig. 6(b)'s 2-D table, one column per message).
+#[derive(Clone, Debug)]
+pub struct RoutingTable {
+    pub cycles: Vec<Vec<RouteEntry>>,
+    /// Cycle (1-based) at which each message reached its destination;
+    /// 0 for messages that started at their destination.
+    pub arrival_cycle: Vec<u32>,
+}
+
+impl RoutingTable {
+    /// Total cycles until the last message arrives.
+    pub fn total_cycles(&self) -> u32 {
+        self.cycles.len() as u32
+    }
+
+    /// Number of real hops taken in cycle `t` (link utilization numerator).
+    pub fn hops_in_cycle(&self, t: usize) -> usize {
+        self.cycles[t]
+            .iter()
+            .filter(|e| matches!(e, RouteEntry::Hop(_)))
+            .count()
+    }
+
+    /// Number of stall ("×") entries across the whole table.
+    pub fn total_stalls(&self) -> usize {
+        self.cycles
+            .iter()
+            .flatten()
+            .filter(|e| matches!(e, RouteEntry::Stall))
+            .count()
+    }
+}
+
+/// Outcome of routing one wave.
+#[derive(Clone, Debug)]
+pub struct RoutingOutcome {
+    pub table: RoutingTable,
+    /// Final positions (must equal the destination vector).
+    pub positions: Vec<u8>,
+}
+
+/// Routing failure (only possible via the safety bound — never observed for
+/// valid waves; property-tested in `rust/tests/`).
+#[derive(Debug, thiserror::Error)]
+#[error("routing exceeded {max_cycles} cycles (live-lock safety bound); {undelivered} messages undelivered")]
+pub struct RoutingError {
+    pub max_cycles: u32,
+    pub undelivered: usize,
+}
+
+/// Hard safety bound: diameter is 4, and with ≤ 64 messages and ≥ 16 links
+/// freed per cycle, any valid wave completes in far fewer cycles.
+pub const MAX_CYCLES: u32 = 64;
+
+/// A single-step path set: at most [`DIMS`] candidate next-hops.
+///
+/// Fixed-size (the 4-cube bounds it at 4) so the router's inner loop does
+/// no heap allocation — this is the Layer-3 hot path (§Perf).
+#[derive(Clone, Copy, Debug, Default)]
+struct PathSet {
+    cands: [u8; DIMS],
+    len: u8,
+}
+
+impl PathSet {
+    #[inline]
+    fn from_xor(from: u8, to: u8) -> PathSet {
+        let mut s = PathSet::default();
+        let mut diff = from ^ to;
+        while diff != 0 {
+            let d = diff.trailing_zeros();
+            s.cands[s.len as usize] = from ^ (1 << d);
+            s.len += 1;
+            diff &= diff - 1;
+        }
+        s
+    }
+
+    #[inline]
+    fn as_slice(&self) -> &[u8] {
+        &self.cands[..self.len as usize]
+    }
+
+    #[inline]
+    fn contains(&self, node: u8) -> bool {
+        self.as_slice().contains(&node)
+    }
+
+    /// Remove every candidate for which `drop` returns true.
+    #[inline]
+    fn retain(&mut self, mut keep: impl FnMut(u8) -> bool) {
+        let mut w = 0u8;
+        for r in 0..self.len {
+            let c = self.cands[r as usize];
+            if keep(c) {
+                self.cands[w as usize] = c;
+                w += 1;
+            }
+        }
+        self.len = w;
+    }
+
+    #[inline]
+    fn remove(&mut self, node: u8) {
+        self.retain(|c| c != node);
+    }
+}
+
+/// Run Algorithm 1 on one wave.
+///
+/// `rng` drives the Routing Table Filler's random single-step path
+/// selection (line 8, `Rand_sel`).
+pub fn route_parallel_multicast(
+    req: &MulticastRequest,
+    rng: &mut SplitMix64,
+) -> Result<RoutingOutcome, RoutingError> {
+    let p = req.len();
+    // Routing_point ← A (current position of each message).
+    let mut pos: Vec<u8> = req.sources.clone();
+    let mut arrival = vec![0u32; p];
+    let mut table = RoutingTable { cycles: Vec::new(), arrival_cycle: Vec::new() };
+    // Reused per-cycle scratch (no allocation inside the loop).  Only
+    // undelivered messages are scanned — routing tails have few survivors.
+    let mut steps = vec![0u32; p];
+    let mut path_set = vec![PathSet::default(); p];
+    let mut order: Vec<u32> = Vec::with_capacity(p);
+    let mut active: Vec<u32> =
+        (0..p as u32).filter(|&i| pos[i as usize] != req.dests[i as usize]).collect();
+
+    // while !zero_all(Step_Seq)
+    loop {
+        // XOR_Array: per-message single-step path set + step count.
+        for &i in &active {
+            let i = i as usize;
+            steps[i] = Hypercube::distance(pos[i], req.dests[i]);
+            path_set[i] = PathSet::from_xor(pos[i], req.dests[i]);
+        }
+        if active.is_empty() {
+            break;
+        }
+        if table.cycles.len() as u32 >= MAX_CYCLES {
+            return Err(RoutingError {
+                max_cycles: MAX_CYCLES,
+                undelivered: steps.iter().filter(|&&s| s > 0).count(),
+            });
+        }
+
+        // Routing Set Filter (constraint 1 pre-pass): scan all path sets;
+        // while some candidate node is named more than MAX_RECV times,
+        // remove it — preferentially from messages with the most
+        // alternatives (priority re-balanced after each removal).
+        set_filter(&mut path_set, &active);
+
+        // Sorter: indices of active messages, shortest step first (they
+        // release channels soonest; long-step messages have more
+        // alternative paths and thus lower priority).  Counting sort over
+        // the 1..=DIMS step values.
+        order.clear();
+        for s in 1..=DIMS as u32 {
+            for &i in &active {
+                if steps[i as usize] == s {
+                    order.push(i);
+                }
+            }
+        }
+
+        // Routing Table Filler + Routing Set Remover.
+        let mut cycle: Vec<RouteEntry> =
+            steps.iter().map(|&s| if s == 0 { RouteEntry::Done } else { RouteEntry::Stall }).collect();
+        let mut recv_count = [0u8; NUM_CORES];
+        // Directed-link occupancy: (from, dim) — constraint 2 plus the
+        // one-message-per-output-channel switch rule.
+        let mut link_used = [false; NUM_CORES * DIMS];
+
+        for &i in &order {
+            let i = i as usize;
+            let from = pos[i];
+            // Drop candidates that violate constraints after earlier fills.
+            path_set[i].retain(|cand| {
+                let dim = (from ^ cand).trailing_zeros() as usize;
+                recv_count[cand as usize] < MAX_RECV_PER_CYCLE as u8
+                    && !link_used[Hypercube::link_index(from, dim)]
+            });
+            let set = path_set[i].as_slice();
+            if set.is_empty() {
+                // "×": park in the virtual channel until the next cycle.
+                cycle[i] = RouteEntry::Stall;
+                continue;
+            }
+            // Rand_sel: uniform choice among surviving single-step paths.
+            let choice = set[rng.gen_range(set.len())];
+            let dim = (from ^ choice).trailing_zeros() as usize;
+            link_used[Hypercube::link_index(from, dim)] = true;
+            recv_count[choice as usize] += 1;
+            cycle[i] = RouteEntry::Hop(choice);
+        }
+
+        // Generate_rp: advance routing points; record arrivals and retire
+        // delivered messages from the active list.
+        let t = table.cycles.len() as u32 + 1;
+        active.retain(|&iu| {
+            let i = iu as usize;
+            if let RouteEntry::Hop(next) = cycle[i] {
+                pos[i] = next;
+                if pos[i] == req.dests[i] {
+                    arrival[i] = t;
+                    return false;
+                }
+            }
+            true
+        });
+        table.cycles.push(cycle);
+    }
+
+    table.arrival_cycle = arrival;
+    Ok(RoutingOutcome { table, positions: pos })
+}
+
+/// The Routing Set Filter: enforce that no candidate node is targeted by
+/// more than `MAX_RECV_PER_CYCLE` path sets, removing from the largest
+/// (most-alternatives) sets first and re-balancing after each removal.
+fn set_filter(path_set: &mut [PathSet], active: &[u32]) {
+    // Candidate-occurrence counts, maintained incrementally.
+    let mut count = [0u8; NUM_CORES];
+    for &i in active {
+        for &cand in path_set[i as usize].as_slice() {
+            count[cand as usize] += 1;
+        }
+    }
+    loop {
+        // Most-contended node above the receive limit.
+        let Some(node) = (0..NUM_CORES)
+            .filter(|&n| count[n] > MAX_RECV_PER_CYCLE as u8)
+            .max_by_key(|&n| count[n])
+        else {
+            return;
+        };
+        // Remove it from the message with the most alternative paths (but
+        // never drain a set to empty here — the filler's virtual channel
+        // handles terminal conflicts).
+        let victim = active
+            .iter()
+            .map(|&i| i as usize)
+            .filter(|&i| path_set[i].len > 1 && path_set[i].contains(node as u8))
+            .max_by_key(|&i| path_set[i].len);
+        match victim {
+            Some(i) => {
+                path_set[i].remove(node as u8);
+                count[node] -= 1;
+            }
+            // All holders have a single path — leave them; the per-fill
+            // retain() + virtual channel resolves the overflow.
+            None => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_constraints(req: &MulticastRequest, out: &RoutingOutcome) {
+        // Replay the table and verify both constraints every cycle.
+        let mut pos = req.sources.clone();
+        for cycle in &out.table.cycles {
+            let mut recv = [0usize; NUM_CORES];
+            let mut link = std::collections::HashSet::new();
+            for (i, e) in cycle.iter().enumerate() {
+                if let RouteEntry::Hop(next) = e {
+                    assert_eq!(
+                        Hypercube::distance(pos[i], *next),
+                        1,
+                        "hop must use a physical link"
+                    );
+                    assert!(
+                        Hypercube::distance(*next, req.dests[i])
+                            < Hypercube::distance(pos[i], req.dests[i]),
+                        "hop must reduce distance"
+                    );
+                    recv[*next as usize] += 1;
+                    assert!(link.insert((pos[i], *next)), "constraint 2 violated");
+                    pos[i] = *next;
+                }
+            }
+            assert!(recv.iter().all(|&r| r <= MAX_RECV_PER_CYCLE), "constraint 1 violated");
+        }
+        assert_eq!(pos, req.dests, "all messages delivered");
+    }
+
+    #[test]
+    fn single_message_shortest_path() {
+        let req = MulticastRequest::new(vec![0b0000], vec![0b1111]);
+        let mut rng = SplitMix64::new(1);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        assert_eq!(out.table.total_cycles(), 4); // Hamming distance
+        check_constraints(&req, &out);
+    }
+
+    #[test]
+    fn already_at_destination() {
+        let req = MulticastRequest::new(vec![5, 9], vec![5, 9]);
+        let mut rng = SplitMix64::new(2);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        assert_eq!(out.table.total_cycles(), 0);
+        assert_eq!(out.table.arrival_cycle, vec![0, 0]);
+    }
+
+    #[test]
+    fn fuse1_sixteen_parallel_messages() {
+        // One group: 16 messages, sources a random permutation, dests random.
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..50 {
+            let sources: Vec<u8> = rng.permutation(16).iter().map(|&x| x as u8).collect();
+            let dests: Vec<u8> = (0..16).map(|_| rng.gen_range(16) as u8).collect();
+            let req = MulticastRequest::new(sources, dests);
+            let out = route_parallel_multicast(&req, &mut rng).unwrap();
+            check_constraints(&req, &out);
+            assert!(out.table.total_cycles() <= 10, "{}", out.table.total_cycles());
+        }
+    }
+
+    #[test]
+    fn fuse4_sixty_four_parallel_messages() {
+        // Four groups: each source id appears exactly 4× (the start-point
+        // generator's unrolled vector), random destinations.
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..50 {
+            let mut sources = Vec::with_capacity(64);
+            for _ in 0..4 {
+                sources.extend(rng.permutation(16).iter().map(|&x| x as u8));
+            }
+            let dests: Vec<u8> = (0..64).map(|_| rng.gen_range(16) as u8).collect();
+            let req = MulticastRequest::new(sources, dests);
+            let out = route_parallel_multicast(&req, &mut rng).unwrap();
+            check_constraints(&req, &out);
+        }
+    }
+
+    #[test]
+    fn worst_case_all_to_one_is_bounded() {
+        // 16 messages all to core 15: receives limited to 4/cycle, so the
+        // tail must wait — but everything still arrives.
+        let sources: Vec<u8> = (0..16).collect();
+        let dests = vec![15u8; 16];
+        let req = MulticastRequest::new(sources, dests);
+        let mut rng = SplitMix64::new(5);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        check_constraints(&req, &out);
+        // 15 remote messages / 4 per cycle ⇒ ≥ 4 cycles.
+        assert!(out.table.total_cycles() >= 4);
+    }
+
+    #[test]
+    fn arrival_cycles_monotone_vs_distance() {
+        let mut rng = SplitMix64::new(6);
+        let req = MulticastRequest::new(vec![0, 0b1], vec![0b1111, 0b1]);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        assert!(out.table.arrival_cycle[0] >= 4);
+        assert_eq!(out.table.arrival_cycle[1], 0);
+    }
+
+    #[test]
+    fn set_filter_respects_receive_limit() {
+        // 6 messages one hop from node 0 → candidate sets all {0}; the
+        // filter must not drain single-element sets.
+        let mut sets: Vec<PathSet> = (0..6).map(|_| PathSet::from_xor(1, 0)).collect();
+        assert!(sets.iter().all(|s| s.as_slice() == [0u8]));
+        let active: Vec<u32> = (0..6).collect();
+        set_filter(&mut sets, &active);
+        assert!(sets.iter().all(|s| s.len == 1));
+    }
+
+    #[test]
+    fn path_set_from_xor_matches_topology() {
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                let fast = PathSet::from_xor(a, b);
+                let mut want = Hypercube::single_step_paths(a, b);
+                let mut got = fast.as_slice().to_vec();
+                want.sort_unstable();
+                got.sort_unstable();
+                assert_eq!(got, want, "{a} -> {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Cycle-accurate replay of routing tables on the switch model (Fig. 5).
+//!
+//! [`route_parallel_multicast`] *plans* the wave; this module *executes*
+//! it: packets move through per-link registers, the switch checks both
+//! constraints structurally (it physically has 4 in-channels and 4
+//! out-channels), virtual-channel occupancy is tracked, payloads are
+//! reduced into destination aggregate buffers on arrival, and per-cycle
+//! link utilization is recorded (Fig. 11(c)'s time series).
+
+use crate::noc::routing::{MulticastRequest, RouteEntry, RoutingTable};
+use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
+
+/// Payload carried per message: one 64-byte feature word (16 f32 lanes) —
+/// the 512-bit feature of the paper's 518-bit packet.
+pub const LANES: usize = 16;
+
+/// Result of replaying one wave.
+#[derive(Clone, Debug)]
+pub struct ReplayResult {
+    /// Per-cycle fraction of busy directed links (0..=1).
+    pub link_utilization: Vec<f64>,
+    /// Per-core aggregate buffers after reduce-on-arrival (indexed by the
+    /// message's aggregate-node id).
+    pub agg_buffers: Vec<Vec<[f32; LANES]>>,
+    /// Cycles simulated.
+    pub cycles: u32,
+    /// Count of virtual-channel occupancies observed.
+    pub vc_occupancy: usize,
+}
+
+/// Replay error — a structural violation the switch hardware could not
+/// execute (these indicate a planner bug; property tests keep them at zero).
+#[derive(Debug, thiserror::Error)]
+pub enum ReplayError {
+    #[error("cycle {cycle}: core {core} would receive {n} > 4 messages")]
+    ReceiveOverflow { cycle: u32, core: u8, n: usize },
+    #[error("cycle {cycle}: output channel {dim} of core {core} driven twice")]
+    ChannelConflict { cycle: u32, core: u8, dim: usize },
+    #[error("cycle {cycle}: message {msg} hop {from}->{to} is not a hypercube link")]
+    NotALink { cycle: u32, msg: usize, from: u8, to: u8 },
+    #[error("message {msg} ended at {at}, wanted {want}")]
+    Undelivered { msg: usize, at: u8, want: u8 },
+}
+
+/// Execute `table` for `req`, reducing `payloads` (one per message, paired
+/// with `agg_nodes` destination rows) into per-core aggregate buffers.
+pub fn replay(
+    req: &MulticastRequest,
+    table: &RoutingTable,
+    payloads: &[[f32; LANES]],
+    agg_nodes: &[u8],
+) -> Result<ReplayResult, ReplayError> {
+    let p = req.len();
+    assert_eq!(payloads.len(), p);
+    assert_eq!(agg_nodes.len(), p);
+
+    let mut pos = req.sources.clone();
+    let mut util = Vec::with_capacity(table.cycles.len());
+    let mut vc_occupancy = 0usize;
+    let mut agg: Vec<Vec<[f32; LANES]>> =
+        vec![vec![[0.0; LANES]; crate::noc::message::NODES_PER_CORE]; NUM_CORES];
+
+    // Messages already at their destination deliver at cycle 0.
+    for i in 0..p {
+        if pos[i] == req.dests[i] {
+            reduce(&mut agg, req.dests[i], agg_nodes[i], &payloads[i]);
+        }
+    }
+
+    for (t, cycle) in table.cycles.iter().enumerate() {
+        let t32 = t as u32 + 1;
+        let mut recv = [0usize; NUM_CORES];
+        let mut out_busy = [[false; DIMS]; NUM_CORES];
+        let mut hops = 0usize;
+        for (i, e) in cycle.iter().enumerate() {
+            match e {
+                RouteEntry::Hop(next) => {
+                    let from = pos[i];
+                    let dim = Hypercube::link_dim(from, *next).ok_or(ReplayError::NotALink {
+                        cycle: t32,
+                        msg: i,
+                        from,
+                        to: *next,
+                    })?;
+                    if out_busy[from as usize][dim] {
+                        return Err(ReplayError::ChannelConflict { cycle: t32, core: from, dim });
+                    }
+                    out_busy[from as usize][dim] = true;
+                    recv[*next as usize] += 1;
+                    if recv[*next as usize] > DIMS {
+                        return Err(ReplayError::ReceiveOverflow {
+                            cycle: t32,
+                            core: *next,
+                            n: recv[*next as usize],
+                        });
+                    }
+                    pos[i] = *next;
+                    hops += 1;
+                    if pos[i] == req.dests[i] {
+                        reduce(&mut agg, req.dests[i], agg_nodes[i], &payloads[i]);
+                    }
+                }
+                RouteEntry::Stall => vc_occupancy += 1,
+                RouteEntry::Done => {}
+            }
+        }
+        util.push(hops as f64 / (NUM_CORES * DIMS) as f64);
+    }
+
+    for i in 0..p {
+        if pos[i] != req.dests[i] {
+            return Err(ReplayError::Undelivered { msg: i, at: pos[i], want: req.dests[i] });
+        }
+    }
+    Ok(ReplayResult {
+        link_utilization: util,
+        agg_buffers: agg,
+        cycles: table.cycles.len() as u32,
+        vc_occupancy,
+    })
+}
+
+fn reduce(agg: &mut [Vec<[f32; LANES]>], core: u8, node: u8, payload: &[f32; LANES]) {
+    let slot = &mut agg[core as usize][node as usize];
+    for (acc, &x) in slot.iter_mut().zip(payload) {
+        *acc += x;
+    }
+}
+
+/// Raw on-chip network bandwidth for an observed routing profile, in bytes
+/// per second (paper §5.2: 64-byte data lines, 16 cores, up to 4 sends per
+/// core per cycle, at `clock_hz`).
+pub fn raw_bandwidth_bytes_per_sec(
+    messages: usize,
+    total_cycles: u64,
+    clock_hz: f64,
+) -> f64 {
+    if total_cycles == 0 {
+        return 0.0;
+    }
+    let bytes = messages as f64 * 64.0;
+    let seconds = total_cycles as f64 / clock_hz;
+    bytes / seconds
+}
+
+/// Effective aggregate bandwidth after local compression: each transmitted
+/// message represents `compression` merged neighbor features (paper §5.2's
+/// 2.96 TB/s assumes 16× compression at 64 messages / 4 parallel groups).
+pub fn effective_bandwidth_bytes_per_sec(
+    messages: usize,
+    total_cycles: u64,
+    clock_hz: f64,
+    compression: f64,
+) -> f64 {
+    raw_bandwidth_bytes_per_sec(messages, total_cycles, clock_hz) * compression
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::noc::routing::route_parallel_multicast;
+    use crate::util::rng::SplitMix64;
+
+    fn payloads(n: usize, v: f32) -> Vec<[f32; LANES]> {
+        vec![[v; LANES]; n]
+    }
+
+    #[test]
+    fn replay_delivers_and_reduces() {
+        let req = MulticastRequest::new(vec![0, 1, 2], vec![5, 5, 5]);
+        let mut rng = SplitMix64::new(1);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        let res = replay(&req, &out.table, &payloads(3, 2.0), &[7, 7, 9]).unwrap();
+        // Two messages reduced into core 5 node 7, one into node 9.
+        assert_eq!(res.agg_buffers[5][7], [4.0; LANES]);
+        assert_eq!(res.agg_buffers[5][9], [2.0; LANES]);
+        assert_eq!(res.agg_buffers[5][0], [0.0; LANES]);
+    }
+
+    #[test]
+    fn replay_message_already_home() {
+        let req = MulticastRequest::new(vec![3], vec![3]);
+        let mut rng = SplitMix64::new(2);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        let res = replay(&req, &out.table, &payloads(1, 1.5), &[0]).unwrap();
+        assert_eq!(res.agg_buffers[3][0], [1.5; LANES]);
+        assert_eq!(res.cycles, 0);
+    }
+
+    #[test]
+    fn utilization_bounded_and_nonzero() {
+        let mut rng = SplitMix64::new(3);
+        let sources: Vec<u8> = rng.permutation(16).iter().map(|&x| x as u8).collect();
+        let dests: Vec<u8> = (0..16).map(|_| rng.gen_range(16) as u8).collect();
+        let req = MulticastRequest::new(sources, dests);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        let res = replay(&req, &out.table, &payloads(16, 1.0), &vec![0u8; 16]).unwrap();
+        assert!(!res.link_utilization.is_empty());
+        for &u in &res.link_utilization {
+            assert!((0.0..=1.0).contains(&u));
+        }
+        assert!(res.link_utilization[0] > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_formulas() {
+        // Paper §5.2: 64 messages in ~5.03 avg cycles @ 250 MHz with 16×
+        // compression ⇒ ~2.96 TB/s effective, ~185 GB/s raw.
+        let clock = 250e6;
+        let cycles = 5u64;
+        let raw = raw_bandwidth_bytes_per_sec(64, cycles, clock);
+        assert!((raw - 64.0 * 64.0 / (5.0 / 250e6)).abs() < 1.0);
+        let eff = effective_bandwidth_bytes_per_sec(64, cycles, clock, 16.0);
+        assert!((eff / raw - 16.0).abs() < 1e-9);
+        assert_eq!(raw_bandwidth_bytes_per_sec(64, 0, clock), 0.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Strictly orthogonal 4-D hypercube topology (paper §4.3.1, Fig. 4).
+//!
+//! Every core is a 4-bit binary coordinate `(x3, x2, x1, x0)`; two cores are
+//! adjacent iff their coordinates differ in exactly one bit, so each core
+//! has one bidirectional link per dimension (4 in + 4 out channels — the
+//! switch model of Fig. 5).
+
+/// Hypercube dimensionality (the paper's n = 4).
+pub const DIMS: usize = 4;
+/// Number of compute cores (2^DIMS).
+pub const NUM_CORES: usize = 1 << DIMS;
+/// Directed links in the network (each node × one out-channel per dim).
+pub const NUM_LINKS: usize = NUM_CORES * DIMS;
+
+/// The 4-D hypercube graph with routing helpers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Hypercube;
+
+impl Hypercube {
+    /// Neighbor of `node` along `dim` (flip bit `dim`).
+    #[inline]
+    pub fn neighbor(node: u8, dim: usize) -> u8 {
+        debug_assert!((node as usize) < NUM_CORES && dim < DIMS);
+        node ^ (1 << dim)
+    }
+
+    /// All 4 neighbors of `node`.
+    pub fn neighbors(node: u8) -> [u8; DIMS] {
+        std::array::from_fn(|d| Self::neighbor(node, d))
+    }
+
+    /// Hamming distance — the shortest-path length (paper: "step length",
+    /// the popcount of the XOR result).
+    #[inline]
+    pub fn distance(a: u8, b: u8) -> u32 {
+        (a ^ b).count_ones()
+    }
+
+    /// The XOR-Array single-step path set (paper Fig. 8): every neighbor of
+    /// `from` that strictly reduces the distance to `to` — i.e. flip each
+    /// bit where `from` and `to` differ.
+    pub fn single_step_paths(from: u8, to: u8) -> Vec<u8> {
+        let diff = from ^ to;
+        (0..DIMS)
+            .filter(|d| diff & (1 << d) != 0)
+            .map(|d| from ^ (1 << d))
+            .collect()
+    }
+
+    /// Which dimension the (adjacent) hop `from → to` uses; `None` if the
+    /// two nodes are not adjacent.
+    pub fn link_dim(from: u8, to: u8) -> Option<usize> {
+        let diff = from ^ to;
+        if diff.count_ones() == 1 {
+            Some(diff.trailing_zeros() as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Dense index of the directed link `from --dim--> to`.
+    pub fn link_index(from: u8, dim: usize) -> usize {
+        from as usize * DIMS + dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_are_adjacent_and_distinct() {
+        for node in 0..NUM_CORES as u8 {
+            let ns = Hypercube::neighbors(node);
+            for (d, &n) in ns.iter().enumerate() {
+                assert_eq!(Hypercube::distance(node, n), 1);
+                assert_eq!(Hypercube::link_dim(node, n), Some(d));
+            }
+            let mut sorted = ns.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), DIMS);
+        }
+    }
+
+    #[test]
+    fn distance_is_popcount_of_xor() {
+        assert_eq!(Hypercube::distance(0b0000, 0b1111), 4);
+        assert_eq!(Hypercube::distance(0b1010, 0b1010), 0);
+        assert_eq!(Hypercube::distance(0b0001, 0b1001), 1);
+    }
+
+    #[test]
+    fn single_step_paths_reduce_distance() {
+        for a in 0..NUM_CORES as u8 {
+            for b in 0..NUM_CORES as u8 {
+                let paths = Hypercube::single_step_paths(a, b);
+                assert_eq!(paths.len() as u32, Hypercube::distance(a, b));
+                for p in paths {
+                    assert_eq!(Hypercube::distance(a, p), 1);
+                    assert_eq!(
+                        Hypercube::distance(p, b),
+                        Hypercube::distance(a, b) - 1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_fig8_example() {
+        // Fig. 8(b): a=0110, b=0000 → XOR=0110, step=2, path set {0100, 0010}.
+        let paths = Hypercube::single_step_paths(0b0110, 0b0000);
+        assert_eq!(paths.len(), 2);
+        assert!(paths.contains(&0b0100));
+        assert!(paths.contains(&0b0010));
+    }
+
+    #[test]
+    fn link_dim_non_adjacent_is_none() {
+        assert_eq!(Hypercube::link_dim(0b0000, 0b0011), None);
+        assert_eq!(Hypercube::link_dim(0b0101, 0b0101), None);
+    }
+
+    #[test]
+    fn link_indices_are_dense_and_unique() {
+        let mut seen = vec![false; NUM_LINKS];
+        for node in 0..NUM_CORES as u8 {
+            for d in 0..DIMS {
+                let idx = Hypercube::link_index(node, d);
+                assert!(!seen[idx]);
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,8 @@
+//! Power, resource and utilization models (Figs. 11–12, Table 3).
+
+pub mod power;
+pub mod resources;
+pub mod utilization;
+
+pub use power::{PowerBreakdown, PowerModel};
+pub use resources::{ResourceReport, OURS_RESOURCES, HPGNN_RESOURCES};

@@ -1,0 +1,87 @@
+//! Utilization report helpers for Fig. 10 / Fig. 11(b,c).
+//!
+//! These wrap the epoch model's raw measurements into the exact series
+//! the paper plots: per-core message-passing : compute ratios (Fig. 10),
+//! average multi-core utilization per dataset (Fig. 11(b)), and the NoC
+//! link-utilization trace over aggregation progress (Fig. 11(c)).
+
+use crate::coordinator::epoch::EpochReport;
+
+/// Fig. 10's published per-dataset average CTC ratios
+/// (message passing : combination+aggregation).
+pub const PAPER_CTC: [(&str, f64); 4] =
+    [("Flickr", 1.02), ("Reddit", 1.05), ("Yelp", 0.99), ("AmazonProducts", 0.94)];
+
+/// Fig. 11(c): the paper samples utilization at 10 time points during the
+/// aggregation stage and observes a decreasing trend.
+pub const FIG11C_POINTS: usize = 10;
+
+/// Downsample a utilization trace to the paper's 10 points.
+pub fn trace_to_fig11c(trace: &[f64]) -> Vec<f64> {
+    if trace.is_empty() {
+        return vec![0.0; FIG11C_POINTS];
+    }
+    (0..FIG11C_POINTS)
+        .map(|i| {
+            let lo = i * trace.len() / FIG11C_POINTS;
+            let hi = ((i + 1) * trace.len() / FIG11C_POINTS).max(lo + 1).min(trace.len());
+            trace[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
+/// Whether the measured trace reproduces Fig. 11(c)'s decreasing trend
+/// (first-third average > last-third average).
+pub fn trend_is_decreasing(points: &[f64]) -> bool {
+    let third = points.len() / 3;
+    if third == 0 {
+        return false;
+    }
+    let head: f64 = points[..third].iter().sum::<f64>() / third as f64;
+    let tail: f64 = points[points.len() - third..].iter().sum::<f64>() / third as f64;
+    head >= tail
+}
+
+/// Summary line for one dataset in a Fig. 10/11 bench.
+pub fn utilization_row(rep: &EpochReport) -> String {
+    format!(
+        "{:<16} ctc 1:{:<5.2} core-util {:>5.1}%  ordering {}",
+        rep.dataset,
+        rep.avg_ctc_ratio,
+        rep.avg_core_utilization * 100.0,
+        rep.ordering.name(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downsample_averages() {
+        let trace: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let pts = trace_to_fig11c(&trace);
+        assert_eq!(pts.len(), FIG11C_POINTS);
+        assert!(pts[0] < pts[9]);
+        assert!((pts[0] - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn downsample_short_trace() {
+        let pts = trace_to_fig11c(&[0.5, 0.4]);
+        assert_eq!(pts.len(), FIG11C_POINTS);
+        assert!(pts.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn trend_detection() {
+        assert!(trend_is_decreasing(&[0.9, 0.8, 0.7, 0.5, 0.4, 0.3]));
+        assert!(!trend_is_decreasing(&[0.1, 0.2, 0.3, 0.7, 0.8, 0.9]));
+    }
+
+    #[test]
+    fn empty_trace_safe() {
+        let pts = trace_to_fig11c(&[]);
+        assert_eq!(pts, vec![0.0; FIG11C_POINTS]);
+    }
+}

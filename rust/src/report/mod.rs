@@ -1,0 +1,8 @@
+//! Plain-text reporting: ASCII tables and simple bar/line plots, so every
+//! bench prints paper-style output without a plotting dependency.
+
+pub mod plot;
+pub mod table;
+
+pub use plot::{ascii_bars, ascii_series};
+pub use table::Table;

@@ -1,0 +1,62 @@
+//! Tiny ASCII plotting for bench output.
+
+/// Horizontal bar chart: one `(label, value)` bar per line, scaled to
+/// `width` characters at the max value.
+pub fn ascii_bars(items: &[(String, f64)], width: usize) -> String {
+    let max = items.iter().map(|(_, v)| *v).fold(f64::MIN_POSITIVE, f64::max);
+    let lw = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in items {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<lw$} | {:<width$} {:.4}\n",
+            label,
+            "#".repeat(n.min(width)),
+            v,
+            lw = lw,
+            width = width
+        ));
+    }
+    out
+}
+
+/// A compact line-series rendering: index → scaled column height (0-9).
+pub fn ascii_series(values: &[f64]) -> String {
+    let max = values.iter().cloned().fold(f64::MIN_POSITIVE, f64::max);
+    values
+        .iter()
+        .map(|v| {
+            let level = ((v / max) * 9.0).round() as u32;
+            char::from_digit(level.min(9), 10).unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_width() {
+        let s = ascii_bars(
+            &[("a".into(), 1.0), ("bb".into(), 2.0)],
+            10,
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].contains("##########"));
+        assert!(lines[0].contains("#####"));
+    }
+
+    #[test]
+    fn series_digits() {
+        let s = ascii_series(&[0.0, 0.5, 1.0]);
+        assert_eq!(s, "059");
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        assert_eq!(ascii_bars(&[], 10), "");
+        assert_eq!(ascii_series(&[]), "");
+    }
+}

@@ -1,0 +1,136 @@
+//! PJRT executor: compile HLO-text artifacts once, run them many times.
+//!
+//! One [`Executor`] wraps the CPU `PjRtClient` plus a cache of compiled
+//! executables keyed by artifact name.  Inputs are staged as f32 host
+//! tensors ([`TensorIn`]); outputs come back as flat f32 vectors in the
+//! artifact's declared output order (jax lowers with `return_tuple=True`,
+//! so the root is always a tuple).
+
+use std::collections::HashMap;
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// A host-side f32 input tensor (row-major).
+#[derive(Clone, Debug)]
+pub struct TensorIn {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorIn {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { dims, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { dims: vec![], data: vec![v] }
+    }
+
+    pub fn vector(data: Vec<f32>) -> Self {
+        Self { dims: vec![data.len()], data }
+    }
+
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        Self::new(vec![rows, cols], data)
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        if self.dims.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.dims,
+            bytes,
+        )?)
+    }
+}
+
+/// The PJRT-backed executor.
+pub struct Executor {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Executor> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Executor { client, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn meta(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn load(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact; returns each tuple element flattened to f32.
+    pub fn run(&mut self, name: &str, inputs: &[TensorIn]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.compiled.get(name).expect("just loaded");
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        // return_tuple=True → root is a tuple of outputs.
+        let parts = root.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| Ok(lit.to_vec::<f32>()?))
+            .collect()
+    }
+
+    /// Names of already-compiled artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.compiled.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_in_shapes() {
+        let t = TensorIn::matrix(2, 3, vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+        let s = TensorIn::scalar(7.0);
+        assert!(s.dims.is_empty());
+        let v = TensorIn::vector(vec![1.0, 2.0]);
+        assert_eq!(v.dims, vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn tensor_in_validates() {
+        TensorIn::new(vec![2, 2], vec![1.0]);
+    }
+
+    // PJRT-backed execution tests live in rust/tests/ (they need built
+    // artifacts and a process-wide CPU client).
+}

@@ -1,0 +1,175 @@
+//! Parser for `artifacts/manifest.txt` (written by `python -m compile.aot`).
+//!
+//! Line format (no JSON dependency needed):
+//!
+//! ```text
+//! artifact <name> kind=<k> ordering=<o> b=<int> n1=<int> n2=<int> d=<int> h=<int> c=<int> file=<f>
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// What a compiled artifact computes (fixes its I/O contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// x a1 a2 w1 w2 yhot row_mask nvalid lr → (w1', w2', loss)
+    GcnTrain,
+    /// + velocity state and momentum: x a1 a2 w1 w2 v1 v2 yhot row_mask
+    /// nvalid lr mu → (w1', w2', v1', v2', loss)
+    GcnTrainMomentum,
+    /// x a1 a2 w1 w2 yhot row_mask nvalid → (loss, correct)
+    GcnEval,
+    /// x a1 a2 ws1 wn1 ws2 wn2 yhot row_mask nvalid lr → (4 weights, loss)
+    SageTrain,
+    /// a x w e → (z, dx, dw) — Table-1 single-layer orderings
+    Layer,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "gcn_train" => Some(ArtifactKind::GcnTrain),
+            "gcn_train_mom" => Some(ArtifactKind::GcnTrainMomentum),
+            "gcn_eval" => Some(ArtifactKind::GcnEval),
+            "sage_train" => Some(ArtifactKind::SageTrain),
+            "layer" => Some(ArtifactKind::Layer),
+            _ => None,
+        }
+    }
+}
+
+/// Metadata of one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub ordering: String,
+    pub b: usize,
+    pub n1: usize,
+    pub n2: usize,
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| anyhow::anyhow!("reading {}/manifest.txt: {e} (run `make artifacts`)", dir.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text with artifact paths relative to `dir`.
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let mut artifacts = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let tag = toks.next();
+            if tag != Some("artifact") {
+                anyhow::bail!("manifest line {}: expected 'artifact', got {tag:?}", lineno + 1);
+            }
+            let name = toks
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("manifest line {}: missing name", lineno + 1))?
+                .to_string();
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in toks {
+                let (k, v) = tok
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: bad token {tok}", lineno + 1))?;
+                kv.insert(k, v);
+            }
+            let get_int = |k: &str| -> anyhow::Result<usize> {
+                kv.get(k)
+                    .ok_or_else(|| anyhow::anyhow!("line {}: missing {k}", lineno + 1))?
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("line {}: {k}: {e}", lineno + 1))
+            };
+            let kind = ArtifactKind::parse(kv.get("kind").copied().unwrap_or(""))
+                .ok_or_else(|| anyhow::anyhow!("line {}: unknown kind", lineno + 1))?;
+            let meta = ArtifactMeta {
+                name: name.clone(),
+                kind,
+                ordering: kv.get("ordering").unwrap_or(&"coag").to_string(),
+                b: get_int("b")?,
+                n1: get_int("n1")?,
+                n2: get_int("n2")?,
+                d: get_int("d")?,
+                h: get_int("h")?,
+                c: get_int("c")?,
+                path: dir.join(kv.get("file").copied().unwrap_or("")),
+            };
+            artifacts.insert(name, meta);
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Names of all artifacts of a kind, sorted for determinism.
+    pub fn of_kind(&self, kind: ArtifactKind) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.artifacts.values().filter(|m| m.kind == kind).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+artifact gcn2_train_step_small_coag kind=gcn_train ordering=coag b=64 n1=256 n2=1024 d=64 h=32 c=8 file=g.hlo.txt
+artifact layer_coag kind=layer ordering=coag b=0 n1=512 n2=1024 d=128 h=64 c=0 file=l.hlo.txt
+";
+
+    #[test]
+    fn parses_fields() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        let a = m.get("gcn2_train_step_small_coag").unwrap();
+        assert_eq!(a.kind, ArtifactKind::GcnTrain);
+        assert_eq!((a.b, a.n1, a.n2, a.d, a.h, a.c), (64, 256, 1024, 64, 32, 8));
+        assert_eq!(a.path, PathBuf::from("/art/g.hlo.txt"));
+        assert_eq!(a.ordering, "coag");
+    }
+
+    #[test]
+    fn of_kind_filters() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.of_kind(ArtifactKind::Layer).len(), 1);
+        assert_eq!(m.of_kind(ArtifactKind::GcnTrain).len(), 1);
+        assert_eq!(m.of_kind(ArtifactKind::SageTrain).len(), 0);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Manifest::parse("bogus line", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse("artifact x kind=wat b=1", PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place Python output crosses into the Rust hot path —
+//! and it happens at *load time*: `make artifacts` ran `python -m
+//! compile.aot` once; from here on the coordinator feeds buffers into the
+//! compiled executables without any Python.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Executor, TensorIn};
+pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};

@@ -1,0 +1,186 @@
+//! Mini-batch staging: pad a sampled batch into the fixed shapes of a
+//! compiled artifact.
+//!
+//! Zero padding is numerically exact (DESIGN.md §5): padded adjacency
+//! rows/cols are zero so they aggregate nothing, padded feature rows are
+//! zero so they combine to zero, and masked loss rows contribute no error.
+
+use crate::graph::generate::LabeledGraph;
+use crate::graph::sampler::SampledBatch;
+use crate::runtime::executor::TensorIn;
+use crate::runtime::manifest::ArtifactMeta;
+
+/// A batch staged into artifact-shaped tensors.
+#[derive(Clone, Debug)]
+pub struct StagedBatch {
+    pub x: TensorIn,
+    pub a1: TensorIn,
+    pub a2: TensorIn,
+    pub yhot: TensorIn,
+    pub row_mask: TensorIn,
+    pub nvalid: TensorIn,
+    /// Real (unpadded) sizes (n2, n1, b).
+    pub dims: (usize, usize, usize),
+}
+
+/// Staging failure: the sampled batch exceeds the artifact's capacity.
+#[derive(Debug, thiserror::Error)]
+#[error("sampled batch ({got}) exceeds artifact capacity ({cap}) for {dim}")]
+pub struct CapacityError {
+    pub dim: &'static str,
+    pub got: usize,
+    pub cap: usize,
+}
+
+/// GCN normalization + padding of one sampled layer's adjacency.
+fn stage_adj(
+    layer: &crate::graph::sampler::SampledLayer,
+    pad_rows: usize,
+    pad_cols: usize,
+    mean_norm: bool,
+) -> Vec<f32> {
+    let norm = if mean_norm {
+        layer.adj.row_normalized()
+    } else {
+        layer.adj.gcn_normalized()
+    };
+    norm.to_dense_padded(pad_rows, pad_cols)
+}
+
+/// Stage `batch` for `meta`, gathering features/labels from `graph`.
+pub fn stage(
+    batch: &SampledBatch,
+    graph: &LabeledGraph,
+    meta: &ArtifactMeta,
+    mean_norm: bool,
+) -> Result<StagedBatch, CapacityError> {
+    let (n2, n1, b) = batch.dims();
+    for (dim, got, cap) in
+        [("n2", n2, meta.n2), ("n1", n1, meta.n1), ("b", b, meta.b)]
+    {
+        if got > cap {
+            return Err(CapacityError { dim, got, cap });
+        }
+    }
+    let d = meta.d.min(graph.features.cols);
+
+    // Features of the 2-hop frontier, zero-padded to [meta.n2, meta.d].
+    let mut x = vec![0f32; meta.n2 * meta.d];
+    for (i, &g) in batch.layers[0].src.iter().enumerate() {
+        let row = graph.features.row(g as usize);
+        x[i * meta.d..i * meta.d + d].copy_from_slice(&row[..d]);
+    }
+
+    let a1 = stage_adj(&batch.layers[0], meta.n1, meta.n2, mean_norm);
+    let a2 = stage_adj(&batch.layers[1], meta.b, meta.n1, mean_norm);
+
+    // One-hot labels + row mask for the real batch rows.
+    let mut yhot = vec![0f32; meta.b * meta.c];
+    let mut row_mask = vec![0f32; meta.b];
+    for (i, &g) in batch.batch_nodes.iter().enumerate() {
+        let label = graph.labels[g as usize] as usize % meta.c;
+        yhot[i * meta.c + label] = 1.0;
+        row_mask[i] = 1.0;
+    }
+
+    Ok(StagedBatch {
+        x: TensorIn::matrix(meta.n2, meta.d, x),
+        a1: TensorIn::matrix(meta.n1, meta.n2, a1),
+        a2: TensorIn::matrix(meta.b, meta.n1, a2),
+        yhot: TensorIn::matrix(meta.b, meta.c, yhot),
+        row_mask: TensorIn::vector(row_mask),
+        nvalid: TensorIn::scalar(b as f32),
+        dims: (n2, n1, b),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets::by_name;
+    use crate::graph::sampler::NeighborSampler;
+    use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
+    use crate::util::rng::SplitMix64;
+
+    fn small_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "gcn2_train_step_small_coag".into(),
+            kind: ArtifactKind::GcnTrain,
+            ordering: "coag".into(),
+            b: 64,
+            n1: 256,
+            n2: 1024,
+            d: 64,
+            h: 32,
+            c: 8,
+            path: "unused".into(),
+        }
+    }
+
+    fn sample_batch() -> (SampledBatch, LabeledGraph) {
+        let mut rng = SplitMix64::new(5);
+        let graph = by_name("Flickr").unwrap().instantiate(1000, &mut rng);
+        let sampler = NeighborSampler::new(&graph.adj, vec![4, 3]);
+        let ids: Vec<u32> = (0..32).collect();
+        let batch = sampler.sample(&ids, &mut rng);
+        (batch, graph)
+    }
+
+    #[test]
+    fn staged_shapes_match_meta() {
+        let (batch, graph) = sample_batch();
+        let meta = small_meta();
+        let s = stage(&batch, &graph, &meta, false).unwrap();
+        assert_eq!(s.x.dims, vec![1024, 64]);
+        assert_eq!(s.a1.dims, vec![256, 1024]);
+        assert_eq!(s.a2.dims, vec![64, 256]);
+        assert_eq!(s.yhot.dims, vec![64, 8]);
+        assert_eq!(s.row_mask.dims, vec![64]);
+        assert_eq!(s.nvalid.data[0], 32.0);
+    }
+
+    #[test]
+    fn padding_rows_are_zero() {
+        let (batch, graph) = sample_batch();
+        let meta = small_meta();
+        let s = stage(&batch, &graph, &meta, false).unwrap();
+        let (n2, n1, b) = s.dims;
+        // Rows past the real frontier must be all-zero.
+        assert!(s.x.data[n2 * meta.d..].iter().all(|&v| v == 0.0));
+        assert!(s.a1.data[n1 * meta.n2..].iter().all(|&v| v == 0.0));
+        assert!(s.row_mask.data[b..].iter().all(|&v| v == 0.0));
+        assert!(s.yhot.data[b * meta.c..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn one_hot_rows_sum_to_one() {
+        let (batch, graph) = sample_batch();
+        let s = stage(&batch, &graph, &small_meta(), false).unwrap();
+        let (_, _, b) = s.dims;
+        for i in 0..b {
+            let sum: f32 = s.yhot.data[i * 8..(i + 1) * 8].iter().sum();
+            assert_eq!(sum, 1.0);
+        }
+    }
+
+    #[test]
+    fn capacity_exceeded_errors() {
+        let (batch, graph) = sample_batch();
+        let mut meta = small_meta();
+        meta.b = 8; // smaller than the 32-node batch
+        let err = stage(&batch, &graph, &meta, false).unwrap_err();
+        assert_eq!(err.dim, "b");
+    }
+
+    #[test]
+    fn mean_norm_rows_sum_to_one() {
+        let (batch, graph) = sample_batch();
+        let meta = small_meta();
+        let s = stage(&batch, &graph, &meta, true).unwrap();
+        let (_, n1, _) = s.dims;
+        for r in 0..n1 {
+            let sum: f32 = s.a1.data[r * meta.n2..(r + 1) * meta.n2].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r} sums to {sum}");
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Weight checkpointing — save/restore the Weight Bank state to a simple
+//! self-describing binary format (no serde available in this build):
+//!
+//! ```text
+//!   magic "GCNW" | version u32 | count u32 |
+//!   per tensor: name_len u32 | name bytes | rows u32 | cols u32 | f32 LE data
+//! ```
+
+use std::io::{Read, Write};
+
+use crate::util::matrix::Matrix;
+
+const MAGIC: &[u8; 4] = b"GCNW";
+const VERSION: u32 = 1;
+
+/// A named set of weight tensors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub tensors: Vec<(String, Matrix)>,
+}
+
+impl Checkpoint {
+    pub fn new(tensors: Vec<(String, Matrix)>) -> Self {
+        Self { tensors }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Matrix> {
+        self.tensors.iter().find(|(n, _)| n == name).map(|(_, m)| m)
+    }
+
+    /// Serialize to the binary format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, m) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(m.rows as u32).to_le_bytes());
+            out.extend_from_slice(&(m.cols as u32).to_le_bytes());
+            for v in &m.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse from the binary format.
+    pub fn from_bytes(mut buf: &[u8]) -> anyhow::Result<Checkpoint> {
+        fn take<'a>(buf: &mut &'a [u8], n: usize) -> anyhow::Result<&'a [u8]> {
+            anyhow::ensure!(buf.len() >= n, "checkpoint truncated");
+            let (head, tail) = buf.split_at(n);
+            *buf = tail;
+            Ok(head)
+        }
+        fn take_u32(buf: &mut &[u8]) -> anyhow::Result<u32> {
+            Ok(u32::from_le_bytes(take(buf, 4)?.try_into().unwrap()))
+        }
+        anyhow::ensure!(take(&mut buf, 4)? == MAGIC, "bad magic");
+        let version = take_u32(&mut buf)?;
+        anyhow::ensure!(version == VERSION, "unsupported version {version}");
+        let count = take_u32(&mut buf)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = take_u32(&mut buf)? as usize;
+            anyhow::ensure!(name_len <= 4096, "name too long");
+            let name = String::from_utf8(take(&mut buf, name_len)?.to_vec())?;
+            let rows = take_u32(&mut buf)? as usize;
+            let cols = take_u32(&mut buf)? as usize;
+            anyhow::ensure!(
+                rows.checked_mul(cols).map(|n| n < (1 << 28)).unwrap_or(false),
+                "tensor too large"
+            );
+            let raw = take(&mut buf, rows * cols * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.push((name, Matrix::from_vec(rows, cols, data)));
+        }
+        anyhow::ensure!(buf.is_empty(), "trailing bytes in checkpoint");
+        Ok(Checkpoint { tensors })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Checkpoint> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn sample() -> Checkpoint {
+        let mut rng = SplitMix64::new(1);
+        Checkpoint::new(vec![
+            ("w1".into(), Matrix::randn(8, 4, 1.0, &mut rng)),
+            ("w2".into(), Matrix::randn(4, 2, 1.0, &mut rng)),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample();
+        let parsed = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(parsed, ck);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let ck = sample();
+        let path = std::env::temp_dir().join("gcn_noc_ck_test.bin");
+        ck.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded, ck);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn get_by_name() {
+        let ck = sample();
+        assert_eq!(ck.get("w1").unwrap().shape(), (8, 4));
+        assert!(ck.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let bytes = sample().to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 2]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bad).is_err());
+        let mut extra = bytes;
+        extra.push(0);
+        assert!(Checkpoint::from_bytes(&extra).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Training metrics: loss curves and step timing.
+
+use std::time::Duration;
+
+/// One recorded training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub step_time: Duration,
+}
+
+/// A loss curve with summary helpers and CSV export.
+#[derive(Clone, Debug, Default)]
+pub struct LossCurve {
+    pub records: Vec<StepRecord>,
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: u64, loss: f32, step_time: Duration) {
+        self.records.push(StepRecord { step, loss, step_time });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Mean loss over the first/last `k` steps (trend check).
+    pub fn head_tail_means(&self, k: usize) -> (f64, f64) {
+        let k = k.min(self.records.len());
+        let head: f64 =
+            self.records[..k].iter().map(|r| r.loss as f64).sum::<f64>() / k.max(1) as f64;
+        let tail: f64 = self.records[self.records.len() - k..]
+            .iter()
+            .map(|r| r.loss as f64)
+            .sum::<f64>()
+            / k.max(1) as f64;
+        (head, tail)
+    }
+
+    /// Mean step wall time (seconds).
+    pub fn mean_step_seconds(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.step_time.as_secs_f64()).sum::<f64>()
+            / self.records.len() as f64
+    }
+
+    /// CSV export: `step,loss,step_seconds`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,step_seconds\n");
+        for r in &self.records {
+            s.push_str(&format!("{},{},{:.6}\n", r.step, r.loss, r.step_time.as_secs_f64()));
+        }
+        s
+    }
+
+    /// Write the CSV next to the experiment outputs.
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> LossCurve {
+        let mut c = LossCurve::default();
+        for i in 0..10u64 {
+            c.push(i, 2.0 - 0.1 * i as f32, Duration::from_millis(5));
+        }
+        c
+    }
+
+    #[test]
+    fn head_tail_shows_decrease() {
+        let (head, tail) = curve().head_tail_means(3);
+        assert!(tail < head);
+    }
+
+    #[test]
+    fn csv_format() {
+        let csv = curve().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,loss,step_seconds");
+        assert_eq!(lines.len(), 11);
+        assert!(lines[1].starts_with("0,2,"));
+    }
+
+    #[test]
+    fn mean_step_time() {
+        assert!((curve().mean_step_seconds() - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let c = LossCurve::default();
+        assert_eq!(c.mean_step_seconds(), 0.0);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,17 @@
+//! The numerical training stack: mini-batch staging, the PJRT-backed
+//! trainer, a pure-Rust reference model, and loss-curve metrics.
+//!
+//! Rust drives everything at run time: sample → pad to artifact shapes →
+//! PJRT train-step → weight bank commit.  Python only existed at
+//! `make artifacts` time.
+
+pub mod batch;
+pub mod checkpoint;
+pub mod metrics;
+pub mod reference;
+pub mod trainer;
+
+pub use batch::StagedBatch;
+pub use checkpoint::Checkpoint;
+pub use metrics::LossCurve;
+pub use trainer::{Trainer, TrainerConfig};

@@ -1,0 +1,182 @@
+//! Pure-Rust reference GCN — an independent oracle for the PJRT path.
+//!
+//! Implements the same two-layer GCN forward + masked softmax-CE loss +
+//! gradients as the compiled artifacts, in plain Rust over [`Matrix`].
+//! Integration tests run both on identical inputs and assert agreement;
+//! a numerics bug in either the HLO artifacts or the staging code cannot
+//! hide behind the other.
+
+use crate::util::matrix::Matrix;
+
+/// Forward activations kept for backward (the SFBP set).
+#[derive(Clone, Debug)]
+pub struct ForwardCache {
+    pub z1: Matrix,
+    pub h1: Matrix,
+    pub z2: Matrix,
+}
+
+/// Two-layer GCN forward: `Z1 = A1(XW1)`, `H1 = relu(Z1)`, `Z2 = A2(H1W2)`.
+pub fn gcn2_forward(x: &Matrix, a1: &Matrix, a2: &Matrix, w1: &Matrix, w2: &Matrix) -> ForwardCache {
+    let z1 = a1.matmul(&x.matmul(w1));
+    let h1 = z1.map(|v| v.max(0.0));
+    let z2 = a2.matmul(&h1.matmul(w2));
+    ForwardCache { z1, h1, z2 }
+}
+
+/// Masked softmax cross-entropy: returns `(loss, dz2)`.
+pub fn softmax_xent(z2: &Matrix, yhot: &Matrix, row_mask: &[f32], nvalid: f32) -> (f32, Matrix) {
+    let (b, c) = z2.shape();
+    let mut dz2 = Matrix::zeros(b, c);
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let row = z2.row(i);
+        let zmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sumexp: f32 = row.iter().map(|&v| (v - zmax).exp()).sum();
+        let logsum = sumexp.ln() + zmax;
+        for j in 0..c {
+            let p = (row[j] - logsum).exp();
+            let y = yhot[(i, j)];
+            if y > 0.0 && row_mask[i] > 0.0 {
+                loss -= ((row[j] - logsum) as f64) * y as f64;
+            }
+            dz2[(i, j)] = (p - y) * row_mask[i] / nvalid;
+        }
+    }
+    ((loss / nvalid as f64) as f32, dz2)
+}
+
+/// Full train step (the paper's transposed backward, reference form):
+/// returns `(w1', w2', loss)`.
+pub fn gcn2_train_step(
+    x: &Matrix,
+    a1: &Matrix,
+    a2: &Matrix,
+    w1: &Matrix,
+    w2: &Matrix,
+    yhot: &Matrix,
+    row_mask: &[f32],
+    nvalid: f32,
+    lr: f32,
+) -> (Matrix, Matrix, f32) {
+    let cache = gcn2_forward(x, a1, a2, w1, w2);
+    let (loss, dz2) = softmax_xent(&cache.z2, yhot, row_mask, nvalid);
+    // Transposed backward: T2 = dZ2ᵀ, S2 = T2·A2, G2ᵀ = S2·H1, dH1ᵀ = W2·S2.
+    let t2 = dz2.transpose();
+    let s2 = t2.matmul(a2);
+    let g2t = s2.matmul(&cache.h1);
+    let dh1t = w2.matmul(&s2);
+    // ReLU mask in transposed orientation.
+    let mut dz1t = dh1t.clone();
+    for r in 0..dz1t.rows {
+        for c in 0..dz1t.cols {
+            if cache.z1[(c, r)] <= 0.0 {
+                dz1t[(r, c)] = 0.0;
+            }
+        }
+    }
+    let s1 = dz1t.matmul(a1);
+    let g1t = s1.matmul(x);
+    let w1n = w1.zip(&g1t.transpose(), |w, g| w - lr * g);
+    let w2n = w2.zip(&g2t.transpose(), |w, g| w - lr * g);
+    (w1n, w2n, loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn setup() -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix, Vec<f32>) {
+        let mut rng = SplitMix64::new(11);
+        let (n2, n1, b, d, h, c) = (32, 16, 8, 12, 6, 4);
+        let x = Matrix::randn(n2, d, 1.0, &mut rng);
+        let mut a1 = Matrix::zeros(n1, n2);
+        let mut a2 = Matrix::zeros(b, n1);
+        for i in 0..n1 {
+            a1[(i, i)] = 0.5;
+            a1[(i, (i + 3) % n2)] = 0.5;
+        }
+        for i in 0..b {
+            a2[(i, i)] = 0.5;
+            a2[(i, (i + 2) % n1)] = 0.5;
+        }
+        let w1 = Matrix::randn(d, h, 0.3, &mut rng);
+        let w2 = Matrix::randn(h, c, 0.3, &mut rng);
+        let mut yhot = Matrix::zeros(b, c);
+        for i in 0..b {
+            yhot[(i, i % c)] = 1.0;
+        }
+        let mask = vec![1.0f32; b];
+        (x, a1, a2, w1, w2, yhot, mask)
+    }
+
+    #[test]
+    fn loss_positive_and_bounded() {
+        let (x, a1, a2, w1, w2, yhot, mask) = setup();
+        let cache = gcn2_forward(&x, &a1, &a2, &w1, &w2);
+        let (loss, dz2) = softmax_xent(&cache.z2, &yhot, &mask, 8.0);
+        assert!(loss > 0.0 && loss < 20.0);
+        // Error rows sum to ~0 (softmax gradient property).
+        for i in 0..dz2.rows {
+            let s: f32 = dz2.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let (x, a1, a2, mut w1, mut w2, yhot, mask) = setup();
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let (nw1, nw2, loss) =
+                gcn2_train_step(&x, &a1, &a2, &w1, &w2, &yhot, &mask, 8.0, 0.5);
+            w1 = nw1;
+            w2 = nw2;
+            losses.push(loss);
+        }
+        assert!(losses.last().unwrap() < &(losses[0] * 0.5), "{losses:?}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (x, a1, a2, w1, w2, yhot, mask) = setup();
+        let loss_fn = |w1_: &Matrix, w2_: &Matrix| -> f32 {
+            let cache = gcn2_forward(&x, &a1, &a2, w1_, w2_);
+            softmax_xent(&cache.z2, &yhot, &mask, 8.0).0
+        };
+        // Analytic step with tiny lr recovers the gradient.
+        let lr = 1.0f32;
+        let (w1n, w2n, _) =
+            gcn2_train_step(&x, &a1, &a2, &w1, &w2, &yhot, &mask, 8.0, lr);
+        let g1 = w1.zip(&w1n, |a, b| (a - b) / lr);
+        let g2 = w2.zip(&w2n, |a, b| (a - b) / lr);
+        let eps = 1e-2f32;
+        // Spot-check a few entries per weight with central differences.
+        for (r, c) in [(0usize, 0usize), (3, 2), (7, 5)] {
+            let mut wp = w1.clone();
+            wp[(r, c)] += eps;
+            let mut wm = w1.clone();
+            wm[(r, c)] -= eps;
+            let fd = (loss_fn(&wp, &w2) - loss_fn(&wm, &w2)) / (2.0 * eps);
+            assert!((fd - g1[(r, c)]).abs() < 2e-2, "w1[{r},{c}]: fd {fd} vs {}", g1[(r, c)]);
+        }
+        for (r, c) in [(0usize, 0usize), (4, 3)] {
+            let mut wp = w2.clone();
+            wp[(r, c)] += eps;
+            let mut wm = w2.clone();
+            wm[(r, c)] -= eps;
+            let fd = (loss_fn(&w1, &wp) - loss_fn(&w1, &wm)) / (2.0 * eps);
+            assert!((fd - g2[(r, c)]).abs() < 2e-2, "w2[{r},{c}]: fd {fd} vs {}", g2[(r, c)]);
+        }
+    }
+
+    #[test]
+    fn masked_rows_do_not_contribute() {
+        let (x, a1, a2, w1, w2, yhot, mut mask) = setup();
+        mask[7] = 0.0;
+        let cache = gcn2_forward(&x, &a1, &a2, &w1, &w2);
+        let (_, dz2) = softmax_xent(&cache.z2, &yhot, &mask, 7.0);
+        assert!(dz2.row(7).iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, statistics, a tiny property-test
+//! runner, and a dense host-side matrix type.
+
+pub mod matrix;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use matrix::Matrix;
+pub use rng::SplitMix64;
+pub use stats::Summary;

@@ -1,0 +1,88 @@
+//! Minimal property-based testing harness (no external crates available in
+//! this build environment, so we roll a seeded runner ourselves).
+//!
+//! A property is a closure over a [`SplitMix64`]; the runner executes it for
+//! `cases` independent seeds and reports the failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: the doctest harness lacks the PJRT rpath this crate links)
+//! use gcn_noc::util::proptest::PropRunner;
+//! PropRunner::new(0xC0FFEE, 64).run("addition commutes", |rng| {
+//!     let a = rng.gen_range(1000) as i64;
+//!     let b = rng.gen_range(1000) as i64;
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::SplitMix64;
+
+/// Seeded multi-case property runner.
+pub struct PropRunner {
+    seed: u64,
+    cases: usize,
+}
+
+impl PropRunner {
+    pub fn new(seed: u64, cases: usize) -> Self {
+        Self { seed, cases }
+    }
+
+    /// Run `prop` for every case; panic with seed + detail on first failure.
+    pub fn run<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut SplitMix64) -> Result<(), String>,
+    {
+        let mut master = SplitMix64::new(self.seed);
+        for case in 0..self.cases {
+            let case_seed = master.next_u64();
+            let mut rng = SplitMix64::new(case_seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property '{name}' failed at case {case}/{} \
+                     (replay seed {case_seed:#x}): {msg}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        PropRunner::new(1, 10).run("count", |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        PropRunner::new(2, 5).run("fails", |rng| {
+            if rng.gen_range(2) == 0 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_get_distinct_seeds() {
+        let mut firsts = Vec::new();
+        PropRunner::new(3, 8).run("distinct", |rng| {
+            firsts.push(rng.next_u64());
+            Ok(())
+        });
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 8);
+    }
+}

@@ -1,0 +1,183 @@
+//! Deterministic pseudo-random numbers (SplitMix64).
+//!
+//! Every stochastic component in the simulator — the routing table filler's
+//! random path selection (Algorithm 1 line 8), the Fuse-k random start
+//! vectors (§5.2), graph generation, neighbor sampling — draws from this
+//! seeded generator so that experiments and property tests replay exactly.
+
+/// SplitMix64: tiny, fast, and statistically solid for simulation use.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. Uses Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn unit_f32(&mut self) -> f32 {
+        self.unit_f64() as f32
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn normal_f32(&mut self) -> f32 {
+        let u1 = self.unit_f64().max(1e-300);
+        let u2 = self.unit_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Pick one element uniformly (panics on empty).
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len())]
+    }
+
+    /// Geometric-ish power-law sample: degree `d >= 1` with
+    /// `P(d) ∝ d^{-alpha}` truncated at `max`, via inverse-CDF on the
+    /// continuous Pareto and rounding.
+    pub fn power_law(&mut self, alpha: f64, max: usize) -> usize {
+        let u = self.unit_f64();
+        let x = (1.0 - u).powf(-1.0 / (alpha - 1.0));
+        (x.round() as usize).clamp(1, max)
+    }
+
+    /// Independent child generator (for parallel streams).
+    pub fn fork(&mut self) -> SplitMix64 {
+        SplitMix64::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = SplitMix64::new(7);
+        for n in [1usize, 2, 3, 16, 1000] {
+            for _ in 0..200 {
+                assert!(r.gen_range(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn gen_range_covers_all_values() {
+        let mut r = SplitMix64::new(1);
+        let mut seen = [false; 16];
+        for _ in 0..1000 {
+            seen[r.gen_range(16)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = SplitMix64::new(3);
+        let p = r.permutation(16);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn unit_f64_in_range() {
+        let mut r = SplitMix64::new(11);
+        for _ in 0..1000 {
+            let x = r.unit_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_roughly_standard() {
+        let mut r = SplitMix64::new(5);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal_f32() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn power_law_bounds_and_skew() {
+        let mut r = SplitMix64::new(9);
+        let samples: Vec<usize> = (0..10_000).map(|_| r.power_law(2.2, 1000)).collect();
+        assert!(samples.iter().all(|&d| (1..=1000).contains(&d)));
+        let ones = samples.iter().filter(|&&d| d == 1).count();
+        // Heavy head: degree-1 dominates for alpha > 2.
+        assert!(ones > samples.len() / 3, "ones={ones}");
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = SplitMix64::new(1);
+        let mut c1 = r.fork();
+        let mut c2 = r.fork();
+        assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+}

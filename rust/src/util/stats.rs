@@ -1,0 +1,106 @@
+//! Small statistics helpers used by the benches and simulators.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of<I: IntoIterator<Item = f64>>(xs: I) -> Summary {
+        let v: Vec<f64> = xs.into_iter().collect();
+        if v.is_empty() {
+            return Summary { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+        }
+        let n = v.len();
+        let mean = v.iter().sum::<f64>() / n as f64;
+        let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let min = v.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Summary { n, mean, std: var.sqrt(), min, max }
+    }
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Fixed-width bin histogram over `[lo, hi)`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins] }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let f = (x - self.lo) / (self.hi - self.lo);
+        let idx = ((f * self.bins.len() as f64) as isize)
+            .clamp(0, self.bins.len() as isize - 1) as usize;
+        self.bins[idx] += 1;
+    }
+
+    pub fn total(&self) -> usize {
+        self.bins.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty() {
+        let s = Summary::of(std::iter::empty());
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert_eq!(h.total(), 10);
+        assert!(h.bins.iter().all(|&b| b == 1));
+        h.add(-5.0); // clamps to first bin
+        h.add(50.0); // clamps to last bin
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+    }
+}

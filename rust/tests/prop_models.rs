@@ -1,0 +1,156 @@
+//! Property tests over the analytic models: the sequence estimator's
+//! dominance claims (Eqs. 5–8) for *arbitrary* shapes, HBM model
+//! monotonicity, power-model sanity, and buffer-budget invariants.
+
+use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
+use gcn_noc::graph::datasets::PAPER_DATASETS;
+use gcn_noc::hbm::contention::bandwidth_drop;
+use gcn_noc::hbm::numa::{MemoryMap, TrainingFootprintConfig};
+use gcn_noc::hbm::simulator::HbmSimulator;
+use gcn_noc::perf::power::PowerModel;
+use gcn_noc::util::proptest::PropRunner;
+use gcn_noc::util::rng::SplitMix64;
+
+fn random_shape(rng: &mut SplitMix64) -> ShapeParams {
+    let b = 64 + rng.gen_range(2048) as u64;
+    let n = b + rng.gen_range(50_000) as u64;
+    let nbar = n + rng.gen_range(200_000) as u64;
+    ShapeParams {
+        b,
+        n,
+        nbar,
+        d: 8 + rng.gen_range(1000) as u64,
+        h: 8 + rng.gen_range(512) as u64,
+        c: 2 + rng.gen_range(128) as u64,
+        e: n * (1 + rng.gen_range(64) as u64),
+    }
+}
+
+#[test]
+fn prop_eq5_eq6_ours_always_cheaper_in_time() {
+    PropRunner::new(0xE57_0001, 300).run("eqs 5-6", |rng| {
+        let est = SequenceEstimator::new(random_shape(rng));
+        if est.time(Ordering::OursCoAg).total() > est.time(Ordering::CoAg).total() {
+            return Err("Ours-CoAg costlier than CoAg".into());
+        }
+        if est.time(Ordering::OursAgCo).total() > est.time(Ordering::AgCo).total() {
+            return Err("Ours-AgCo costlier than AgCo".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_eq7_eq8_storage_gap_exact() {
+    PropRunner::new(0xE57_0002, 300).run("eqs 7-8", |rng| {
+        let sp = random_shape(rng);
+        let est = SequenceEstimator::new(sp);
+        let gap_coag = est.storage(Ordering::CoAg) - est.storage(Ordering::OursCoAg);
+        if gap_coag != sp.e + sp.nbar * sp.d {
+            return Err(format!("CoAg gap {gap_coag} != e + n̄d"));
+        }
+        let gap_agco = est.storage(Ordering::AgCo) - est.storage(Ordering::OursAgCo);
+        if gap_agco != sp.e + sp.n * sp.d {
+            return Err(format!("AgCo gap {gap_agco} != e + nd"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_best_ordering_is_always_ours() {
+    PropRunner::new(0xE57_0003, 300).run("best is ours", |rng| {
+        let est = SequenceEstimator::new(random_shape(rng));
+        if !est.best().is_ours() {
+            return Err(format!("{:?}", est.best()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_contention_monotone_in_requesters() {
+    PropRunner::new(0xE57_0004, 200).run("contention monotone", |rng| {
+        let burst = 8 + rng.gen_range(248);
+        let dist = 1 + rng.gen_range(12);
+        let mut prev = 0.0;
+        for n in 0..8 {
+            let dists = vec![dist; n];
+            let drop = bandwidth_drop(&dists, burst);
+            if drop + 1e-12 < prev {
+                return Err(format!("drop decreased at n={n}"));
+            }
+            prev = drop;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hbm_serve_makespan_bounded_below_by_best_case() {
+    PropRunner::new(0xE57_0005, 100).run("hbm makespan", |rng| {
+        use gcn_noc::hbm::simulator::Request;
+        let sim = HbmSimulator::default();
+        let n = 1 + rng.gen_range(8);
+        let reqs: Vec<Request> = (0..n)
+            .map(|_| Request {
+                port: rng.gen_range(32),
+                channel: rng.gen_range(32),
+                burst_len: 16 << rng.gen_range(4),
+                bytes: 1 << (16 + rng.gen_range(8)),
+            })
+            .collect();
+        let t = sim.serve(&reqs);
+        // Lower bound: the largest single request served at full local BW.
+        let best = reqs
+            .iter()
+            .map(|r| sim.channels[0].service_time(r.bytes, 256))
+            .fold(0.0, f64::max);
+        if t + 1e-12 < best {
+            return Err(format!("makespan {t} below physical bound {best}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_power_monotone_in_activity() {
+    PropRunner::new(0xE57_0006, 100).run("power monotone", |rng| {
+        let m = PowerModel::default();
+        let u1 = rng.unit_f64();
+        let u2 = rng.unit_f64();
+        let (lo, hi) = if u1 < u2 { (u1, u2) } else { (u2, u1) };
+        let d = rng.unit_f64();
+        if m.board_power(lo, d) > m.board_power(hi, d) + 1e-9 {
+            return Err("power not monotone in core util".into());
+        }
+        if m.board_power(d, lo) > m.board_power(d, hi) + 1e-9 {
+            return Err("power not monotone in hbm duty".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_footprint_monotone_in_batch_and_optimized_smaller() {
+    PropRunner::new(0xE57_0007, 60).run("footprint", |rng| {
+        let spec = &PAPER_DATASETS[rng.gen_range(PAPER_DATASETS.len())];
+        let b1 = 128 + rng.gen_range(1024);
+        let b2 = b1 + 1 + rng.gen_range(1024);
+        let cfg = |b, t| TrainingFootprintConfig {
+            batch_size: b,
+            store_transposes: t,
+            ..Default::default()
+        };
+        let small = MemoryMap::for_training(spec, &cfg(b1, false)).total_bytes();
+        let big = MemoryMap::for_training(spec, &cfg(b2, false)).total_bytes();
+        if big < small {
+            return Err("footprint not monotone in batch size".into());
+        }
+        let baseline = MemoryMap::for_training(spec, &cfg(b1, true)).total_bytes();
+        if baseline <= small {
+            return Err("baseline dataflow should store more".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,179 @@
+//! Property-based tests for Algorithm 1 — the paper's correctness claims:
+//! deadlock-free, constraint-respecting, shortest-path multicast for any
+//! wave the start-point generator can emit.
+
+use gcn_noc::noc::routing::{
+    route_parallel_multicast, MulticastRequest, RouteEntry, MAX_RECV_PER_CYCLE,
+};
+use gcn_noc::noc::simulator::{replay, LANES};
+use gcn_noc::noc::topology::{Hypercube, NUM_CORES};
+use gcn_noc::util::proptest::PropRunner;
+use gcn_noc::util::rng::SplitMix64;
+
+/// A random wave under the generator's invariant (≤4 messages per source).
+fn gen_wave(rng: &mut SplitMix64) -> MulticastRequest {
+    let groups = 1 + rng.gen_range(4);
+    let mut sources = Vec::new();
+    for _ in 0..groups {
+        sources.extend(rng.permutation(NUM_CORES).iter().map(|&x| x as u8));
+    }
+    let dests: Vec<u8> = (0..sources.len()).map(|_| rng.gen_range(NUM_CORES) as u8).collect();
+    MulticastRequest::new(sources, dests)
+}
+
+/// Full structural verification of one routed wave.
+fn verify(req: &MulticastRequest, table: &gcn_noc::noc::routing::RoutingTable) -> Result<(), String> {
+    let mut pos = req.sources.clone();
+    for (t, cycle) in table.cycles.iter().enumerate() {
+        let mut recv = [0usize; NUM_CORES];
+        let mut links = std::collections::HashSet::new();
+        for (i, e) in cycle.iter().enumerate() {
+            if let RouteEntry::Hop(next) = e {
+                if Hypercube::link_dim(pos[i], *next).is_none() {
+                    return Err(format!("cycle {t}: msg {i} hop {} -> {next} not a link", pos[i]));
+                }
+                if Hypercube::distance(*next, req.dests[i])
+                    >= Hypercube::distance(pos[i], req.dests[i])
+                {
+                    return Err(format!("cycle {t}: msg {i} did not reduce distance"));
+                }
+                if !links.insert((pos[i], *next)) {
+                    return Err(format!("cycle {t}: duplicate link {} -> {next}", pos[i]));
+                }
+                recv[*next as usize] += 1;
+                pos[i] = *next;
+            }
+        }
+        if recv.iter().any(|&r| r > MAX_RECV_PER_CYCLE) {
+            return Err(format!("cycle {t}: constraint 1 violated"));
+        }
+    }
+    if pos != req.dests {
+        return Err("not all messages delivered".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_every_wave_delivers_under_constraints() {
+    PropRunner::new(0xA150_0001, 400).run("wave delivery", |rng| {
+        let req = gen_wave(rng);
+        let out = route_parallel_multicast(&req, rng).map_err(|e| e.to_string())?;
+        verify(&req, &out.table)
+    });
+}
+
+#[test]
+fn prop_cycles_bounded_by_diameter_plus_congestion() {
+    PropRunner::new(0xA150_0002, 400).run("cycle bound", |rng| {
+        let req = gen_wave(rng);
+        let out = route_parallel_multicast(&req, rng).map_err(|e| e.to_string())?;
+        let max_dist = req
+            .sources
+            .iter()
+            .zip(&req.dests)
+            .map(|(&s, &d)| Hypercube::distance(s, d))
+            .max()
+            .unwrap_or(0);
+        let cycles = out.table.total_cycles();
+        if cycles < max_dist {
+            return Err(format!("cycles {cycles} below Hamming bound {max_dist}"));
+        }
+        // Empirical ceiling: never observed above 12 for 64-message waves;
+        // the hard safety bound is 64.
+        if cycles > 16 {
+            return Err(format!("cycles {cycles} suspiciously high"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arrival_cycles_consistent_with_table() {
+    PropRunner::new(0xA150_0003, 200).run("arrival cycles", |rng| {
+        let req = gen_wave(rng);
+        let out = route_parallel_multicast(&req, rng).map_err(|e| e.to_string())?;
+        for (i, &arr) in out.table.arrival_cycle.iter().enumerate() {
+            let dist = Hypercube::distance(req.sources[i], req.dests[i]);
+            if dist == 0 && arr != 0 {
+                return Err(format!("msg {i}: at home but arrival {arr}"));
+            }
+            if dist > 0 && (arr as u32) < dist {
+                return Err(format!("msg {i}: arrival {arr} < distance {dist}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_replay_reduces_all_payloads() {
+    PropRunner::new(0xA150_0004, 100).run("replay reduction", |rng| {
+        let req = gen_wave(rng);
+        let out = route_parallel_multicast(&req, rng).map_err(|e| e.to_string())?;
+        let payloads: Vec<[f32; LANES]> = (0..req.len()).map(|i| [(i + 1) as f32; LANES]).collect();
+        let agg: Vec<u8> = (0..req.len()).map(|_| rng.gen_range(64) as u8).collect();
+        let res = replay(&req, &out.table, &payloads, &agg).map_err(|e| e.to_string())?;
+        // Conservation: total reduced mass equals total sent mass.
+        let sent: f64 = payloads.iter().map(|p| p[0] as f64).sum();
+        let reduced: f64 = res
+            .agg_buffers
+            .iter()
+            .flat_map(|core| core.iter())
+            .map(|slot| slot[0] as f64)
+            .sum();
+        if (sent - reduced).abs() > 1e-6 {
+            return Err(format!("mass not conserved: sent {sent} reduced {reduced}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hot_spot_waves_still_route() {
+    // Adversarial: all messages to a tiny destination set.
+    PropRunner::new(0xA150_0005, 200).run("hot spot", |rng| {
+        let hot = rng.gen_range(NUM_CORES) as u8;
+        let hot2 = rng.gen_range(NUM_CORES) as u8;
+        let mut sources = Vec::new();
+        for _ in 0..4 {
+            sources.extend(rng.permutation(NUM_CORES).iter().map(|&x| x as u8));
+        }
+        let dests: Vec<u8> = (0..64).map(|i| if i % 2 == 0 { hot } else { hot2 }).collect();
+        let req = MulticastRequest::new(sources, dests);
+        let out = route_parallel_multicast(&req, rng).map_err(|e| e.to_string())?;
+        verify(&req, &out.table)?;
+        // 64 messages to ≤2 targets at ≤4 receives/cycle: ≥ 8 cycles
+        // unless many messages start at home.
+        let remote = req
+            .sources
+            .iter()
+            .zip(&req.dests)
+            .filter(|(s, d)| s != d)
+            .count();
+        let min_cycles = remote.div_ceil(2 * MAX_RECV_PER_CYCLE) as u32;
+        if out.table.total_cycles() < min_cycles {
+            return Err(format!(
+                "hot-spot wave finished in {} cycles < receive-limit bound {min_cycles}",
+                out.table.total_cycles()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic_given_seed() {
+    PropRunner::new(0xA150_0006, 50).run("determinism", |rng| {
+        let seed = rng.next_u64();
+        let req = gen_wave(&mut SplitMix64::new(seed));
+        let out1 = route_parallel_multicast(&req, &mut SplitMix64::new(seed ^ 1))
+            .map_err(|e| e.to_string())?;
+        let out2 = route_parallel_multicast(&req, &mut SplitMix64::new(seed ^ 1))
+            .map_err(|e| e.to_string())?;
+        if out1.table.cycles != out2.table.cycles {
+            return Err("same seed produced different tables".into());
+        }
+        Ok(())
+    });
+}
