@@ -1,0 +1,55 @@
+//! **Pass-pipeline micro-bench** — the tentpole speedup check.
+//!
+//! Runs the epoch model on the Flickr quick config with a wide routed-pass
+//! sample, sweeping the routing worker count, and verifies that every
+//! thread count produces a byte-identical `EpochReport` (the pipeline's
+//! determinism contract).  On a ≥8-core host the 1→8-thread speedup should
+//! be ≥3× (the O(nnz) bucketing already removed the per-pass re-scan; what
+//! remains is routing, which parallelizes across independent passes).
+
+mod common;
+
+use common::{banner, fmt_time, time_it};
+use gcn_noc::config::quick_epoch_config;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
+use gcn_noc::graph::datasets::by_name;
+use gcn_noc::util::rng::SplitMix64;
+
+fn main() {
+    banner("parallel pass pipeline: Flickr quick config, sample_passes=64");
+    let spec = by_name("Flickr").unwrap();
+    let mut cfg = quick_epoch_config();
+    cfg.measured_batches = 1;
+    cfg.sample_passes = 64;
+
+    let sweep = [1usize, 2, 4, 8];
+    let mut times = Vec::with_capacity(sweep.len());
+    let mut reports = Vec::with_capacity(sweep.len());
+    for &threads in &sweep {
+        cfg.threads = threads;
+        let model = EpochModel::new(spec, ModelKind::Gcn, cfg);
+        let mut report = None;
+        let t = time_it(1, 3, || {
+            report = Some(model.run(&mut SplitMix64::new(7)));
+        });
+        println!("threads={threads}: {} per epoch-model run", fmt_time(t));
+        times.push(t);
+        reports.push(report.expect("timed at least once"));
+    }
+
+    for (i, rep) in reports.iter().enumerate().skip(1) {
+        assert!(
+            rep == &reports[0],
+            "report at {} threads diverged from the single-thread run",
+            sweep[i]
+        );
+    }
+    println!("determinism: all {} reports byte-identical across thread counts", sweep.len());
+
+    let speedup = times[0] / times[times.len() - 1];
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "speedup 1 -> {} threads: {speedup:.2}x on a {cores}-core host (target >= 3x at 8 cores)",
+        sweep[sweep.len() - 1]
+    );
+}

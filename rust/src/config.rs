@@ -26,6 +26,9 @@ pub fn artifact_dir(flag: Option<&str>) -> std::path::PathBuf {
 }
 
 /// Fast epoch-model configuration for interactive runs.
+///
+/// `threads: 0` routes sampled passes on every available CPU; reports are
+/// byte-identical at any thread count, so this only changes wall time.
 pub fn quick_epoch_config() -> TrainConfig {
     TrainConfig {
         batch_size: 1024,
@@ -33,10 +36,13 @@ pub fn quick_epoch_config() -> TrainConfig {
         hidden_dim: 256,
         measured_batches: 2,
         replica_nodes: 8_192,
+        sample_passes: 4,
+        threads: 0,
     }
 }
 
-/// Thorough configuration for bench runs.
+/// Thorough configuration for bench runs: a wider routed-pass sample for
+/// tighter NoC extrapolation, parallelized across all CPUs.
 pub fn bench_epoch_config() -> TrainConfig {
     TrainConfig {
         batch_size: 1024,
@@ -44,6 +50,8 @@ pub fn bench_epoch_config() -> TrainConfig {
         hidden_dim: 256,
         measured_batches: 3,
         replica_nodes: 16_384,
+        sample_passes: 8,
+        threads: 0,
     }
 }
 

@@ -8,6 +8,31 @@
 //! model and HBM reads on the channel model, applies Eq. 9/10, and
 //! extrapolates to the full epoch (`nodes / batch_size` batches).
 //!
+//! # The parallel pass pipeline
+//!
+//! The hot path is organised as a pipeline over *pass blocks*:
+//!
+//! 1. **Bucket + sample** — [`sample_nonempty`] locates the first
+//!    [`TrainConfig::sample_passes`] non-empty 1024×1024 blocks in
+//!    row-major pass order and materializes *only those* in two O(nnz)
+//!    scans (the naive version re-scanned the whole COO once per pass:
+//!    O(passes × nnz); the general full-grid API is
+//!    [`crate::graph::blocks::BlockGrid`]);
+//! 2. **Route** — sampled passes are independent, so they are routed
+//!    concurrently on [`TrainConfig::threads`] workers via
+//!    `std::thread::scope` pulling from a shared work queue.  Each pass
+//!    owns a [`SplitMix64`] forked from the caller's stream *in pass
+//!    order before any worker starts*, and results are committed back by
+//!    pass index, so an [`EpochReport`] is **byte-identical for a fixed
+//!    seed at any thread count**;
+//! 3. **Extrapolate** — sampled NoC cycles scale to the layer by edge
+//!    count, then Eq. 9/10 produce per-core phase times.
+//!
+//! The synthetic replica and its [`NeighborSampler`] are built once per
+//! [`EpochModel::run`] and shared by every measured batch (the previous
+//! implementation re-instantiated them per batch, plus a third time for
+//! the ordering report).
+//!
 //! The backward pass reuses the forward phase structure with the
 //! sequence-estimator's per-ordering cost ratios (the "Ours" transposed
 //! dataflow repeats the aggregation message pattern once and skips the
@@ -17,8 +42,11 @@ use crate::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeP
 use crate::core_model::timing::{
     multicore_layer_time, multicore_utilization, CoreTiming, LayerPhaseTimes,
 };
-use crate::core_model::{NUM_CORES};
+use crate::core_model::NUM_CORES;
+use crate::graph::blocks::sample_nonempty;
+use crate::graph::coo::Coo;
 use crate::graph::datasets::DatasetSpec;
+use crate::graph::generate::LabeledGraph;
 use crate::graph::partition::partition;
 use crate::graph::sampler::{NeighborSampler, SampledBatch};
 use crate::hbm::simulator::HbmSimulator;
@@ -61,6 +89,12 @@ pub struct TrainConfig {
     pub measured_batches: usize,
     /// Synthetic replica size used for structural sampling.
     pub replica_nodes: usize,
+    /// 1024×1024 passes routed through the real Router-St per layer; the
+    /// rest of the layer is extrapolated by edge count.
+    pub sample_passes: usize,
+    /// Worker threads for routing sampled passes (0 = one per available
+    /// CPU).  Reports are byte-identical at any thread count.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -71,6 +105,8 @@ impl Default for TrainConfig {
             hidden_dim: 256,
             measured_batches: 3,
             replica_nodes: 16_384,
+            sample_passes: 4,
+            threads: 1,
         }
     }
 }
@@ -97,10 +133,13 @@ pub struct BatchSim {
     pub accel_time: f64,
     /// Host sampling + PCIe transfer time (overlappable).
     pub host_time: f64,
+    /// Execution ordering the controller keys on for this batch (chosen by
+    /// the sequence estimator for the outermost layer's shape).
+    pub ordering: Ordering,
 }
 
 /// Epoch-level results.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EpochReport {
     pub dataset: &'static str,
     pub model: ModelKind,
@@ -110,11 +149,101 @@ pub struct EpochReport {
     pub avg_core_utilization: f64,
     /// Mean per-core message-passing : compute ratio (Fig. 10 average).
     pub avg_ctc_ratio: f64,
-    /// Per-core CTC ratios of the last measured batch (Fig. 10 scatter).
+    /// Mean CTC ratio per core across *all* measured layers and batches
+    /// (Fig. 10 scatter).
     pub per_core_ctc: Vec<f64>,
-    /// Link-utilization trace across aggregation progress (Fig. 11(c)).
+    /// Link utilization across aggregation progress (Fig. 11(c)): every
+    /// measured layer's trace is resampled to [`TRACE_POINTS`] progress
+    /// fractions and averaged position-wise, so the axis stays
+    /// "progress through one aggregation" no matter how many layers and
+    /// batches were measured.
     pub link_utilization_trace: Vec<f64>,
     pub batches: u64,
+}
+
+/// Progress resolution of [`EpochReport::link_utilization_trace`]
+/// (downsampled further to 10 points by the Fig. 11(c) bench).
+pub const TRACE_POINTS: usize = 32;
+
+/// Resample a per-stage trace onto `TRACE_POINTS` progress fractions
+/// (bucket means via [`crate::util::stats::resample`], the same scheme
+/// `perf::utilization::trace_to_fig11c` uses for its 10-point figure).
+fn resample_trace(trace: &[f64]) -> Vec<f64> {
+    crate::util::stats::resample(trace, TRACE_POINTS)
+}
+
+/// Routing outcome of one sampled pass.
+struct PassResult {
+    cycles: u64,
+    edges: usize,
+    link_utilization: Vec<f64>,
+}
+
+/// Route one pass block: partition into the diagonal-group schedule and
+/// drive Router-St stage by stage.
+fn route_pass(block: &Coo, rng: &mut SplitMix64) -> PassResult {
+    let part = partition(block);
+    let mut cycles = 0u64;
+    let mut link_utilization = Vec::new();
+    for s in 0..part.stages.len() {
+        let groups = part.stage_groups(s);
+        if groups.iter().all(|g| g.is_empty()) {
+            continue;
+        }
+        let mut router = RouterSt::new(groups);
+        let stats = router.run(rng).expect("routing never exceeds bound");
+        cycles += stats.total_cycles;
+        link_utilization.push(stats.link_utilization());
+    }
+    PassResult { cycles, edges: block.nnz(), link_utilization }
+}
+
+/// Route sampled passes on up to `threads` workers pulling from a shared
+/// work queue (pass costs are skewed — power-law blocks route for very
+/// different wave counts — so static chunking would bound wall time by
+/// the heaviest chunk).  Pass `i` always uses `rngs[i]` and results are
+/// re-assembled by pass index, so the output is independent of both the
+/// thread count and worker scheduling.
+fn route_passes(blocks: &[&Coo], rngs: Vec<SplitMix64>, threads: usize) -> Vec<PassResult> {
+    assert_eq!(blocks.len(), rngs.len());
+    if threads <= 1 || blocks.len() <= 1 {
+        let mut rngs = rngs;
+        return blocks
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(block, rng)| route_pass(block, rng))
+            .collect();
+    }
+    use std::sync::Mutex;
+    // Pending (pass index, block, rng) tasks; workers pop until drained.
+    // Stored reversed so pop() dispatches passes in row-major order — the
+    // first block is usually the densest (hub rows), and starting it last
+    // would stretch the parallel tail.
+    let tasks: Mutex<Vec<(usize, &Coo, SplitMix64)>> = Mutex::new(
+        blocks
+            .iter()
+            .copied()
+            .zip(rngs)
+            .enumerate()
+            .map(|(i, (block, rng))| (i, block, rng))
+            .rev()
+            .collect(),
+    );
+    let done: Mutex<Vec<(usize, PassResult)>> = Mutex::new(Vec::with_capacity(blocks.len()));
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(blocks.len()) {
+            scope.spawn(|| loop {
+                let Some((i, block, mut rng)) = tasks.lock().unwrap().pop() else {
+                    break;
+                };
+                let result = route_pass(block, &mut rng);
+                done.lock().unwrap().push((i, result));
+            });
+        }
+    });
+    let mut done = done.into_inner().unwrap();
+    done.sort_by_key(|&(i, _)| i);
+    done.into_iter().map(|(_, r)| r).collect()
 }
 
 /// The epoch model.
@@ -129,6 +258,15 @@ pub struct EpochModel {
 impl EpochModel {
     pub fn new(spec: &'static DatasetSpec, model: ModelKind, cfg: TrainConfig) -> Self {
         Self { spec, cfg, model, timing: CoreTiming::default(), hbm: HbmSimulator::default() }
+    }
+
+    /// Resolved worker count (0 = one per available CPU).
+    fn effective_threads(&self) -> usize {
+        if self.cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.cfg.threads
+        }
     }
 
     /// Table-1 shape parameters for layer `l` (0 = outermost) of a batch.
@@ -152,62 +290,28 @@ impl EpochModel {
     }
 
     /// Simulate one layer's forward phases across the 16 cores.
-    fn simulate_layer(
-        &self,
-        batch: &SampledBatch,
-        l: usize,
-        rng: &mut SplitMix64,
-    ) -> LayerSim {
+    fn simulate_layer(&self, batch: &SampledBatch, l: usize, rng: &mut SplitMix64) -> LayerSim {
         let layer = &batch.layers[l];
         let sp = self.shape_params(batch, l);
-        let (n_dst, n_src) = (layer.dst.len(), layer.src.len());
+        let n_src = layer.src.len();
 
-        // --- Message passing: partition 1024×1024 passes and route a
-        // sample through the real Router-St, extrapolating by edge count.
+        // --- Message passing: locate and materialize the sampled
+        // 1024×1024 pass blocks in two O(nnz) scans (unsampled blocks are
+        // never copied), route them through the real Router-St
+        // (concurrently — they are independent), and extrapolate to the
+        // layer by edge count.
         let sub = 1024usize;
-        let passes_r = n_dst.div_ceil(sub);
-        let passes_c = n_src.div_ceil(sub);
-        let total_passes = passes_r * passes_c;
-        let sample_passes = total_passes.min(4);
-        let mut sampled_cycles = 0u64;
-        let mut sampled_edges = 0usize;
-        let mut link_util = Vec::new();
-        let mut taken = 0;
-        'outer: for pr in 0..passes_r {
-            for pc in 0..passes_c {
-                if taken >= sample_passes {
-                    break 'outer;
-                }
-                // Slice the block's edges into a local COO.
-                let (r0, c0) = (pr * sub, pc * sub);
-                let mut local = crate::graph::coo::Coo::new(
-                    sub.min(n_dst - r0),
-                    sub.min(n_src - c0),
-                );
-                for (r, c, v) in layer.adj.iter() {
-                    let (r, c) = (r as usize, c as usize);
-                    if (r0..r0 + sub).contains(&r) && (c0..c0 + sub).contains(&c) {
-                        local.push((r - r0) as u32, (c - c0) as u32, v);
-                    }
-                }
-                if local.nnz() == 0 {
-                    continue;
-                }
-                let part = partition(&local);
-                for s in 0..part.stages.len() {
-                    let groups = part.stage_groups(s);
-                    if groups.iter().all(|g| g.is_empty()) {
-                        continue;
-                    }
-                    let mut router = RouterSt::new(groups);
-                    let stats = router.run(rng).expect("routing never exceeds bound");
-                    sampled_cycles += stats.total_cycles;
-                    link_util.push(stats.link_utilization());
-                }
-                sampled_edges += local.nnz();
-                taken += 1;
-            }
-        }
+        let sampled = sample_nonempty(&layer.adj, sub, self.cfg.sample_passes.max(1));
+        let sampled_refs: Vec<&Coo> = sampled.iter().collect();
+        // One forked RNG per pass, drawn in pass order up front: routing
+        // results are then independent of worker scheduling.
+        let rngs: Vec<SplitMix64> = sampled_refs.iter().map(|_| rng.fork()).collect();
+        let results = route_passes(&sampled_refs, rngs, self.effective_threads());
+
+        let sampled_cycles: u64 = results.iter().map(|r| r.cycles).sum();
+        let sampled_edges: usize = results.iter().map(|r| r.edges).sum();
+        let link_util: Vec<f64> =
+            results.into_iter().flat_map(|r| r.link_utilization).collect();
         let total_edges = layer.adj.nnz();
         let noc_cycles = if sampled_edges == 0 {
             0
@@ -250,10 +354,15 @@ impl EpochModel {
         LayerSim { cores, noc_cycles, link_utilization: link_util, edges: total_edges }
     }
 
-    /// Simulate one batch end to end (forward + transposed backward).
-    pub fn simulate_batch(&self, rng: &mut SplitMix64) -> BatchSim {
-        let replica = self.spec.instantiate(self.cfg.replica_nodes, &mut rng.fork());
-        let sampler = NeighborSampler::new(&replica.adj, self.cfg.fanouts.to_vec());
+    /// Simulate one batch end to end (forward + transposed backward) on an
+    /// already-instantiated replica — the hot path [`EpochModel::run`]
+    /// drives with replica and sampler hoisted out of the batch loop.
+    pub fn simulate_batch_on(
+        &self,
+        replica: &LabeledGraph,
+        sampler: &NeighborSampler<'_>,
+        rng: &mut SplitMix64,
+    ) -> BatchSim {
         let ids: Vec<u32> = (0..self.cfg.batch_size)
             .map(|_| rng.gen_range(replica.num_nodes()) as u32)
             .collect();
@@ -262,10 +371,16 @@ impl EpochModel {
         let mut layers = Vec::new();
         let mut fwd_time = 0.0;
         let mut bwd_time = 0.0;
+        let mut ordering = Ordering::OursCoAg;
         for l in 0..batch.layers.len() {
             let sim = self.simulate_layer(&batch, l, rng);
             let est = SequenceEstimator::new(self.shape_params(&batch, l));
             let ord = est.best_ours();
+            if l == 0 {
+                // The controller keys its programming on the outermost
+                // (layer-1) shape.
+                ordering = ord;
+            }
             let t = est.time(ord);
             // Backward+gradient cost relative to forward, from Table 1's
             // complexity rows — the backward repeats the aggregation
@@ -290,51 +405,90 @@ impl EpochModel {
             layers,
             accel_time: fwd_time + bwd_time,
             host_time: sampling + pcie,
+            ordering,
         }
     }
 
-    /// Full epoch report (simulate `measured_batches`, extrapolate).
-    pub fn run(&self, rng: &mut SplitMix64) -> EpochReport {
+    /// Convenience wrapper: instantiate a fresh replica for a single batch
+    /// (tests and one-off probes; `run` amortizes the replica instead).
+    pub fn simulate_batch(&self, rng: &mut SplitMix64) -> BatchSim {
+        let replica = self.spec.instantiate(self.cfg.replica_nodes, &mut rng.fork());
+        let sampler = NeighborSampler::new(&replica.adj, self.cfg.fanouts.to_vec());
+        self.simulate_batch_on(&replica, &sampler, rng)
+    }
+
+    /// Aggregate measured batches into an [`EpochReport`].
+    ///
+    /// Aggregation rules (each field covers *every* measured layer, not
+    /// just the last one):
+    /// - `seconds_per_epoch` — mean pipelined batch time × batches/epoch;
+    /// - `per_core_ctc[i]` — mean CTC ratio of core `i` over all layers of
+    ///   all batches;
+    /// - `link_utilization_trace` — every layer's per-stage trace
+    ///   resampled to [`TRACE_POINTS`] progress fractions and averaged
+    ///   position-wise (empty if no layer routed any stage);
+    /// - `ordering` — the controller ordering of the last measured batch.
+    pub fn report_from_batches(&self, sims: &[BatchSim]) -> EpochReport {
         let mut batch_times = Vec::new();
         let mut utils = Vec::new();
-        let mut ctcs = Vec::new();
-        let mut last_per_core_ctc = Vec::new();
-        let mut link_trace = Vec::new();
-        for _ in 0..self.cfg.measured_batches {
-            let sim = self.simulate_batch(rng);
+        let mut per_core_sum = vec![0.0f64; NUM_CORES];
+        let mut measured_layers = 0usize;
+        let mut trace_sum = vec![0.0f64; TRACE_POINTS];
+        let mut traced_layers = 0usize;
+        for sim in sims {
             // Pipelined host/accelerator: the slower side dominates.
             batch_times.push(sim.accel_time.max(sim.host_time));
             for layer in &sim.layers {
                 utils.push(multicore_utilization(&layer.cores));
-                let per_core: Vec<f64> =
-                    layer.cores.iter().map(|c| c.ctc_ratio()).collect();
-                ctcs.extend(per_core.iter().copied());
-                last_per_core_ctc = per_core;
-                link_trace = layer.link_utilization.clone();
+                for (i, core) in layer.cores.iter().enumerate() {
+                    per_core_sum[i] += core.ctc_ratio();
+                }
+                measured_layers += 1;
+                if !layer.link_utilization.is_empty() {
+                    for (slot, v) in
+                        trace_sum.iter_mut().zip(resample_trace(&layer.link_utilization))
+                    {
+                        *slot += v;
+                    }
+                    traced_layers += 1;
+                }
             }
         }
-        let mean_batch = batch_times.iter().sum::<f64>() / batch_times.len() as f64;
+        let mean_batch = batch_times.iter().sum::<f64>() / batch_times.len().max(1) as f64;
         let batches = self.spec.batches_per_epoch(self.cfg.batch_size);
-        // Representative ordering for reporting: layer-1 shape of the last
-        // batch is what the controller keys on.
-        let ordering = {
-            let replica = self.spec.instantiate(2048, &mut SplitMix64::new(7));
-            let sampler = NeighborSampler::new(&replica.adj, self.cfg.fanouts.to_vec());
-            let ids: Vec<u32> = (0..64u32).collect();
-            let b = sampler.sample(&ids, &mut SplitMix64::new(8));
-            SequenceEstimator::new(self.shape_params(&b, 0)).best_ours()
+        let per_core_ctc: Vec<f64> = per_core_sum
+            .iter()
+            .map(|s| s / measured_layers.max(1) as f64)
+            .collect();
+        let link_trace: Vec<f64> = if traced_layers == 0 {
+            Vec::new()
+        } else {
+            trace_sum.iter().map(|s| s / traced_layers as f64).collect()
         };
         EpochReport {
             dataset: self.spec.name,
             model: self.model,
-            ordering,
+            ordering: sims.last().map(|s| s.ordering).unwrap_or(Ordering::OursCoAg),
             seconds_per_epoch: mean_batch * batches as f64,
             avg_core_utilization: utils.iter().sum::<f64>() / utils.len().max(1) as f64,
-            avg_ctc_ratio: ctcs.iter().sum::<f64>() / ctcs.len().max(1) as f64,
-            per_core_ctc: last_per_core_ctc,
+            // The overall Fig. 10 average is the mean of the per-core means
+            // (every layer contributes NUM_CORES equally-weighted ratios).
+            avg_ctc_ratio: per_core_ctc.iter().sum::<f64>() / NUM_CORES as f64,
+            per_core_ctc,
             link_utilization_trace: link_trace,
             batches,
         }
+    }
+
+    /// Full epoch report: instantiate the replica and sampler once, simulate
+    /// `measured_batches`, extrapolate.
+    pub fn run(&self, rng: &mut SplitMix64) -> EpochReport {
+        let replica = self.spec.instantiate(self.cfg.replica_nodes, &mut rng.fork());
+        let sampler = NeighborSampler::new(&replica.adj, self.cfg.fanouts.to_vec());
+        let sims: Vec<BatchSim> = (0..self.cfg.measured_batches.max(1))
+            .map(|_| self.simulate_batch_on(&replica, &sampler, rng))
+            .collect();
+        self.report_from_batches(&sims)
     }
 }
 
@@ -360,6 +514,7 @@ mod tests {
         assert_eq!(sim.layers.len(), 2);
         assert!(sim.accel_time > 0.0 && sim.accel_time < 1.0, "{}", sim.accel_time);
         assert!(sim.host_time > 0.0);
+        assert!(sim.ordering.is_ours());
         let (n2, n1, b) = sim.dims;
         assert!(n2 >= n1 && n1 >= b);
     }
@@ -390,5 +545,75 @@ mod tests {
             sage.seconds_per_epoch,
             gcn.seconds_per_epoch
         );
+    }
+
+    #[test]
+    fn report_aggregates_every_layer_of_every_batch() {
+        // Regression: link_utilization_trace and per_core_ctc used to be
+        // overwritten per layer, so the report silently reflected only the
+        // final layer of the final batch.
+        let spec = by_name("Flickr").unwrap();
+        let model = EpochModel::new(spec, ModelKind::Gcn, quick_cfg());
+        let layer = |mp: f64, util: Vec<f64>| LayerSim {
+            cores: vec![
+                LayerPhaseTimes { combination: 1.0, aggregation: 1.0, message_passing: mp };
+                NUM_CORES
+            ],
+            noc_cycles: 10,
+            link_utilization: util,
+            edges: 5,
+        };
+        let batch = |mp: f64, u0: f64, u1: f64| BatchSim {
+            dims: (4, 2, 1),
+            layers: vec![layer(mp, vec![u0]), layer(mp, vec![u1, u1])],
+            accel_time: 1.0,
+            host_time: 0.5,
+            ordering: Ordering::OursAgCo,
+        };
+        let rep = model.report_from_batches(&[batch(2.0, 0.1, 0.2), batch(4.0, 0.3, 0.4)]);
+        // Trace averages the four layer traces position-wise over the
+        // progress axis: each layer is flat, so every one of the
+        // TRACE_POINTS positions is (0.1 + 0.2 + 0.3 + 0.4) / 4.
+        assert_eq!(rep.link_utilization_trace.len(), TRACE_POINTS);
+        for &u in &rep.link_utilization_trace {
+            assert!((u - 0.25).abs() < 1e-12, "{u}");
+        }
+        // Per-core CTC is the mean over the 4 measured layers:
+        // (1.0 + 1.0 + 2.0 + 2.0) / 4 with compute = 2.0 per layer.
+        assert_eq!(rep.per_core_ctc.len(), NUM_CORES);
+        for &c in &rep.per_core_ctc {
+            assert!((c - 1.5).abs() < 1e-12, "{c}");
+        }
+        assert!((rep.avg_ctc_ratio - 1.5).abs() < 1e-12);
+        assert_eq!(rep.ordering, Ordering::OursAgCo);
+        // seconds_per_epoch = mean(max(accel, host)) × batches.
+        let expect = 1.0 * spec.batches_per_epoch(256) as f64;
+        assert!((rep.seconds_per_epoch - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_passes_knob_controls_routed_sample() {
+        // Reddit's dense replica guarantees multi-pass layers, so widening
+        // the sample must route strictly more stages.
+        let spec = by_name("Reddit").unwrap();
+        let dense = TrainConfig {
+            batch_size: 512,
+            measured_batches: 1,
+            replica_nodes: 4096,
+            ..Default::default()
+        };
+        let mut narrow = dense;
+        narrow.sample_passes = 1;
+        let mut wide = dense;
+        wide.sample_passes = 64;
+        let sim_n = EpochModel::new(spec, ModelKind::Gcn, narrow)
+            .simulate_batch(&mut SplitMix64::new(9));
+        let sim_w = EpochModel::new(spec, ModelKind::Gcn, wide)
+            .simulate_batch(&mut SplitMix64::new(9));
+        // More sampled passes → more routed stages in the trace.
+        let stages = |s: &BatchSim| {
+            s.layers.iter().map(|l| l.link_utilization.len()).sum::<usize>()
+        };
+        assert!(stages(&sim_w) > stages(&sim_n), "{} vs {}", stages(&sim_w), stages(&sim_n));
     }
 }

@@ -1,0 +1,250 @@
+//! Block bucketing: shard a layer's adjacency into `sub × sub` pass blocks
+//! in a **single O(nnz) scan**.
+//!
+//! The epoch model partitions each sampled layer's bipartite adjacency into
+//! 1024×1024 passes (the per-pass capacity of the 16-core accelerator) and
+//! routes a sample of them through the Router-St simulator.  The naive
+//! implementation re-scanned the entire layer COO once per pass —
+//! O(passes × nnz); this module builds every pass block in one scan, after
+//! which each block is an independent local-coordinate [`Coo`] ready for
+//! [`crate::graph::partition::partition`], and independent blocks can be
+//! routed concurrently (see `coordinator::epoch`).
+//!
+//! Local coordinates: an edge `(r, c)` of the layer lands in block
+//! `(r / sub, c / sub)` at offset `(r % sub, c % sub)`.  Edge order within
+//! a block follows the layer COO's iteration order, so results are
+//! identical to slicing the full COO per pass.
+
+use crate::graph::coo::Coo;
+
+/// A layer adjacency sharded into the `passes_r × passes_c` grid of
+/// `sub × sub` blocks (row-major; edge blocks are clipped to the matrix).
+#[derive(Clone, Debug)]
+pub struct BlockGrid {
+    /// Pass edge length (1024 for the paper's accelerator).
+    pub sub: usize,
+    /// Blocks along the destination (row) axis.
+    pub passes_r: usize,
+    /// Blocks along the source (column) axis.
+    pub passes_c: usize,
+    blocks: Vec<Coo>,
+}
+
+impl BlockGrid {
+    /// Bucket `adj` into `sub × sub` blocks with one pass over its edges.
+    pub fn bucket(adj: &Coo, sub: usize) -> BlockGrid {
+        assert!(sub > 0, "pass size must be positive");
+        let passes_r = adj.n_rows.div_ceil(sub);
+        let passes_c = adj.n_cols.div_ceil(sub);
+        let mut blocks = Vec::with_capacity(passes_r * passes_c);
+        for pr in 0..passes_r {
+            for pc in 0..passes_c {
+                blocks.push(Coo::new(
+                    sub.min(adj.n_rows - pr * sub),
+                    sub.min(adj.n_cols - pc * sub),
+                ));
+            }
+        }
+        for (r, c, v) in adj.iter() {
+            let (r, c) = (r as usize, c as usize);
+            let (pr, pc) = (r / sub, c / sub);
+            blocks[pr * passes_c + pc].push((r - pr * sub) as u32, (c - pc * sub) as u32, v);
+        }
+        BlockGrid { sub, passes_r, passes_c, blocks }
+    }
+
+    /// Total number of pass blocks in the grid (including empty ones).
+    pub fn total_passes(&self) -> usize {
+        self.passes_r * self.passes_c
+    }
+
+    /// The block at grid position `(pr, pc)`, in local coordinates.
+    pub fn block(&self, pr: usize, pc: usize) -> &Coo {
+        &self.blocks[pr * self.passes_c + pc]
+    }
+
+    /// All blocks in row-major pass order.
+    pub fn blocks(&self) -> impl Iterator<Item = &Coo> {
+        self.blocks.iter()
+    }
+
+    /// Non-empty blocks in row-major pass order — the passes that actually
+    /// schedule work (empty passes are skipped by the wave scheduler).
+    pub fn nonempty(&self) -> impl Iterator<Item = &Coo> {
+        self.blocks.iter().filter(|b| b.nnz() > 0)
+    }
+
+    /// Total edges across all blocks (must equal the source adjacency's).
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().map(|b| b.nnz()).sum()
+    }
+}
+
+/// Materialize only the first `k` **non-empty** blocks in row-major pass
+/// order, without allocating the full grid: one counting scan to locate
+/// the sampled blocks, one fill scan that copies only their edges.
+///
+/// Equivalent to `BlockGrid::bucket(adj, sub).nonempty().take(k)` but the
+/// unsampled blocks' edges are never copied — this is what the epoch
+/// model's hot path uses (it routes a small sample and extrapolates).
+pub fn sample_nonempty(adj: &Coo, sub: usize, k: usize) -> Vec<Coo> {
+    assert!(sub > 0, "pass size must be positive");
+    let passes_r = adj.n_rows.div_ceil(sub);
+    let passes_c = adj.n_cols.div_ceil(sub);
+    let mut counts = vec![0usize; passes_r * passes_c];
+    for (r, c, _) in adj.iter() {
+        counts[(r as usize / sub) * passes_c + c as usize / sub] += 1;
+    }
+    // Row-major selection of the first k non-empty blocks.
+    let mut slot = vec![usize::MAX; passes_r * passes_c];
+    let mut blocks: Vec<Coo> = Vec::with_capacity(k.min(passes_r * passes_c));
+    for pr in 0..passes_r {
+        for pc in 0..passes_c {
+            let b = pr * passes_c + pc;
+            if counts[b] > 0 && blocks.len() < k {
+                slot[b] = blocks.len();
+                let mut block = Coo::new(
+                    sub.min(adj.n_rows - pr * sub),
+                    sub.min(adj.n_cols - pc * sub),
+                );
+                block.rows.reserve(counts[b]);
+                block.cols.reserve(counts[b]);
+                block.vals.reserve(counts[b]);
+                blocks.push(block);
+            }
+        }
+    }
+    for (r, c, v) in adj.iter() {
+        let (r, c) = (r as usize, c as usize);
+        let (pr, pc) = (r / sub, c / sub);
+        let s = slot[pr * passes_c + pc];
+        if s != usize::MAX {
+            blocks[s].push((r - pr * sub) as u32, (c - pc * sub) as u32, v);
+        }
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn random_coo(n_rows: usize, n_cols: usize, nnz: usize, seed: u64) -> Coo {
+        let mut rng = SplitMix64::new(seed);
+        let mut coo = Coo::new(n_rows, n_cols);
+        for _ in 0..nnz {
+            coo.push(rng.gen_range(n_rows) as u32, rng.gen_range(n_cols) as u32, 1.0);
+        }
+        coo
+    }
+
+    #[test]
+    fn grid_shape_and_clipped_edge_blocks() {
+        let adj = random_coo(2500, 1100, 100, 1);
+        let g = BlockGrid::bucket(&adj, 1024);
+        assert_eq!((g.passes_r, g.passes_c), (3, 2));
+        assert_eq!(g.total_passes(), 6);
+        // Interior block is full-size; the last row/col blocks are clipped.
+        assert_eq!((g.block(0, 0).n_rows, g.block(0, 0).n_cols), (1024, 1024));
+        assert_eq!((g.block(2, 1).n_rows, g.block(2, 1).n_cols), (2500 - 2048, 1100 - 1024));
+    }
+
+    #[test]
+    fn every_edge_in_exactly_one_block_with_correct_offsets() {
+        let adj = random_coo(2000, 3000, 5000, 2);
+        let g = BlockGrid::bucket(&adj, 1024);
+        assert_eq!(g.nnz(), adj.nnz());
+        let mut rebuilt: Vec<(u32, u32, u32)> = Vec::new();
+        for pr in 0..g.passes_r {
+            for pc in 0..g.passes_c {
+                let b = g.block(pr, pc);
+                for (r, c, v) in b.iter() {
+                    assert!((r as usize) < b.n_rows && (c as usize) < b.n_cols);
+                    rebuilt.push((
+                        (pr * 1024 + r as usize) as u32,
+                        (pc * 1024 + c as usize) as u32,
+                        v.to_bits(),
+                    ));
+                }
+            }
+        }
+        let mut orig: Vec<(u32, u32, u32)> =
+            adj.iter().map(|(r, c, v)| (r, c, v.to_bits())).collect();
+        orig.sort_unstable();
+        rebuilt.sort_unstable();
+        assert_eq!(orig, rebuilt);
+    }
+
+    #[test]
+    fn matches_per_pass_slicing() {
+        // The bucketing must reproduce exactly what slicing the full COO
+        // per pass produced (same edges, same order, same local offsets).
+        let adj = random_coo(1500, 2100, 3000, 3);
+        let sub = 1024;
+        let g = BlockGrid::bucket(&adj, sub);
+        for pr in 0..g.passes_r {
+            for pc in 0..g.passes_c {
+                let (r0, c0) = (pr * sub, pc * sub);
+                let mut sliced =
+                    Coo::new(sub.min(adj.n_rows - r0), sub.min(adj.n_cols - c0));
+                for (r, c, v) in adj.iter() {
+                    let (r, c) = (r as usize, c as usize);
+                    if (r0..r0 + sub).contains(&r) && (c0..c0 + sub).contains(&c) {
+                        sliced.push((r - r0) as u32, (c - c0) as u32, v);
+                    }
+                }
+                assert_eq!(g.block(pr, pc), &sliced, "block ({pr}, {pc})");
+            }
+        }
+    }
+
+    #[test]
+    fn nonempty_iterates_row_major() {
+        let mut adj = Coo::new(2048, 2048);
+        adj.push(1500, 10, 1.0); // block (1, 0)
+        adj.push(10, 1500, 1.0); // block (0, 1)
+        let g = BlockGrid::bucket(&adj, 1024);
+        let ne: Vec<usize> = g.nonempty().map(|b| b.nnz()).collect();
+        assert_eq!(ne, vec![1, 1]);
+        assert_eq!(g.block(0, 1).nnz(), 1);
+        assert_eq!(g.block(1, 0).nnz(), 1);
+        assert_eq!(g.block(0, 0).nnz(), 0);
+    }
+
+    #[test]
+    fn sample_nonempty_matches_grid_prefix() {
+        let adj = random_coo(2000, 3000, 5000, 4);
+        let grid = BlockGrid::bucket(&adj, 1024);
+        for k in [0usize, 1, 3, 100] {
+            let sampled = sample_nonempty(&adj, 1024, k);
+            let want: Vec<&Coo> = grid.nonempty().take(k).collect();
+            assert_eq!(sampled.len(), want.len(), "k={k}");
+            for (got, want) in sampled.iter().zip(want) {
+                assert_eq!(got, want, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_nonempty_respects_k_and_order() {
+        let mut adj = Coo::new(2048, 2048);
+        adj.push(1500, 10, 1.0); // block (1, 0)
+        adj.push(10, 1500, 2.0); // block (0, 1)
+        adj.push(20, 1600, 3.0); // block (0, 1) again
+        let one = sample_nonempty(&adj, 1024, 1);
+        assert_eq!(one.len(), 1);
+        // Row-major: block (0, 1) comes first and keeps both its edges.
+        assert_eq!(one[0].nnz(), 2);
+        assert_eq!(one[0].vals, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn empty_matrix_has_no_blocks_or_edges() {
+        let adj = Coo::new(0, 0);
+        let g = BlockGrid::bucket(&adj, 1024);
+        assert_eq!(g.total_passes(), 0);
+        assert_eq!(g.nnz(), 0);
+        assert_eq!(g.nonempty().count(), 0);
+    }
+}

@@ -10,7 +10,10 @@
 //! - [`sampler`] — GraphSAGE neighbor sampler (fanouts 25/10).
 //! - [`partition`] — 1024-node subgraph → 16 cores × 64 nodes, 16×16 block
 //!   grid, diagonal-group schedule, block-message compression.
+//! - [`blocks`] — single-scan sharding of a layer adjacency into 1024×1024
+//!   pass blocks (the epoch model's parallel pass pipeline input).
 
+pub mod blocks;
 pub mod converter;
 pub mod coo;
 pub mod csr;
@@ -19,6 +22,7 @@ pub mod generate;
 pub mod partition;
 pub mod sampler;
 
+pub use blocks::BlockGrid;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use datasets::{DatasetSpec, PAPER_DATASETS};

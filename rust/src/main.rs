@@ -71,6 +71,7 @@ commands:
   hbm        Fig. 1 HBM bandwidth scenarios
   epoch      Table 2 single row (ours vs HP-GNN vs GPU)
   table2     Table 2, all datasets x both models
+             (epoch/table2 flags: --sample-passes N --threads N --batches N)
   resources  Table 3 resource consumption
   power      Fig. 11(a)/Fig. 12 power analysis
   estimate   Table 1 sequence estimator for given layer shapes
@@ -181,11 +182,21 @@ fn model_kind(s: &str) -> anyhow::Result<ModelKind> {
     }
 }
 
+/// Apply the shared epoch-model tuning flags (`--sample-passes`,
+/// `--threads`, `--batches`) on top of a base config.
+fn epoch_cfg_from_args(args: &Args) -> anyhow::Result<gcn_noc::coordinator::epoch::TrainConfig> {
+    let mut cfg = config::quick_epoch_config();
+    cfg.sample_passes = args.get_usize("sample-passes", cfg.sample_passes)?;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    cfg.measured_batches = args.get_usize("batches", cfg.measured_batches)?;
+    Ok(cfg)
+}
+
 fn cmd_epoch(args: &Args) -> anyhow::Result<()> {
     let dataset = args.get_or("dataset", "flickr");
     let spec = by_name(dataset).ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
     let model = model_kind(args.get_or("model", "gcn"))?;
-    let cfg = config::quick_epoch_config();
+    let cfg = epoch_cfg_from_args(args)?;
     let mut rng = SplitMix64::new(args.get_u64("seed", 7)?);
     let rep = EpochModel::new(spec, model, cfg).run(&mut rng);
     let hp = HpGnnBaseline::new(spec, model, cfg).seconds_per_epoch(&mut rng);
@@ -205,7 +216,7 @@ fn cmd_epoch(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_table2(args: &Args) -> anyhow::Result<()> {
-    let cfg = config::quick_epoch_config();
+    let cfg = epoch_cfg_from_args(args)?;
     let mut table =
         Table::new(vec!["model", "dataset", "GPU", "HP-GNN", "Ours", "speedup", "paper"]);
     for (model, mname) in [(ModelKind::Gcn, "NS-GCN"), (ModelKind::Sage, "NS-SAGE")] {

@@ -107,12 +107,23 @@ pub struct RoutingOutcome {
 
 /// Routing failure (only possible via the safety bound — never observed for
 /// valid waves; property-tested in `rust/tests/`).
-#[derive(Debug, thiserror::Error)]
-#[error("routing exceeded {max_cycles} cycles (live-lock safety bound); {undelivered} messages undelivered")]
+#[derive(Debug)]
 pub struct RoutingError {
     pub max_cycles: u32,
     pub undelivered: usize,
 }
+
+impl std::fmt::Display for RoutingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "routing exceeded {} cycles (live-lock safety bound); {} messages undelivered",
+            self.max_cycles, self.undelivered
+        )
+    }
+}
+
+impl std::error::Error for RoutingError {}
 
 /// Hard safety bound: diameter is 4, and with ≤ 64 messages and ≥ 16 links
 /// freed per cycle, any valid wave completes in far fewer cycles.
@@ -262,7 +273,11 @@ pub fn route_parallel_multicast(
         }
 
         // Generate_rp: advance routing points; record arrivals and retire
-        // delivered messages from the active list.
+        // delivered messages from the active list.  Delivered messages must
+        // also zero their `steps` entry: the per-cycle table is initialized
+        // from `steps`, and the XOR Array only refreshes *active* messages,
+        // so a stale nonzero count would record them as Stall ("×") instead
+        // of Done in every later cycle, inflating `total_stalls()`.
         let t = table.cycles.len() as u32 + 1;
         active.retain(|&iu| {
             let i = iu as usize;
@@ -270,6 +285,7 @@ pub fn route_parallel_multicast(
                 pos[i] = next;
                 if pos[i] == req.dests[i] {
                     arrival[i] = t;
+                    steps[i] = 0;
                     return false;
                 }
             }
@@ -434,6 +450,51 @@ mod tests {
         let active: Vec<u32> = (0..6).collect();
         set_filter(&mut sets, &active);
         assert!(sets.iter().all(|s| s.len == 1));
+    }
+
+    #[test]
+    fn delivered_messages_marked_done_in_all_later_cycles() {
+        // Regression: a message delivered at cycle t used to keep a stale
+        // nonzero `steps` entry and be recorded as Stall ("×") in every
+        // cycle after t, inflating total_stalls() and the Fig. 9 stats.
+        // msg 0 travels 4 hops; msg 1 travels 1 hop and is home by cycle 1.
+        let req = MulticastRequest::new(vec![0b0000, 0b0001], vec![0b1111, 0b0000]);
+        let mut rng = SplitMix64::new(11);
+        let out = route_parallel_multicast(&req, &mut rng).unwrap();
+        assert_eq!(out.table.total_cycles(), 4);
+        assert_eq!(out.table.arrival_cycle[1], 1);
+        for t in out.table.arrival_cycle[1] as usize..out.table.cycles.len() {
+            assert_eq!(out.table.cycles[t][1], RouteEntry::Done, "cycle {t}");
+        }
+        // No contention in this wave: the table must contain zero stalls.
+        assert_eq!(out.table.total_stalls(), 0);
+    }
+
+    #[test]
+    fn done_entries_consistent_for_random_waves() {
+        // For any wave: strictly before its arrival cycle a message is
+        // never Done; from its arrival cycle on it is always Done.
+        let mut rng = SplitMix64::new(12);
+        for _ in 0..25 {
+            let mut sources = Vec::with_capacity(64);
+            for _ in 0..4 {
+                sources.extend(rng.permutation(16).iter().map(|&x| x as u8));
+            }
+            let dests: Vec<u8> = (0..64).map(|_| rng.gen_range(16) as u8).collect();
+            let req = MulticastRequest::new(sources, dests);
+            let out = route_parallel_multicast(&req, &mut rng).unwrap();
+            for (i, &arr) in out.table.arrival_cycle.iter().enumerate() {
+                for (t, cycle) in out.table.cycles.iter().enumerate() {
+                    let done = matches!(cycle[i], RouteEntry::Done);
+                    if (t as u32) < arr.saturating_sub(1) {
+                        assert!(!done, "msg {i} Done at cycle {t} before arrival {arr}");
+                    }
+                    if t as u32 >= arr {
+                        assert!(done, "msg {i} not Done at cycle {t} after arrival {arr}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

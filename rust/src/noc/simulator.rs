@@ -30,17 +30,34 @@ pub struct ReplayResult {
 
 /// Replay error — a structural violation the switch hardware could not
 /// execute (these indicate a planner bug; property tests keep them at zero).
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ReplayError {
-    #[error("cycle {cycle}: core {core} would receive {n} > 4 messages")]
     ReceiveOverflow { cycle: u32, core: u8, n: usize },
-    #[error("cycle {cycle}: output channel {dim} of core {core} driven twice")]
     ChannelConflict { cycle: u32, core: u8, dim: usize },
-    #[error("cycle {cycle}: message {msg} hop {from}->{to} is not a hypercube link")]
     NotALink { cycle: u32, msg: usize, from: u8, to: u8 },
-    #[error("message {msg} ended at {at}, wanted {want}")]
     Undelivered { msg: usize, at: u8, want: u8 },
 }
+
+impl std::fmt::Display for ReplayError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplayError::ReceiveOverflow { cycle, core, n } => {
+                write!(f, "cycle {cycle}: core {core} would receive {n} > 4 messages")
+            }
+            ReplayError::ChannelConflict { cycle, core, dim } => {
+                write!(f, "cycle {cycle}: output channel {dim} of core {core} driven twice")
+            }
+            ReplayError::NotALink { cycle, msg, from, to } => {
+                write!(f, "cycle {cycle}: message {msg} hop {from}->{to} is not a hypercube link")
+            }
+            ReplayError::Undelivered { msg, at, want } => {
+                write!(f, "message {msg} ended at {at}, wanted {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ReplayError {}
 
 /// Execute `table` for `req`, reducing `payloads` (one per message, paired
 /// with `agg_nodes` destination rows) into per-core aggregate buffers.

@@ -21,13 +21,7 @@ pub fn trace_to_fig11c(trace: &[f64]) -> Vec<f64> {
     if trace.is_empty() {
         return vec![0.0; FIG11C_POINTS];
     }
-    (0..FIG11C_POINTS)
-        .map(|i| {
-            let lo = i * trace.len() / FIG11C_POINTS;
-            let hi = ((i + 1) * trace.len() / FIG11C_POINTS).max(lo + 1).min(trace.len());
-            trace[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
-        })
-        .collect()
+    crate::util::stats::resample(trace, FIG11C_POINTS)
 }
 
 /// Whether the measured trace reproduces Fig. 11(c)'s decreasing trend

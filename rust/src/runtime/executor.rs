@@ -9,6 +9,10 @@
 use std::collections::HashMap;
 
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
+// Offline build: the real `xla` crate needs a PJRT shared library the image
+// lacks.  The stub is API-compatible; `PjRtClient::cpu()` fails, so every
+// caller takes its artifacts-unavailable skip path.
+use crate::runtime::xla_stub as xla;
 
 /// A host-side f32 input tensor (row-major).
 #[derive(Clone, Debug)]

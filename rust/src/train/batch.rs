@@ -24,13 +24,24 @@ pub struct StagedBatch {
 }
 
 /// Staging failure: the sampled batch exceeds the artifact's capacity.
-#[derive(Debug, thiserror::Error)]
-#[error("sampled batch ({got}) exceeds artifact capacity ({cap}) for {dim}")]
+#[derive(Debug)]
 pub struct CapacityError {
     pub dim: &'static str,
     pub got: usize,
     pub cap: usize,
 }
+
+impl std::fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "sampled batch ({}) exceeds artifact capacity ({}) for {}",
+            self.got, self.cap, self.dim
+        )
+    }
+}
+
+impl std::error::Error for CapacityError {}
 
 /// GCN normalization + padding of one sampled layer's adjacency.
 fn stage_adj(

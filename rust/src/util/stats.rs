@@ -36,6 +36,21 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Resample a series onto `points` positions by bucket means: position
+/// `i` averages `xs[i·len/points .. (i+1)·len/points]` (at least one
+/// element).  Shared by the epoch model's progress traces and the
+/// Fig. 11(c) downsampling.
+pub fn resample(xs: &[f64], points: usize) -> Vec<f64> {
+    assert!(!xs.is_empty() && points > 0, "resample needs data and points");
+    (0..points)
+        .map(|i| {
+            let lo = i * xs.len() / points;
+            let hi = ((i + 1) * xs.len() / points).max(lo + 1).min(xs.len());
+            xs[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect()
+}
+
 /// Fixed-width bin histogram over `[lo, hi)`.
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -88,6 +103,18 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn resample_bucket_means() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let r = resample(&xs, 10);
+        assert_eq!(r.len(), 10);
+        assert!((r[0] - 4.5).abs() < 1e-12);
+        assert!((r[9] - 94.5).abs() < 1e-12);
+        // Upsampling a short series repeats bucket values.
+        let up = resample(&[0.25, 0.75], 4);
+        assert_eq!(up, vec![0.25, 0.25, 0.75, 0.75]);
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build environment has no registry access, so the repo vendors the
+//! small slice of `anyhow` it actually uses: the [`Error`] type, the
+//! [`Result`] alias, the `anyhow!` / `bail!` / `ensure!` macros, and the
+//! blanket `From<E: std::error::Error>` conversion that powers `?`.
+//!
+//! Semantics match upstream where it matters:
+//! - `Error` implements `Display` + `Debug` but **not** `std::error::Error`
+//!   (that is what makes the blanket `From` impl coherent);
+//! - `fn main() -> anyhow::Result<()>` works (`Error: Debug`);
+//! - the original error is retained as a boxed source for chaining.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A string-backed error with an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with the upstream default-type-param shape.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The root cause as a `std::error::Error`, if one was captured.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e:#}` (alternate) prints the same single-line message; chain
+        // rendering is not needed by this crate's callers.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if let Some(src) = &self.source {
+            write!(f, "\n\nCaused by:\n    {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        Ok(s.parse::<i32>()?)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("nope").unwrap_err();
+        assert!(e.source().is_some());
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let x = 7;
+        let e = anyhow!("value {x} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(n: i32) -> Result<i32> {
+            ensure!(n >= 0, "negative: {n}");
+            if n > 100 {
+                bail!("too big: {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big: 101");
+    }
+}
