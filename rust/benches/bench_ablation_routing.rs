@@ -6,7 +6,7 @@
 
 mod common;
 
-use common::banner;
+use common::{banner, trials};
 use gcn_noc::noc::ablation::{butterfly_cycles, route_dimension_ordered, route_oblivious};
 use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
 use gcn_noc::report::table::Table;
@@ -42,8 +42,9 @@ fn run_suite(name: &str, make: impl Fn(&mut SplitMix64) -> MulticastRequest) {
     let mut results: Vec<(&str, Vec<f64>)> = Vec::new();
     for strat in ["Algorithm 1 (paper)", "e-cube (dim-ordered)", "oblivious random", "butterfly (HP-GNN)"] {
         let mut rng = SplitMix64::new(0xAB1A7);
-        let mut cycles = Vec::with_capacity(TRIALS);
-        for _ in 0..TRIALS {
+        let n_trials = trials(TRIALS);
+        let mut cycles = Vec::with_capacity(n_trials);
+        for _ in 0..n_trials {
             let req = make(&mut rng);
             let c = match strat {
                 "Algorithm 1 (paper)" => {

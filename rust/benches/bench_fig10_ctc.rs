@@ -4,7 +4,7 @@
 
 mod common;
 
-use common::banner;
+use common::{banner, smoke_clamp};
 use gcn_noc::config::bench_epoch_config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
 use gcn_noc::graph::datasets::PAPER_DATASETS;
@@ -15,7 +15,8 @@ use gcn_noc::util::rng::SplitMix64;
 
 fn main() {
     banner("Fig. 10: message passing vs combination+aggregation per core");
-    let cfg = bench_epoch_config();
+    let mut cfg = bench_epoch_config();
+    smoke_clamp(&mut cfg);
     let mut table = Table::new(vec!["dataset", "avg ctc (ours)", "avg ctc (paper)"]);
     for spec in &PAPER_DATASETS {
         let mut rng = SplitMix64::new(0xF16_10);

@@ -4,7 +4,7 @@
 
 mod common;
 
-use common::banner;
+use common::{banner, smoke_clamp};
 use gcn_noc::config::bench_epoch_config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
 use gcn_noc::graph::datasets::PAPER_DATASETS;
@@ -26,7 +26,8 @@ fn main() {
     println!("(values are % of dynamic power; paper: HBM 66.4 %)");
 
     banner("Fig. 11(a): board power during training, per dataset");
-    let cfg = bench_epoch_config();
+    let mut cfg = bench_epoch_config();
+    smoke_clamp(&mut cfg);
     let mut table = Table::new(vec!["dataset", "core util", "board power (W)", "A100 (W)"]);
     for spec in &PAPER_DATASETS {
         let mut rng = SplitMix64::new(0xF16_12);

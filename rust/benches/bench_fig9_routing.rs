@@ -5,7 +5,7 @@
 
 mod common;
 
-use common::{banner, fmt_time, time_it};
+use common::{banner, fmt_time, time_it, trials};
 use gcn_noc::core_model::CLOCK_HZ;
 use gcn_noc::noc::routing::{route_parallel_multicast, MulticastRequest};
 use gcn_noc::noc::simulator::{
@@ -28,15 +28,16 @@ fn random_wave(fuse: usize, rng: &mut SplitMix64) -> MulticastRequest {
 }
 
 fn main() {
-    banner("Fig. 9: routing cycles under random test (1000 trials/fuse)");
+    let n_trials = trials(TRIALS);
+    banner(&format!("Fig. 9: routing cycles under random test ({n_trials} trials/fuse)"));
     let mut table = Table::new(vec![
         "fuse", "msgs", "avg cycles (paper-style)", "min", "max", "first 50 trials",
     ]);
     let mut fuse_means = Vec::new();
     for fuse in 1..=4usize {
         let mut rng = SplitMix64::new(0x919 + fuse as u64);
-        let mut cycles = Vec::with_capacity(TRIALS);
-        for _ in 0..TRIALS {
+        let mut cycles = Vec::with_capacity(n_trials);
+        for _ in 0..n_trials {
             let req = random_wave(fuse, &mut rng);
             let out = route_parallel_multicast(&req, &mut rng).expect("routes");
             cycles.push(out.table.total_cycles() as f64);
@@ -49,7 +50,7 @@ fn main() {
             format!("{:.2}", s.mean),
             format!("{:.0}", s.min),
             format!("{:.0}", s.max),
-            ascii_series(&cycles[..50]),
+            ascii_series(&cycles[..50.min(cycles.len())]),
         ]);
     }
     println!("{}", table.render());
@@ -70,7 +71,7 @@ fn main() {
 
     banner("throughput of the routing engine itself (perf)");
     let mut rng = SplitMix64::new(1);
-    let t = time_it(50, 2000, || {
+    let t = time_it(50, trials(2000), || {
         let req = random_wave(4, &mut rng);
         let out = route_parallel_multicast(&req, &mut rng).unwrap();
         std::hint::black_box(out.table.total_cycles());

@@ -9,7 +9,7 @@
 
 mod common;
 
-use common::{banner, fmt_time, time_it};
+use common::{banner, fmt_time, smoke_clamp, time_it};
 use gcn_noc::config::quick_epoch_config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
 use gcn_noc::graph::datasets::by_name;
@@ -21,6 +21,7 @@ fn main() {
     let mut cfg = quick_epoch_config();
     cfg.measured_batches = 1;
     cfg.sample_passes = 64;
+    smoke_clamp(&mut cfg);
 
     let sweep = [1usize, 2, 4, 8];
     let mut times = Vec::with_capacity(sweep.len());

@@ -1,0 +1,138 @@
+//! **Routing-core micro-bench** — the perf-trajectory baseline.
+//!
+//! Two sweeps, written to `BENCH_routing.json` so the project's perf
+//! history is machine-comparable across PRs:
+//!
+//! 1. **waves/sec** of the allocation-free stats path ([`route_wave`] +
+//!    [`StatsSink`] + reused [`WaveScratch`]) vs the table-materializing
+//!    path ([`route_parallel_multicast`]) on identical Fuse4 waves —
+//!    target: the stats path plans ≥ 2× the waves/sec;
+//! 2. **epoch-model wall time** at 1/2/4/8 routing workers on the Flickr
+//!    quick config, with the byte-identical-report contract asserted
+//!    across the sweep.
+
+mod common;
+
+use common::{banner, fmt_time, smoke_clamp, time_it, trials};
+use gcn_noc::config::quick_epoch_config;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
+use gcn_noc::graph::datasets::by_name;
+use gcn_noc::noc::routing::{
+    route_parallel_multicast, route_wave, MulticastRequest, StatsSink, WaveScratch,
+};
+use gcn_noc::util::rng::SplitMix64;
+
+fn random_wave(fuse: usize, rng: &mut SplitMix64) -> MulticastRequest {
+    let mut sources = Vec::with_capacity(16 * fuse);
+    for _ in 0..fuse {
+        sources.extend(rng.permutation(16).iter().map(|&x| x as u8));
+    }
+    let dests: Vec<u8> = (0..16 * fuse).map(|_| rng.gen_range(16) as u8).collect();
+    MulticastRequest::new(sources, dests)
+}
+
+fn main() {
+    // --- Sweep 1: waves/sec, stats sink vs table sink. ---
+    let n_waves = trials(2000);
+    let reps = trials(5);
+    banner(&format!("routing core: {n_waves} Fuse4 waves x {reps} reps, stats vs table sink"));
+    let mut wave_rng = SplitMix64::new(0xBEEF);
+    let waves: Vec<MulticastRequest> =
+        (0..n_waves).map(|_| random_wave(4, &mut wave_rng)).collect();
+
+    let mut table_cycles = 0u64;
+    let t_table = time_it(1, reps, || {
+        let mut rng = SplitMix64::new(1);
+        table_cycles = 0;
+        for w in &waves {
+            table_cycles +=
+                route_parallel_multicast(w, &mut rng).unwrap().table.total_cycles() as u64;
+        }
+        std::hint::black_box(table_cycles);
+    }) / n_waves as f64;
+
+    let mut scratch = WaveScratch::new();
+    let mut sink = StatsSink::new();
+    let mut stats_cycles = 0u64;
+    let t_stats = time_it(1, reps, || {
+        let mut rng = SplitMix64::new(1);
+        stats_cycles = 0;
+        for w in &waves {
+            sink.reset();
+            route_wave(&w.sources, &w.dests, &mut rng, &mut scratch, &mut sink).unwrap();
+            stats_cycles += sink.cycles as u64;
+        }
+        std::hint::black_box(stats_cycles);
+    }) / n_waves as f64;
+
+    assert_eq!(
+        stats_cycles, table_cycles,
+        "sink choice must not change the planned schedule"
+    );
+    let wave_speedup = t_table / t_stats;
+    println!("table sink: {} / wave  ({:.0} waves/s)", fmt_time(t_table), 1.0 / t_table);
+    println!("stats sink: {} / wave  ({:.0} waves/s)", fmt_time(t_stats), 1.0 / t_stats);
+    println!("stats-path speedup: {wave_speedup:.2}x  (target >= 2x)");
+
+    // --- Sweep 2: epoch-model wall time vs routing worker count. ---
+    banner("epoch model: batch-level work graph, thread sweep (Flickr quick config)");
+    let spec = by_name("Flickr").unwrap();
+    let mut cfg = quick_epoch_config();
+    cfg.measured_batches = 2;
+    cfg.sample_passes = 32;
+    smoke_clamp(&mut cfg);
+
+    let sweep = [1usize, 2, 4, 8];
+    let mut epoch_times = Vec::with_capacity(sweep.len());
+    let mut reports = Vec::with_capacity(sweep.len());
+    for &threads in &sweep {
+        cfg.threads = threads;
+        let model = EpochModel::new(spec, ModelKind::Gcn, cfg);
+        let mut report = None;
+        let t = time_it(1, trials(3), || {
+            report = Some(model.run(&mut SplitMix64::new(7)));
+        });
+        println!("threads={threads}: {} per epoch-model run", fmt_time(t));
+        epoch_times.push(t);
+        reports.push(report.expect("timed at least once"));
+    }
+    for (i, rep) in reports.iter().enumerate().skip(1) {
+        assert!(
+            rep == &reports[0],
+            "report at {} threads diverged from the single-thread run",
+            sweep[i]
+        );
+    }
+    let epoch_speedup = epoch_times[0] / epoch_times[sweep.len() - 1];
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "speedup 1 -> {} threads: {epoch_speedup:.2}x on a {cores}-core host \
+         (reports byte-identical across the sweep)",
+        sweep[sweep.len() - 1]
+    );
+
+    // --- Baseline artifact. ---
+    let thread_json: Vec<String> = sweep
+        .iter()
+        .zip(&epoch_times)
+        .map(|(t, s)| format!("    {{\"threads\": {t}, \"seconds\": {s:.6}}}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"bench_routing\",\n  \"host_cores\": {cores},\n  \
+         \"smoke\": {},\n  \"waves\": {n_waves},\n  \
+         \"table_sink_sec_per_wave\": {t_table:.9},\n  \
+         \"stats_sink_sec_per_wave\": {t_stats:.9},\n  \
+         \"stats_sink_waves_per_sec\": {:.1},\n  \
+         \"stats_vs_table_speedup\": {wave_speedup:.3},\n  \
+         \"epoch_model\": [\n{}\n  ],\n  \
+         \"epoch_speedup_1_to_8\": {epoch_speedup:.3}\n}}\n",
+        common::smoke(),
+        1.0 / t_stats,
+        thread_json.join(",\n"),
+    );
+    let path = "BENCH_routing.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nbaseline written to {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

@@ -4,7 +4,7 @@
 
 mod common;
 
-use common::banner;
+use common::{banner, smoke_clamp};
 use gcn_noc::baselines::{paper_row, GpuBaseline, HpGnnBaseline};
 use gcn_noc::config::bench_epoch_config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
@@ -15,7 +15,8 @@ use gcn_noc::util::rng::SplitMix64;
 
 fn main() {
     banner("Table 2: s/epoch, batch 1024 (measured = our simulator)");
-    let cfg = bench_epoch_config();
+    let mut cfg = bench_epoch_config();
+    smoke_clamp(&mut cfg);
     let mut table = Table::new(vec![
         "model",
         "dataset",

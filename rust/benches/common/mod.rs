@@ -5,9 +5,39 @@
 
 use std::time::Instant;
 
+/// True when `BENCH_SMOKE` is set: CI smoke mode.  Every [`time_it`] runs
+/// a single iteration with no warmup and [`trials`] clamps to 1, so each
+/// bench binary exercises its full code path on a one-iteration budget.
+pub fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// Clamp a trial count to the smoke budget (1) when `BENCH_SMOKE` is set.
+pub fn trials(n: usize) -> usize {
+    if smoke() {
+        1
+    } else {
+        n
+    }
+}
+
+/// Shrink an epoch-model config to the CI smoke budget when `BENCH_SMOKE`
+/// is set (full-fidelity runs take minutes; the smoke run only has to
+/// prove the bench executes end to end).
+pub fn smoke_clamp(cfg: &mut gcn_noc::coordinator::epoch::TrainConfig) {
+    if smoke() {
+        cfg.batch_size = 256;
+        cfg.measured_batches = 1;
+        cfg.replica_nodes = 2048;
+        cfg.sample_passes = 2;
+    }
+}
+
 /// Time `f` over `iters` iterations after `warmup` warmups; returns mean
-/// seconds per iteration.
+/// seconds per iteration.  Under `BENCH_SMOKE` the budget collapses to a
+/// single un-warmed iteration.
 pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    let (warmup, iters) = if smoke() { (0, 1) } else { (warmup, iters.max(1)) };
     for _ in 0..warmup {
         f();
     }

@@ -8,30 +8,37 @@
 //! model and HBM reads on the channel model, applies Eq. 9/10, and
 //! extrapolates to the full epoch (`nodes / batch_size` batches).
 //!
-//! # The parallel pass pipeline
+//! # The batch-level work graph
 //!
-//! The hot path is organised as a pipeline over *pass blocks*:
+//! The hot path is a three-phase work graph over the full
+//! **(batch × layer × pass)** triple — parallelism spans the whole epoch
+//! sample, not just the ≤ [`TrainConfig::sample_passes`] passes of one
+//! layer:
 //!
-//! 1. **Bucket + sample** — [`sample_nonempty`] locates the first
-//!    [`TrainConfig::sample_passes`] non-empty 1024×1024 blocks in
-//!    row-major pass order and materializes *only those* in two O(nnz)
-//!    scans (the naive version re-scanned the whole COO once per pass:
-//!    O(passes × nnz); the general full-grid API is
-//!    [`crate::graph::blocks::BlockGrid`]);
-//! 2. **Route** — sampled passes are independent, so they are routed
-//!    concurrently on [`TrainConfig::threads`] workers via
-//!    `std::thread::scope` pulling from a shared work queue.  Each pass
-//!    owns a [`SplitMix64`] forked from the caller's stream *in pass
-//!    order before any worker starts*, and results are committed back by
-//!    pass index, so an [`EpochReport`] is **byte-identical for a fixed
-//!    seed at any thread count**;
-//! 3. **Extrapolate** — sampled NoC cycles scale to the layer by edge
-//!    count, then Eq. 9/10 produce per-core phase times.
+//! 1. **Plan (serial)** — for every measured batch in order:
+//!    draw the batch ids, sample its layers, locate and materialize the
+//!    first [`TrainConfig::sample_passes`] non-empty 1024×1024 pass
+//!    blocks of each layer via [`sample_nonempty`] (two O(nnz) scans —
+//!    unsampled blocks are never copied), and **fork one [`SplitMix64`]
+//!    per (batch, layer, pass) in canonical order**.  Every draw from the
+//!    master RNG happens in this phase, on one thread.
+//! 2. **Route (parallel)** — the flattened task list from *all* batches
+//!    and layers is routed by [`TrainConfig::threads`] workers pulling
+//!    from one shared queue (`std::thread::scope`); each task uses its
+//!    own pre-forked RNG and results are committed by task index.
+//! 3. **Commit + extrapolate (serial)** — results are sliced back per
+//!    (batch, layer) in canonical order; sampled NoC cycles scale to the
+//!    layer by edge count, then Eq. 9/10 price per-core phase times.
+//!
+//! **Determinism contract:** phases 1 and 3 are serial and phase 2's
+//! output depends only on the (task, fork) pairing, so an
+//! [`EpochReport`] is **byte-identical for a fixed seed at any thread
+//! count** — including `threads = 0` (one worker per CPU) — and equals
+//! the fully serial engine's output (`rust/tests/pass_pipeline.rs` pins
+//! both properties).
 //!
 //! The synthetic replica and its [`NeighborSampler`] are built once per
-//! [`EpochModel::run`] and shared by every measured batch (the previous
-//! implementation re-instantiated them per batch, plus a third time for
-//! the ordering report).
+//! [`EpochModel::run`] and shared by every measured batch.
 //!
 //! The backward pass reuses the forward phase structure with the
 //! sequence-estimator's per-ordering cost ratios (the "Ours" transposed
@@ -51,6 +58,7 @@ use crate::graph::partition::partition;
 use crate::graph::sampler::{NeighborSampler, SampledBatch};
 use crate::hbm::simulator::HbmSimulator;
 use crate::hbm::CHANNELS_PER_CORE;
+use crate::noc::message::SUBGRAPH_NODES;
 use crate::noc::router::RouterSt;
 use crate::util::rng::SplitMix64;
 
@@ -180,7 +188,10 @@ struct PassResult {
 }
 
 /// Route one pass block: partition into the diagonal-group schedule and
-/// drive Router-St stage by stage.
+/// drive Router-St stage by stage.  The router borrows each stage's
+/// groups straight out of the partition and plans on the stats-only sink,
+/// so no routing table — and no per-stage copy of the block messages —
+/// is ever materialized.
 fn route_pass(block: &Coo, rng: &mut SplitMix64) -> PassResult {
     let part = partition(block);
     let mut cycles = 0u64;
@@ -198,42 +209,65 @@ fn route_pass(block: &Coo, rng: &mut SplitMix64) -> PassResult {
     PassResult { cycles, edges: block.nnz(), link_utilization }
 }
 
-/// Route sampled passes on up to `threads` workers pulling from a shared
-/// work queue (pass costs are skewed — power-law blocks route for very
-/// different wave counts — so static chunking would bound wall time by
-/// the heaviest chunk).  Pass `i` always uses `rngs[i]` and results are
-/// re-assembled by pass index, so the output is independent of both the
-/// thread count and worker scheduling.
-fn route_passes(blocks: &[&Coo], rngs: Vec<SplitMix64>, threads: usize) -> Vec<PassResult> {
-    assert_eq!(blocks.len(), rngs.len());
-    if threads <= 1 || blocks.len() <= 1 {
-        let mut rngs = rngs;
-        return blocks
-            .iter()
-            .zip(rngs.iter_mut())
-            .map(|(block, rng)| route_pass(block, rng))
-            .collect();
+/// Per-layer slice of a batch plan: the sampled pass blocks plus the RNG
+/// forked for each, in canonical (row-major pass) order.
+struct LayerPlan {
+    blocks: Vec<Coo>,
+    rngs: Vec<SplitMix64>,
+}
+
+/// Everything the routing phase needs for one measured batch, produced by
+/// the serial planning phase ([`EpochModel::plan_batch`]).
+struct BatchPlan {
+    batch: SampledBatch,
+    layers: Vec<LayerPlan>,
+}
+
+impl BatchPlan {
+    /// Number of routing tasks this batch contributes to the work graph.
+    fn total_passes(&self) -> usize {
+        self.layers.iter().map(|lp| lp.blocks.len()).sum()
+    }
+}
+
+/// Flatten plans into the canonical (batch × layer × pass) task list —
+/// the order results are committed back in.
+fn work_graph(plans: &[BatchPlan]) -> Vec<(&Coo, SplitMix64)> {
+    plans
+        .iter()
+        .flat_map(|plan| plan.layers.iter())
+        .flat_map(|lp| lp.blocks.iter().zip(lp.rngs.iter().cloned()))
+        .collect()
+}
+
+/// Route a flattened task list on up to `threads` workers pulling from
+/// one shared queue (pass costs are power-law skewed — static chunking
+/// would bound wall time by the heaviest chunk).  Task `i` always uses
+/// its own pre-forked RNG and results are committed by task index, so the
+/// output is independent of thread count and worker scheduling.
+fn route_tasks(tasks: Vec<(&Coo, SplitMix64)>, threads: usize) -> Vec<PassResult> {
+    if threads <= 1 || tasks.len() <= 1 {
+        return tasks.into_iter().map(|(block, mut rng)| route_pass(block, &mut rng)).collect();
     }
     use std::sync::Mutex;
-    // Pending (pass index, block, rng) tasks; workers pop until drained.
-    // Stored reversed so pop() dispatches passes in row-major order — the
-    // first block is usually the densest (hub rows), and starting it last
+    let n_tasks = tasks.len();
+    // Pending (task index, block, rng) entries; workers pop until drained.
+    // Stored reversed so pop() dispatches tasks in canonical order — early
+    // passes are usually the densest (hub rows), and starting them last
     // would stretch the parallel tail.
-    let tasks: Mutex<Vec<(usize, &Coo, SplitMix64)>> = Mutex::new(
-        blocks
-            .iter()
-            .copied()
-            .zip(rngs)
+    let queue: Mutex<Vec<(usize, &Coo, SplitMix64)>> = Mutex::new(
+        tasks
+            .into_iter()
             .enumerate()
             .map(|(i, (block, rng))| (i, block, rng))
             .rev()
             .collect(),
     );
-    let done: Mutex<Vec<(usize, PassResult)>> = Mutex::new(Vec::with_capacity(blocks.len()));
+    let done: Mutex<Vec<(usize, PassResult)>> = Mutex::new(Vec::with_capacity(n_tasks));
     std::thread::scope(|scope| {
-        for _ in 0..threads.min(blocks.len()) {
+        for _ in 0..threads.min(n_tasks) {
             scope.spawn(|| loop {
-                let Some((i, block, mut rng)) = tasks.lock().unwrap().pop() else {
+                let Some((i, block, mut rng)) = queue.lock().unwrap().pop() else {
                     break;
                 };
                 let result = route_pass(block, &mut rng);
@@ -289,29 +323,48 @@ impl EpochModel {
         }
     }
 
-    /// Simulate one layer's forward phases across the 16 cores.
-    fn simulate_layer(&self, batch: &SampledBatch, l: usize, rng: &mut SplitMix64) -> LayerSim {
+    /// Phase 1 (serial): draw one batch, sample its layers, materialize
+    /// the sampled pass blocks, and fork one RNG per (layer, pass) in
+    /// canonical order.  *All* master-RNG consumption for the batch
+    /// happens here, so the routing phase can run on any number of
+    /// threads without touching the stream.
+    fn plan_batch(
+        &self,
+        replica: &LabeledGraph,
+        sampler: &NeighborSampler<'_>,
+        rng: &mut SplitMix64,
+    ) -> BatchPlan {
+        let ids: Vec<u32> = (0..self.cfg.batch_size)
+            .map(|_| rng.gen_range(replica.num_nodes()) as u32)
+            .collect();
+        let batch = sampler.sample(&ids, rng);
+        let layers: Vec<LayerPlan> = batch
+            .layers
+            .iter()
+            .map(|layer| {
+                // Locate and materialize only the sampled 1024×1024 pass
+                // blocks (two O(nnz) scans; unsampled blocks never copied).
+                let blocks =
+                    sample_nonempty(&layer.adj, SUBGRAPH_NODES, self.cfg.sample_passes.max(1));
+                let rngs: Vec<SplitMix64> = blocks.iter().map(|_| rng.fork()).collect();
+                LayerPlan { blocks, rngs }
+            })
+            .collect();
+        BatchPlan { batch, layers }
+    }
+
+    /// Phase 3 (serial): extrapolate one layer's routed sample to the full
+    /// layer and price the per-core phases.  `results` holds the layer's
+    /// passes in canonical order.
+    fn finish_layer(&self, batch: &SampledBatch, l: usize, results: &[PassResult]) -> LayerSim {
         let layer = &batch.layers[l];
         let sp = self.shape_params(batch, l);
         let n_src = layer.src.len();
 
-        // --- Message passing: locate and materialize the sampled
-        // 1024×1024 pass blocks in two O(nnz) scans (unsampled blocks are
-        // never copied), route them through the real Router-St
-        // (concurrently — they are independent), and extrapolate to the
-        // layer by edge count.
-        let sub = 1024usize;
-        let sampled = sample_nonempty(&layer.adj, sub, self.cfg.sample_passes.max(1));
-        let sampled_refs: Vec<&Coo> = sampled.iter().collect();
-        // One forked RNG per pass, drawn in pass order up front: routing
-        // results are then independent of worker scheduling.
-        let rngs: Vec<SplitMix64> = sampled_refs.iter().map(|_| rng.fork()).collect();
-        let results = route_passes(&sampled_refs, rngs, self.effective_threads());
-
         let sampled_cycles: u64 = results.iter().map(|r| r.cycles).sum();
         let sampled_edges: usize = results.iter().map(|r| r.edges).sum();
         let link_util: Vec<f64> =
-            results.into_iter().flat_map(|r| r.link_utilization).collect();
+            results.iter().flat_map(|r| r.link_utilization.iter().copied()).collect();
         let total_edges = layer.adj.nnz();
         let noc_cycles = if sampled_edges == 0 {
             0
@@ -354,27 +407,21 @@ impl EpochModel {
         LayerSim { cores, noc_cycles, link_utilization: link_util, edges: total_edges }
     }
 
-    /// Simulate one batch end to end (forward + transposed backward) on an
-    /// already-instantiated replica — the hot path [`EpochModel::run`]
-    /// drives with replica and sampler hoisted out of the batch loop.
-    pub fn simulate_batch_on(
-        &self,
-        replica: &LabeledGraph,
-        sampler: &NeighborSampler<'_>,
-        rng: &mut SplitMix64,
-    ) -> BatchSim {
-        let ids: Vec<u32> = (0..self.cfg.batch_size)
-            .map(|_| rng.gen_range(replica.num_nodes()) as u32)
-            .collect();
-        let batch = sampler.sample(&ids, rng);
-
+    /// Phase 3 (serial): assemble one batch's simulation from its plan and
+    /// the routed results (`results` holds exactly this batch's passes in
+    /// the plan's canonical layer-major order).
+    fn finish_batch(&self, plan: &BatchPlan, results: &[PassResult]) -> BatchSim {
+        let batch = &plan.batch;
         let mut layers = Vec::new();
         let mut fwd_time = 0.0;
         let mut bwd_time = 0.0;
         let mut ordering = Ordering::OursCoAg;
+        let mut cursor = 0usize;
         for l in 0..batch.layers.len() {
-            let sim = self.simulate_layer(&batch, l, rng);
-            let est = SequenceEstimator::new(self.shape_params(&batch, l));
+            let n_passes = plan.layers[l].blocks.len();
+            let sim = self.finish_layer(batch, l, &results[cursor..cursor + n_passes]);
+            cursor += n_passes;
+            let est = SequenceEstimator::new(self.shape_params(batch, l));
             let ord = est.best_ours();
             if l == 0 {
                 // The controller keys its programming on the outermost
@@ -392,6 +439,7 @@ impl EpochModel {
             bwd_time += fwd * bwd_ratio;
             layers.push(sim);
         }
+        assert_eq!(cursor, results.len(), "work-graph commit misaligned");
 
         // Host pipeline: sampling + PCIe feature upload (overlapped with
         // the accelerator's previous batch).
@@ -407,6 +455,21 @@ impl EpochModel {
             host_time: sampling + pcie,
             ordering,
         }
+    }
+
+    /// Simulate one batch end to end (forward + transposed backward) on an
+    /// already-instantiated replica: plan serially, route the batch's
+    /// (layer × pass) tasks on the worker pool, commit by index.
+    pub fn simulate_batch_on(
+        &self,
+        replica: &LabeledGraph,
+        sampler: &NeighborSampler<'_>,
+        rng: &mut SplitMix64,
+    ) -> BatchSim {
+        let plan = self.plan_batch(replica, sampler, rng);
+        let results =
+            route_tasks(work_graph(std::slice::from_ref(&plan)), self.effective_threads());
+        self.finish_batch(&plan, &results)
     }
 
     /// Convenience wrapper: instantiate a fresh replica for a single batch
@@ -480,13 +543,30 @@ impl EpochModel {
         }
     }
 
-    /// Full epoch report: instantiate the replica and sampler once, simulate
-    /// `measured_batches`, extrapolate.
+    /// Full epoch report: instantiate the replica and sampler once, plan
+    /// every measured batch serially, route the flattened
+    /// (batch × layer × pass) work graph on one shared queue, and commit
+    /// results by index — byte-identical at any thread count.
     pub fn run(&self, rng: &mut SplitMix64) -> EpochReport {
         let replica = self.spec.instantiate(self.cfg.replica_nodes, &mut rng.fork());
         let sampler = NeighborSampler::new(&replica.adj, self.cfg.fanouts.to_vec());
-        let sims: Vec<BatchSim> = (0..self.cfg.measured_batches.max(1))
-            .map(|_| self.simulate_batch_on(&replica, &sampler, rng))
+        // Phase 1 (serial): all master-RNG consumption, in batch order.
+        let plans: Vec<BatchPlan> = (0..self.cfg.measured_batches.max(1))
+            .map(|_| self.plan_batch(&replica, &sampler, rng))
+            .collect();
+        // Phase 2 (parallel): one shared queue over every task of the
+        // epoch — batch and layer boundaries do not serialize routing.
+        let results = route_tasks(work_graph(&plans), self.effective_threads());
+        // Phase 3 (serial): commit by index, batch by batch.
+        let mut cursor = 0usize;
+        let sims: Vec<BatchSim> = plans
+            .iter()
+            .map(|plan| {
+                let n = plan.total_passes();
+                let sim = self.finish_batch(plan, &results[cursor..cursor + n]);
+                cursor += n;
+                sim
+            })
             .collect();
         self.report_from_batches(&sims)
     }

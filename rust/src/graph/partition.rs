@@ -31,10 +31,12 @@ pub struct PartitionedSubgraph {
 }
 
 impl PartitionedSubgraph {
-    /// All block messages of one stage, grouped per diagonal — the input
-    /// shape `RouterSt::new` expects.
-    pub fn stage_groups(&self, s: usize) -> Vec<Vec<BlockMessage>> {
-        self.stages[s].clone()
+    /// All block messages of one stage, grouped per diagonal — the borrow
+    /// `RouterSt::new` consumes.  Nothing is cloned: the router walks the
+    /// partitioner's storage with cursors (the old deep-copy here was the
+    /// epoch hot path's single biggest allocation source).
+    pub fn stage_groups(&self, s: usize) -> &[Vec<BlockMessage>] {
+        &self.stages[s]
     }
 
     /// Total NoC messages after compression, across all stages.

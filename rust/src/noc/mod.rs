@@ -9,6 +9,10 @@
 //!    data packets (512-bit feature + 6-bit aggregate-node id).
 //! 3. [`routing`] — **Algorithm 1**: XOR Array, Sorter, Routing Set Filter,
 //!    Routing Table Filler, Routing Set Remover, virtual-channel stalls.
+//!    Planning is split from materialization: the allocation-free
+//!    [`routing::route_wave`] core streams each planned cycle into a
+//!    [`routing::RouteSink`] — stats-only ([`routing::StatsSink`], the hot
+//!    path) or full-table ([`routing::TableSink`]).
 //! 4. [`instruction`] — 25-bit per-core routing instructions.
 //! 5. [`router`] — the Router-St front end: start-point generation from
 //!    block-message groups (≤ 4 messages per source core per wave).
@@ -24,5 +28,8 @@ pub mod simulator;
 pub mod topology;
 
 pub use message::{BlockMessage, Packet};
-pub use routing::{MulticastRequest, RouteEntry, RoutingOutcome, RoutingTable, route_parallel_multicast};
+pub use routing::{
+    route_parallel_multicast, route_wave, MulticastRequest, RouteEntry, RouteSink,
+    RoutingOutcome, RoutingTable, StatsSink, TableSink, WaveScratch, MAX_WAVE_MESSAGES,
+};
 pub use topology::{Hypercube, DIMS, NUM_CORES};

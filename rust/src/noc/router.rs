@@ -8,43 +8,60 @@
 //!    every source core id is unique (a diagonal hits each core exactly
 //!    once), so with 4 groups a core originates at most 4 messages per
 //!    wave — exactly the switch model's send budget.
-//! 2. **Routing computation** — [`route_parallel_multicast`].
+//! 2. **Routing computation** — [`route_wave`] on the stats-only sink.
 //! 3. **Instruction Generator** — 25-bit per-core instruction streams.
+//!
+//! # Zero-copy, allocation-free draining
+//!
+//! [`RouterSt`] *borrows* the partitioner's groups — no entry or neighbor
+//! vector is cloned — and walks each block with a cursor.  Intra-core
+//! (src == dst) blocks aggregate through the Reduced Register File and
+//! never enter the network: they are dropped in bulk at construction, so
+//! the wave loop only ever sees remote traffic (the old implementation
+//! popped them one per wave iteration, allocating three `Vec`s per pop).
+//! One [`WaveScratch`] and one [`StatsSink`] are reused across all waves
+//! of the stage; per-wave hop counts are recorded by the planner as each
+//! cycle is filled, not re-scanned from a table afterwards.
 
 use crate::noc::instruction::Instruction;
-use crate::noc::message::BlockMessage;
+use crate::noc::message::{BlockMessage, MergedEntry};
 use crate::noc::routing::{
-    route_parallel_multicast, MulticastRequest, RouteEntry, RoutingError,
+    route_wave, MulticastRequest, RouteEntry, RoutingError, StatsSink, WaveScratch,
+    MAX_WAVE_MESSAGES,
 };
 use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
 use crate::util::rng::SplitMix64;
 
-/// A queue of pending merged messages for one block (one (dst, src) pair).
-#[derive(Clone, Debug)]
-struct BlockQueue {
+/// Drain cursor over one remote block's merged entries (one (dst, src)
+/// pair).  Borrows the partitioner's storage.
+#[derive(Clone, Copy, Debug)]
+struct BlockCursor<'a> {
     dst_core: u8,
     src_core: u8,
-    /// Aggregate-node ids still awaiting transmission (front = next).
-    pending: std::collections::VecDeque<u8>,
+    entries: &'a [MergedEntry],
+    /// Index of the next entry to transmit.
+    next: usize,
 }
 
-/// Statistics for one routed wave.
-#[derive(Clone, Debug)]
+/// Statistics for one routed wave.  Per-cycle hop traces live flattened
+/// in [`RouterStats::hops_per_cycle`] (wave order), not per wave.
+#[derive(Clone, Copy, Debug)]
 pub struct WaveStats {
     pub messages: usize,
     pub cycles: u32,
     pub stalls: usize,
-    /// Per-cycle hop counts (for link-utilization traces).
-    pub hops_per_cycle: Vec<usize>,
 }
 
 /// Aggregate statistics for a full aggregation stage.
 #[derive(Clone, Debug, Default)]
 pub struct RouterStats {
     pub waves: Vec<WaveStats>,
+    /// Real hops per planned cycle, concatenated across waves in wave
+    /// order — the Fig. 11(c) link-utilization numerator.
+    pub hops_per_cycle: Vec<usize>,
     pub total_messages: usize,
     pub total_cycles: u64,
-    /// Total edges represented (pre-compression).
+    /// Total edges represented (pre-compression), local traffic included.
     pub total_edges: usize,
 }
 
@@ -62,105 +79,118 @@ impl RouterStats {
         self.total_edges as f64 / self.total_messages.max(1) as f64
     }
 
+    /// Total virtual-channel stalls across all waves.
+    pub fn total_stalls(&self) -> usize {
+        self.waves.iter().map(|w| w.stalls).sum()
+    }
+
     /// Mean link utilization: hops per cycle / directed links.
     pub fn link_utilization(&self) -> f64 {
-        let hops: usize = self.waves.iter().flat_map(|w| &w.hops_per_cycle).sum();
-        let cycles: usize = self.waves.iter().map(|w| w.hops_per_cycle.len()).sum();
+        let cycles = self.hops_per_cycle.len();
         if cycles == 0 {
             0.0
         } else {
+            let hops: usize = self.hops_per_cycle.iter().sum();
             hops as f64 / (cycles * NUM_CORES * DIMS) as f64
         }
     }
 }
 
-/// The Router-St engine for one aggregation stage.
-pub struct RouterSt {
-    groups: Vec<Vec<BlockQueue>>,
+/// The Router-St engine for one aggregation stage.  Borrows the stage's
+/// diagonal groups for its lifetime.
+pub struct RouterSt<'a> {
+    /// Remote-block cursors per diagonal group (local blocks are drained
+    /// in bulk at construction and never queued).
+    groups: Vec<Vec<BlockCursor<'a>>>,
     total_edges: usize,
+    /// Reused planning state — zero allocations per wave.
+    scratch: WaveScratch,
+    /// Current wave's start/destination vectors.
+    sources: [u8; MAX_WAVE_MESSAGES],
+    dests: [u8; MAX_WAVE_MESSAGES],
 }
 
-impl RouterSt {
+impl<'a> RouterSt<'a> {
     /// Build from up-to-4 groups of block messages (one diagonal each).
     /// Within a group, source core ids (and destination core ids) must be
     /// unique — the diagonal-storage property the start-point generator
-    /// relies on.
-    pub fn new(groups: Vec<Vec<BlockMessage>>) -> Self {
+    /// relies on.  The groups are borrowed; nothing is cloned.
+    pub fn new(groups: &'a [Vec<BlockMessage>]) -> Self {
         assert!(groups.len() <= DIMS, "at most 4 diagonal groups per stage");
-        let mut total_edges = 0;
-        let qgroups = groups
-            .into_iter()
+        let mut total_edges = 0usize;
+        let qgroups: Vec<Vec<BlockCursor<'a>>> = groups
+            .iter()
             .map(|group| {
                 let mut seen_src = [false; NUM_CORES];
                 let mut seen_dst = [false; NUM_CORES];
                 group
-                    .into_iter()
-                    .map(|bm| {
+                    .iter()
+                    .filter_map(|bm| {
                         assert!(
                             !seen_src[bm.src_core as usize] && !seen_dst[bm.dst_core as usize],
                             "diagonal groups must have unique src/dst core ids"
                         );
                         seen_src[bm.src_core as usize] = true;
                         seen_dst[bm.dst_core as usize] = true;
-                        total_edges += bm.entries.iter().map(|e| e.neighbors.len()).sum::<usize>();
-                        BlockQueue {
+                        total_edges +=
+                            bm.entries.iter().map(|e| e.neighbors.len()).sum::<usize>();
+                        // Intra-core messages aggregate locally (the
+                        // Reduced Register File path) — bulk-drained here,
+                        // never queued for the network.
+                        (bm.src_core != bm.dst_core).then_some(BlockCursor {
                             dst_core: bm.dst_core,
                             src_core: bm.src_core,
-                            pending: bm.entries.iter().map(|e| e.agg_node).collect(),
-                        }
+                            entries: &bm.entries,
+                            next: 0,
+                        })
                     })
                     .collect()
             })
             .collect();
-        Self { groups: qgroups, total_edges }
+        Self {
+            groups: qgroups,
+            total_edges,
+            scratch: WaveScratch::new(),
+            sources: [0; MAX_WAVE_MESSAGES],
+            dests: [0; MAX_WAVE_MESSAGES],
+        }
     }
 
-    /// Pull the next wave's (sources, dests, agg ids); empty when drained.
-    fn next_wave(&mut self) -> (Vec<u8>, Vec<u8>, Vec<u8>) {
-        let mut src = Vec::new();
-        let mut dst = Vec::new();
-        let mut agg = Vec::new();
+    /// Start-point generator: pull at most one pending entry per block
+    /// cursor into the wave buffers.  Returns the wave's message count
+    /// (0 = stage fully drained — local traffic never occupies a slot).
+    fn next_wave(&mut self) -> usize {
+        let mut n = 0usize;
         for group in &mut self.groups {
             for q in group.iter_mut() {
-                if let Some(b) = q.pending.pop_front() {
-                    // Intra-core messages aggregate locally (the Reduced
-                    // Register File path) and never enter the network.
-                    if q.src_core != q.dst_core {
-                        src.push(q.src_core);
-                        dst.push(q.dst_core);
-                        agg.push(b);
-                    }
+                if q.next < q.entries.len() {
+                    q.next += 1;
+                    self.sources[n] = q.src_core;
+                    self.dests[n] = q.dst_core;
+                    n += 1;
                 }
             }
         }
-        (src, dst, agg)
+        n
     }
 
-    /// Route every pending message; returns stats and (optionally) the
-    /// 25-bit instruction streams per wave.
+    /// Route every pending message on the stats-only sink; one scratch and
+    /// one sink are reused across all waves, so the whole stage plans
+    /// without materializing a routing table.
     pub fn run(&mut self, rng: &mut SplitMix64) -> Result<RouterStats, RoutingError> {
         let mut stats = RouterStats { total_edges: self.total_edges, ..Default::default() };
+        let mut sink = StatsSink::new();
         loop {
-            let (src, dst, _agg) = self.next_wave();
-            if src.is_empty() {
-                // Either fully drained or only local messages remained.
-                if self.groups.iter().all(|g| g.iter().all(|q| q.pending.is_empty())) {
-                    break;
-                }
-                continue;
+            let n = self.next_wave();
+            if n == 0 {
+                break;
             }
-            let req = MulticastRequest::new(src, dst);
-            let out = route_parallel_multicast(&req, rng)?;
-            let hops_per_cycle: Vec<usize> =
-                (0..out.table.cycles.len()).map(|t| out.table.hops_in_cycle(t)).collect();
-            stats.total_messages += req.len();
-            stats.total_cycles += out.table.total_cycles() as u64;
-            stats.waves.push(WaveStats {
-                messages: req.len(),
-                cycles: out.table.total_cycles(),
-                stalls: out.table.total_stalls(),
-                hops_per_cycle,
-            });
+            sink.reset();
+            route_wave(&self.sources[..n], &self.dests[..n], rng, &mut self.scratch, &mut sink)?;
+            stats.total_messages += n;
+            stats.total_cycles += sink.cycles as u64;
+            stats.hops_per_cycle.extend_from_slice(&sink.hops_per_cycle);
+            stats.waves.push(WaveStats { messages: n, cycles: sink.cycles, stalls: sink.stalls });
         }
         Ok(stats)
     }
@@ -216,7 +246,8 @@ pub fn emit_instructions(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::noc::message::{encode_node, MergedEntry};
+    use crate::noc::message::encode_node;
+    use crate::noc::routing::route_parallel_multicast;
 
     fn diag_group(diag: u8, n_per_block: usize) -> Vec<BlockMessage> {
         (0..NUM_CORES as u8)
@@ -232,24 +263,26 @@ mod tests {
 
     #[test]
     fn start_points_respect_send_budget() {
-        let mut router = RouterSt::new(vec![
+        let groups = vec![
             diag_group(1, 3),
             diag_group(2, 3),
             diag_group(3, 3),
             diag_group(4, 3),
-        ]);
-        let (src, _dst, _aggs) = router.next_wave();
+        ];
+        let mut router = RouterSt::new(&groups);
+        let n = router.next_wave();
+        assert_eq!(n, 64);
         let mut count = [0usize; NUM_CORES];
-        for &s in &src {
+        for &s in &router.sources[..n] {
             count[s as usize] += 1;
         }
         assert!(count.iter().all(|&c| c <= 4));
-        assert_eq!(src.len(), 64);
     }
 
     #[test]
     fn run_drains_all_messages() {
-        let mut router = RouterSt::new(vec![diag_group(1, 2), diag_group(5, 2)]);
+        let groups = vec![diag_group(1, 2), diag_group(5, 2)];
+        let mut router = RouterSt::new(&groups);
         let mut rng = SplitMix64::new(7);
         let stats = router.run(&mut rng).unwrap();
         // 2 groups × 16 blocks × 2 messages, none local (diag != 0).
@@ -260,12 +293,15 @@ mod tests {
 
     #[test]
     fn local_messages_bypass_network() {
-        // Diagonal 0: src == dst for every block → nothing routed.
-        let mut router = RouterSt::new(vec![diag_group(0, 4)]);
+        // Diagonal 0: src == dst for every block → nothing routed, but the
+        // local edges still count toward the compression denominator.
+        let groups = vec![diag_group(0, 4)];
+        let mut router = RouterSt::new(&groups);
         let mut rng = SplitMix64::new(8);
         let stats = router.run(&mut rng).unwrap();
         assert_eq!(stats.total_messages, 0);
         assert!(stats.waves.is_empty());
+        assert_eq!(stats.total_edges, 64);
     }
 
     #[test]
@@ -273,7 +309,31 @@ mod tests {
     fn duplicate_src_in_group_rejected() {
         let mut g = diag_group(1, 1);
         g[1].src_core = g[0].src_core;
-        RouterSt::new(vec![g]);
+        RouterSt::new(&[g]);
+    }
+
+    #[test]
+    fn hop_trace_spans_every_wave_cycle() {
+        // The flattened hop trace is recorded as cycles are planned; its
+        // length must equal the summed wave cycle counts exactly.
+        let groups = vec![diag_group(1, 3), diag_group(2, 3)];
+        let mut router = RouterSt::new(&groups);
+        let stats = router.run(&mut SplitMix64::new(12)).unwrap();
+        let cycle_sum: usize = stats.waves.iter().map(|w| w.cycles as usize).sum();
+        assert_eq!(stats.hops_per_cycle.len(), cycle_sum);
+        assert_eq!(cycle_sum as u64, stats.total_cycles);
+        assert!(stats.link_utilization() > 0.0);
+        assert!(stats.link_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn borrowed_groups_left_untouched() {
+        // RouterSt must not consume or reorder the partitioner's storage.
+        let groups = vec![diag_group(3, 2)];
+        let before = groups.clone();
+        let mut router = RouterSt::new(&groups);
+        router.run(&mut SplitMix64::new(13)).unwrap();
+        assert_eq!(groups, before);
     }
 
     #[test]
@@ -305,7 +365,8 @@ mod tests {
             (encode_node(2, 2), encode_node(3, 1)),
         ])
         .unwrap();
-        let mut router = RouterSt::new(vec![vec![bm]]);
+        let groups = vec![vec![bm]];
+        let mut router = RouterSt::new(&groups);
         let mut rng = SplitMix64::new(10);
         let stats = router.run(&mut rng).unwrap();
         assert_eq!(stats.total_messages, 2);

@@ -16,6 +16,18 @@
 //! The implementation follows the paper's hardware blocks: XOR Array →
 //! Sorter → Routing Set Filter → Routing Table Filler → Routing Set
 //! Remover, iterated until `Step_Seq` is all-zero.
+//!
+//! # Planning vs. materialization
+//!
+//! The planner ([`route_wave`]) is split from what is *kept* of the plan:
+//! a [`RouteSink`] receives each planned cycle as a borrowed slice, so the
+//! hot path ([`StatsSink`]: cycle/stall totals and per-cycle hop counts —
+//! all the epoch model consumes) never heap-allocates, while
+//! [`TableSink`] still materializes the full per-cycle [`RoutingTable`]
+//! for instruction emission, replay and the constraint-checking tests.
+//! All working state lives in a reusable fixed-size [`WaveScratch`].
+//! Sinks never influence planning — in particular the RNG draw sequence —
+//! so every sink observes the identical schedule for a given (wave, seed).
 
 use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
 use crate::util::rng::SplitMix64;
@@ -25,6 +37,10 @@ pub const MAX_RECV_PER_CYCLE: usize = DIMS;
 /// Max messages originating from one core per wave (the start-point
 /// generator unrolls the start vector so no core id occurs more than 4×).
 pub const MAX_SEND_PER_CORE: usize = DIMS;
+/// Hard cap on messages per wave: 4 groups × 16 sources (`Fuse4`).  The
+/// planner's scratch buffers are sized to this bound — that fixed sizing
+/// is what makes the wave loop allocation-free.
+pub const MAX_WAVE_MESSAGES: usize = NUM_CORES * MAX_SEND_PER_CORE;
 
 /// One multicast wave: parallel (source, destination) pairs.
 #[derive(Clone, Debug)]
@@ -36,6 +52,10 @@ pub struct MulticastRequest {
 impl MulticastRequest {
     pub fn new(sources: Vec<u8>, dests: Vec<u8>) -> Self {
         assert_eq!(sources.len(), dests.len());
+        assert!(
+            sources.len() <= MAX_WAVE_MESSAGES,
+            "a wave carries at most {MAX_WAVE_MESSAGES} messages (4 groups x 16)"
+        );
         assert!(
             sources.iter().chain(&dests).all(|&c| (c as usize) < NUM_CORES),
             "core ids must be < 16"
@@ -65,7 +85,7 @@ pub enum RouteEntry {
 
 /// The computed routing table: `cycles[t][i]` is message `i`'s action in
 /// cycle `t` (Fig. 6(b)'s 2-D table, one column per message).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RoutingTable {
     pub cycles: Vec<Vec<RouteEntry>>,
     /// Cycle (1-based) at which each message reached its destination;
@@ -183,42 +203,191 @@ impl PathSet {
     }
 }
 
-/// Run Algorithm 1 on one wave.
+/// Consumer of the planner's per-cycle output.
 ///
-/// `rng` drives the Routing Table Filler's random single-step path
-/// selection (line 8, `Rand_sel`).
-pub fn route_parallel_multicast(
-    req: &MulticastRequest,
-    rng: &mut SplitMix64,
-) -> Result<RoutingOutcome, RoutingError> {
-    let p = req.len();
-    // Routing_point ← A (current position of each message).
-    let mut pos: Vec<u8> = req.sources.clone();
-    let mut arrival = vec![0u32; p];
-    let mut table = RoutingTable { cycles: Vec::new(), arrival_cycle: Vec::new() };
-    // Reused per-cycle scratch (no allocation inside the loop).  Only
-    // undelivered messages are scanned — routing tails have few survivors.
-    let mut steps = vec![0u32; p];
-    let mut path_set = vec![PathSet::default(); p];
-    let mut order: Vec<u32> = Vec::with_capacity(p);
-    let mut active: Vec<u32> =
-        (0..p as u32).filter(|&i| pos[i as usize] != req.dests[i as usize]).collect();
+/// [`route_wave`] *plans*; the sink decides what is *kept*: [`StatsSink`]
+/// records only aggregate counts (the epoch-model hot path — nothing is
+/// materialized), [`TableSink`] keeps the full per-cycle [`RoutingTable`]
+/// for instruction emission, replay and the constraint checkers.  Sinks
+/// never influence planning, so every sink observes the exact same
+/// schedule — cycle for cycle — for a given (wave, seed).
+pub trait RouteSink {
+    /// One planned cycle: `entries[i]` is message `i`'s action.  `hops`
+    /// and `stalls` are the Hop/Stall entry counts the planner already
+    /// tracked while filling the cycle, so stats consumers never re-scan
+    /// `entries`.
+    fn record_cycle(&mut self, entries: &[RouteEntry], hops: usize, stalls: usize);
+    /// Wave complete: the 1-based arrival cycle per message (0 = started
+    /// at its destination) and the final positions (always equal to the
+    /// destination vector on success).
+    fn finish(&mut self, arrival_cycle: &[u32], positions: &[u8]);
+}
 
+/// Stats-only sink: cycle/stall totals plus the per-cycle hop counts that
+/// feed link-utilization traces.  [`StatsSink::reset`] recycles the hop
+/// buffer, so a sink reused across waves allocates only on high-water
+/// growth.
+#[derive(Clone, Debug, Default)]
+pub struct StatsSink {
+    /// Cycles planned for the wave.
+    pub cycles: u32,
+    /// Virtual-channel stall ("×") entries across the wave.
+    pub stalls: usize,
+    /// Real hops taken per cycle (the link-utilization numerator).
+    pub hops_per_cycle: Vec<usize>,
+}
+
+impl StatsSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear for the next wave, keeping the hop buffer's capacity.
+    pub fn reset(&mut self) {
+        self.cycles = 0;
+        self.stalls = 0;
+        self.hops_per_cycle.clear();
+    }
+}
+
+impl RouteSink for StatsSink {
+    fn record_cycle(&mut self, _entries: &[RouteEntry], hops: usize, stalls: usize) {
+        self.cycles += 1;
+        self.stalls += stalls;
+        self.hops_per_cycle.push(hops);
+    }
+
+    fn finish(&mut self, _arrival_cycle: &[u32], _positions: &[u8]) {}
+}
+
+/// Full-table sink: materializes the per-cycle [`RoutingTable`]
+/// (Fig. 6(b)) for [`crate::noc::router::emit_instructions`],
+/// [`crate::noc::simulator::replay`] and the constraint-checking tests.
+#[derive(Clone, Debug, Default)]
+pub struct TableSink {
+    pub table: RoutingTable,
+}
+
+impl TableSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RouteSink for TableSink {
+    fn record_cycle(&mut self, entries: &[RouteEntry], _hops: usize, _stalls: usize) {
+        self.table.cycles.push(entries.to_vec());
+    }
+
+    fn finish(&mut self, arrival_cycle: &[u32], _positions: &[u8]) {
+        self.table.arrival_cycle = arrival_cycle.to_vec();
+    }
+}
+
+/// Reusable planning state for [`route_wave`]: fixed-size buffers for one
+/// wave of up to [`MAX_WAVE_MESSAGES`] messages.
+///
+/// Constructing one is cheap (plain arrays, no heap), but hot paths keep
+/// a single instance alive across every wave of a stage so the planner
+/// performs **zero** allocations per wave (`RouterSt::run` does exactly
+/// this).  Scratch state is fully re-initialized per wave — reuse never
+/// leaks state between waves.
+#[derive(Clone, Debug)]
+pub struct WaveScratch {
+    /// Routing point (current node) of each message.
+    pos: [u8; MAX_WAVE_MESSAGES],
+    /// Remaining Hamming distance per message (0 = delivered).
+    steps: [u32; MAX_WAVE_MESSAGES],
+    /// Single-step candidate sets (the XOR Array output).
+    path_set: [PathSet; MAX_WAVE_MESSAGES],
+    /// 1-based arrival cycle per message (0 = started at destination).
+    arrival: [u32; MAX_WAVE_MESSAGES],
+    /// Per-cycle route entries handed to the sink.
+    cycle: [RouteEntry; MAX_WAVE_MESSAGES],
+    /// Counting-sort output: active messages, shortest step first.
+    order: [u32; MAX_WAVE_MESSAGES],
+    /// Undelivered message indices (compacted in place as messages land).
+    active: [u32; MAX_WAVE_MESSAGES],
+    active_len: usize,
+}
+
+impl WaveScratch {
+    pub fn new() -> Self {
+        Self {
+            pos: [0; MAX_WAVE_MESSAGES],
+            steps: [0; MAX_WAVE_MESSAGES],
+            path_set: [PathSet::default(); MAX_WAVE_MESSAGES],
+            arrival: [0; MAX_WAVE_MESSAGES],
+            cycle: [RouteEntry::Done; MAX_WAVE_MESSAGES],
+            order: [0; MAX_WAVE_MESSAGES],
+            active: [0; MAX_WAVE_MESSAGES],
+            active_len: 0,
+        }
+    }
+}
+
+impl Default for WaveScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run Algorithm 1 on one wave, streaming the plan into `sink`.
+///
+/// This is the allocation-free core: all working state lives in `scratch`
+/// and each planned cycle reaches the sink as a borrowed slice.  `rng`
+/// drives the Routing Table Filler's random single-step path selection
+/// (line 8, `Rand_sel`); the draw sequence depends only on the wave and
+/// seed, never on the sink, so a [`StatsSink`] run and a [`TableSink`]
+/// run of the same wave agree cycle for cycle.
+pub fn route_wave<S: RouteSink>(
+    sources: &[u8],
+    dests: &[u8],
+    rng: &mut SplitMix64,
+    scratch: &mut WaveScratch,
+    sink: &mut S,
+) -> Result<(), RoutingError> {
+    assert_eq!(sources.len(), dests.len());
+    let p = sources.len();
+    assert!(
+        p <= MAX_WAVE_MESSAGES,
+        "a wave carries at most {MAX_WAVE_MESSAGES} messages (4 groups x 16)"
+    );
+    debug_assert!(
+        sources.iter().chain(dests).all(|&c| (c as usize) < NUM_CORES),
+        "core ids must be < 16"
+    );
+
+    // Routing_point ← A; messages already home are never activated.
+    scratch.active_len = 0;
+    for i in 0..p {
+        scratch.pos[i] = sources[i];
+        scratch.steps[i] = 0;
+        scratch.arrival[i] = 0;
+        if sources[i] != dests[i] {
+            scratch.active[scratch.active_len] = i as u32;
+            scratch.active_len += 1;
+        }
+    }
+
+    let mut planned = 0u32;
     // while !zero_all(Step_Seq)
     loop {
-        // XOR_Array: per-message single-step path set + step count.
-        for &i in &active {
-            let i = i as usize;
-            steps[i] = Hypercube::distance(pos[i], req.dests[i]);
-            path_set[i] = PathSet::from_xor(pos[i], req.dests[i]);
+        // XOR_Array: per-message single-step path set + step count.  Only
+        // undelivered messages are scanned — routing tails have few
+        // survivors.
+        for &iu in &scratch.active[..scratch.active_len] {
+            let i = iu as usize;
+            scratch.steps[i] = Hypercube::distance(scratch.pos[i], dests[i]);
+            scratch.path_set[i] = PathSet::from_xor(scratch.pos[i], dests[i]);
         }
-        if active.is_empty() {
+        if scratch.active_len == 0 {
             break;
         }
-        if table.cycles.len() as u32 >= MAX_CYCLES {
+        if planned >= MAX_CYCLES {
             return Err(RoutingError {
                 max_cycles: MAX_CYCLES,
-                undelivered: steps.iter().filter(|&&s| s > 0).count(),
+                undelivered: scratch.active_len,
             });
         }
 
@@ -226,42 +395,46 @@ pub fn route_parallel_multicast(
         // while some candidate node is named more than MAX_RECV times,
         // remove it — preferentially from messages with the most
         // alternatives (priority re-balanced after each removal).
-        set_filter(&mut path_set, &active);
+        set_filter(&mut scratch.path_set, &scratch.active[..scratch.active_len]);
 
         // Sorter: indices of active messages, shortest step first (they
         // release channels soonest; long-step messages have more
         // alternative paths and thus lower priority).  Counting sort over
         // the 1..=DIMS step values.
-        order.clear();
+        let mut order_len = 0usize;
         for s in 1..=DIMS as u32 {
-            for &i in &active {
-                if steps[i as usize] == s {
-                    order.push(i);
+            for &iu in &scratch.active[..scratch.active_len] {
+                if scratch.steps[iu as usize] == s {
+                    scratch.order[order_len] = iu;
+                    order_len += 1;
                 }
             }
         }
 
         // Routing Table Filler + Routing Set Remover.
-        let mut cycle: Vec<RouteEntry> =
-            steps.iter().map(|&s| if s == 0 { RouteEntry::Done } else { RouteEntry::Stall }).collect();
+        for i in 0..p {
+            scratch.cycle[i] =
+                if scratch.steps[i] == 0 { RouteEntry::Done } else { RouteEntry::Stall };
+        }
         let mut recv_count = [0u8; NUM_CORES];
         // Directed-link occupancy: (from, dim) — constraint 2 plus the
         // one-message-per-output-channel switch rule.
         let mut link_used = [false; NUM_CORES * DIMS];
+        let mut hops = 0usize;
 
-        for &i in &order {
-            let i = i as usize;
-            let from = pos[i];
+        for &iu in &scratch.order[..order_len] {
+            let i = iu as usize;
+            let from = scratch.pos[i];
             // Drop candidates that violate constraints after earlier fills.
-            path_set[i].retain(|cand| {
+            scratch.path_set[i].retain(|cand| {
                 let dim = (from ^ cand).trailing_zeros() as usize;
                 recv_count[cand as usize] < MAX_RECV_PER_CYCLE as u8
                     && !link_used[Hypercube::link_index(from, dim)]
             });
-            let set = path_set[i].as_slice();
+            let set = scratch.path_set[i].as_slice();
             if set.is_empty() {
-                // "×": park in the virtual channel until the next cycle.
-                cycle[i] = RouteEntry::Stall;
+                // "×": already initialized to Stall — park in the virtual
+                // channel until the next cycle.
                 continue;
             }
             // Rand_sel: uniform choice among surviving single-step paths.
@@ -269,8 +442,14 @@ pub fn route_parallel_multicast(
             let dim = (from ^ choice).trailing_zeros() as usize;
             link_used[Hypercube::link_index(from, dim)] = true;
             recv_count[choice as usize] += 1;
-            cycle[i] = RouteEntry::Hop(choice);
+            scratch.cycle[i] = RouteEntry::Hop(choice);
+            hops += 1;
         }
+
+        // Every active message either hopped or stalled this cycle.
+        let stalls = scratch.active_len - hops;
+        planned += 1;
+        sink.record_cycle(&scratch.cycle[..p], hops, stalls);
 
         // Generate_rp: advance routing points; record arrivals and retire
         // delivered messages from the active list.  Delivered messages must
@@ -278,24 +457,46 @@ pub fn route_parallel_multicast(
         // from `steps`, and the XOR Array only refreshes *active* messages,
         // so a stale nonzero count would record them as Stall ("×") instead
         // of Done in every later cycle, inflating `total_stalls()`.
-        let t = table.cycles.len() as u32 + 1;
-        active.retain(|&iu| {
+        let mut w = 0usize;
+        for r in 0..scratch.active_len {
+            let iu = scratch.active[r];
             let i = iu as usize;
-            if let RouteEntry::Hop(next) = cycle[i] {
-                pos[i] = next;
-                if pos[i] == req.dests[i] {
-                    arrival[i] = t;
-                    steps[i] = 0;
-                    return false;
+            let mut delivered = false;
+            if let RouteEntry::Hop(next) = scratch.cycle[i] {
+                scratch.pos[i] = next;
+                if next == dests[i] {
+                    scratch.arrival[i] = planned;
+                    scratch.steps[i] = 0;
+                    delivered = true;
                 }
             }
-            true
-        });
-        table.cycles.push(cycle);
+            if !delivered {
+                scratch.active[w] = iu;
+                w += 1;
+            }
+        }
+        scratch.active_len = w;
     }
 
-    table.arrival_cycle = arrival;
-    Ok(RoutingOutcome { table, positions: pos })
+    sink.finish(&scratch.arrival[..p], &scratch.pos[..p]);
+    Ok(())
+}
+
+/// Run Algorithm 1 on one wave and materialize the full routing table.
+///
+/// Thin wrapper over [`route_wave`] with a [`TableSink`].  Hot paths that
+/// only consume counts should call [`route_wave`] with a [`StatsSink`]
+/// and a reused [`WaveScratch`] instead — same schedule, no table, no
+/// per-wave allocation (see `RouterSt::run` and `bench_routing`).
+pub fn route_parallel_multicast(
+    req: &MulticastRequest,
+    rng: &mut SplitMix64,
+) -> Result<RoutingOutcome, RoutingError> {
+    let p = req.len();
+    let mut scratch = WaveScratch::new();
+    let mut sink = TableSink::new();
+    route_wave(&req.sources, &req.dests, rng, &mut scratch, &mut sink)?;
+    Ok(RoutingOutcome { table: sink.table, positions: scratch.pos[..p].to_vec() })
 }
 
 /// The Routing Set Filter: enforce that no candidate node is targeted by
@@ -495,6 +696,73 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn random_fuse4(rng: &mut SplitMix64) -> MulticastRequest {
+        let mut sources = Vec::with_capacity(MAX_WAVE_MESSAGES);
+        for _ in 0..4 {
+            sources.extend(rng.permutation(16).iter().map(|&x| x as u8));
+        }
+        let dests: Vec<u8> =
+            (0..MAX_WAVE_MESSAGES).map(|_| rng.gen_range(16) as u8).collect();
+        MulticastRequest::new(sources, dests)
+    }
+
+    // (Stats-sink vs table-sink agreement is property-tested over random
+    // waves in `rust/tests/prop_routing.rs`.)
+
+    #[test]
+    fn scratch_reuse_is_stateless_across_waves() {
+        // Routing wave B on a scratch that just planned wave A must equal
+        // routing B on a fresh scratch.
+        let mut rng = SplitMix64::new(22);
+        let wave_a = random_fuse4(&mut rng);
+        let wave_b = random_fuse4(&mut rng);
+        let seed = rng.next_u64();
+
+        let mut reused = WaveScratch::new();
+        let mut sink_a = TableSink::new();
+        route_wave(
+            &wave_a.sources,
+            &wave_a.dests,
+            &mut SplitMix64::new(seed ^ 1),
+            &mut reused,
+            &mut sink_a,
+        )
+        .unwrap();
+        let mut sink_reused = TableSink::new();
+        route_wave(
+            &wave_b.sources,
+            &wave_b.dests,
+            &mut SplitMix64::new(seed),
+            &mut reused,
+            &mut sink_reused,
+        )
+        .unwrap();
+
+        let mut fresh = WaveScratch::new();
+        let mut sink_fresh = TableSink::new();
+        route_wave(
+            &wave_b.sources,
+            &wave_b.dests,
+            &mut SplitMix64::new(seed),
+            &mut fresh,
+            &mut sink_fresh,
+        )
+        .unwrap();
+
+        assert_eq!(sink_reused.table.cycles, sink_fresh.table.cycles);
+        assert_eq!(sink_reused.table.arrival_cycle, sink_fresh.table.arrival_cycle);
+    }
+
+    #[test]
+    fn empty_wave_finishes_immediately() {
+        let mut scratch = WaveScratch::new();
+        let mut sink = StatsSink::new();
+        route_wave(&[], &[], &mut SplitMix64::new(1), &mut scratch, &mut sink).unwrap();
+        assert_eq!(sink.cycles, 0);
+        assert_eq!(sink.stalls, 0);
+        assert!(sink.hops_per_cycle.is_empty());
     }
 
     #[test]

@@ -5,6 +5,7 @@ use gcn_noc::coordinator::epoch::{EpochModel, EpochReport, ModelKind, TrainConfi
 use gcn_noc::graph::blocks::BlockGrid;
 use gcn_noc::graph::coo::Coo;
 use gcn_noc::graph::datasets::by_name;
+use gcn_noc::graph::sampler::NeighborSampler;
 use gcn_noc::util::proptest::PropRunner;
 use gcn_noc::util::rng::SplitMix64;
 
@@ -34,6 +35,28 @@ fn epoch_report_identical_across_thread_counts() {
         let rep = run(threads, 42);
         assert_eq!(base, rep, "threads={threads} diverged from single-thread run");
     }
+}
+
+#[test]
+fn work_graph_matches_serial_batch_composition() {
+    // The flattened (batch × layer × pass) engine must agree exactly with
+    // driving each batch through `simulate_batch_on` one at a time on the
+    // same master RNG stream — i.e. batch-level parallelism changes wall
+    // time only, never the report.
+    let spec = by_name("Flickr").unwrap();
+    let config = cfg(8);
+    let model = EpochModel::new(spec, ModelKind::Gcn, config);
+
+    let mut rng = SplitMix64::new(99);
+    let replica = spec.instantiate(config.replica_nodes, &mut rng.fork());
+    let sampler = NeighborSampler::new(&replica.adj, config.fanouts.to_vec());
+    let sims: Vec<_> = (0..config.measured_batches)
+        .map(|_| model.simulate_batch_on(&replica, &sampler, &mut rng))
+        .collect();
+    let serial = model.report_from_batches(&sims);
+
+    let flattened = model.run(&mut SplitMix64::new(99));
+    assert_eq!(serial, flattened);
 }
 
 #[test]

@@ -3,7 +3,8 @@
 //! wave the start-point generator can emit.
 
 use gcn_noc::noc::routing::{
-    route_parallel_multicast, MulticastRequest, RouteEntry, MAX_RECV_PER_CYCLE,
+    route_parallel_multicast, route_wave, MulticastRequest, RouteEntry, StatsSink, WaveScratch,
+    MAX_RECV_PER_CYCLE,
 };
 use gcn_noc::noc::simulator::{replay, LANES};
 use gcn_noc::noc::topology::{Hypercube, NUM_CORES};
@@ -156,6 +157,48 @@ fn prop_hot_spot_waves_still_route() {
             return Err(format!(
                 "hot-spot wave finished in {} cycles < receive-limit bound {min_cycles}",
                 out.table.total_cycles()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stats_sink_agrees_with_table_sink() {
+    // The RouteSink split must not change planning: for any wave and
+    // seed, the allocation-free stats path (route_wave + StatsSink with a
+    // reused scratch) and the table-materializing path report identical
+    // cycle, stall and per-cycle hop counts.
+    let mut scratch = WaveScratch::new();
+    let mut sink = StatsSink::new();
+    PropRunner::new(0xA150_0007, 200).run("sink agreement", |rng| {
+        let req = gen_wave(rng);
+        let seed = rng.next_u64();
+        let out = route_parallel_multicast(&req, &mut SplitMix64::new(seed))
+            .map_err(|e| e.to_string())?;
+        sink.reset();
+        route_wave(&req.sources, &req.dests, &mut SplitMix64::new(seed), &mut scratch, &mut sink)
+            .map_err(|e| e.to_string())?;
+        if sink.cycles != out.table.total_cycles() {
+            return Err(format!(
+                "cycles diverged: stats {} vs table {}",
+                sink.cycles,
+                out.table.total_cycles()
+            ));
+        }
+        if sink.stalls != out.table.total_stalls() {
+            return Err(format!(
+                "stalls diverged: stats {} vs table {}",
+                sink.stalls,
+                out.table.total_stalls()
+            ));
+        }
+        let hops: Vec<usize> =
+            (0..out.table.cycles.len()).map(|t| out.table.hops_in_cycle(t)).collect();
+        if sink.hops_per_cycle != hops {
+            return Err(format!(
+                "hop trace diverged: stats {:?} vs table {:?}",
+                sink.hops_per_cycle, hops
             ));
         }
         Ok(())
