@@ -7,11 +7,11 @@
 //! 1. generate a small labeled graph,
 //! 2. route one multicast wave over the 4-D hypercube (Algorithm 1),
 //! 3. run the epoch model's parallel pass pipeline (Table 2's engine),
-//! 4. run one PJRT training step through the AOT-compiled GCN artifact
-//!    (skipped gracefully when no artifacts / PJRT runtime are available),
+//! 4. run a short training burst on the native compute backend (pure
+//!    Rust, works on any host — `--backend pjrt` on the CLI swaps in the
+//!    AOT-compiled artifacts instead),
 //! 5. ask the sequence estimator which Table-1 ordering to use.
 
-use gcn_noc::config::artifact_dir;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind, TrainConfig};
 use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
 use gcn_noc::graph::datasets::by_name;
@@ -63,17 +63,17 @@ fn main() -> anyhow::Result<()> {
         rep.link_utilization_trace.len()
     );
 
-    // 4. A short PJRT-backed training run (the full three-layer stack) —
-    // needs `make artifacts` plus a PJRT-enabled build; skipped otherwise.
+    // 4. A short training run on the native backend (the full
+    // three-layer stack, no artifacts needed).
     let cfg = TrainerConfig { steps: 20, log_every: 5, ..Default::default() };
-    match Trainer::new(&graph, cfg, artifact_dir(None)) {
-        Ok(mut trainer) => {
-            let curve = trainer.train()?;
-            let (head, tail) = curve.head_tail_means(5);
-            println!("loss: {head:.3} -> {tail:.3} over {} steps", curve.len());
-        }
-        Err(e) => println!("skipping PJRT training step ({e})"),
-    }
+    let mut trainer = Trainer::new(&graph, cfg)?;
+    let curve = trainer.train()?;
+    let (head, tail) = curve.head_tail_means(5);
+    println!(
+        "training ({}): loss {head:.3} -> {tail:.3} over {} steps",
+        trainer.backend_name(),
+        curve.len()
+    );
 
     // 5. Which ordering would the controller program for this shape?
     let est = SequenceEstimator::new(ShapeParams {

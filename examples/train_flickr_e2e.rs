@@ -2,13 +2,15 @@
 //!
 //! Trains a two-layer GCN on a Flickr-statistics synthetic graph for a
 //! few hundred mini-batch steps, entirely through the three-layer stack:
-//! Rust samples/stages/coordinates, PJRT executes the AOT-compiled
-//! JAX+Pallas train step, the Weight Bank holds the global parameters.
-//! Logs the loss curve, evaluates accuracy before/after, and writes
-//! `flickr_loss_curve.csv`.
+//! Rust samples/stages/coordinates and the native compute backend runs
+//! the fused train step (the paper's transpose-free backward) with the
+//! Weight Bank holding the global parameters.  Works on any host — set
+//! `E2E_BACKEND=pjrt` (after `make artifacts`) to route the same run
+//! through the AOT-compiled artifacts instead.  Logs the loss curve,
+//! evaluates accuracy before/after, and writes `flickr_loss_curve.csv`.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_flickr_e2e
+//! cargo run --release --example train_flickr_e2e
 //! ```
 
 use gcn_noc::config::artifact_dir;
@@ -37,9 +39,11 @@ fn main() -> anyhow::Result<()> {
         log_every: 25,
         ..Default::default()
     };
-    let dir = artifact_dir(None);
-    let mut trainer = Trainer::new(&graph, cfg, &dir)?;
-    eprintln!("compiled artifact: {}", trainer.artifact());
+    let mut trainer = match std::env::var("E2E_BACKEND").as_deref() {
+        Ok("pjrt") => Trainer::pjrt(&graph, cfg, artifact_dir(None))?,
+        _ => Trainer::new(&graph, cfg)?,
+    };
+    eprintln!("backend: {} | artifact: {}", trainer.backend_name(), trainer.artifact());
 
     let (loss0, acc0) = trainer.evaluate(512)?;
     println!("before: eval loss {loss0:.4}, accuracy {:.1}%", acc0 * 100.0);

@@ -2,6 +2,10 @@
 //! path breakdown: sampling, staging (padding + normalization), PJRT
 //! execution.  The §Perf target is staging overhead < 20 % of the PJRT
 //! step (EXPERIMENTS.md records before/after).
+//!
+//! This bench measures the **PJRT backend** specifically (skips without
+//! built artifacts); `bench_train` measures the native backend on any
+//! host.
 
 mod common;
 
@@ -75,7 +79,7 @@ fn main() {
 
     banner("full trainer step (sample+stage+execute+commit)");
     let cfg = TrainerConfig { steps: 30, log_every: 0, ..Default::default() };
-    let mut trainer = Trainer::new(&graph, cfg, &dir).unwrap();
+    let mut trainer = Trainer::pjrt(&graph, cfg, &dir).unwrap();
     let curve = trainer.train().unwrap();
     println!(
         "mean step: {} | artifact {}",

@@ -1,0 +1,122 @@
+//! **Native train-step bench** — steps/sec of the backend-agnostic
+//! training engine at 1/2/4/8 matmul workers, on both built-in artifact
+//! shapes ("small" and "base").  Writes a `BENCH_train.json` baseline so
+//! the training hot path is machine-comparable across PRs, and asserts
+//! the loss curve is bit-identical across the thread sweep (the tiled
+//! matmul determinism contract).
+//!
+//! Runs on any host — this is the bench that replaced the PJRT-only
+//! dead path (`bench_runtime` still covers the PJRT backend when
+//! artifacts exist).
+
+mod common;
+
+use common::{banner, fmt_time, time_it, trials};
+use gcn_noc::graph::generate::community_graph;
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::util::rng::SplitMix64;
+
+struct SweepPoint {
+    threads: usize,
+    steps_per_sec: f64,
+}
+
+/// Train `steps` steps at each worker count, asserting the loss curve is
+/// bit-identical across the sweep; returns the measured steps/sec points.
+fn sweep(
+    graph: &gcn_noc::graph::generate::LabeledGraph,
+    tag: &str,
+    batch: usize,
+    steps: usize,
+) -> Vec<SweepPoint> {
+    let mut points = Vec::new();
+    let mut first_bits: Option<Vec<u32>> = None;
+    for &threads in &[1usize, 2, 4, 8] {
+        let cfg = TrainerConfig {
+            artifact_tag: tag.into(),
+            batch_size: batch,
+            steps,
+            lr: 0.05,
+            seed: 0xB347,
+            log_every: 0,
+            threads,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(graph, cfg).unwrap();
+        let mut curve = None;
+        let t = time_it(0, 1, || {
+            curve = Some(trainer.train().unwrap());
+        });
+        let curve = curve.expect("trained once");
+        assert!(curve.records.iter().all(|r| r.loss.is_finite()));
+        let bits: Vec<u32> = curve.records.iter().map(|r| r.loss.to_bits()).collect();
+        match &first_bits {
+            None => first_bits = Some(bits),
+            Some(fb) => assert_eq!(
+                &bits, fb,
+                "{tag}: loss curve diverged at {threads} threads (determinism contract)"
+            ),
+        }
+        let sps = curve.len() as f64 / t.max(1e-12);
+        println!(
+            "{tag}: threads={threads}  {} / step  ({sps:.1} steps/s)",
+            fmt_time(curve.mean_step_seconds())
+        );
+        points.push(SweepPoint { threads, steps_per_sec: sps });
+    }
+    points
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(0xB347);
+    // One learnable replica serves both shape tags (features/classes are
+    // clipped/folded by staging to each tag's d and c).
+    let graph = community_graph(4096, 12.0, 2.3, 256, 41, 0.6, &mut rng);
+
+    banner("native train step: small shapes (b=64, n2=1024, d=64, h=32)");
+    let small_steps = trials(30);
+    let small = sweep(&graph, "small", 32, small_steps);
+
+    banner("native train step: base shapes (b=128, n2=2048, d=256, h=256)");
+    let base_steps = trials(6);
+    let base = sweep(&graph, "base", 64, base_steps);
+
+    let speedup = |pts: &[SweepPoint]| pts[pts.len() - 1].steps_per_sec / pts[0].steps_per_sec;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "\nspeedup 1 -> 8 workers: small {:.2}x, base {:.2}x on a {cores}-core host \
+         (loss curves bit-identical across the sweep)",
+        speedup(&small),
+        speedup(&base),
+    );
+
+    // --- Baseline artifact. ---
+    let fmt_points = |pts: &[SweepPoint]| -> String {
+        pts.iter()
+            .map(|p| {
+                format!(
+                    "      {{\"threads\": {}, \"steps_per_sec\": {:.3}}}",
+                    p.threads, p.steps_per_sec
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n")
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"bench_train\",\n  \"host_cores\": {cores},\n  \
+         \"smoke\": {},\n  \"configs\": [\n    {{\"tag\": \"small\", \"batch\": 32, \
+         \"steps\": {small_steps}, \"sweep\": [\n{}\n    ]}},\n    \
+         {{\"tag\": \"base\", \"batch\": 64, \"steps\": {base_steps}, \"sweep\": [\n{}\n    ]}}\n  ],\n  \
+         \"speedup_1_to_8_small\": {:.3},\n  \"speedup_1_to_8_base\": {:.3}\n}}\n",
+        common::smoke(),
+        fmt_points(&small),
+        fmt_points(&base),
+        speedup(&small),
+        speedup(&base),
+    );
+    let path = "BENCH_train.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nbaseline written to {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

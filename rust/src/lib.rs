@@ -5,9 +5,11 @@
 //!
 //! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
 //!
-//! - [`runtime`] loads HLO-text artifacts AOT-compiled from JAX/Pallas
-//!   (`python/compile/`) and executes them on a PJRT CPU client — the
-//!   *numerical* GCN/GraphSAGE training computation.
+//! - [`runtime`] is the *numerical* GCN/GraphSAGE training computation
+//!   behind the backend-agnostic `ComputeBackend` trait: the default
+//!   pure-Rust `NativeBackend` (transpose-free backward on blocked/tiled
+//!   parallel matmuls, any host), or HLO-text artifacts AOT-compiled from
+//!   JAX/Pallas (`python/compile/`) executed on a PJRT CPU client.
 //! - Everything else models the paper's *hardware*: the 16-core accelerator
 //!   ([`core_model`]), its NUMA HBM subsystem ([`hbm`]), the 4-D hypercube
 //!   on-chip network with the parallel multicast routing algorithm

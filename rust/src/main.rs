@@ -63,10 +63,12 @@ fn run(args: &Args) -> anyhow::Result<()> {
 }
 
 const HELP: &str = "\
-gcn-noc — GCN training accelerator simulator + PJRT runtime (FPGA'24 repro)
+gcn-noc — GCN training accelerator simulator + training runtime (FPGA'24 repro)
 
 commands:
-  train      end-to-end mini-batch GCN training through PJRT artifacts
+  train      end-to-end mini-batch GCN training (native backend by default;
+             --backend pjrt runs AOT artifacts, --threads N, --resume CK,
+             --checkpoint CK, --optimizer sgd|momentum)
   route      Fig. 9 routing-cycle experiment (Fuse 1..4)
   hbm        Fig. 1 HBM bandwidth scenarios
   epoch      Table 2 single row (ours vs HP-GNN vs GPU)
@@ -100,10 +102,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         steps: args.get_usize("steps", 200)?,
         seed,
         log_every: args.get_usize("log-every", 10)?,
+        threads: args.get_usize("threads", 0)?,
     };
-    let dir = config::artifact_dir(args.get("artifacts"));
-    let mut trainer = Trainer::new(&graph, cfg, &dir)?;
-    eprintln!("artifact: {} (ordering chosen by the sequence estimator)", trainer.artifact());
+    let mut trainer = match args.get_or("backend", "native") {
+        "native" => Trainer::new(&graph, cfg)?,
+        "pjrt" => {
+            let dir = config::artifact_dir(args.get("artifacts"));
+            Trainer::pjrt(&graph, cfg, &dir)?
+        }
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+    };
+    if let Some(path) = args.get("resume") {
+        let ck = gcn_noc::train::Checkpoint::load(path)?;
+        trainer.restore(&ck)?;
+        eprintln!("resumed from {path} at step {}", trainer.steps_done());
+    }
+    eprintln!(
+        "backend: {} | artifact: {} (ordering chosen by the sequence estimator)",
+        trainer.backend_name(),
+        trainer.artifact()
+    );
     let curve = trainer.train()?;
     let (head, tail) = curve.head_tail_means(10);
     println!(
@@ -111,15 +129,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         curve.len(),
         curve.mean_step_seconds() * 1e3
     );
+    // Snapshot before evaluate(): evaluation draws from the training RNG,
+    // and the checkpoint must capture the state a resumed run continues
+    // from for the byte-identical-curve contract to hold.
+    if let Some(path) = args.get("checkpoint") {
+        trainer.checkpoint().save(path)?;
+        println!("checkpoint written to {path}");
+    }
     let (eval_loss, acc) = trainer.evaluate(256)?;
     println!("eval: loss {eval_loss:.4}, accuracy {:.1}%", acc * 100.0);
     if let Some(path) = args.get("csv") {
         curve.write_csv(path)?;
         println!("loss curve written to {path}");
-    }
-    if let Some(path) = args.get("checkpoint") {
-        trainer.checkpoint().save(path)?;
-        println!("checkpoint written to {path}");
     }
     Ok(())
 }

@@ -39,6 +39,13 @@ impl TensorIn {
         Self::new(vec![rows, cols], data)
     }
 
+    /// Borrow a 2-D tensor as a matrix view (for the native backend's
+    /// allocation-free matmuls).
+    pub fn as_mat(&self) -> crate::util::matrix::MatRef<'_> {
+        assert_eq!(self.dims.len(), 2, "as_mat requires a 2-D tensor");
+        crate::util::matrix::MatRef::new(self.dims[0], self.dims[1], &self.data)
+    }
+
     fn to_literal(&self) -> anyhow::Result<xla::Literal> {
         if self.dims.is_empty() {
             return Ok(xla::Literal::scalar(self.data[0]));
@@ -133,6 +140,14 @@ mod tests {
     #[should_panic(expected = "mismatch")]
     fn tensor_in_validates() {
         TensorIn::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn tensor_in_as_mat_views_without_copy() {
+        let t = TensorIn::matrix(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = t.as_mat();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
     }
 
     // PJRT-backed execution tests live in rust/tests/ (they need built

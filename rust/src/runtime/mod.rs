@@ -1,17 +1,27 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Training runtime: the backend-agnostic compute layer plus the PJRT
+//! artifact executor.
 //!
-//! This is the only place Python output crosses into the Rust hot path —
-//! and it happens at *load time*: `make artifacts` ran `python -m
-//! compile.aot` once; from here on the coordinator feeds buffers into the
-//! compiled executables without any Python.
+//! [`backend::ComputeBackend`] abstracts the fused `gcn2_train_step`
+//! contract; [`native::NativeBackend`] (the default) runs it in pure
+//! multi-threaded Rust on any host, and [`backend::PjrtBackend`] routes
+//! it through AOT-compiled HLO-text artifacts when an XLA toolchain is
+//! available.
 //!
+//! The PJRT path is the only place Python output crosses into the Rust
+//! hot path — and it happens at *load time*: `make artifacts` ran
+//! `python -m compile.aot` once; from here on the coordinator feeds
+//! buffers into the compiled executables without any Python.
 //! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
 //! image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos
 //! (64-bit instruction ids); the text parser reassigns ids.
 
+pub mod backend;
 pub mod executor;
 pub mod manifest;
+pub mod native;
 pub mod xla_stub;
 
+pub use backend::{ComputeBackend, ModelState, Optimizer, PjrtBackend};
 pub use executor::{Executor, TensorIn};
 pub use manifest::{ArtifactKind, ArtifactMeta, Manifest};
+pub use native::NativeBackend;

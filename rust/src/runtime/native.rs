@@ -1,0 +1,366 @@
+//! `NativeBackend` — the pure-Rust, multi-threaded implementation of the
+//! fused `gcn2_train_step` contract, making training a live workload on
+//! any host (no XLA toolchain required).
+//!
+//! The step mirrors the AOT artifacts' semantics exactly:
+//!
+//! - **Forward** `Z1 = A1(XW1)`, `H1 = relu(Z1)`, `Z2 = A2(H1W2)` over
+//!   the staged padded shapes — or, when `prepare()` receives the
+//!   sequence estimator's AgCo ordering, `Z1 = (A1·X)W1` /
+//!   `Z2 = (A2·H1)W2`, whose aggregation byproducts the backward reuses
+//!   instead of recomputing;
+//! - **Loss** masked softmax cross-entropy — the shared loss head
+//!   [`crate::train::reference::softmax_xent_into`], written into
+//!   scratch (one implementation; the backward passes it feeds stay
+//!   independent between oracle and backend);
+//! - **Backward** the paper's transpose-free form: each weight gradient
+//!   is `dW = (A·H)ᵀ·dZ`, contracted by index swap
+//!   ([`par_matmul_tn_into`]) so no transposed weight/feature matrix is
+//!   ever materialized — `dW2 = (A2·H1)ᵀ·dZ2`,
+//!   `dH1 = (A2ᵀ·dZ2)·W2ᵀ`, `dW1 = (A1·X)ᵀ·dZ1`;
+//! - **Update** SGD (`w ← w − ηg`) or heavy-ball momentum
+//!   (`v ← μv + g`, `w ← w − ηv`), matching `python/compile/kernels/optim.py`.
+//!
+//! All intermediates live in a [`Scratch`] sized once at `prepare()`
+//! (same discipline as the NoC `WaveScratch`): the hot loop performs **no
+//! per-step allocations** beyond what batch staging itself produces, and
+//! results are bit-identical at any thread count (the tiled matmuls keep
+//! a fixed per-element accumulation order).
+
+use crate::runtime::backend::{check_staged, ComputeBackend, ModelState, Optimizer};
+use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
+use crate::train::batch::StagedBatch;
+use crate::train::reference::softmax_xent_into;
+use crate::util::matrix::{
+    par_matmul_into, par_matmul_nt_into, par_matmul_tn_into, resolve_threads, Matrix,
+};
+
+/// Built-in shape table mirroring the AOT pipeline's `GCN_CONFIGS`
+/// (`python/compile/aot.py`): `(b, n1, n2, d, h, c)` per size tag.
+fn builtin_shapes(tag: &str) -> Option<(usize, usize, usize, usize, usize, usize)> {
+    match tag {
+        "small" => Some((64, 256, 1024, 64, 32, 8)),
+        "base" => Some((128, 512, 2048, 256, 256, 64)),
+        _ => None,
+    }
+}
+
+/// Preallocated intermediates for one fused step at fixed staged shapes.
+struct Scratch {
+    /// `X·W1` — n2×h (CoAg forward only).
+    xw1: Matrix,
+    /// Layer-1 pre-activation — n1×h.
+    z1: Matrix,
+    /// `relu(Z1)` — n1×h.
+    h1: Matrix,
+    /// `H1·W2` — n1×c (CoAg forward only).
+    h1w2: Matrix,
+    /// Layer-2 logits — b×c.
+    z2: Matrix,
+    /// Softmax-CE error — b×c.
+    dz2: Matrix,
+    /// `A2·H1` — b×h (the layer-2 "A·X" of the transpose-free gradient;
+    /// a forward byproduct under AgCo, recomputed by the backward under
+    /// CoAg).
+    q2: Matrix,
+    /// `dW2 = Q2ᵀ·dZ2` — h×c.
+    g2: Matrix,
+    /// `A2ᵀ·dZ2` — n1×c.
+    r2: Matrix,
+    /// `dH1 = R2·W2ᵀ`, ReLU-masked in place into dZ1 — n1×h.
+    dh1: Matrix,
+    /// `A1·X` — n1×d (forward byproduct under AgCo, backward-computed
+    /// under CoAg).
+    p1: Matrix,
+    /// `dW1 = P1ᵀ·dZ1` — d×h.
+    g1: Matrix,
+}
+
+impl Scratch {
+    fn new(meta: &ArtifactMeta) -> Self {
+        Scratch {
+            xw1: Matrix::zeros(meta.n2, meta.h),
+            z1: Matrix::zeros(meta.n1, meta.h),
+            h1: Matrix::zeros(meta.n1, meta.h),
+            h1w2: Matrix::zeros(meta.n1, meta.c),
+            z2: Matrix::zeros(meta.b, meta.c),
+            dz2: Matrix::zeros(meta.b, meta.c),
+            q2: Matrix::zeros(meta.b, meta.h),
+            g2: Matrix::zeros(meta.h, meta.c),
+            r2: Matrix::zeros(meta.n1, meta.c),
+            dh1: Matrix::zeros(meta.n1, meta.h),
+            p1: Matrix::zeros(meta.n1, meta.d),
+            g1: Matrix::zeros(meta.d, meta.h),
+        }
+    }
+}
+
+/// The default compute backend: pure Rust, blocked/tiled parallel
+/// matmuls, transpose-free backward.
+pub struct NativeBackend {
+    threads: usize,
+    meta: Option<ArtifactMeta>,
+    scratch: Option<Scratch>,
+    /// Forward dataflow chosen at prepare() (§4.4): AgCo aggregates
+    /// first (`(A·X)·W`), which makes the backward's `A·X` / `A·H1`
+    /// contractions free byproducts of the forward; CoAg combines first
+    /// (`A·(X·W)`), the cheaper forward when the feature dim shrinks.
+    agco: bool,
+}
+
+impl NativeBackend {
+    /// `threads = 0` resolves to one worker per available CPU.
+    pub fn new(threads: usize) -> Self {
+        NativeBackend { threads: resolve_threads(threads), meta: None, scratch: None, agco: false }
+    }
+
+    /// Resolved matmul worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn meta_for(
+        tag: &str,
+        name: String,
+        kind: ArtifactKind,
+        ordering: &str,
+    ) -> anyhow::Result<ArtifactMeta> {
+        let (b, n1, n2, d, h, c) = builtin_shapes(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown native artifact tag '{tag}' (small|base)"))?;
+        Ok(ArtifactMeta {
+            name,
+            kind,
+            ordering: ordering.to_string(),
+            b,
+            n1,
+            n2,
+            d,
+            h,
+            c,
+            path: "native".into(),
+        })
+    }
+
+    /// Forward pass into scratch (activations stay there for the
+    /// backward).  Under AgCo the per-layer aggregations `P1 = A1·X` and
+    /// `Q2 = A2·H1` are forward byproducts the backward reuses; under
+    /// CoAg the backward recomputes them.  Both orderings are
+    /// mathematically identical (f32 association differs within the
+    /// oracle tolerance).
+    fn forward(
+        scratch: &mut Scratch,
+        staged: &StagedBatch,
+        state: &ModelState,
+        agco: bool,
+        t: usize,
+    ) {
+        let x = staged.x.as_mat();
+        let a1 = staged.a1.as_mat();
+        let a2 = staged.a2.as_mat();
+        if agco {
+            par_matmul_into(&mut scratch.p1, a1, x, t);
+            par_matmul_into(&mut scratch.z1, scratch.p1.view(), state.w1.view(), t);
+        } else {
+            par_matmul_into(&mut scratch.xw1, x, state.w1.view(), t);
+            par_matmul_into(&mut scratch.z1, a1, scratch.xw1.view(), t);
+        }
+        scratch.h1.data.copy_from_slice(&scratch.z1.data);
+        for v in &mut scratch.h1.data {
+            *v = v.max(0.0);
+        }
+        if agco {
+            par_matmul_into(&mut scratch.q2, a2, scratch.h1.view(), t);
+            par_matmul_into(&mut scratch.z2, scratch.q2.view(), state.w2.view(), t);
+        } else {
+            par_matmul_into(&mut scratch.h1w2, scratch.h1.view(), state.w2.view(), t);
+            par_matmul_into(&mut scratch.z2, a2, scratch.h1w2.view(), t);
+        }
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> String {
+        format!("native({} threads)", self.threads)
+    }
+
+    fn resolve(&self, tag: &str) -> anyhow::Result<ArtifactMeta> {
+        Self::meta_for(tag, format!("native_gcn2_{tag}"), ArtifactKind::GcnTrain, "coag")
+    }
+
+    fn prepare(
+        &mut self,
+        tag: &str,
+        optimizer: Optimizer,
+        ordering: &str,
+    ) -> anyhow::Result<ArtifactMeta> {
+        let (name, kind, ordering) = match optimizer {
+            Optimizer::Sgd => {
+                (format!("native_gcn2_{tag}_{ordering}"), ArtifactKind::GcnTrain, ordering)
+            }
+            // Momentum mirrors the AOT pipeline: one CoAg-ordered variant.
+            Optimizer::Momentum { .. } => {
+                (format!("native_gcn2_{tag}_mom"), ArtifactKind::GcnTrainMomentum, "coag")
+            }
+        };
+        let meta = Self::meta_for(tag, name, kind, ordering)?;
+        self.scratch = Some(Scratch::new(&meta));
+        self.agco = ordering == "agco";
+        self.meta = Some(meta.clone());
+        Ok(meta)
+    }
+
+    fn train_step(
+        &mut self,
+        staged: StagedBatch,
+        state: &mut ModelState,
+        optimizer: Optimizer,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
+        check_staged(&staged, meta)?;
+        let t = self.threads;
+        let agco = self.agco;
+        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+
+        Self::forward(s, &staged, state, agco, t);
+        let yhot = staged.yhot.as_mat();
+        let nvalid = staged.nvalid();
+        let loss = softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2);
+
+        // Backward, transpose-free: dW2 = (A2·H1)ᵀ·dZ2.  Under AgCo the
+        // forward already produced Q2 = A2·H1 and P1 = A1·X.
+        let a1 = staged.a1.as_mat();
+        let a2 = staged.a2.as_mat();
+        let x = staged.x.as_mat();
+        if !agco {
+            par_matmul_into(&mut s.q2, a2, s.h1.view(), t);
+        }
+        par_matmul_tn_into(&mut s.g2, s.q2.view(), s.dz2.view(), t);
+        // dH1 = (A2ᵀ·dZ2)·W2ᵀ, both factors contracted by index swap.
+        par_matmul_tn_into(&mut s.r2, a2, s.dz2.view(), t);
+        par_matmul_nt_into(&mut s.dh1, s.r2.view(), state.w2.view(), t);
+        // ReLU gate: dZ1 = dH1 ∘ [Z1 > 0], in place.
+        for (d, &z) in s.dh1.data.iter_mut().zip(&s.z1.data) {
+            if z <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        // dW1 = (A1·X)ᵀ·dZ1.
+        if !agco {
+            par_matmul_into(&mut s.p1, a1, x, t);
+        }
+        par_matmul_tn_into(&mut s.g1, s.p1.view(), s.dh1.view(), t);
+
+        match optimizer {
+            Optimizer::Sgd => {
+                for (w, &g) in state.w1.data.iter_mut().zip(&s.g1.data) {
+                    *w -= lr * g;
+                }
+                for (w, &g) in state.w2.data.iter_mut().zip(&s.g2.data) {
+                    *w -= lr * g;
+                }
+            }
+            Optimizer::Momentum { mu } => {
+                for ((w, v), &g) in
+                    state.w1.data.iter_mut().zip(&mut state.v1.data).zip(&s.g1.data)
+                {
+                    *v = mu * *v + g;
+                    *w -= lr * *v;
+                }
+                for ((w, v), &g) in
+                    state.w2.data.iter_mut().zip(&mut state.v2.data).zip(&s.g2.data)
+                {
+                    *v = mu * *v + g;
+                    *w -= lr * *v;
+                }
+            }
+        }
+        Ok(loss)
+    }
+
+    fn eval_batch(
+        &mut self,
+        staged: StagedBatch,
+        state: &ModelState,
+    ) -> anyhow::Result<(f32, f32)> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
+        check_staged(&staged, meta)?;
+        let t = self.threads;
+        let agco = self.agco;
+        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+        Self::forward(s, &staged, state, agco, t);
+        let yhot = staged.yhot.as_mat();
+        let nvalid = staged.nvalid();
+        let loss = softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2);
+        let argmax = |row: &[f32]| -> usize {
+            let mut best = 0;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        };
+        let mut correct = 0.0f32;
+        for i in 0..meta.b {
+            if staged.row_mask.data[i] <= 0.0 {
+                continue;
+            }
+            if argmax(s.z2.row(i)) == argmax(yhot.row(i)) {
+                correct += 1.0;
+            }
+        }
+        Ok((loss, correct))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::TensorIn;
+
+    #[test]
+    fn resolve_exposes_builtin_shapes() {
+        let b = NativeBackend::new(1);
+        let small = b.resolve("small").unwrap();
+        assert_eq!((small.b, small.n1, small.n2), (64, 256, 1024));
+        assert_eq!((small.d, small.h, small.c), (64, 32, 8));
+        let base = b.resolve("base").unwrap();
+        assert_eq!((base.b, base.n2, base.d, base.h), (128, 2048, 256, 256));
+        assert!(b.resolve("huge").is_err());
+    }
+
+    #[test]
+    fn prepare_names_encode_optimizer_and_ordering() {
+        let mut b = NativeBackend::new(2);
+        let m = b.prepare("small", Optimizer::Sgd, "agco").unwrap();
+        assert_eq!(m.name, "native_gcn2_small_agco");
+        assert_eq!(m.kind, ArtifactKind::GcnTrain);
+        let m = b.prepare("small", Optimizer::Momentum { mu: 0.9 }, "agco").unwrap();
+        assert_eq!(m.name, "native_gcn2_small_mom");
+        assert_eq!(m.kind, ArtifactKind::GcnTrainMomentum);
+        assert_eq!(m.ordering, "coag");
+    }
+
+    #[test]
+    fn unprepared_backend_errors() {
+        let mut b = NativeBackend::new(1);
+        let staged = StagedBatch {
+            x: TensorIn::matrix(1, 1, vec![0.0]),
+            a1: TensorIn::matrix(1, 1, vec![0.0]),
+            a2: TensorIn::matrix(1, 1, vec![0.0]),
+            yhot: TensorIn::matrix(1, 1, vec![0.0]),
+            row_mask: TensorIn::vector(vec![0.0]),
+            nvalid: TensorIn::scalar(0.0),
+            dims: (1, 1, 1),
+        };
+        let mut state = ModelState {
+            w1: Matrix::zeros(1, 1),
+            w2: Matrix::zeros(1, 1),
+            v1: Matrix::zeros(1, 1),
+            v2: Matrix::zeros(1, 1),
+        };
+        assert!(b.train_step(staged.clone(), &mut state, Optimizer::Sgd, 0.1).is_err());
+        assert!(b.eval_batch(staged, &state).is_err());
+    }
+}

@@ -1,5 +1,6 @@
-//! Mini-batch staging: pad a sampled batch into the fixed shapes of a
-//! compiled artifact.
+//! Mini-batch staging: pad a sampled batch into the fixed shapes a
+//! compute backend was prepared for (a compiled PJRT artifact's manifest
+//! entry, or the native backend's builtin shape table).
 //!
 //! Zero padding is numerically exact (DESIGN.md §5): padded adjacency
 //! rows/cols are zero so they aggregate nothing, padded feature rows are
@@ -10,7 +11,10 @@ use crate::graph::sampler::SampledBatch;
 use crate::runtime::executor::TensorIn;
 use crate::runtime::manifest::ArtifactMeta;
 
-/// A batch staged into artifact-shaped tensors.
+/// A batch staged into artifact-shaped tensors.  A `StagedBatch` is the
+/// input contract of [`crate::runtime::backend::ComputeBackend`]: the
+/// PJRT backend ships the tensors to compiled executables verbatim, the
+/// native backend borrows them as matrix views (`TensorIn::as_mat`).
 #[derive(Clone, Debug)]
 pub struct StagedBatch {
     pub x: TensorIn,
@@ -21,6 +25,13 @@ pub struct StagedBatch {
     pub nvalid: TensorIn,
     /// Real (unpadded) sizes (n2, n1, b).
     pub dims: (usize, usize, usize),
+}
+
+impl StagedBatch {
+    /// Real (unpadded) batch size, as staged into the loss normalizer.
+    pub fn nvalid(&self) -> f32 {
+        self.nvalid.data[0]
+    }
 }
 
 /// Staging failure: the sampled batch exceeds the artifact's capacity.

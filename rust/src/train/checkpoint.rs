@@ -4,31 +4,46 @@
 //! ```text
 //!   magic "GCNW" | version u32 | count u32 |
 //!   per tensor: name_len u32 | name bytes | rows u32 | cols u32 | f32 LE data
+//!   (v2) scalar_count u32 | per scalar: name_len u32 | name bytes | u64 LE
 //! ```
+//!
+//! Version 2 adds the named-u64 scalar section so a checkpoint carries
+//! the trainer's step counter and RNG state — enough to resume a run
+//! with a **byte-identical** loss curve.  Version-1 files still load
+//! (empty scalar section).
 
 use std::io::{Read, Write};
 
 use crate::util::matrix::Matrix;
 
 const MAGIC: &[u8; 4] = b"GCNW";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// A named set of weight tensors.
+/// A named set of weight tensors plus named u64 scalars (v2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub tensors: Vec<(String, Matrix)>,
+    pub scalars: Vec<(String, u64)>,
 }
 
 impl Checkpoint {
     pub fn new(tensors: Vec<(String, Matrix)>) -> Self {
-        Self { tensors }
+        Self { tensors, scalars: Vec::new() }
+    }
+
+    pub fn with_scalars(tensors: Vec<(String, Matrix)>, scalars: Vec<(String, u64)>) -> Self {
+        Self { tensors, scalars }
     }
 
     pub fn get(&self, name: &str) -> Option<&Matrix> {
         self.tensors.iter().find(|(n, _)| n == name).map(|(_, m)| m)
     }
 
-    /// Serialize to the binary format.
+    pub fn scalar(&self, name: &str) -> Option<u64> {
+        self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Serialize to the binary format (always writes version 2).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
@@ -42,6 +57,12 @@ impl Checkpoint {
             for v in &m.data {
                 out.extend_from_slice(&v.to_le_bytes());
             }
+        }
+        out.extend_from_slice(&(self.scalars.len() as u32).to_le_bytes());
+        for (name, v) in &self.scalars {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
         }
         out
     }
@@ -59,7 +80,7 @@ impl Checkpoint {
         }
         anyhow::ensure!(take(&mut buf, 4)? == MAGIC, "bad magic");
         let version = take_u32(&mut buf)?;
-        anyhow::ensure!(version == VERSION, "unsupported version {version}");
+        anyhow::ensure!((1..=VERSION).contains(&version), "unsupported version {version}");
         let count = take_u32(&mut buf)? as usize;
         let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
@@ -79,8 +100,19 @@ impl Checkpoint {
                 .collect();
             tensors.push((name, Matrix::from_vec(rows, cols, data)));
         }
+        let mut scalars = Vec::new();
+        if version >= 2 {
+            let n_scalars = take_u32(&mut buf)? as usize;
+            for _ in 0..n_scalars {
+                let name_len = take_u32(&mut buf)? as usize;
+                anyhow::ensure!(name_len <= 4096, "name too long");
+                let name = String::from_utf8(take(&mut buf, name_len)?.to_vec())?;
+                let v = u64::from_le_bytes(take(&mut buf, 8)?.try_into().unwrap());
+                scalars.push((name, v));
+            }
+        }
         anyhow::ensure!(buf.is_empty(), "trailing bytes in checkpoint");
-        Ok(Checkpoint { tensors })
+        Ok(Checkpoint { tensors, scalars })
     }
 
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
@@ -143,5 +175,29 @@ mod tests {
         let mut extra = bytes;
         extra.push(0);
         assert!(Checkpoint::from_bytes(&extra).is_err());
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut ck = sample();
+        ck.scalars = vec![("step".into(), 1234), ("rng".into(), u64::MAX - 7)];
+        let parsed = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(parsed, ck);
+        assert_eq!(parsed.scalar("step"), Some(1234));
+        assert_eq!(parsed.scalar("rng"), Some(u64::MAX - 7));
+        assert_eq!(parsed.scalar("nope"), None);
+    }
+
+    #[test]
+    fn version1_files_still_load() {
+        // A v1 writer stops after the tensor section.
+        let ck = sample();
+        let mut bytes = ck.to_bytes();
+        // Strip the (empty) scalar section and rewrite the version field.
+        bytes.truncate(bytes.len() - 4);
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let parsed = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed.tensors, ck.tensors);
+        assert!(parsed.scalars.is_empty());
     }
 }

@@ -42,6 +42,24 @@ impl LossCurve {
         (head, tail)
     }
 
+    /// Trailing moving average of the loss: element `i` is the mean of
+    /// the last `window` losses ending at step `i` (fewer at the start).
+    /// This is the "smoothed loss" the trainer integration tests check
+    /// for monotone decrease.
+    pub fn smoothed(&self, window: usize) -> Vec<f64> {
+        let window = window.max(1);
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut sum = 0.0f64;
+        for (i, r) in self.records.iter().enumerate() {
+            sum += r.loss as f64;
+            if i >= window {
+                sum -= self.records[i - window].loss as f64;
+            }
+            out.push(sum / window.min(i + 1) as f64);
+        }
+        out
+    }
+
     /// Mean step wall time (seconds).
     pub fn mean_step_seconds(&self) -> f64 {
         if self.records.is_empty() {
@@ -103,5 +121,19 @@ mod tests {
         let c = LossCurve::default();
         assert_eq!(c.mean_step_seconds(), 0.0);
         assert!(c.is_empty());
+        assert!(c.smoothed(5).is_empty());
+    }
+
+    #[test]
+    fn smoothed_is_trailing_mean() {
+        let s = curve().smoothed(3);
+        assert_eq!(s.len(), 10);
+        // First element: window of one.
+        assert!((s[0] - 2.0).abs() < 1e-6);
+        // Steady state: mean of the last three (2.0 - 0.1i terms).
+        let expect = ((2.0 - 0.7) + (2.0 - 0.8) + (2.0 - 0.9)) / 3.0;
+        assert!((s[9] - expect).abs() < 1e-6, "{} vs {expect}", s[9]);
+        // Strictly decreasing for a strictly decreasing curve.
+        assert!(s.windows(2).all(|w| w[1] < w[0]));
     }
 }

@@ -1,9 +1,11 @@
-//! The numerical training stack: mini-batch staging, the PJRT-backed
+//! The numerical training stack: mini-batch staging, the backend-agnostic
 //! trainer, a pure-Rust reference model, and loss-curve metrics.
 //!
-//! Rust drives everything at run time: sample → pad to artifact shapes →
-//! PJRT train-step → weight bank commit.  Python only existed at
-//! `make artifacts` time.
+//! Rust drives everything at run time: sample → pad to staged shapes →
+//! fused train-step on a [`crate::runtime::backend::ComputeBackend`] →
+//! weight bank commit.  The default native backend runs on any host; the
+//! PJRT backend executes AOT artifacts when an XLA toolchain exists
+//! (Python only existed at `make artifacts` time).
 
 pub mod batch;
 pub mod checkpoint;
@@ -14,4 +16,4 @@ pub mod trainer;
 pub use batch::StagedBatch;
 pub use checkpoint::Checkpoint;
 pub use metrics::LossCurve;
-pub use trainer::{Trainer, TrainerConfig};
+pub use trainer::{ModelState, Optimizer, Trainer, TrainerConfig};

@@ -1,12 +1,15 @@
-//! Pure-Rust reference GCN — an independent oracle for the PJRT path.
+//! Pure-Rust reference GCN — an independent oracle for every compute
+//! backend.
 //!
 //! Implements the same two-layer GCN forward + masked softmax-CE loss +
-//! gradients as the compiled artifacts, in plain Rust over [`Matrix`].
-//! Integration tests run both on identical inputs and assert agreement;
-//! a numerics bug in either the HLO artifacts or the staging code cannot
-//! hide behind the other.
+//! gradients as the fused train steps, in naive plain Rust over
+//! [`Matrix`] (explicit transposes, no tiling, no threading).
+//! Integration tests run a backend and this oracle on identical staged
+//! inputs and assert agreement — the native backend's transpose-free
+//! tiled backward (`rust/tests/native_train.rs`) and the PJRT artifacts
+//! (`rust/tests/integration_runtime.rs`) cannot silently diverge.
 
-use crate::util::matrix::Matrix;
+use crate::util::matrix::{MatRef, Matrix};
 
 /// Forward activations kept for backward (the SFBP set).
 #[derive(Clone, Debug)]
@@ -24,26 +27,45 @@ pub fn gcn2_forward(x: &Matrix, a1: &Matrix, a2: &Matrix, w1: &Matrix, w2: &Matr
     ForwardCache { z1, h1, z2 }
 }
 
-/// Masked softmax cross-entropy: returns `(loss, dz2)`.
-pub fn softmax_xent(z2: &Matrix, yhot: &Matrix, row_mask: &[f32], nvalid: f32) -> (f32, Matrix) {
+/// Masked softmax cross-entropy written into a preallocated `dz2`
+/// buffer — the single implementation of the loss head, shared by this
+/// oracle and the native backend's allocation-free hot loop (the
+/// backward passes fed by `dz2` remain fully independent).  Padded rows
+/// (mask 0, all-zero labels) contribute nothing.
+pub fn softmax_xent_into(
+    z2: &Matrix,
+    yhot: MatRef<'_>,
+    row_mask: &[f32],
+    nvalid: f32,
+    dz2: &mut Matrix,
+) -> f32 {
     let (b, c) = z2.shape();
-    let mut dz2 = Matrix::zeros(b, c);
     let mut loss = 0.0f64;
     for i in 0..b {
         let row = z2.row(i);
         let zmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let sumexp: f32 = row.iter().map(|&v| (v - zmax).exp()).sum();
         let logsum = sumexp.ln() + zmax;
+        let yrow = yhot.row(i);
+        let drow = dz2.row_mut(i);
         for j in 0..c {
             let p = (row[j] - logsum).exp();
-            let y = yhot[(i, j)];
+            let y = yrow[j];
             if y > 0.0 && row_mask[i] > 0.0 {
                 loss -= ((row[j] - logsum) as f64) * y as f64;
             }
-            dz2[(i, j)] = (p - y) * row_mask[i] / nvalid;
+            drow[j] = (p - y) * row_mask[i] / nvalid;
         }
     }
-    ((loss / nvalid as f64) as f32, dz2)
+    (loss / nvalid as f64) as f32
+}
+
+/// Masked softmax cross-entropy: returns `(loss, dz2)`.
+pub fn softmax_xent(z2: &Matrix, yhot: &Matrix, row_mask: &[f32], nvalid: f32) -> (f32, Matrix) {
+    let (b, c) = z2.shape();
+    let mut dz2 = Matrix::zeros(b, c);
+    let loss = softmax_xent_into(z2, yhot.view(), row_mask, nvalid, &mut dz2);
+    (loss, dz2)
 }
 
 /// Full train step (the paper's transposed backward, reference form):

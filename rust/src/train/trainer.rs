@@ -1,29 +1,32 @@
-//! The PJRT-backed mini-batch trainer — the Layer-3 hot loop.
+//! The backend-agnostic mini-batch trainer — the Layer-3 hot loop.
 //!
-//! Per step: sample a mini-batch (host), stage it into the artifact's
-//! fixed shapes, execute the fused `gcn2_train_step` HLO (forward +
-//! the paper's transposed backward + SGD, one PJRT call), and commit the
-//! returned weights to the Weight Bank.  No Python anywhere.
+//! Per step: sample a mini-batch (host), stage it into the backend's
+//! fixed shapes, run the fused `gcn2_train_step` (forward + the paper's
+//! transpose-free backward + optimizer update, one
+//! [`ComputeBackend::train_step`] call), which commits the returned
+//! weights to the Weight Bank image ([`ModelState`]) in place.
+//!
+//! The default backend is the pure-Rust
+//! [`crate::runtime::native::NativeBackend`] — training runs end to end
+//! on any host.  [`Trainer::pjrt`] selects the PJRT executor instead
+//! (keeping its artifacts-unavailable skip path).  Checkpoints carry the
+//! weights, velocities, step counter and RNG state, so a restored run
+//! continues with a **byte-identical** loss curve.
 
 use std::time::Instant;
 
 use crate::coordinator::sequence_estimator::{SequenceEstimator, ShapeParams};
 use crate::graph::generate::LabeledGraph;
 use crate::graph::sampler::NeighborSampler;
-use crate::runtime::executor::{Executor, TensorIn};
-use crate::runtime::manifest::ArtifactKind;
+use crate::runtime::backend::ComputeBackend;
+use crate::runtime::backend::PjrtBackend;
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::native::NativeBackend;
 use crate::train::batch::stage;
 use crate::train::metrics::LossCurve;
-use crate::util::matrix::Matrix;
 use crate::util::rng::SplitMix64;
 
-/// Optimizer selection (the momentum variant uses the
-/// `gcn2_train_step_*_mom` artifact with Weight-Bank velocity state).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Optimizer {
-    Sgd,
-    Momentum { mu: f32 },
-}
+pub use crate::runtime::backend::{ModelState, Optimizer};
 
 /// Trainer configuration.
 #[derive(Clone, Debug)]
@@ -38,6 +41,9 @@ pub struct TrainerConfig {
     pub seed: u64,
     /// Log every n steps (0 = silent).
     pub log_every: usize,
+    /// Native-backend matmul workers (0 = one per available CPU).
+    /// Results are bit-identical at any thread count.
+    pub threads: usize,
 }
 
 impl Default for TrainerConfig {
@@ -51,6 +57,7 @@ impl Default for TrainerConfig {
             steps: 100,
             seed: 0xBEEF,
             log_every: 10,
+            threads: 0,
         }
     }
 }
@@ -59,38 +66,51 @@ impl Default for TrainerConfig {
 pub struct Trainer<'g> {
     pub graph: &'g LabeledGraph,
     pub cfg: TrainerConfig,
-    executor: Executor,
-    artifact: String,
-    pub w1: Matrix,
-    pub w2: Matrix,
-    /// Momentum velocity state (zeros unless `Optimizer::Momentum`).
-    pub v1: Matrix,
-    pub v2: Matrix,
+    backend: Box<dyn ComputeBackend>,
+    meta: ArtifactMeta,
+    sampler: NeighborSampler<'g>,
+    /// Weights + momentum velocities (the host Weight Bank image).
+    pub state: ModelState,
+    steps_done: u64,
     rng: SplitMix64,
 }
 
 impl<'g> Trainer<'g> {
-    /// Build a trainer: consults the sequence estimator to choose the
-    /// forward ordering, then loads the matching artifact.
-    pub fn new(
+    /// Build a trainer on the default native backend — works on any host.
+    pub fn new(graph: &'g LabeledGraph, cfg: TrainerConfig) -> anyhow::Result<Self> {
+        let backend = Box::new(NativeBackend::new(cfg.threads));
+        Self::with_backend(graph, cfg, backend)
+    }
+
+    /// Build a trainer on the PJRT executor (fails fast when no artifacts
+    /// / XLA toolchain are available — the callers' skip path).
+    pub fn pjrt(
         graph: &'g LabeledGraph,
         cfg: TrainerConfig,
         artifact_dir: impl AsRef<std::path::Path>,
     ) -> anyhow::Result<Self> {
-        let mut executor = Executor::new(artifact_dir)?;
+        let backend = Box::new(PjrtBackend::new(artifact_dir)?);
+        Self::with_backend(graph, cfg, backend)
+    }
+
+    /// Build a trainer on any compute backend: consults the sequence
+    /// estimator to choose the forward ordering, then prepares the
+    /// matching fused step.
+    pub fn with_backend(
+        graph: &'g LabeledGraph,
+        cfg: TrainerConfig,
+        mut backend: Box<dyn ComputeBackend>,
+    ) -> anyhow::Result<Self> {
         let mut rng = SplitMix64::new(cfg.seed);
+        let sampler = NeighborSampler::new(&graph.adj, cfg.fanouts.clone());
 
         // Estimate frontier shapes with one probe batch.
-        let sampler = NeighborSampler::new(&graph.adj, cfg.fanouts.clone());
         let ids: Vec<u32> =
             (0..cfg.batch_size).map(|_| rng.gen_range(graph.num_nodes()) as u32).collect();
         let probe = sampler.sample(&ids, &mut rng);
         let (n2, n1, b) = probe.dims();
         // Pick the ordering the controller would program (§4.4).
-        let tmp_meta = executor
-            .manifest()
-            .get(&format!("gcn2_train_step_{}_coag", cfg.artifact_tag))?
-            .clone();
+        let tmp_meta = backend.resolve(&cfg.artifact_tag)?;
         let est = SequenceEstimator::new(ShapeParams {
             b: b as u64,
             n: n1 as u64,
@@ -100,114 +120,107 @@ impl<'g> Trainer<'g> {
             c: tmp_meta.c as u64,
             e: probe.layers[0].adj.nnz() as u64,
         });
-        let artifact = match cfg.optimizer {
-            Optimizer::Sgd => {
-                format!("gcn2_train_step_{}_{}", cfg.artifact_tag, est.best_ours().forward())
-            }
-            // The momentum artifact is compiled for the CoAg ordering.
-            Optimizer::Momentum { .. } => format!("gcn2_train_step_{}_mom", cfg.artifact_tag),
-        };
-        let meta = executor.manifest().get(&artifact)?.clone();
-        let want_kind = match cfg.optimizer {
-            Optimizer::Sgd => ArtifactKind::GcnTrain,
-            Optimizer::Momentum { .. } => ArtifactKind::GcnTrainMomentum,
-        };
-        anyhow::ensure!(meta.kind == want_kind, "wrong artifact kind");
+        let meta = backend.prepare(&cfg.artifact_tag, cfg.optimizer, est.best_ours().forward())?;
 
         // Weight init (Glorot-ish), deterministic from the seed.
-        let scale1 = (2.0 / (meta.d + meta.h) as f32).sqrt();
-        let scale2 = (2.0 / (meta.h + meta.c) as f32).sqrt();
-        let w1 = Matrix::randn(meta.d, meta.h, scale1, &mut rng);
-        let w2 = Matrix::randn(meta.h, meta.c, scale2, &mut rng);
-        let v1 = Matrix::zeros(meta.d, meta.h);
-        let v2 = Matrix::zeros(meta.h, meta.c);
-        executor.load(&artifact)?;
-        Ok(Self { graph, cfg, executor, artifact, w1, w2, v1, v2, rng })
+        let state = ModelState::glorot(&meta, &mut rng);
+        Ok(Self { graph, cfg, backend, meta, sampler, state, steps_done: 0, rng })
     }
 
-    /// Snapshot the learnable state as a [`crate::train::Checkpoint`].
+    /// Snapshot the learnable state + trainer cursor (step counter, RNG
+    /// state) as a [`crate::train::Checkpoint`].  Restoring it resumes
+    /// the run with a byte-identical loss curve.
     pub fn checkpoint(&self) -> crate::train::Checkpoint {
-        crate::train::Checkpoint::new(vec![
-            ("w1".into(), self.w1.clone()),
-            ("w2".into(), self.w2.clone()),
-            ("v1".into(), self.v1.clone()),
-            ("v2".into(), self.v2.clone()),
-        ])
+        crate::train::Checkpoint::with_scalars(
+            vec![
+                ("w1".into(), self.state.w1.clone()),
+                ("w2".into(), self.state.w2.clone()),
+                ("v1".into(), self.state.v1.clone()),
+                ("v2".into(), self.state.v2.clone()),
+            ],
+            vec![("step".into(), self.steps_done), ("rng".into(), self.rng.state())],
+        )
     }
 
-    /// Restore learnable state from a checkpoint (shapes must match).
+    /// Restore learnable state plus the step counter and RNG state from
+    /// a checkpoint (shapes must match; the checkpoint must carry the
+    /// trainer cursor scalars that [`Trainer::checkpoint`] writes).
+    ///
+    /// The checkpoint carries *state*, not configuration: resume with the
+    /// same [`TrainerConfig`] (optimizer, lr, batch size, fanouts, seed)
+    /// as the interrupted run, or the continuation will silently train
+    /// under different semantics.
     pub fn restore(&mut self, ck: &crate::train::Checkpoint) -> anyhow::Result<()> {
-        for (name, slot) in [("w1", &mut self.w1), ("w2", &mut self.w2),
-                             ("v1", &mut self.v1), ("v2", &mut self.v2)] {
+        for (name, slot) in [
+            ("w1", &mut self.state.w1),
+            ("w2", &mut self.state.w2),
+            ("v1", &mut self.state.v1),
+            ("v2", &mut self.state.v2),
+        ] {
             let m = ck
                 .get(name)
                 .ok_or_else(|| anyhow::anyhow!("checkpoint missing {name}"))?;
             anyhow::ensure!(m.shape() == slot.shape(), "{name} shape mismatch");
             *slot = m.clone();
         }
+        // Refuse weights-only (pre-v2) checkpoints: without the cursor a
+        // "resume" would silently replay the initial sample stream over
+        // already-trained weights.  Warm-start from bare weights by
+        // assigning `trainer.state` directly instead.
+        let step = ck.scalar("step").ok_or_else(|| {
+            anyhow::anyhow!("checkpoint has no trainer cursor (pre-v2); cannot resume")
+        })?;
+        let rng_state = ck
+            .scalar("rng")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing RNG state; cannot resume"))?;
+        self.steps_done = step;
+        self.rng = SplitMix64::new(rng_state);
         Ok(())
     }
 
-    /// Name of the compiled artifact in use (encodes the chosen ordering).
+    /// Name of the prepared artifact (encodes the chosen ordering).
     pub fn artifact(&self) -> &str {
-        &self.artifact
+        &self.meta.name
+    }
+
+    /// Staged-shape metadata of the prepared artifact.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Human-readable backend description.
+    pub fn backend_name(&self) -> String {
+        self.backend.name()
+    }
+
+    /// Number of training steps taken so far (survives checkpoints).
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
     }
 
     /// Execute one training step; returns the loss.
     pub fn step(&mut self) -> anyhow::Result<f32> {
-        let meta = self.executor.meta(&self.artifact)?.clone();
-        let sampler = NeighborSampler::new(&self.graph.adj, self.cfg.fanouts.clone());
         let ids: Vec<u32> = (0..self.cfg.batch_size)
             .map(|_| self.rng.gen_range(self.graph.num_nodes()) as u32)
             .collect();
-        let batch = sampler.sample(&ids, &mut self.rng);
-        let staged = stage(&batch, self.graph, &meta, false)?;
-
-        let mut inputs = vec![
-            staged.x,
-            staged.a1,
-            staged.a2,
-            TensorIn::matrix(meta.d, meta.h, self.w1.data.clone()),
-            TensorIn::matrix(meta.h, meta.c, self.w2.data.clone()),
-        ];
-        if let Optimizer::Momentum { .. } = self.cfg.optimizer {
-            inputs.push(TensorIn::matrix(meta.d, meta.h, self.v1.data.clone()));
-            inputs.push(TensorIn::matrix(meta.h, meta.c, self.v2.data.clone()));
-        }
-        inputs.push(staged.yhot);
-        inputs.push(staged.row_mask);
-        inputs.push(staged.nvalid);
-        inputs.push(TensorIn::scalar(self.cfg.lr));
-        if let Optimizer::Momentum { mu } = self.cfg.optimizer {
-            inputs.push(TensorIn::scalar(mu));
-        }
-        let outputs = self.executor.run(&self.artifact, &inputs)?;
-        match self.cfg.optimizer {
-            Optimizer::Sgd => {
-                anyhow::ensure!(outputs.len() == 3, "train step returns (w1, w2, loss)");
-                self.w1 = Matrix::from_vec(meta.d, meta.h, outputs[0].clone());
-                self.w2 = Matrix::from_vec(meta.h, meta.c, outputs[1].clone());
-                Ok(outputs[2][0])
-            }
-            Optimizer::Momentum { .. } => {
-                anyhow::ensure!(outputs.len() == 5, "momentum step returns 5 outputs");
-                self.w1 = Matrix::from_vec(meta.d, meta.h, outputs[0].clone());
-                self.w2 = Matrix::from_vec(meta.h, meta.c, outputs[1].clone());
-                self.v1 = Matrix::from_vec(meta.d, meta.h, outputs[2].clone());
-                self.v2 = Matrix::from_vec(meta.h, meta.c, outputs[3].clone());
-                Ok(outputs[4][0])
-            }
-        }
+        let batch = self.sampler.sample(&ids, &mut self.rng);
+        let staged = stage(&batch, self.graph, &self.meta, false)?;
+        let loss =
+            self.backend.train_step(staged, &mut self.state, self.cfg.optimizer, self.cfg.lr)?;
+        self.steps_done += 1;
+        Ok(loss)
     }
 
     /// Run the configured number of steps, recording the loss curve.
+    /// Step indices continue from the checkpointed counter on resume.
     pub fn train(&mut self) -> anyhow::Result<LossCurve> {
         let mut curve = LossCurve::default();
-        for s in 0..self.cfg.steps {
+        for _ in 0..self.cfg.steps {
             let t0 = Instant::now();
+            let s = self.steps_done;
             let loss = self.step()?;
-            curve.push(s as u64, loss, t0.elapsed());
-            if self.cfg.log_every > 0 && s % self.cfg.log_every == 0 {
+            curve.push(s, loss, t0.elapsed());
+            if self.cfg.log_every > 0 && (s as usize) % self.cfg.log_every == 0 {
                 eprintln!(
                     "step {s:>5}  loss {loss:.4}  ({:.1} ms)",
                     t0.elapsed().as_secs_f64() * 1e3
@@ -217,11 +230,8 @@ impl<'g> Trainer<'g> {
         Ok(curve)
     }
 
-    /// Evaluate accuracy on `n_eval` random nodes with the eval artifact.
+    /// Evaluate mean loss and accuracy on `n_eval` random nodes.
     pub fn evaluate(&mut self, n_eval: usize) -> anyhow::Result<(f32, f32)> {
-        let eval_name = format!("gcn2_eval_{}", self.cfg.artifact_tag);
-        let meta = self.executor.meta(&eval_name)?.clone();
-        let sampler = NeighborSampler::new(&self.graph.adj, self.cfg.fanouts.clone());
         let mut total_loss = 0.0f32;
         let mut correct = 0.0f32;
         let mut seen = 0usize;
@@ -230,27 +240,19 @@ impl<'g> Trainer<'g> {
             let ids: Vec<u32> = (0..self.cfg.batch_size)
                 .map(|_| self.rng.gen_range(self.graph.num_nodes()) as u32)
                 .collect();
-            let batch = sampler.sample(&ids, &mut self.rng);
-            let staged = stage(&batch, self.graph, &meta, false)?;
-            let nvalid = staged.nvalid.data[0];
-            let inputs = vec![
-                staged.x,
-                staged.a1,
-                staged.a2,
-                TensorIn::matrix(meta.d, meta.h, self.w1.data.clone()),
-                TensorIn::matrix(meta.h, meta.c, self.w2.data.clone()),
-                staged.yhot,
-                staged.row_mask,
-                staged.nvalid,
-            ];
-            let outputs = self.executor.run(&eval_name, &inputs)?;
-            total_loss += outputs[0][0];
-            correct += outputs[1][0];
-            seen += nvalid as usize;
+            let batch = self.sampler.sample(&ids, &mut self.rng);
+            let staged = stage(&batch, self.graph, &self.meta, false)?;
+            let nvalid = staged.nvalid() as usize;
+            let (loss, ok) = self.backend.eval_batch(staged, &self.state)?;
+            total_loss += loss;
+            correct += ok;
+            seen += nvalid;
         }
         Ok((total_loss / batches as f32, correct / seen.max(1) as f32))
     }
 }
 
-// PJRT-backed tests live in rust/tests/integration_train.rs (they need
+// Backend-agnostic trainer integration tests live in
+// rust/tests/native_train.rs (native backend, runs on any host) and the
+// PJRT agreement tests in rust/tests/integration_runtime.rs (skip without
 // built artifacts).

@@ -1,9 +1,23 @@
-//! Dense row-major f32 matrix for host-side staging.
+//! Dense row-major f32 matrix plus the blocked/tiled parallel matmul core.
 //!
-//! This is *not* a compute library — the heavy math runs inside PJRT
-//! executables. `Matrix` exists to build padded adjacency blocks, stage
-//! features/weights, and cross-check PJRT outputs against a small pure-Rust
-//! reference implementation (`train::reference`).
+//! `Matrix` stages padded adjacency blocks, features and weights; the
+//! `par_matmul_*_into` family is the compute engine behind
+//! [`crate::runtime::native::NativeBackend`] — a work-queue-parallel,
+//! k-blocked matmul writing into preallocated outputs (zero allocations
+//! per call), with transpose-free `AᵀB` / `ABᵀ` variants that read the
+//! transposed operand by index swap instead of materializing it.
+//!
+//! **Determinism contract:** every variant accumulates each output element
+//! over the contraction index in ascending order with the same zero-skip
+//! as the naive [`Matrix::matmul`], so results never depend on the thread
+//! count or tile size.  `rust/tests/prop_matrix.rs` pins the plain and
+//! `AᵀB` paths bit-identical to the naive path and all paths bit-stable
+//! across thread counts; the `ABᵀ` dot-product path is pinned against the
+//! explicit-transpose reference to 1e-6 (its end-to-end bit-stability is
+//! additionally covered by the trainer determinism test in
+//! `rust/tests/native_train.rs`, whose backward uses it).
+
+use std::sync::Mutex;
 
 use crate::util::rng::SplitMix64;
 
@@ -128,6 +142,178 @@ impl Matrix {
     }
 }
 
+/// Borrowed row-major matrix view — lets the parallel matmuls consume
+/// staged `TensorIn` buffers and `Matrix` scratch interchangeably without
+/// copying.
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> MatRef<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        MatRef { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+impl Matrix {
+    /// Borrow as a [`MatRef`].
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+}
+
+/// Contraction-dimension block size (cache reuse of the B-panel); the
+/// k-order within each output element stays ascending, so blocking does
+/// not change results.
+const K_BLOCK: usize = 64;
+
+/// Below this many multiply-adds a parallel launch costs more than it
+/// saves; run on the calling thread instead.
+const PAR_MIN_WORK: usize = 1 << 14;
+
+/// Resolve a thread-count knob (0 = one worker per available CPU).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Split `data` (an `out_rows` × `out_cols` row-major buffer) into
+/// contiguous row tiles and run `tile_fn(first_row, tile)` over them on
+/// `threads` scoped workers pulling from one shared queue.  Tiles are
+/// disjoint `&mut` chunks, so workers never contend on output data; which
+/// worker processes which tile cannot affect the result.
+fn for_each_row_tile<F>(
+    out_rows: usize,
+    out_cols: usize,
+    data: &mut [f32],
+    threads: usize,
+    tile_fn: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if out_rows == 0 || out_cols == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    if threads == 1 {
+        tile_fn(0, data);
+        return;
+    }
+    // ~4 tiles per worker for load balance; at least one row per tile.
+    let tile_rows = out_rows.div_ceil(threads * 4).max(1);
+    let n_tiles = out_rows.div_ceil(tile_rows);
+    let queue = Mutex::new(data.chunks_mut(tile_rows * out_cols).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n_tiles) {
+            scope.spawn(|| loop {
+                // Pop under the lock, compute outside it.
+                let item = queue.lock().unwrap().next();
+                let Some((idx, tile)) = item else { break };
+                tile_fn(idx * tile_rows, tile);
+            });
+        }
+    });
+}
+
+/// `out = a · b`, parallel over output-row tiles with k-blocking.
+/// Accumulation order per output element matches [`Matrix::matmul`]
+/// exactly (ascending k, zero entries of `a` skipped).
+pub fn par_matmul_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, threads: usize) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols), "output shape mismatch");
+    out.data.fill(0.0);
+    let cols = out.cols;
+    let threads = if a.rows * a.cols * cols.max(1) < PAR_MIN_WORK { 1 } else { threads.max(1) };
+    for_each_row_tile(out.rows, cols, &mut out.data, threads, |r0, tile| {
+        let nrows = tile.len() / cols;
+        for kb in (0..a.cols).step_by(K_BLOCK) {
+            let kend = (kb + K_BLOCK).min(a.cols);
+            for i in 0..nrows {
+                let arow = a.row(r0 + i);
+                let orow = &mut tile[i * cols..(i + 1) * cols];
+                for (k, &av) in arow.iter().enumerate().take(kend).skip(kb) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (o, &bv) in orow.iter_mut().zip(b.row(k)) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `out = aᵀ · b` without materializing `aᵀ`: the column of `a` feeding
+/// each output row is read by index swap (`a[k, m]`), accumulated over
+/// ascending k — the paper's transpose-free weight-gradient contraction
+/// `dW = (A·X)ᵀ·dZ`.
+pub fn par_matmul_tn_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, threads: usize) {
+    assert_eq!(a.rows, b.rows, "contraction mismatch");
+    assert_eq!((out.rows, out.cols), (a.cols, b.cols), "output shape mismatch");
+    out.data.fill(0.0);
+    let cols = out.cols;
+    let threads = if a.rows * a.cols * cols.max(1) < PAR_MIN_WORK { 1 } else { threads.max(1) };
+    for_each_row_tile(out.rows, cols, &mut out.data, threads, |m0, tile| {
+        let nrows = tile.len() / cols;
+        for k in 0..a.rows {
+            let arow = a.row(k);
+            let brow = b.row(k);
+            for i in 0..nrows {
+                let av = arow[m0 + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let orow = &mut tile[i * cols..(i + 1) * cols];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `out = a · bᵀ` without materializing `bᵀ`: each output element is a
+/// row-row dot product (both operands stream in row-major order),
+/// accumulated over ascending k with the naive path's zero-skip on `a`.
+pub fn par_matmul_nt_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, threads: usize) {
+    assert_eq!(a.cols, b.cols, "contraction mismatch");
+    assert_eq!((out.rows, out.cols), (a.rows, b.rows), "output shape mismatch");
+    out.data.fill(0.0);
+    let cols = out.cols;
+    let threads = if a.rows * a.cols * cols.max(1) < PAR_MIN_WORK { 1 } else { threads.max(1) };
+    for_each_row_tile(out.rows, cols, &mut out.data, threads, |r0, tile| {
+        let nrows = tile.len() / cols;
+        for i in 0..nrows {
+            let arow = a.row(r0 + i);
+            let orow = &mut tile[i * cols..(i + 1) * cols];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(b.row(j)) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+    });
+}
+
 impl std::ops::Index<(usize, usize)> for Matrix {
     type Output = f32;
     #[inline]
@@ -198,5 +384,69 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(2, 3);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn par_matmul_matches_naive_bitwise() {
+        let mut rng = SplitMix64::new(21);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        let b = Matrix::randn(53, 29, 1.0, &mut rng);
+        let naive = a.matmul(&b);
+        for threads in [1usize, 2, 4, 8] {
+            let mut out = Matrix::zeros(37, 29);
+            par_matmul_into(&mut out, a.view(), b.view(), threads);
+            assert_eq!(out, naive, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_matmul_tn_matches_explicit_transpose() {
+        let mut rng = SplitMix64::new(22);
+        // a is K×M; out = aᵀ·b is M×P.
+        let a = Matrix::randn(41, 17, 1.0, &mut rng);
+        let b = Matrix::randn(41, 13, 1.0, &mut rng);
+        let naive = a.transpose().matmul(&b);
+        let mut out = Matrix::zeros(17, 13);
+        par_matmul_tn_into(&mut out, a.view(), b.view(), 4);
+        assert_eq!(out, naive);
+    }
+
+    #[test]
+    fn par_matmul_nt_matches_explicit_transpose() {
+        let mut rng = SplitMix64::new(23);
+        // b is P×K; out = a·bᵀ is M×P.
+        let a = Matrix::randn(19, 31, 1.0, &mut rng);
+        let b = Matrix::randn(23, 31, 1.0, &mut rng);
+        let naive = a.matmul(&b.transpose());
+        let mut out = Matrix::zeros(19, 23);
+        par_matmul_nt_into(&mut out, a.view(), b.view(), 4);
+        assert!(out.max_abs_diff(&naive) < 1e-6);
+    }
+
+    #[test]
+    fn par_matmul_handles_degenerate_shapes() {
+        // Empty contraction: out must be all zeros.
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let mut out = Matrix::from_vec(3, 4, vec![9.0; 12]);
+        par_matmul_into(&mut out, a.view(), b.view(), 4);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+        // Empty output dims do not panic.
+        let mut empty = Matrix::zeros(0, 4);
+        par_matmul_into(&mut empty, Matrix::zeros(0, 5).view(), Matrix::zeros(5, 4).view(), 4);
+        let mut nocols = Matrix::zeros(4, 0);
+        par_matmul_into(&mut nocols, Matrix::zeros(4, 5).view(), Matrix::zeros(5, 0).view(), 4);
+        // 1-row × 1-col.
+        let a = Matrix::from_vec(1, 2, vec![2.0, 3.0]);
+        let b = Matrix::from_vec(2, 1, vec![4.0, 5.0]);
+        let mut out = Matrix::zeros(1, 1);
+        par_matmul_into(&mut out, a.view(), b.view(), 8);
+        assert_eq!(out.data, vec![23.0]);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all_cpus() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
     }
 }

@@ -1,0 +1,128 @@
+//! Property tests for the blocked/tiled parallel matmul core: the
+//! parallel paths must agree with the naive [`Matrix::matmul`] on random
+//! rectangular shapes — including empty and 1-row/1-column edge cases —
+//! at every thread count.  Agreement is *exact* for the plain and Aᵀ·B
+//! paths (the tiling preserves the naive per-element accumulation
+//! order); the A·Bᵀ dot-product path is checked to a tight tolerance.
+
+use gcn_noc::util::matrix::{
+    par_matmul_into, par_matmul_nt_into, par_matmul_tn_into, MatRef, Matrix,
+};
+use gcn_noc::util::proptest::PropRunner;
+use gcn_noc::util::rng::SplitMix64;
+
+/// Random matrix with ~30% exact zeros (exercises the zero-skip path the
+/// staged adjacencies rely on).
+fn sparse_randn(rows: usize, cols: usize, rng: &mut SplitMix64) -> Matrix {
+    let mut m = Matrix::randn(rows, cols, 1.0, rng);
+    for v in &mut m.data {
+        if rng.gen_range(10) < 3 {
+            *v = 0.0;
+        }
+    }
+    m
+}
+
+/// Random dimension weighted to hit the 0/1 edge cases often; the
+/// 10..=49 bulk keeps most cases above the parallel-launch threshold so
+/// the tiled work-queue path is actually exercised.
+fn dim(rng: &mut SplitMix64) -> usize {
+    match rng.gen_range(6) {
+        0 => 0,
+        1 => 1,
+        _ => rng.gen_range(40) + 10,
+    }
+}
+
+#[test]
+fn par_matmul_agrees_with_naive_on_random_shapes() {
+    PropRunner::new(0x9A7, 64).run("par_matmul == naive", |rng| {
+        let (m, n, p) = (dim(rng), dim(rng), dim(rng));
+        let a = sparse_randn(m, n, rng);
+        let b = sparse_randn(n, p, rng);
+        let naive = a.matmul(&b);
+        for threads in [1usize, 2, 4, 8] {
+            let mut out = Matrix::zeros(m, p);
+            par_matmul_into(&mut out, a.view(), b.view(), threads);
+            if out != naive {
+                return Err(format!(
+                    "({m}x{n})·({n}x{p}) at {threads} threads: max diff {}",
+                    out.max_abs_diff(&naive)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn par_matmul_tn_agrees_with_explicit_transpose() {
+    PropRunner::new(0x9A8, 64).run("par_matmul_tn == transpose+naive", |rng| {
+        let (k, m, p) = (dim(rng), dim(rng), dim(rng));
+        let a = sparse_randn(k, m, rng);
+        let b = sparse_randn(k, p, rng);
+        let naive = a.transpose().matmul(&b);
+        for threads in [1usize, 2, 4, 8] {
+            let mut out = Matrix::zeros(m, p);
+            par_matmul_tn_into(&mut out, a.view(), b.view(), threads);
+            if out != naive {
+                return Err(format!(
+                    "aᵀ({k}x{m})·b({k}x{p}) at {threads} threads: max diff {}",
+                    out.max_abs_diff(&naive)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn par_matmul_nt_agrees_with_explicit_transpose() {
+    PropRunner::new(0x9A9, 64).run("par_matmul_nt ~= naive+transpose", |rng| {
+        let (m, k, p) = (dim(rng), dim(rng), dim(rng));
+        let a = sparse_randn(m, k, rng);
+        let b = sparse_randn(p, k, rng);
+        let naive = a.matmul(&b.transpose());
+        for threads in [1usize, 2, 4, 8] {
+            let mut out = Matrix::zeros(m, p);
+            par_matmul_nt_into(&mut out, a.view(), b.view(), threads);
+            let diff = out.max_abs_diff(&naive);
+            if diff > 1e-6 {
+                return Err(format!(
+                    "a({m}x{k})·bᵀ({p}x{k}) at {threads} threads: max diff {diff}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_output_does_not_depend_on_tile_assignment() {
+    // Same multiply at every thread count must be *bit*-identical for
+    // every variant — the determinism contract the trainer's thread knob
+    // relies on.
+    type ParFn = fn(&mut Matrix, MatRef<'_>, MatRef<'_>, usize);
+    PropRunner::new(0x9AA, 32).run("thread-count invariance", |rng| {
+        let (m, n, p) = (dim(rng).max(1), dim(rng).max(1), dim(rng).max(1));
+        let variants: [(&str, ParFn, (usize, usize), (usize, usize), (usize, usize)); 3] = [
+            ("nn", par_matmul_into, (m, n), (n, p), (m, p)),
+            ("tn", par_matmul_tn_into, (n, m), (n, p), (m, p)),
+            ("nt", par_matmul_nt_into, (m, n), (p, n), (m, p)),
+        ];
+        for (label, f, ashape, bshape, oshape) in variants {
+            let a = sparse_randn(ashape.0, ashape.1, rng);
+            let b = sparse_randn(bshape.0, bshape.1, rng);
+            let mut first = Matrix::zeros(oshape.0, oshape.1);
+            f(&mut first, a.view(), b.view(), 1);
+            for threads in [2usize, 3, 5, 8, 16] {
+                let mut out = Matrix::zeros(oshape.0, oshape.1);
+                f(&mut out, a.view(), b.view(), threads);
+                if out.data.iter().zip(&first.data).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                    return Err(format!("{label}: bitwise divergence at {threads} threads"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
