@@ -13,7 +13,7 @@
 
 mod common;
 
-use common::{banner, fmt_time, smoke_clamp, time_it, trials};
+use common::{banner, compare_baseline, fmt_time, smoke_clamp, time_it, trials};
 use gcn_noc::config::quick_epoch_config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
 use gcn_noc::graph::datasets::by_name;
@@ -131,6 +131,10 @@ fn main() {
         thread_json.join(",\n"),
     );
     let path = "BENCH_routing.json";
+    compare_baseline(path, "stats_sink_waves_per_sec", 1.0 / t_stats, true);
+    // First "seconds" in the artifact = epoch model at 1 thread.
+    compare_baseline(path, "seconds", epoch_times[0], false);
+    compare_baseline(path, "epoch_speedup_1_to_8", epoch_speedup, true);
     match std::fs::write(path, &json) {
         Ok(()) => println!("\nbaseline written to {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),

@@ -11,10 +11,49 @@
 
 mod common;
 
-use common::{banner, fmt_time, time_it, trials};
+use common::{banner, compare_baseline, fmt_time, time_it, trials};
 use gcn_noc::graph::generate::community_graph;
 use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::util::alloc_probe::{allocs_on_this_thread, CountingAlloc};
 use gcn_noc::util::rng::SplitMix64;
+
+// Main-thread allocation counter (shared impl in `util::alloc_probe`):
+// proves the steady-state train step (sampling + staging arena + pooled
+// matmuls + optimizer) is heap-silent.
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// Warm the trainer, then replay a checkpointed step window so every
+/// buffer high-water mark is already reached, and count main-thread heap
+/// allocations across the replayed steps.
+fn steady_state_alloc_probe(graph: &gcn_noc::graph::generate::LabeledGraph) {
+    banner("steady-state allocation probe (staging arena + pooled matmuls)");
+    let cfg = TrainerConfig {
+        artifact_tag: "small".into(),
+        batch_size: 32,
+        steps: 0,
+        seed: 0xB347,
+        log_every: 0,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(graph, cfg).unwrap();
+    for _ in 0..5 {
+        trainer.step().unwrap();
+    }
+    let ck = trainer.checkpoint();
+    for _ in 0..10 {
+        trainer.step().unwrap();
+    }
+    trainer.restore(&ck).unwrap();
+    let before = allocs_on_this_thread();
+    for _ in 0..10 {
+        trainer.step().unwrap();
+    }
+    let n = allocs_on_this_thread() - before;
+    println!("heap allocations over 10 steady-state steps (main thread): {n}");
+    assert_eq!(n, 0, "steady-state train step must not allocate");
+}
 
 struct SweepPoint {
     threads: usize,
@@ -81,6 +120,8 @@ fn main() {
     let base_steps = trials(6);
     let base = sweep(&graph, "base", 64, base_steps);
 
+    steady_state_alloc_probe(&graph);
+
     let speedup = |pts: &[SweepPoint]| pts[pts.len() - 1].steps_per_sec / pts[0].steps_per_sec;
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
@@ -115,6 +156,10 @@ fn main() {
         speedup(&base),
     );
     let path = "BENCH_train.json";
+    // First "steps_per_sec" in the artifact = small shapes at 1 worker.
+    compare_baseline(path, "steps_per_sec", small[0].steps_per_sec, true);
+    compare_baseline(path, "speedup_1_to_8_small", speedup(&small), true);
+    compare_baseline(path, "speedup_1_to_8_base", speedup(&base), true);
     match std::fs::write(path, &json) {
         Ok(()) => println!("\nbaseline written to {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),

@@ -65,3 +65,49 @@ pub fn fmt_time(secs: f64) -> String {
 pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
+
+/// Extract the first `"key": <number>` value from a JSON-ish baseline
+/// file (the `BENCH_*.json` artifacts are flat enough that no parser is
+/// needed — and the bench harness must not grow dependencies).
+pub fn json_number(text: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let idx = text.find(&pat)? + pat.len();
+    let rest = text[idx..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Print a speedup/regression line for `key` against the committed
+/// baseline at `path`, before the bench overwrites it.  Never fails and
+/// never panics — missing baselines, smoke-mode baselines and smoke-mode
+/// runs just print an explanatory note, so CI's `BENCH_SMOKE=1` job stays
+/// green.
+pub fn compare_baseline(path: &str, key: &str, current: f64, higher_is_better: bool) {
+    if smoke() {
+        println!("baseline {path} [{key}]: smoke run, numbers not comparable");
+        return;
+    }
+    let Ok(text) = std::fs::read_to_string(path) else {
+        println!("baseline {path} [{key}]: none committed yet (this run writes one)");
+        return;
+    };
+    if text.contains("\"smoke\": true") {
+        println!("baseline {path} [{key}]: committed baseline is a smoke run, skipping");
+        return;
+    }
+    let Some(prev) = json_number(&text, key) else {
+        println!("baseline {path} [{key}]: key absent in committed baseline, skipping");
+        return;
+    };
+    if !(prev.is_finite() && current.is_finite()) || prev <= 0.0 || current <= 0.0 {
+        println!("baseline {path} [{key}]: non-positive values, skipping");
+        return;
+    }
+    let ratio = if higher_is_better { current / prev } else { prev / current };
+    let verdict = if ratio >= 1.0 { "speedup" } else { "regression" };
+    println!(
+        "baseline {path} [{key}]: {prev:.4} -> {current:.4}  ({ratio:.2}x {verdict} vs committed)"
+    );
+}

@@ -18,14 +18,19 @@
 //! 1. **Plan (serial)** — for every measured batch in order:
 //!    draw the batch ids, sample its layers, locate and materialize the
 //!    first [`TrainConfig::sample_passes`] non-empty 1024×1024 pass
-//!    blocks of each layer via [`sample_nonempty`] (two O(nnz) scans —
-//!    unsampled blocks are never copied), and **fork one [`SplitMix64`]
-//!    per (batch, layer, pass) in canonical order**.  Every draw from the
-//!    master RNG happens in this phase, on one thread.
+//!    blocks of each layer via a [`SampleCache`] over
+//!    `graph::blocks::sample_nonempty` (two O(nnz) scans — unsampled
+//!    blocks are never copied, and a layer whose sampled structure
+//!    repeats an earlier batch's reuses that materialization), and
+//!    **fork one [`SplitMix64`] per (batch, layer, pass) in canonical
+//!    order**.  Every draw from the master RNG happens in this phase, on
+//!    one thread.
 //! 2. **Route (parallel)** — the flattened task list from *all* batches
 //!    and layers is routed by [`TrainConfig::threads`] workers pulling
-//!    from one shared queue (`std::thread::scope`); each task uses its
-//!    own pre-forked RNG and results are committed by task index.
+//!    from one shared queue on the persistent
+//!    [`crate::util::pool::global`] worker pool (no per-epoch thread
+//!    spawns); each task uses its own pre-forked RNG and results are
+//!    committed by task index.
 //! 3. **Commit + extrapolate (serial)** — results are sliced back per
 //!    (batch, layer) in canonical order; sampled NoC cycles scale to the
 //!    layer by edge count, then Eq. 9/10 price per-core phase times.
@@ -45,12 +50,14 @@
 //! dataflow repeats the aggregation message pattern once and skips the
 //! large transposes).
 
+use std::rc::Rc;
+
 use crate::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
 use crate::core_model::timing::{
     multicore_layer_time, multicore_utilization, CoreTiming, LayerPhaseTimes,
 };
 use crate::core_model::NUM_CORES;
-use crate::graph::blocks::sample_nonempty;
+use crate::graph::blocks::{sample_nonempty, SampleCache};
 use crate::graph::coo::Coo;
 use crate::graph::datasets::DatasetSpec;
 use crate::graph::generate::LabeledGraph;
@@ -210,9 +217,11 @@ fn route_pass(block: &Coo, rng: &mut SplitMix64) -> PassResult {
 }
 
 /// Per-layer slice of a batch plan: the sampled pass blocks plus the RNG
-/// forked for each, in canonical (row-major pass) order.
+/// forked for each, in canonical (row-major pass) order.  Blocks are
+/// shared with the planning cache (`Rc`): batches whose sampled layer
+/// structure repeats reuse one materialization instead of rebucketing.
 struct LayerPlan {
-    blocks: Vec<Coo>,
+    blocks: Rc<Vec<Coo>>,
     rngs: Vec<SplitMix64>,
 }
 
@@ -240,9 +249,11 @@ fn work_graph(plans: &[BatchPlan]) -> Vec<(&Coo, SplitMix64)> {
         .collect()
 }
 
-/// Route a flattened task list on up to `threads` workers pulling from
-/// one shared queue (pass costs are power-law skewed — static chunking
-/// would bound wall time by the heaviest chunk).  Task `i` always uses
+/// Route a flattened task list on up to `threads` persistent
+/// [`crate::util::pool::global`] workers pulling from one shared queue
+/// (pass costs are power-law skewed — static chunking would bound wall
+/// time by the heaviest chunk; and no threads are spawned per call, the
+/// pool's parked workers execute the drain loop).  Task `i` always uses
 /// its own pre-forked RNG and results are committed by task index, so the
 /// output is independent of thread count and worker scheduling.
 fn route_tasks(tasks: Vec<(&Coo, SplitMix64)>, threads: usize) -> Vec<PassResult> {
@@ -264,16 +275,12 @@ fn route_tasks(tasks: Vec<(&Coo, SplitMix64)>, threads: usize) -> Vec<PassResult
             .collect(),
     );
     let done: Mutex<Vec<(usize, PassResult)>> = Mutex::new(Vec::with_capacity(n_tasks));
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(n_tasks) {
-            scope.spawn(|| loop {
-                let Some((i, block, mut rng)) = queue.lock().unwrap().pop() else {
-                    break;
-                };
-                let result = route_pass(block, &mut rng);
-                done.lock().unwrap().push((i, result));
-            });
-        }
+    crate::util::pool::global().run(threads.min(n_tasks), || loop {
+        let Some((i, block, mut rng)) = queue.lock().unwrap().pop() else {
+            break;
+        };
+        let result = route_pass(block, &mut rng);
+        done.lock().unwrap().push((i, result));
     });
     let mut done = done.into_inner().unwrap();
     done.sort_by_key(|&(i, _)| i);
@@ -294,13 +301,11 @@ impl EpochModel {
         Self { spec, cfg, model, timing: CoreTiming::default(), hbm: HbmSimulator::default() }
     }
 
-    /// Resolved worker count (0 = one per available CPU).
+    /// Resolved worker count — the shared `threads` knob semantics
+    /// ([`crate::util::pool::resolve_threads`]: 0 = one per available
+    /// CPU).
     fn effective_threads(&self) -> usize {
-        if self.cfg.threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            self.cfg.threads
-        }
+        crate::util::pool::resolve_threads(self.cfg.threads)
     }
 
     /// Table-1 shape parameters for layer `l` (0 = outermost) of a batch.
@@ -332,25 +337,36 @@ impl EpochModel {
         &self,
         replica: &LabeledGraph,
         sampler: &NeighborSampler<'_>,
+        mut cache: Option<&mut SampleCache>,
         rng: &mut SplitMix64,
     ) -> BatchPlan {
         let ids: Vec<u32> = (0..self.cfg.batch_size)
             .map(|_| rng.gen_range(replica.num_nodes()) as u32)
             .collect();
         let batch = sampler.sample(&ids, rng);
-        let layers: Vec<LayerPlan> = batch
-            .layers
-            .iter()
-            .map(|layer| {
-                // Locate and materialize only the sampled 1024×1024 pass
-                // blocks (two O(nnz) scans; unsampled blocks never copied).
-                let blocks =
-                    sample_nonempty(&layer.adj, SUBGRAPH_NODES, self.cfg.sample_passes.max(1));
-                let rngs: Vec<SplitMix64> = blocks.iter().map(|_| rng.fork()).collect();
-                LayerPlan { blocks, rngs }
-            })
-            .collect();
+        let k = self.cfg.sample_passes.max(1);
+        let mut layers = Vec::with_capacity(batch.layers.len());
+        for layer in &batch.layers {
+            // Locate and materialize only the sampled 1024×1024 pass
+            // blocks (two O(nnz) scans; unsampled blocks never copied).
+            // Multi-batch runs pass a cache so a layer whose sampled
+            // structure repeats an earlier batch's shares that
+            // materialization; single-batch probes pass `None` and skip
+            // the fingerprint pass entirely.
+            let blocks = match cache.as_deref_mut() {
+                Some(c) => c.sample(&layer.adj),
+                None => Rc::new(sample_nonempty(&layer.adj, SUBGRAPH_NODES, k)),
+            };
+            let rngs: Vec<SplitMix64> = blocks.iter().map(|_| rng.fork()).collect();
+            layers.push(LayerPlan { blocks, rngs });
+        }
         BatchPlan { batch, layers }
+    }
+
+    /// One planning cache per run: shared sampled-block materializations
+    /// across all measured batches.
+    fn sample_cache(&self) -> SampleCache {
+        SampleCache::new(SUBGRAPH_NODES, self.cfg.sample_passes.max(1))
     }
 
     /// Phase 3 (serial): extrapolate one layer's routed sample to the full
@@ -466,7 +482,7 @@ impl EpochModel {
         sampler: &NeighborSampler<'_>,
         rng: &mut SplitMix64,
     ) -> BatchSim {
-        let plan = self.plan_batch(replica, sampler, rng);
+        let plan = self.plan_batch(replica, sampler, None, rng);
         let results =
             route_tasks(work_graph(std::slice::from_ref(&plan)), self.effective_threads());
         self.finish_batch(&plan, &results)
@@ -551,8 +567,11 @@ impl EpochModel {
         let replica = self.spec.instantiate(self.cfg.replica_nodes, &mut rng.fork());
         let sampler = NeighborSampler::new(&replica.adj, self.cfg.fanouts.to_vec());
         // Phase 1 (serial): all master-RNG consumption, in batch order.
+        // One sample cache spans the run, so repeated sampled layer
+        // structures are bucketed once.
+        let mut cache = self.sample_cache();
         let plans: Vec<BatchPlan> = (0..self.cfg.measured_batches.max(1))
-            .map(|_| self.plan_batch(&replica, &sampler, rng))
+            .map(|_| self.plan_batch(&replica, &sampler, Some(&mut cache), rng))
             .collect();
         // Phase 2 (parallel): one shared queue over every task of the
         // epoch — batch and layer boundaries do not serialize routing.

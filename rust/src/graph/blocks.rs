@@ -15,6 +15,9 @@
 //! a block follows the layer COO's iteration order, so results are
 //! identical to slicing the full COO per pass.
 
+use std::collections::HashMap;
+use std::rc::Rc;
+
 use crate::graph::coo::Coo;
 
 /// A layer adjacency sharded into the `passes_r × passes_c` grid of
@@ -123,6 +126,77 @@ pub fn sample_nonempty(adj: &Coo, sub: usize, k: usize) -> Vec<Coo> {
         }
     }
     blocks
+}
+
+/// SplitMix64's finalizer as a stateless mixing step.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Order-sensitive 128-bit structural fingerprint of a COO (shape, edge
+/// order, coordinates and value bits all contribute), computed as two
+/// independently seeded chains in **one** pass over the edge list.  Edge
+/// order matters because the sampled blocks preserve it.
+fn fingerprint128(adj: &Coo) -> (u64, u64) {
+    let shape = (adj.n_rows as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (adj.n_cols as u64).rotate_left(24)
+        ^ (adj.nnz() as u64).rotate_left(48);
+    let mut lo = mix64(0x0DDC_0FFE_E0DD_F00D ^ shape);
+    let mut hi = mix64(0x5EED_5EED_5EED_5EED ^ shape);
+    for (r, c, v) in adj.iter() {
+        let e = mix64(((r as u64) << 32) ^ (c as u64) ^ ((v.to_bits() as u64) << 16));
+        lo = mix64(lo.wrapping_add(e));
+        hi = mix64(hi.wrapping_add(e ^ 0xA5A5_A5A5_A5A5_A5A5));
+    }
+    (lo, hi)
+}
+
+/// Memoizes [`sample_nonempty`] across measured batches: when two layers
+/// share the exact same sampled adjacency (structure *and* edge order),
+/// the second skips both bucketing scans and the block copies and shares
+/// the first result.  Keys are two independent 64-bit structural
+/// fingerprints (a 128-bit collision budget); `sub`/`k` are fixed per
+/// cache, so an entry can never be reused under different pass
+/// parameters.
+pub struct SampleCache {
+    sub: usize,
+    k: usize,
+    map: HashMap<(u64, u64), Rc<Vec<Coo>>>,
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to bucket.
+    pub misses: u64,
+}
+
+/// Entry cap: measured-batch counts are small; this only guards against
+/// pathological long-running reuse of one cache.
+const SAMPLE_CACHE_CAP: usize = 256;
+
+impl SampleCache {
+    pub fn new(sub: usize, k: usize) -> Self {
+        assert!(sub > 0, "pass size must be positive");
+        SampleCache { sub, k, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// `sample_nonempty(adj, sub, k)`, shared with every prior identical
+    /// layer.
+    pub fn sample(&mut self, adj: &Coo) -> Rc<Vec<Coo>> {
+        let key = fingerprint128(adj);
+        if let Some(hit) = self.map.get(&key) {
+            self.hits += 1;
+            return Rc::clone(hit);
+        }
+        self.misses += 1;
+        if self.map.len() >= SAMPLE_CACHE_CAP {
+            self.map.clear();
+        }
+        let blocks = Rc::new(sample_nonempty(adj, self.sub, self.k));
+        self.map.insert(key, Rc::clone(&blocks));
+        blocks
+    }
 }
 
 #[cfg(test)]
@@ -237,6 +311,32 @@ mod tests {
         // Row-major: block (0, 1) comes first and keeps both its edges.
         assert_eq!(one[0].nnz(), 2);
         assert_eq!(one[0].vals, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn sample_cache_hits_on_identical_structure_only() {
+        let adj = random_coo(2000, 3000, 5000, 7);
+        let mut cache = SampleCache::new(1024, 3);
+        let first = cache.sample(&adj);
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        assert_eq!(&*first, &sample_nonempty(&adj, 1024, 3));
+        // Identical layer: served from cache, shared storage.
+        let again = cache.sample(&adj);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert!(Rc::ptr_eq(&first, &again));
+        // Same shape, different edges: miss.
+        let other = random_coo(2000, 3000, 5000, 8);
+        let sampled = cache.sample(&other);
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+        assert_eq!(&*sampled, &sample_nonempty(&other, 1024, 3));
+        // Same edge multiset, different order: structurally different
+        // (block edge order must be preserved), so it must miss too.
+        let mut reordered = Coo::new(other.n_rows, other.n_cols);
+        for (r, c, v) in other.iter().collect::<Vec<_>>().into_iter().rev() {
+            reordered.push(r, c, v);
+        }
+        cache.sample(&reordered);
+        assert_eq!((cache.hits, cache.misses), (1, 3));
     }
 
     #[test]

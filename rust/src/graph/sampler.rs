@@ -29,12 +29,35 @@ pub struct SampledLayer {
     pub adj: Coo,
 }
 
+impl Default for SampledLayer {
+    fn default() -> Self {
+        SampledLayer { dst: Vec::new(), src: Vec::new(), adj: Coo::new(0, 0) }
+    }
+}
+
 /// A full k-hop sampled mini-batch (`layers[0]` = outermost hop / layer 1).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SampledBatch {
     pub batch_nodes: Vec<u32>,
     /// Innermost (closest to the loss) layer last.
     pub layers: Vec<SampledLayer>,
+}
+
+/// Reusable working buffers for [`NeighborSampler::sample_into`] — the
+/// trainer keeps one alive so steady-state sampling performs no heap
+/// allocations (buffers only grow to their high-water marks).
+#[derive(Default)]
+pub struct SampleScratch {
+    /// Global id → local column index of the layer being built.
+    local: std::collections::HashMap<u32, u32>,
+    /// (row, col) edges buffered until the source frontier is final.
+    edges: Vec<(u32, u32)>,
+    /// Deduplicated neighbor list of the current destination.
+    neigh: Vec<u32>,
+    /// Rejection-sampled picks of the current destination.
+    picks: Vec<u32>,
+    /// Destination frontier handed from one hop to the next.
+    dst: Vec<u32>,
 }
 
 impl SampledBatch {
@@ -71,14 +94,32 @@ impl<'g> NeighborSampler<'g> {
         Self::new(graph, vec![25, 10])
     }
 
-    /// Sample one bipartite layer for `dst` destinations with `fanout`.
-    fn sample_layer(&self, dst: &[u32], fanout: usize, rng: &mut SplitMix64) -> SampledLayer {
-        let mut src: Vec<u32> = dst.to_vec();
-        let mut local: std::collections::HashMap<u32, u32> =
-            dst.iter().enumerate().map(|(i, &g)| (g, i as u32)).collect();
+    /// Sample one bipartite layer for `dst` destinations with `fanout`,
+    /// building into recycled buffers.  The RNG draw sequence and output
+    /// are identical to a fresh build — only buffer provenance differs.
+    #[allow(clippy::too_many_arguments)]
+    fn sample_layer_into(
+        &self,
+        dst: &[u32],
+        fanout: usize,
+        rng: &mut SplitMix64,
+        local: &mut std::collections::HashMap<u32, u32>,
+        edges: &mut Vec<(u32, u32)>,
+        neigh: &mut Vec<u32>,
+        picks: &mut Vec<u32>,
+        out: &mut SampledLayer,
+    ) {
+        out.dst.clear();
+        out.dst.extend_from_slice(dst);
+        out.src.clear();
+        out.src.extend_from_slice(dst);
+        local.clear();
+        for (i, &g) in dst.iter().enumerate() {
+            local.insert(g, i as u32);
+        }
         // Edges buffered as (row, col) until the source frontier is final
         // (the Coo bounds-checks against its column count).
-        let mut edges: Vec<(u32, u32)> = Vec::new();
+        edges.clear();
         for (di, &d) in dst.iter().enumerate() {
             // Self edge first (the +I term / SAGE self path).
             edges.push((di as u32, di as u32));
@@ -89,57 +130,94 @@ impl<'g> NeighborSampler<'g> {
             // Deduplicate the neighbor list first: generators may emit
             // parallel edges, and a rejection loop over a multi-set would
             // never find `fanout` *distinct* values.
-            let mut neigh: Vec<u32> = neigh_raw.to_vec();
+            neigh.clear();
+            neigh.extend_from_slice(neigh_raw);
             neigh.sort_unstable();
             neigh.dedup();
             let take = fanout.min(neigh.len());
             // Sample without replacement when the neighborhood is small,
             // with replacement + dedupe otherwise (uniform either way).
-            let mut chosen: Vec<u32> = if neigh.len() <= fanout {
-                neigh
+            picks.clear();
+            if neigh.len() <= fanout {
+                picks.extend_from_slice(neigh);
             } else {
                 // Rejection sampling into an order-preserving Vec (a
                 // HashSet would iterate in per-instance random order and
                 // break seeded determinism); fanout ≤ 25 keeps the
                 // contains() scan trivial.
-                let mut picks: Vec<u32> = Vec::with_capacity(take);
                 while picks.len() < take {
                     let v = neigh[rng.gen_range(neigh.len())];
                     if !picks.contains(&v) {
                         picks.push(v);
                     }
                 }
-                picks
-            };
-            chosen.retain(|&v| v != d); // self edge already present
-            for v in chosen {
+            }
+            picks.retain(|&v| v != d); // self edge already present
+            for &v in picks.iter() {
                 let li = *local.entry(v).or_insert_with(|| {
-                    src.push(v);
-                    (src.len() - 1) as u32
+                    out.src.push(v);
+                    (out.src.len() - 1) as u32
                 });
                 edges.push((di as u32, li));
             }
         }
-        let mut adj = Coo::new(dst.len(), src.len());
-        for (r, c) in edges {
-            adj.push(r, c, 1.0);
+        out.adj.n_rows = dst.len();
+        out.adj.n_cols = out.src.len();
+        out.adj.rows.clear();
+        out.adj.cols.clear();
+        out.adj.vals.clear();
+        for &(r, c) in edges.iter() {
+            out.adj.push(r, c, 1.0);
         }
-        SampledLayer { dst: dst.to_vec(), src, adj }
     }
 
-    /// Sample a full mini-batch for `batch_nodes`.
-    pub fn sample(&self, batch_nodes: &[u32], rng: &mut SplitMix64) -> SampledBatch {
-        let mut layers_rev = Vec::with_capacity(self.fanouts.len());
-        let mut dst: Vec<u32> = batch_nodes.to_vec();
-        // Innermost layer (closest to loss) samples with the *largest*
-        // fanout (25 for 1-hop), matching the paper's setup.
-        for &fanout in self.fanouts.iter().rev() {
-            let layer = self.sample_layer(&dst, fanout, rng);
-            dst = layer.src.clone();
-            layers_rev.push(layer);
+    /// Sample a full mini-batch for `batch_nodes` into recycled storage:
+    /// `scratch` holds the working buffers, `out` the previous batch's
+    /// layers.  Output and RNG consumption are identical to
+    /// [`NeighborSampler::sample`]; steady state this performs no heap
+    /// allocations (buffers grow only to their high-water marks).
+    pub fn sample_into(
+        &self,
+        batch_nodes: &[u32],
+        rng: &mut SplitMix64,
+        scratch: &mut SampleScratch,
+        out: &mut SampledBatch,
+    ) {
+        let hops = self.fanouts.len();
+        out.batch_nodes.clear();
+        out.batch_nodes.extend_from_slice(batch_nodes);
+        out.layers.resize_with(hops, SampledLayer::default);
+        let SampleScratch { local, edges, neigh, picks, dst } = scratch;
+        dst.clear();
+        dst.extend_from_slice(batch_nodes);
+        // Innermost layer (closest to loss, slot `hops - 1`) samples
+        // first with the *largest* fanout (25 for 1-hop), matching the
+        // paper's setup; each layer's source frontier becomes the next
+        // (outer) layer's destination set.
+        for j in (0..hops).rev() {
+            self.sample_layer_into(
+                dst,
+                self.fanouts[j],
+                rng,
+                local,
+                edges,
+                neigh,
+                picks,
+                &mut out.layers[j],
+            );
+            dst.clear();
+            dst.extend_from_slice(&out.layers[j].src);
         }
-        layers_rev.reverse();
-        SampledBatch { batch_nodes: batch_nodes.to_vec(), layers: layers_rev }
+    }
+
+    /// Sample a full mini-batch for `batch_nodes` (fresh allocations —
+    /// hot loops hold a [`SampleScratch`] and call
+    /// [`NeighborSampler::sample_into`] instead).
+    pub fn sample(&self, batch_nodes: &[u32], rng: &mut SplitMix64) -> SampledBatch {
+        let mut scratch = SampleScratch::default();
+        let mut out = SampledBatch::default();
+        self.sample_into(batch_nodes, rng, &mut scratch, &mut out);
+        out
     }
 }
 

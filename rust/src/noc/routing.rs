@@ -25,7 +25,12 @@
 //! all the epoch model consumes) never heap-allocates, while
 //! [`TableSink`] still materializes the full per-cycle [`RoutingTable`]
 //! for instruction emission, replay and the constraint-checking tests.
-//! All working state lives in a reusable fixed-size [`WaveScratch`].
+//! All working state lives in a reusable fixed-size [`WaveScratch`];
+//! since a wave carries at most 64 messages, the active set and the
+//! sorter's step classes are single `u64` bitmask words scanned
+//! word-at-a-time (set-bit iteration in ascending index order — the same
+//! canonical order the old per-slot loops walked, so RNG draw sequences
+//! and schedules are unchanged).
 //! Sinks never influence planning — in particular the RNG draw sequence —
 //! so every sink observes the identical schedule for a given (wave, seed).
 
@@ -304,12 +309,17 @@ pub struct WaveScratch {
     arrival: [u32; MAX_WAVE_MESSAGES],
     /// Per-cycle route entries handed to the sink.
     cycle: [RouteEntry; MAX_WAVE_MESSAGES],
-    /// Counting-sort output: active messages, shortest step first.
-    order: [u32; MAX_WAVE_MESSAGES],
-    /// Undelivered message indices (compacted in place as messages land).
-    active: [u32; MAX_WAVE_MESSAGES],
-    active_len: usize,
+    /// Undelivered messages as one bitmask word — [`MAX_WAVE_MESSAGES`]
+    /// is exactly 64, so every active-set scan (XOR refresh, sorter,
+    /// retire) walks set bits of a single `u64` instead of a compacted
+    /// index list.
+    active: u64,
 }
+
+// The bitmask planner packs one bit per wave message into a single u64;
+// if the wave bound ever outgrows the word, this must become a compile
+// error, not a masked shift.
+const _: () = assert!(MAX_WAVE_MESSAGES <= 64, "wave active-set masks are single u64 words");
 
 impl WaveScratch {
     pub fn new() -> Self {
@@ -319,11 +329,25 @@ impl WaveScratch {
             path_set: [PathSet::default(); MAX_WAVE_MESSAGES],
             arrival: [0; MAX_WAVE_MESSAGES],
             cycle: [RouteEntry::Done; MAX_WAVE_MESSAGES],
-            order: [0; MAX_WAVE_MESSAGES],
-            active: [0; MAX_WAVE_MESSAGES],
-            active_len: 0,
+            active: 0,
         }
     }
+}
+
+/// Iterate the set bits of a message mask in ascending index order — the
+/// same canonical order the old compacted index list preserved, so RNG
+/// consumption (and therefore every schedule) is unchanged.
+#[inline]
+fn bits(mut m: u64) -> impl Iterator<Item = usize> {
+    std::iter::from_fn(move || {
+        if m == 0 {
+            None
+        } else {
+            let i = m.trailing_zeros() as usize;
+            m &= m - 1;
+            Some(i)
+        }
+    })
 }
 
 impl Default for WaveScratch {
@@ -359,57 +383,43 @@ pub fn route_wave<S: RouteSink>(
     );
 
     // Routing_point ← A; messages already home are never activated.
-    scratch.active_len = 0;
+    scratch.active = 0;
     for i in 0..p {
         scratch.pos[i] = sources[i];
         scratch.steps[i] = 0;
         scratch.arrival[i] = 0;
         if sources[i] != dests[i] {
-            scratch.active[scratch.active_len] = i as u32;
-            scratch.active_len += 1;
+            scratch.active |= 1u64 << i;
         }
     }
 
     let mut planned = 0u32;
     // while !zero_all(Step_Seq)
     loop {
-        // XOR_Array: per-message single-step path set + step count.  Only
-        // undelivered messages are scanned — routing tails have few
-        // survivors.
-        for &iu in &scratch.active[..scratch.active_len] {
-            let i = iu as usize;
-            scratch.steps[i] = Hypercube::distance(scratch.pos[i], dests[i]);
+        // XOR_Array: per-message single-step path set + step count, plus
+        // one step-class mask per Hamming distance (the sorter's input).
+        // Only undelivered messages are scanned — one u64 word covers the
+        // whole wave, and routing tails have few surviving bits.
+        let mut step_mask = [0u64; DIMS];
+        for i in bits(scratch.active) {
+            let d = Hypercube::distance(scratch.pos[i], dests[i]);
+            scratch.steps[i] = d;
             scratch.path_set[i] = PathSet::from_xor(scratch.pos[i], dests[i]);
+            step_mask[d as usize - 1] |= 1u64 << i;
         }
-        if scratch.active_len == 0 {
+        if scratch.active == 0 {
             break;
         }
+        let active_count = scratch.active.count_ones() as usize;
         if planned >= MAX_CYCLES {
-            return Err(RoutingError {
-                max_cycles: MAX_CYCLES,
-                undelivered: scratch.active_len,
-            });
+            return Err(RoutingError { max_cycles: MAX_CYCLES, undelivered: active_count });
         }
 
         // Routing Set Filter (constraint 1 pre-pass): scan all path sets;
         // while some candidate node is named more than MAX_RECV times,
         // remove it — preferentially from messages with the most
         // alternatives (priority re-balanced after each removal).
-        set_filter(&mut scratch.path_set, &scratch.active[..scratch.active_len]);
-
-        // Sorter: indices of active messages, shortest step first (they
-        // release channels soonest; long-step messages have more
-        // alternative paths and thus lower priority).  Counting sort over
-        // the 1..=DIMS step values.
-        let mut order_len = 0usize;
-        for s in 1..=DIMS as u32 {
-            for &iu in &scratch.active[..scratch.active_len] {
-                if scratch.steps[iu as usize] == s {
-                    scratch.order[order_len] = iu;
-                    order_len += 1;
-                }
-            }
-        }
+        set_filter(&mut scratch.path_set, scratch.active);
 
         // Routing Table Filler + Routing Set Remover.
         for i in 0..p {
@@ -422,60 +432,60 @@ pub fn route_wave<S: RouteSink>(
         let mut link_used = [false; NUM_CORES * DIMS];
         let mut hops = 0usize;
 
-        for &iu in &scratch.order[..order_len] {
-            let i = iu as usize;
-            let from = scratch.pos[i];
-            // Drop candidates that violate constraints after earlier fills.
-            scratch.path_set[i].retain(|cand| {
-                let dim = (from ^ cand).trailing_zeros() as usize;
-                recv_count[cand as usize] < MAX_RECV_PER_CYCLE as u8
-                    && !link_used[Hypercube::link_index(from, dim)]
-            });
-            let set = scratch.path_set[i].as_slice();
-            if set.is_empty() {
-                // "×": already initialized to Stall — park in the virtual
-                // channel until the next cycle.
-                continue;
+        // Sorter: shortest step first (they release channels soonest;
+        // long-step messages have more alternative paths and thus lower
+        // priority) — walk the per-distance masks in ascending-index
+        // order, replacing the old counting sort and its order buffer.
+        for mask in step_mask {
+            for i in bits(mask) {
+                let from = scratch.pos[i];
+                // Drop candidates that violate constraints after earlier
+                // fills.
+                scratch.path_set[i].retain(|cand| {
+                    let dim = (from ^ cand).trailing_zeros() as usize;
+                    recv_count[cand as usize] < MAX_RECV_PER_CYCLE as u8
+                        && !link_used[Hypercube::link_index(from, dim)]
+                });
+                let set = scratch.path_set[i].as_slice();
+                if set.is_empty() {
+                    // "×": already initialized to Stall — park in the
+                    // virtual channel until the next cycle.
+                    continue;
+                }
+                // Rand_sel: uniform choice among surviving single-step
+                // paths.
+                let choice = set[rng.gen_range(set.len())];
+                let dim = (from ^ choice).trailing_zeros() as usize;
+                link_used[Hypercube::link_index(from, dim)] = true;
+                recv_count[choice as usize] += 1;
+                scratch.cycle[i] = RouteEntry::Hop(choice);
+                hops += 1;
             }
-            // Rand_sel: uniform choice among surviving single-step paths.
-            let choice = set[rng.gen_range(set.len())];
-            let dim = (from ^ choice).trailing_zeros() as usize;
-            link_used[Hypercube::link_index(from, dim)] = true;
-            recv_count[choice as usize] += 1;
-            scratch.cycle[i] = RouteEntry::Hop(choice);
-            hops += 1;
         }
 
         // Every active message either hopped or stalled this cycle.
-        let stalls = scratch.active_len - hops;
+        let stalls = active_count - hops;
         planned += 1;
         sink.record_cycle(&scratch.cycle[..p], hops, stalls);
 
-        // Generate_rp: advance routing points; record arrivals and retire
-        // delivered messages from the active list.  Delivered messages must
-        // also zero their `steps` entry: the per-cycle table is initialized
-        // from `steps`, and the XOR Array only refreshes *active* messages,
-        // so a stale nonzero count would record them as Stall ("×") instead
+        // Generate_rp: advance routing points; record arrivals and clear
+        // delivered messages' bits.  Delivered messages must also zero
+        // their `steps` entry: the per-cycle table is initialized from
+        // `steps`, and the XOR Array only refreshes *active* messages, so
+        // a stale nonzero count would record them as Stall ("×") instead
         // of Done in every later cycle, inflating `total_stalls()`.
-        let mut w = 0usize;
-        for r in 0..scratch.active_len {
-            let iu = scratch.active[r];
-            let i = iu as usize;
-            let mut delivered = false;
+        let mut delivered = 0u64;
+        for i in bits(scratch.active) {
             if let RouteEntry::Hop(next) = scratch.cycle[i] {
                 scratch.pos[i] = next;
                 if next == dests[i] {
                     scratch.arrival[i] = planned;
                     scratch.steps[i] = 0;
-                    delivered = true;
+                    delivered |= 1u64 << i;
                 }
             }
-            if !delivered {
-                scratch.active[w] = iu;
-                w += 1;
-            }
         }
-        scratch.active_len = w;
+        scratch.active &= !delivered;
     }
 
     sink.finish(&scratch.arrival[..p], &scratch.pos[..p]);
@@ -502,11 +512,13 @@ pub fn route_parallel_multicast(
 /// The Routing Set Filter: enforce that no candidate node is targeted by
 /// more than `MAX_RECV_PER_CYCLE` path sets, removing from the largest
 /// (most-alternatives) sets first and re-balancing after each removal.
-fn set_filter(path_set: &mut [PathSet], active: &[u32]) {
+/// `active` is the wave's undelivered-message bitmask; bit scans visit
+/// messages in the same ascending order the old index list did.
+fn set_filter(path_set: &mut [PathSet], active: u64) {
     // Candidate-occurrence counts, maintained incrementally.
     let mut count = [0u8; NUM_CORES];
-    for &i in active {
-        for &cand in path_set[i as usize].as_slice() {
+    for i in bits(active) {
+        for &cand in path_set[i].as_slice() {
             count[cand as usize] += 1;
         }
     }
@@ -521,9 +533,7 @@ fn set_filter(path_set: &mut [PathSet], active: &[u32]) {
         // Remove it from the message with the most alternative paths (but
         // never drain a set to empty here — the filler's virtual channel
         // handles terminal conflicts).
-        let victim = active
-            .iter()
-            .map(|&i| i as usize)
+        let victim = bits(active)
             .filter(|&i| path_set[i].len > 1 && path_set[i].contains(node as u8))
             .max_by_key(|&i| path_set[i].len);
         match victim {
@@ -648,8 +658,7 @@ mod tests {
         // filter must not drain single-element sets.
         let mut sets: Vec<PathSet> = (0..6).map(|_| PathSet::from_xor(1, 0)).collect();
         assert!(sets.iter().all(|s| s.as_slice() == [0u8]));
-        let active: Vec<u32> = (0..6).collect();
-        set_filter(&mut sets, &active);
+        set_filter(&mut sets, 0b11_1111);
         assert!(sets.iter().all(|s| s.len == 1));
     }
 

@@ -83,12 +83,14 @@ pub trait ComputeBackend {
 
     /// One fused training step on a staged batch: forward + transpose-free
     /// backward + optimizer update, in place on `state`.  Returns the
-    /// masked mean loss.  Takes the batch by value: staged tensors are
-    /// single-use, so the PJRT path can move them into the executor
-    /// without per-step copies.
+    /// masked mean loss.  Borrows the batch: the trainer recycles one
+    /// [`crate::train::batch::StagingArena`]'s buffers across steps, so
+    /// backends must not assume ownership (the native backend reads the
+    /// tensors as matrix views; the PJRT path copies them into device
+    /// literals, which it did internally anyway).
     fn train_step(
         &mut self,
-        staged: StagedBatch,
+        staged: &StagedBatch,
         state: &mut ModelState,
         optimizer: Optimizer,
         lr: f32,
@@ -103,7 +105,7 @@ pub trait ComputeBackend {
     /// rejected, not restaged.
     fn eval_batch(
         &mut self,
-        staged: StagedBatch,
+        staged: &StagedBatch,
         state: &ModelState,
     ) -> anyhow::Result<(f32, f32)>;
 }
@@ -178,21 +180,21 @@ impl ComputeBackend for PjrtBackend {
 
     fn train_step(
         &mut self,
-        staged: StagedBatch,
+        staged: &StagedBatch,
         state: &mut ModelState,
         optimizer: Optimizer,
         lr: f32,
     ) -> anyhow::Result<f32> {
         anyhow::ensure!(!self.artifact.is_empty(), "backend not prepared");
         let meta = self.executor.meta(&self.artifact)?.clone();
-        check_staged(&staged, &meta)?;
-        // Move the staged tensors into the input list — no copies on the
-        // hot path (staging overhead target: <20% of the PJRT step).
-        let StagedBatch { x, a1, a2, yhot, row_mask, nvalid, .. } = staged;
+        check_staged(staged, &meta)?;
+        // Copy the borrowed staged tensors into the input list (the
+        // executor turns host tensors into device literals regardless,
+        // so the arena-borrow contract costs the PJRT path nothing new).
         let mut inputs = vec![
-            x,
-            a1,
-            a2,
+            staged.x.clone(),
+            staged.a1.clone(),
+            staged.a2.clone(),
             TensorIn::matrix(meta.d, meta.h, state.w1.data.clone()),
             TensorIn::matrix(meta.h, meta.c, state.w2.data.clone()),
         ];
@@ -200,9 +202,9 @@ impl ComputeBackend for PjrtBackend {
             inputs.push(TensorIn::matrix(meta.d, meta.h, state.v1.data.clone()));
             inputs.push(TensorIn::matrix(meta.h, meta.c, state.v2.data.clone()));
         }
-        inputs.push(yhot);
-        inputs.push(row_mask);
-        inputs.push(nvalid);
+        inputs.push(staged.yhot.clone());
+        inputs.push(staged.row_mask.clone());
+        inputs.push(staged.nvalid.clone());
         inputs.push(TensorIn::scalar(lr));
         if let Optimizer::Momentum { mu } = optimizer {
             inputs.push(TensorIn::scalar(mu));
@@ -228,7 +230,7 @@ impl ComputeBackend for PjrtBackend {
 
     fn eval_batch(
         &mut self,
-        staged: StagedBatch,
+        staged: &StagedBatch,
         state: &ModelState,
     ) -> anyhow::Result<(f32, f32)> {
         anyhow::ensure!(!self.tag.is_empty(), "backend not prepared");
@@ -236,17 +238,16 @@ impl ComputeBackend for PjrtBackend {
         let meta = self.executor.meta(&eval_name)?.clone();
         // The trainer stages with the *train* artifact's meta; guard
         // against an eval artifact compiled with different shapes.
-        check_staged(&staged, &meta)?;
-        let StagedBatch { x, a1, a2, yhot, row_mask, nvalid, .. } = staged;
+        check_staged(staged, &meta)?;
         let inputs = vec![
-            x,
-            a1,
-            a2,
+            staged.x.clone(),
+            staged.a1.clone(),
+            staged.a2.clone(),
             TensorIn::matrix(meta.d, meta.h, state.w1.data.clone()),
             TensorIn::matrix(meta.h, meta.c, state.w2.data.clone()),
-            yhot,
-            row_mask,
-            nvalid,
+            staged.yhot.clone(),
+            staged.row_mask.clone(),
+            staged.nvalid.clone(),
         ];
         let outputs = self.executor.run(&eval_name, &inputs)?;
         anyhow::ensure!(outputs.len() == 2, "eval returns (loss, correct)");

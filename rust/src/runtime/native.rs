@@ -23,9 +23,11 @@
 //!
 //! All intermediates live in a [`Scratch`] sized once at `prepare()`
 //! (same discipline as the NoC `WaveScratch`): the hot loop performs **no
-//! per-step allocations** beyond what batch staging itself produces, and
-//! results are bit-identical at any thread count (the tiled matmuls keep
-//! a fixed per-element accumulation order).
+//! per-step allocations** — batch staging recycles a
+//! [`crate::train::batch::StagingArena`] and the parallel matmuls run on
+//! the persistent worker pool — and results are bit-identical at any
+//! thread count (the tiled matmuls keep a fixed per-element accumulation
+//! order).
 
 use crate::runtime::backend::{check_staged, ComputeBackend, ModelState, Optimizer};
 use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
@@ -211,18 +213,18 @@ impl ComputeBackend for NativeBackend {
 
     fn train_step(
         &mut self,
-        staged: StagedBatch,
+        staged: &StagedBatch,
         state: &mut ModelState,
         optimizer: Optimizer,
         lr: f32,
     ) -> anyhow::Result<f32> {
         let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
-        check_staged(&staged, meta)?;
+        check_staged(staged, meta)?;
         let t = self.threads;
         let agco = self.agco;
         let s = self.scratch.as_mut().expect("scratch allocated in prepare");
 
-        Self::forward(s, &staged, state, agco, t);
+        Self::forward(s, staged, state, agco, t);
         let yhot = staged.yhot.as_mat();
         let nvalid = staged.nvalid();
         let loss = softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2);
@@ -280,15 +282,15 @@ impl ComputeBackend for NativeBackend {
 
     fn eval_batch(
         &mut self,
-        staged: StagedBatch,
+        staged: &StagedBatch,
         state: &ModelState,
     ) -> anyhow::Result<(f32, f32)> {
         let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
-        check_staged(&staged, meta)?;
+        check_staged(staged, meta)?;
         let t = self.threads;
         let agco = self.agco;
         let s = self.scratch.as_mut().expect("scratch allocated in prepare");
-        Self::forward(s, &staged, state, agco, t);
+        Self::forward(s, staged, state, agco, t);
         let yhot = staged.yhot.as_mat();
         let nvalid = staged.nvalid();
         let loss = softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2);
@@ -360,7 +362,7 @@ mod tests {
             v1: Matrix::zeros(1, 1),
             v2: Matrix::zeros(1, 1),
         };
-        assert!(b.train_step(staged.clone(), &mut state, Optimizer::Sgd, 0.1).is_err());
-        assert!(b.eval_batch(staged, &state).is_err());
+        assert!(b.train_step(&staged, &mut state, Optimizer::Sgd, 0.1).is_err());
+        assert!(b.eval_batch(&staged, &state).is_err());
     }
 }

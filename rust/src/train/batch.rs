@@ -5,9 +5,18 @@
 //! Zero padding is numerically exact (DESIGN.md §5): padded adjacency
 //! rows/cols are zero so they aggregate nothing, padded feature rows are
 //! zero so they combine to zero, and masked loss rows contribute no error.
+//!
+//! Staged shapes are fixed per prepared artifact, so the hot loop stages
+//! through a [`StagingArena`]: one set of tensor buffers (plus the
+//! normalization degree scratch) allocated once and refilled every step —
+//! **zero steady-state heap allocations per staged batch**.  The
+//! normalization + densify pass writes normalized values straight into
+//! the padded buffer, so no intermediate normalized COO is materialized
+//! either.  [`stage`] remains as the one-shot allocating wrapper for
+//! tests and probes.
 
 use crate::graph::generate::LabeledGraph;
-use crate::graph::sampler::SampledBatch;
+use crate::graph::sampler::{SampledBatch, SampledLayer};
 use crate::runtime::executor::TensorIn;
 use crate::runtime::manifest::ArtifactMeta;
 
@@ -54,66 +63,161 @@ impl std::fmt::Display for CapacityError {
 
 impl std::error::Error for CapacityError {}
 
-/// GCN normalization + padding of one sampled layer's adjacency.
-fn stage_adj(
-    layer: &crate::graph::sampler::SampledLayer,
-    pad_rows: usize,
+/// Normalize one sampled layer's adjacency and densify it straight into
+/// a zeroed padded buffer (`pad_cols` columns per row).  Produces the
+/// exact values of `gcn_normalized()` / `row_normalized()` followed by
+/// `to_dense_padded()` — same degree counts, same division expressions,
+/// same edge order — without materializing the normalized COO.
+fn stage_adj_into(
+    layer: &SampledLayer,
     pad_cols: usize,
     mean_norm: bool,
-) -> Vec<f32> {
-    let norm = if mean_norm {
-        layer.adj.row_normalized()
+    out: &mut [f32],
+    rdeg: &mut Vec<f32>,
+    cdeg: &mut Vec<f32>,
+) {
+    out.fill(0.0);
+    let adj = &layer.adj;
+    rdeg.clear();
+    rdeg.resize(adj.n_rows, 0.0);
+    if mean_norm {
+        // Row-mean normalization (GraphSAGE mean aggregator).
+        for &r in &adj.rows {
+            rdeg[r as usize] += 1.0;
+        }
+        for (r, c, v) in adj.iter() {
+            out[r as usize * pad_cols + c as usize] += v / rdeg[r as usize].max(1.0);
+        }
     } else {
-        layer.adj.gcn_normalized()
-    };
-    norm.to_dense_padded(pad_rows, pad_cols)
+        // Symmetric GCN normalization on the bipartite sampled block.
+        cdeg.clear();
+        cdeg.resize(adj.n_cols, 0.0);
+        for (r, c, _) in adj.iter() {
+            rdeg[r as usize] += 1.0;
+            cdeg[c as usize] += 1.0;
+        }
+        for (r, c, v) in adj.iter() {
+            out[r as usize * pad_cols + c as usize] +=
+                v / (rdeg[r as usize] * cdeg[c as usize]).sqrt().max(1e-12);
+        }
+    }
 }
 
-/// Stage `batch` for `meta`, gathering features/labels from `graph`.
+/// Recyclable staging slots for one prepared artifact's fixed shapes.
+/// Allocated once; every [`StagingArena::stage`] call refills the same
+/// buffers in place — the training hot loop's zero-allocation staging
+/// path.
+pub struct StagingArena {
+    meta: ArtifactMeta,
+    staged: StagedBatch,
+    /// Row/column degree scratch for the fused normalize-and-densify.
+    rdeg: Vec<f32>,
+    cdeg: Vec<f32>,
+}
+
+impl StagingArena {
+    /// Allocate staging slots shaped for `meta`.
+    pub fn new(meta: &ArtifactMeta) -> Self {
+        StagingArena {
+            meta: meta.clone(),
+            staged: StagedBatch {
+                x: TensorIn::matrix(meta.n2, meta.d, vec![0.0; meta.n2 * meta.d]),
+                a1: TensorIn::matrix(meta.n1, meta.n2, vec![0.0; meta.n1 * meta.n2]),
+                a2: TensorIn::matrix(meta.b, meta.n1, vec![0.0; meta.b * meta.n1]),
+                yhot: TensorIn::matrix(meta.b, meta.c, vec![0.0; meta.b * meta.c]),
+                row_mask: TensorIn::vector(vec![0.0; meta.b]),
+                nvalid: TensorIn::scalar(0.0),
+                dims: (0, 0, 0),
+            },
+            rdeg: Vec::new(),
+            cdeg: Vec::new(),
+        }
+    }
+
+    /// The most recently staged batch (valid after a successful
+    /// [`StagingArena::stage`]).
+    pub fn staged(&self) -> &StagedBatch {
+        &self.staged
+    }
+
+    /// Give up the arena, keeping the staged tensors.
+    pub fn into_staged(self) -> StagedBatch {
+        self.staged
+    }
+
+    /// Stage `batch` into the arena slots, gathering features/labels from
+    /// `graph`.  Tensor contents equal [`stage`]'s output exactly.
+    pub fn stage(
+        &mut self,
+        batch: &SampledBatch,
+        graph: &LabeledGraph,
+        mean_norm: bool,
+    ) -> Result<(), CapacityError> {
+        let meta = &self.meta;
+        let (n2, n1, b) = batch.dims();
+        for (dim, got, cap) in
+            [("n2", n2, meta.n2), ("n1", n1, meta.n1), ("b", b, meta.b)]
+        {
+            if got > cap {
+                return Err(CapacityError { dim, got, cap });
+            }
+        }
+        let d = meta.d.min(graph.features.cols);
+
+        // Features of the 2-hop frontier, zero-padded to [meta.n2, meta.d].
+        let x = &mut self.staged.x.data;
+        x.fill(0.0);
+        for (i, &g) in batch.layers[0].src.iter().enumerate() {
+            let row = graph.features.row(g as usize);
+            x[i * meta.d..i * meta.d + d].copy_from_slice(&row[..d]);
+        }
+
+        stage_adj_into(
+            &batch.layers[0],
+            meta.n2,
+            mean_norm,
+            &mut self.staged.a1.data,
+            &mut self.rdeg,
+            &mut self.cdeg,
+        );
+        stage_adj_into(
+            &batch.layers[1],
+            meta.n1,
+            mean_norm,
+            &mut self.staged.a2.data,
+            &mut self.rdeg,
+            &mut self.cdeg,
+        );
+
+        // One-hot labels + row mask for the real batch rows.
+        let yhot = &mut self.staged.yhot.data;
+        let row_mask = &mut self.staged.row_mask.data;
+        yhot.fill(0.0);
+        row_mask.fill(0.0);
+        for (i, &g) in batch.batch_nodes.iter().enumerate() {
+            let label = graph.labels[g as usize] as usize % meta.c;
+            yhot[i * meta.c + label] = 1.0;
+            row_mask[i] = 1.0;
+        }
+
+        self.staged.nvalid.data[0] = b as f32;
+        self.staged.dims = (n2, n1, b);
+        Ok(())
+    }
+}
+
+/// Stage `batch` for `meta`, gathering features/labels from `graph` —
+/// the one-shot allocating wrapper over [`StagingArena`] (hot loops keep
+/// an arena instead).
 pub fn stage(
     batch: &SampledBatch,
     graph: &LabeledGraph,
     meta: &ArtifactMeta,
     mean_norm: bool,
 ) -> Result<StagedBatch, CapacityError> {
-    let (n2, n1, b) = batch.dims();
-    for (dim, got, cap) in
-        [("n2", n2, meta.n2), ("n1", n1, meta.n1), ("b", b, meta.b)]
-    {
-        if got > cap {
-            return Err(CapacityError { dim, got, cap });
-        }
-    }
-    let d = meta.d.min(graph.features.cols);
-
-    // Features of the 2-hop frontier, zero-padded to [meta.n2, meta.d].
-    let mut x = vec![0f32; meta.n2 * meta.d];
-    for (i, &g) in batch.layers[0].src.iter().enumerate() {
-        let row = graph.features.row(g as usize);
-        x[i * meta.d..i * meta.d + d].copy_from_slice(&row[..d]);
-    }
-
-    let a1 = stage_adj(&batch.layers[0], meta.n1, meta.n2, mean_norm);
-    let a2 = stage_adj(&batch.layers[1], meta.b, meta.n1, mean_norm);
-
-    // One-hot labels + row mask for the real batch rows.
-    let mut yhot = vec![0f32; meta.b * meta.c];
-    let mut row_mask = vec![0f32; meta.b];
-    for (i, &g) in batch.batch_nodes.iter().enumerate() {
-        let label = graph.labels[g as usize] as usize % meta.c;
-        yhot[i * meta.c + label] = 1.0;
-        row_mask[i] = 1.0;
-    }
-
-    Ok(StagedBatch {
-        x: TensorIn::matrix(meta.n2, meta.d, x),
-        a1: TensorIn::matrix(meta.n1, meta.n2, a1),
-        a2: TensorIn::matrix(meta.b, meta.n1, a2),
-        yhot: TensorIn::matrix(meta.b, meta.c, yhot),
-        row_mask: TensorIn::vector(row_mask),
-        nvalid: TensorIn::scalar(b as f32),
-        dims: (n2, n1, b),
-    })
+    let mut arena = StagingArena::new(meta);
+    arena.stage(batch, graph, mean_norm)?;
+    Ok(arena.into_staged())
 }
 
 #[cfg(test)]

@@ -6,6 +6,13 @@
 //! [`ComputeBackend::train_step`] call), which commits the returned
 //! weights to the Weight Bank image ([`ModelState`]) in place.
 //!
+//! The whole step is **allocation-free at steady state**: batch ids, the
+//! sampled frontier ([`SampleScratch`] + a recycled [`SampledBatch`]),
+//! the staged tensors ([`StagingArena`]) and the backend's `Scratch` are
+//! all buffers the trainer owns and refills, and the parallel matmuls
+//! run on the persistent worker pool (no thread spawns).  Buffers only
+//! grow to their high-water marks.
+//!
 //! The default backend is the pure-Rust
 //! [`crate::runtime::native::NativeBackend`] — training runs end to end
 //! on any host.  [`Trainer::pjrt`] selects the PJRT executor instead
@@ -17,12 +24,12 @@ use std::time::Instant;
 
 use crate::coordinator::sequence_estimator::{SequenceEstimator, ShapeParams};
 use crate::graph::generate::LabeledGraph;
-use crate::graph::sampler::NeighborSampler;
+use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
 use crate::runtime::backend::ComputeBackend;
 use crate::runtime::backend::PjrtBackend;
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::native::NativeBackend;
-use crate::train::batch::stage;
+use crate::train::batch::StagingArena;
 use crate::train::metrics::LossCurve;
 use crate::util::rng::SplitMix64;
 
@@ -73,6 +80,13 @@ pub struct Trainer<'g> {
     pub state: ModelState,
     steps_done: u64,
     rng: SplitMix64,
+    /// Recycled staging slots (fixed staged shapes → one allocation).
+    arena: StagingArena,
+    /// Recycled per-step batch-id buffer.
+    ids: Vec<u32>,
+    /// Recycled sampler working buffers + sampled-batch storage.
+    sample_scratch: SampleScratch,
+    sampled: SampledBatch,
 }
 
 impl<'g> Trainer<'g> {
@@ -124,7 +138,21 @@ impl<'g> Trainer<'g> {
 
         // Weight init (Glorot-ish), deterministic from the seed.
         let state = ModelState::glorot(&meta, &mut rng);
-        Ok(Self { graph, cfg, backend, meta, sampler, state, steps_done: 0, rng })
+        let arena = StagingArena::new(&meta);
+        Ok(Self {
+            graph,
+            cfg,
+            backend,
+            meta,
+            sampler,
+            state,
+            steps_done: 0,
+            rng,
+            arena,
+            ids: Vec::new(),
+            sample_scratch: SampleScratch::default(),
+            sampled: SampledBatch::default(),
+        })
     }
 
     /// Snapshot the learnable state + trainer cursor (step counter, RNG
@@ -198,15 +226,34 @@ impl<'g> Trainer<'g> {
         self.steps_done
     }
 
-    /// Execute one training step; returns the loss.
+    /// Draw the next mini-batch's node ids into the recycled buffer.
+    fn draw_ids(&mut self) {
+        let n = self.graph.num_nodes();
+        self.ids.clear();
+        for _ in 0..self.cfg.batch_size {
+            let id = self.rng.gen_range(n) as u32;
+            self.ids.push(id);
+        }
+    }
+
+    /// Execute one training step; returns the loss.  Steady state this
+    /// performs no heap allocations: ids, sampled batch, staged tensors
+    /// and backend scratch are all recycled buffers.
     pub fn step(&mut self) -> anyhow::Result<f32> {
-        let ids: Vec<u32> = (0..self.cfg.batch_size)
-            .map(|_| self.rng.gen_range(self.graph.num_nodes()) as u32)
-            .collect();
-        let batch = self.sampler.sample(&ids, &mut self.rng);
-        let staged = stage(&batch, self.graph, &self.meta, false)?;
-        let loss =
-            self.backend.train_step(staged, &mut self.state, self.cfg.optimizer, self.cfg.lr)?;
+        self.draw_ids();
+        self.sampler.sample_into(
+            &self.ids,
+            &mut self.rng,
+            &mut self.sample_scratch,
+            &mut self.sampled,
+        );
+        self.arena.stage(&self.sampled, self.graph, false)?;
+        let loss = self.backend.train_step(
+            self.arena.staged(),
+            &mut self.state,
+            self.cfg.optimizer,
+            self.cfg.lr,
+        )?;
         self.steps_done += 1;
         Ok(loss)
     }
@@ -230,20 +277,24 @@ impl<'g> Trainer<'g> {
         Ok(curve)
     }
 
-    /// Evaluate mean loss and accuracy on `n_eval` random nodes.
+    /// Evaluate mean loss and accuracy on `n_eval` random nodes (same
+    /// recycled sampling/staging path as [`Trainer::step`]).
     pub fn evaluate(&mut self, n_eval: usize) -> anyhow::Result<(f32, f32)> {
         let mut total_loss = 0.0f32;
         let mut correct = 0.0f32;
         let mut seen = 0usize;
         let batches = n_eval.div_ceil(self.cfg.batch_size);
         for _ in 0..batches {
-            let ids: Vec<u32> = (0..self.cfg.batch_size)
-                .map(|_| self.rng.gen_range(self.graph.num_nodes()) as u32)
-                .collect();
-            let batch = self.sampler.sample(&ids, &mut self.rng);
-            let staged = stage(&batch, self.graph, &self.meta, false)?;
-            let nvalid = staged.nvalid() as usize;
-            let (loss, ok) = self.backend.eval_batch(staged, &self.state)?;
+            self.draw_ids();
+            self.sampler.sample_into(
+                &self.ids,
+                &mut self.rng,
+                &mut self.sample_scratch,
+                &mut self.sampled,
+            );
+            self.arena.stage(&self.sampled, self.graph, false)?;
+            let nvalid = self.arena.staged().nvalid() as usize;
+            let (loss, ok) = self.backend.eval_batch(self.arena.staged(), &self.state)?;
             total_loss += loss;
             correct += ok;
             seen += nvalid;

@@ -1,0 +1,62 @@
+//! Test/bench support: a heap-operation counter for pinning the
+//! allocation-free hot-path contracts.
+//!
+//! [`CountingAlloc`] wraps the system allocator and bumps a
+//! **thread-local** counter on every `alloc`/`alloc_zeroed`/`realloc`, so
+//! a measurement window on one thread is never polluted by pool workers
+//! or parallel test threads.  Install it per binary:
+//!
+//! ```ignore
+//! use gcn_noc::util::alloc_probe::{allocs_on_this_thread, CountingAlloc};
+//!
+//! #[global_allocator]
+//! static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+//!
+//! let before = allocs_on_this_thread();
+//! hot_path();
+//! assert_eq!(allocs_on_this_thread() - before, 0);
+//! ```
+//!
+//! Without the `#[global_allocator]` attribute the counter simply stays
+//! at zero — the module is inert in production builds.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap operations (alloc/alloc_zeroed/realloc; frees excluded) observed
+/// on the current thread since it started.
+pub fn allocs_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// System allocator with per-thread operation counting.
+pub struct CountingAlloc;
+
+#[inline]
+fn bump() {
+    // try_with: TLS may be unavailable during thread teardown; those
+    // allocations are outside any measurement window anyway.
+    let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        unsafe { System.alloc(layout) }
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        unsafe { System.alloc_zeroed(layout) }
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}

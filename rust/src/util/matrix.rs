@@ -5,7 +5,12 @@
 //! [`crate::runtime::native::NativeBackend`] — a work-queue-parallel,
 //! k-blocked matmul writing into preallocated outputs (zero allocations
 //! per call), with transpose-free `AᵀB` / `ABᵀ` variants that read the
-//! transposed operand by index swap instead of materializing it.
+//! transposed operand by index swap instead of materializing it.  The
+//! row-tile queue runs on the persistent [`crate::util::pool::global`]
+//! worker pool (no per-call thread spawns) and the innermost loops run
+//! in fixed 8-wide lanes over *output* elements (`axpy_row` and the ABᵀ
+//! register block), which widens ILP without touching any element's
+//! contraction order.
 //!
 //! **Determinism contract:** every variant accumulates each output element
 //! over the contraction index in ascending order with the same zero-skip
@@ -181,20 +186,43 @@ const K_BLOCK: usize = 64;
 /// saves; run on the calling thread instead.
 const PAR_MIN_WORK: usize = 1 << 14;
 
-/// Resolve a thread-count knob (0 = one worker per available CPU).
-pub fn resolve_threads(threads: usize) -> usize {
-    if threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        threads
+/// Width of the unrolled inner lanes.  Lanes span *different* output
+/// elements, never the contraction axis, so widening them cannot change
+/// any element's accumulation order.
+const LANES: usize = 8;
+
+pub use crate::util::pool::resolve_threads;
+
+/// `out[j] += a * b[j]` across a full row, [`LANES`] outputs at a time
+/// with a scalar tail.  Each output element still receives exactly one
+/// `+= a * b[j]` per call, so per-element accumulation order (and thus
+/// bit-identity with the naive path) is untouched — the fixed-width
+/// chunks only let the compiler keep the lane loop branch-free and
+/// vectorized.
+#[inline]
+fn axpy_row(out: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(out.len(), b.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (o8, b8) in oc.by_ref().zip(bc.by_ref()) {
+        let o8: &mut [f32; LANES] = o8.try_into().unwrap();
+        let b8: &[f32; LANES] = b8.try_into().unwrap();
+        for (o, bv) in o8.iter_mut().zip(b8) {
+            *o += a * *bv;
+        }
+    }
+    for (o, bv) in oc.into_remainder().iter_mut().zip(bc.remainder()) {
+        *o += a * *bv;
     }
 }
 
 /// Split `data` (an `out_rows` × `out_cols` row-major buffer) into
 /// contiguous row tiles and run `tile_fn(first_row, tile)` over them on
-/// `threads` scoped workers pulling from one shared queue.  Tiles are
-/// disjoint `&mut` chunks, so workers never contend on output data; which
-/// worker processes which tile cannot affect the result.
+/// up to `threads` [`crate::util::pool::global`] workers pulling from one
+/// shared queue — no threads are spawned; the persistent pool executes
+/// the drain loop.  Tiles are disjoint `&mut` chunks, so workers never
+/// contend on output data; which worker processes which tile cannot
+/// affect the result.
 fn for_each_row_tile<F>(
     out_rows: usize,
     out_cols: usize,
@@ -216,15 +244,11 @@ fn for_each_row_tile<F>(
     let tile_rows = out_rows.div_ceil(threads * 4).max(1);
     let n_tiles = out_rows.div_ceil(tile_rows);
     let queue = Mutex::new(data.chunks_mut(tile_rows * out_cols).enumerate());
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(n_tiles) {
-            scope.spawn(|| loop {
-                // Pop under the lock, compute outside it.
-                let item = queue.lock().unwrap().next();
-                let Some((idx, tile)) = item else { break };
-                tile_fn(idx * tile_rows, tile);
-            });
-        }
+    crate::util::pool::global().run(threads.min(n_tiles), || loop {
+        // Pop under the lock, compute outside it.
+        let item = queue.lock().unwrap().next();
+        let Some((idx, tile)) = item else { break };
+        tile_fn(idx * tile_rows, tile);
     });
 }
 
@@ -248,9 +272,7 @@ pub fn par_matmul_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, threads: 
                     if av == 0.0 {
                         continue;
                     }
-                    for (o, &bv) in orow.iter_mut().zip(b.row(k)) {
-                        *o += av * bv;
-                    }
+                    axpy_row(orow, av, b.row(k));
                 }
             }
         }
@@ -277,10 +299,7 @@ pub fn par_matmul_tn_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, thread
                 if av == 0.0 {
                     continue;
                 }
-                let orow = &mut tile[i * cols..(i + 1) * cols];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
+                axpy_row(&mut tile[i * cols..(i + 1) * cols], av, brow);
             }
         }
     });
@@ -300,9 +319,29 @@ pub fn par_matmul_nt_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, thread
         for i in 0..nrows {
             let arow = a.row(r0 + i);
             let orow = &mut tile[i * cols..(i + 1) * cols];
-            for (j, o) in orow.iter_mut().enumerate() {
+            // Register-block LANES output columns: one streaming pass over
+            // `arow` feeds 8 simultaneous row-row dot products.  Each
+            // element's accumulator still sums over ascending k with the
+            // same zero-skip, so results are bit-identical to the scalar
+            // path.
+            let mut j = 0usize;
+            while j + LANES <= cols {
+                let brows: [&[f32]; LANES] = std::array::from_fn(|l| b.row(j + l));
+                let mut acc = [0.0f32; LANES];
+                for (k, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for (a_l, brow) in acc.iter_mut().zip(&brows) {
+                        *a_l += av * brow[k];
+                    }
+                }
+                orow[j..j + LANES].copy_from_slice(&acc);
+                j += LANES;
+            }
+            for (jj, o) in orow.iter_mut().enumerate().skip(j) {
                 let mut acc = 0.0f32;
-                for (&av, &bv) in arow.iter().zip(b.row(j)) {
+                for (&av, &bv) in arow.iter().zip(b.row(jj)) {
                     if av == 0.0 {
                         continue;
                     }

@@ -1,7 +1,9 @@
 //! Shared utilities: deterministic RNG, statistics, a tiny property-test
 //! runner, and a dense host-side matrix type.
 
+pub mod alloc_probe;
 pub mod matrix;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,326 @@
+//! Persistent worker pool — the spawn-free engine behind every parallel
+//! hot path.
+//!
+//! `std::thread::scope` costs a spawn + join per call, which the paper's
+//! "keep the PEs fed" discipline cannot afford on small shapes: the tiled
+//! matmuls launch thousands of times per training run and the epoch
+//! engine once per routed wave batch.  [`WorkerPool`] keeps a fixed set
+//! of long-lived threads parked on a condvar and hands them **borrowed**
+//! closures per job, so a steady-state [`WorkerPool::run`] call performs
+//! **zero heap allocations** and zero thread spawns.
+//!
+//! # The scoped-run contract
+//!
+//! [`WorkerPool::run`]`(parallelism, f)` executes `f` concurrently on the
+//! calling thread plus up to `parallelism - 1` pool workers and returns
+//! only when every copy of `f` has finished — that completion barrier is
+//! what makes handing workers a *borrowed* (non-`'static`) closure sound,
+//! exactly like `std::thread::scope`.  Callers drive a shared queue
+//! inside `f` (pop a task, compute, commit by task index), so:
+//!
+//! - **Determinism** — which thread runs which task never affects
+//!   results; task *dispatch* order is the queue's canonical order and
+//!   results are committed by index (see `util::matrix::for_each_row_tile`
+//!   and `coordinator::epoch::route_tasks`).
+//! - **Progress** — the caller participates, so every job completes even
+//!   if all workers are busy with other jobs; copies no worker ever
+//!   picked up are reclaimed unrun once the caller's copy finishes.
+//! - **Panics** — a panic in any copy of `f` is captured and re-thrown
+//!   on the calling thread after the barrier (worker threads survive and
+//!   return to the pool).
+//!
+//! The process-wide [`global`] pool (one worker per CPU minus the caller)
+//! is what the hot paths use; tests construct private pools to pin exact
+//! worker counts.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, OnceLock};
+
+/// Resolve a thread-count knob (0 = one worker per available CPU) — the
+/// one spelling of the parallelism knob shared by `TrainConfig`,
+/// `TrainerConfig` and the CLI `--threads` flag.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Shared state of one scoped job, owned by the `run` caller's stack
+/// frame.  Workers reach it through a raw pointer; the completion
+/// barrier in [`CompletionGuard`] keeps the frame alive until
+/// `remaining == 0`, and the final decrement notifies while still
+/// holding the lock, so no worker ever touches a dead frame.
+struct JobState {
+    lock: Mutex<JobProgress>,
+    done: Condvar,
+}
+
+struct JobProgress {
+    /// Dispatched copies of `f` not yet finished (or reclaimed).
+    remaining: usize,
+    /// First captured worker panic, re-thrown by the caller.
+    panic: Option<Box<dyn Any + Send + 'static>>,
+}
+
+/// One queued copy of a job's closure: a type-erased borrowed `Fn` (thin
+/// data pointer + monomorphized trampoline — no fat-pointer transmute)
+/// plus the job it reports completion to.
+struct JobMsg {
+    data: *const (),
+    call: unsafe fn(*const ()),
+    state: *const JobState,
+}
+
+// SAFETY: the pointers target the `run` caller's stack frame, which the
+// completion barrier keeps alive until every copy has finished.
+unsafe impl Send for JobMsg {}
+
+/// Calls the closure behind `data`.
+///
+/// # Safety
+/// `data` must point at a live `F` (guaranteed by the completion
+/// barrier: `run` does not return while any copy is outstanding).
+unsafe fn trampoline<F: Fn() + Sync>(data: *const ()) {
+    let f = unsafe { &*(data as *const F) };
+    f();
+}
+
+struct Queue {
+    jobs: VecDeque<JobMsg>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<Queue>,
+    /// Signalled when jobs arrive or the pool shuts down.
+    available: Condvar,
+}
+
+/// A fixed set of long-lived worker threads executing scoped jobs.
+pub struct WorkerPool {
+    shared: &'static PoolShared,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// True for pools owned by a caller (dropped → workers joined); the
+    /// global pool leaks its shared state intentionally.
+    owned: bool,
+}
+
+fn worker_loop(shared: &'static PoolShared) {
+    loop {
+        let msg = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(m) = q.jobs.pop_front() {
+                    break m;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        // SAFETY: the job's completion barrier keeps the closure and the
+        // state alive until we decrement `remaining` below.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (msg.call)(msg.data) }));
+        let state = unsafe { &*msg.state };
+        let mut p = state.lock.lock().unwrap();
+        if let Err(payload) = result {
+            if p.panic.is_none() {
+                p.panic = Some(payload);
+            }
+        }
+        p.remaining -= 1;
+        if p.remaining == 0 {
+            // Notify while still holding the lock: the waiting caller can
+            // only observe remaining == 0 after we release it, so the
+            // caller's stack frame outlives this access.
+            state.done.notify_all();
+        }
+        drop(p);
+    }
+}
+
+/// Reclaims undispatched copies and waits out in-flight ones — runs even
+/// when the caller's own copy of `f` unwinds, which is what makes the
+/// borrowed-closure hand-off sound.
+struct CompletionGuard<'a> {
+    shared: &'static PoolShared,
+    state: &'a JobState,
+}
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        let me = self.state as *const JobState;
+        {
+            // Copies no worker picked up yet will never run: the caller's
+            // copy has already drained the job's work queue.  Pull them
+            // back so the barrier only waits on genuinely in-flight work.
+            let mut q = self.shared.queue.lock().unwrap();
+            let before = q.jobs.len();
+            q.jobs.retain(|m| !std::ptr::eq(m.state, me));
+            let reclaimed = before - q.jobs.len();
+            if reclaimed > 0 {
+                self.state.lock.lock().unwrap().remaining -= reclaimed;
+            }
+        }
+        let mut p = self.state.lock.lock().unwrap();
+        while p.remaining > 0 {
+            p = self.state.done.wait(p).unwrap();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads.  A pool with `w` workers gives
+    /// [`WorkerPool::run`] a parallelism of `w + 1` (the caller
+    /// participates).
+    pub fn new(workers: usize) -> Self {
+        let shared: &'static PoolShared = Box::leak(Box::new(PoolShared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        }));
+        let handles = (0..workers)
+            .map(|i| {
+                std::thread::Builder::new()
+                    .name(format!("gcn-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles, owned: true }
+    }
+
+    /// Number of persistent worker threads (excluding callers).
+    pub fn worker_count(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute `f` on the calling thread plus up to `parallelism - 1`
+    /// pool workers; returns once every copy has finished.  `f` is
+    /// typically a queue-drain loop over shared tasks.  Steady state this
+    /// performs no heap allocations and no thread spawns.
+    pub fn run<F: Fn() + Sync>(&self, parallelism: usize, f: F) {
+        let helpers = parallelism.saturating_sub(1).min(self.handles.len());
+        if helpers == 0 {
+            f();
+            return;
+        }
+        let state = JobState {
+            lock: Mutex::new(JobProgress { remaining: helpers, panic: None }),
+            done: Condvar::new(),
+        };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                q.jobs.push_back(JobMsg {
+                    data: &f as *const F as *const (),
+                    call: trampoline::<F>,
+                    state: &state,
+                });
+            }
+        }
+        self.shared.available.notify_all();
+        {
+            let _guard = CompletionGuard { shared: self.shared, state: &state };
+            f();
+            // Guard drops here: reclaim + barrier, even if f() unwound.
+        }
+        let payload = state.lock.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if !self.owned {
+            return;
+        }
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        // `shared` stays leaked: a worker could in principle still be
+        // between its last pop and exit.  One allocation per (rare,
+        // test-only) private pool is the price of a race-free shutdown.
+    }
+}
+
+/// The process-wide shared pool: one worker per available CPU minus the
+/// caller's thread.  First use spawns the workers; they persist for the
+/// process lifetime, parked when idle.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let mut pool = WorkerPool::new(resolve_threads(0).saturating_sub(1));
+        pool.owned = false;
+        pool
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_when_no_helpers() {
+        let pool = WorkerPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(8, || {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    /// Run a job whose copies rendezvous: proves `expected` copies truly
+    /// execute concurrently.  (Without the rendezvous a fast caller may
+    /// legitimately reclaim undispatched copies unrun.)
+    fn barrier_run(pool: &WorkerPool, parallelism: usize, expected: usize) {
+        let arrived = AtomicUsize::new(0);
+        pool.run(parallelism, || {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            let t0 = std::time::Instant::now();
+            while arrived.load(Ordering::SeqCst) < expected {
+                assert!(t0.elapsed().as_secs() < 30, "copies never all arrived");
+                std::thread::yield_now();
+            }
+        });
+        assert_eq!(arrived.load(Ordering::SeqCst), expected);
+    }
+
+    #[test]
+    fn every_copy_runs_with_helpers() {
+        let pool = WorkerPool::new(3);
+        barrier_run(&pool, 4, 4);
+    }
+
+    #[test]
+    fn parallelism_clamps_to_pool_size() {
+        let pool = WorkerPool::new(2);
+        barrier_run(&pool, 64, 3); // caller + 2 workers
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert_eq!(global().worker_count(), resolve_threads(0).saturating_sub(1));
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all_cpus() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+}

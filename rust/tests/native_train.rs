@@ -72,7 +72,7 @@ fn native_backend_matches_reference_oracle_per_step() {
             nvalid,
             lr,
         );
-        let loss = backend.train_step(staged, &mut state, Optimizer::Sgd, lr).unwrap();
+        let loss = backend.train_step(&staged, &mut state, Optimizer::Sgd, lr).unwrap();
 
         let dw1 = state.w1.max_abs_diff(&w1_ref);
         let dw2 = state.w2.max_abs_diff(&w2_ref);
@@ -109,7 +109,7 @@ fn agco_ordering_matches_oracle_loss_and_learns() {
         let cache = reference::gcn2_forward(&x, &a1, &a2, &state.w1, &state.w2);
         let (loss_ref, _) =
             reference::softmax_xent(&cache.z2, &yhot, &staged.row_mask.data, nvalid);
-        let loss = backend.train_step(staged, &mut state, Optimizer::Sgd, 0.1).unwrap();
+        let loss = backend.train_step(&staged, &mut state, Optimizer::Sgd, 0.1).unwrap();
         assert!(
             (loss - loss_ref).abs() < 1e-4,
             "agco step {step}: loss {loss} vs oracle {loss_ref}"
@@ -135,9 +135,9 @@ fn momentum_with_zero_mu_equals_sgd() {
     let mut state_mom = init;
     for _ in 0..3 {
         let staged = staged_batch(&graph, &meta, &mut rng);
-        let l1 = sgd.train_step(staged.clone(), &mut state_sgd, Optimizer::Sgd, 0.1).unwrap();
+        let l1 = sgd.train_step(&staged, &mut state_sgd, Optimizer::Sgd, 0.1).unwrap();
         let l2 = mom
-            .train_step(staged, &mut state_mom, Optimizer::Momentum { mu: 0.0 }, 0.1)
+            .train_step(&staged, &mut state_mom, Optimizer::Momentum { mu: 0.0 }, 0.1)
             .unwrap();
         assert_eq!(l1.to_bits(), l2.to_bits());
         assert_eq!(state_sgd.w1, state_mom.w1);
@@ -157,7 +157,7 @@ fn results_bit_identical_at_any_thread_count() {
         let mut loss_bits = Vec::new();
         for _ in 0..3 {
             let staged = staged_batch(&graph, &meta, &mut rng);
-            let loss = backend.train_step(staged, &mut state, Optimizer::Sgd, 0.1).unwrap();
+            let loss = backend.train_step(&staged, &mut state, Optimizer::Sgd, 0.1).unwrap();
             loss_bits.push(loss.to_bits());
         }
         match &reference_state {

@@ -1,0 +1,135 @@
+//! Tier-1 tests for the persistent worker pool (`util::pool`) — the
+//! spawn-free engine under the parallel matmuls and the epoch router.
+//!
+//! Covers the contract the hot paths rely on:
+//! - queue-drain results are deterministic at any pool size and
+//!   parallelism, including many jobs contending on one pool;
+//! - a panic in any copy of the job closure propagates to the caller;
+//! - one pool serves many submit cycles on the same fixed worker set
+//!   (threads are spawned in `new` only) and `Drop` joins cleanly.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use gcn_noc::util::pool::WorkerPool;
+
+/// The canonical pool usage: drain an indexed task queue, commit results
+/// by task index.  Returns the committed results in task order.
+fn queue_drain_squares(pool: &WorkerPool, parallelism: usize, n: usize) -> Vec<u64> {
+    let queue: Mutex<Vec<usize>> = Mutex::new((0..n).rev().collect());
+    let done: Mutex<Vec<(usize, u64)>> = Mutex::new(Vec::with_capacity(n));
+    pool.run(parallelism, || loop {
+        let Some(i) = queue.lock().unwrap().pop() else { break };
+        let v = (i as u64).wrapping_mul(i as u64).wrapping_add(17);
+        done.lock().unwrap().push((i, v));
+    });
+    let mut d = done.into_inner().unwrap();
+    d.sort_by_key(|&(i, _)| i);
+    d.into_iter().map(|(_, v)| v).collect()
+}
+
+fn expected(n: usize) -> Vec<u64> {
+    (0..n).map(|i| (i as u64).wrapping_mul(i as u64).wrapping_add(17)).collect()
+}
+
+#[test]
+fn results_deterministic_at_any_pool_size_and_parallelism() {
+    let want = expected(500);
+    for workers in [0usize, 1, 2, 4, 7] {
+        let pool = WorkerPool::new(workers);
+        for parallelism in [1usize, 2, 8] {
+            assert_eq!(
+                queue_drain_squares(&pool, parallelism, 500),
+                want,
+                "workers={workers} parallelism={parallelism}"
+            );
+        }
+    }
+}
+
+#[test]
+fn concurrent_jobs_contending_on_one_pool_stay_correct() {
+    // Several caller threads share one small pool: jobs interleave on the
+    // same workers, every job must still commit its complete result set.
+    let pool = WorkerPool::new(4);
+    let want = expected(200);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let pool = &pool;
+            let want = &want;
+            s.spawn(move || {
+                for _ in 0..20 {
+                    assert_eq!(&queue_drain_squares(pool, 3, 200), want);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn helper_panic_propagates_to_caller() {
+    thread_local! {
+        static IS_CALLER: Cell<bool> = const { Cell::new(false) };
+    }
+    let pool = WorkerPool::new(2);
+    let arrived = AtomicUsize::new(0);
+    IS_CALLER.with(|c| c.set(true));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(3, || {
+            arrived.fetch_add(1, Ordering::SeqCst);
+            if IS_CALLER.with(|c| c.get()) {
+                // Caller copy: hold the job open until a helper copy has
+                // actually started (otherwise its copies could be
+                // legitimately reclaimed unrun), then finish cleanly.
+                let t0 = std::time::Instant::now();
+                while arrived.load(Ordering::SeqCst) < 2 {
+                    assert!(t0.elapsed().as_secs() < 30, "no helper ever started");
+                    std::thread::yield_now();
+                }
+            } else {
+                panic!("helper boom");
+            }
+        });
+    }));
+    let err = result.expect_err("helper panic must reach the caller");
+    let msg = err.downcast_ref::<&str>().copied().unwrap_or("");
+    assert_eq!(msg, "helper boom");
+}
+
+#[test]
+fn caller_panic_still_unwinds_cleanly() {
+    let pool = WorkerPool::new(2);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(3, || panic!("boom"));
+    }));
+    assert!(result.is_err());
+    // The pool must remain fully usable after a panicked job.
+    assert_eq!(queue_drain_squares(&pool, 3, 64), expected(64));
+}
+
+#[test]
+fn many_submit_cycles_reuse_the_same_fixed_worker_set() {
+    let pool = WorkerPool::new(3);
+    assert_eq!(pool.worker_count(), 3);
+    let total = AtomicUsize::new(0);
+    for round in 0..300 {
+        let queue: Mutex<Vec<usize>> = Mutex::new((0..8).collect());
+        pool.run(4, || loop {
+            let Some(_i) = queue.lock().unwrap().pop() else { break };
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), (round + 1) * 8, "round {round}");
+    }
+    // Threads are spawned in `new` only: 300 cycles ran on the same three
+    // persistent workers (no per-submit spawn, nothing to leak).
+    assert_eq!(pool.worker_count(), 3);
+}
+
+#[test]
+fn drop_joins_workers_without_hanging() {
+    let pool = WorkerPool::new(4);
+    assert_eq!(queue_drain_squares(&pool, 5, 32), expected(32));
+    drop(pool); // must join all workers promptly, not hang
+}

@@ -1,0 +1,162 @@
+//! Staged-tensor arena + allocation-free hot-loop tests.
+//!
+//! Three contracts of the spawn-free/allocation-free training engine:
+//! - recycling a [`StagingArena`] across batches restages **bit-identical**
+//!   tensors to the one-shot [`stage`] path (no stale state);
+//! - `NeighborSampler::sample_into` with recycled buffers reproduces
+//!   `sample` exactly (same RNG draws, same frontier, same adjacency);
+//! - at steady state a whole `Trainer::step` — id draw, sampling,
+//!   staging, fused train step on pooled parallel matmuls — performs
+//!   **zero heap allocations on the calling thread**, verified with a
+//!   counting global allocator and a checkpoint-replayed step window (the
+//!   window re-runs draws whose high-water marks are already reached, so
+//!   the zero bound is exact, not probabilistic).
+
+use gcn_noc::graph::generate::{community_graph, LabeledGraph};
+use gcn_noc::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
+use gcn_noc::runtime::backend::ComputeBackend;
+use gcn_noc::runtime::native::NativeBackend;
+use gcn_noc::train::batch::{stage, StagedBatch, StagingArena};
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::util::alloc_probe::{allocs_on_this_thread, CountingAlloc};
+use gcn_noc::util::rng::SplitMix64;
+
+// Count heap ops per thread (pool workers and parallel test threads never
+// pollute a window); shared impl in `util::alloc_probe`.
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+/// A small learnable graph matching the "small" tag's feature/class dims.
+fn small_graph(seed: u64) -> LabeledGraph {
+    let mut rng = SplitMix64::new(seed);
+    community_graph(1200, 10.0, 2.3, 64, 8, 0.7, &mut rng)
+}
+
+fn assert_staged_bits_eq(got: &StagedBatch, want: &StagedBatch, what: &str) {
+    assert_eq!(got.dims, want.dims, "{what}: dims");
+    for (name, g, w) in [
+        ("x", &got.x, &want.x),
+        ("a1", &got.a1, &want.a1),
+        ("a2", &got.a2, &want.a2),
+        ("yhot", &got.yhot, &want.yhot),
+        ("row_mask", &got.row_mask, &want.row_mask),
+        ("nvalid", &got.nvalid, &want.nvalid),
+    ] {
+        assert_eq!(g.dims, w.dims, "{what}: {name} dims");
+        let gb: Vec<u32> = g.data.iter().map(|v| v.to_bits()).collect();
+        let wb: Vec<u32> = w.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, wb, "{what}: {name} payload");
+    }
+}
+
+#[test]
+fn arena_reuse_restages_bit_identically() {
+    let graph = small_graph(0xA7E1);
+    let meta = NativeBackend::new(1).resolve("small").unwrap();
+    let sampler = NeighborSampler::new(&graph.adj, vec![4, 4]);
+    let mut rng = SplitMix64::new(0xA7E2);
+    let ids_a: Vec<u32> = (0..32).map(|_| rng.gen_range(1200) as u32).collect();
+    let batch_a = sampler.sample(&ids_a, &mut rng);
+    let ids_b: Vec<u32> = (0..32).map(|_| rng.gen_range(1200) as u32).collect();
+    let batch_b = sampler.sample(&ids_b, &mut rng);
+
+    let fresh_a = stage(&batch_a, &graph, &meta, false).unwrap();
+    let fresh_b_mean = stage(&batch_b, &graph, &meta, true).unwrap();
+
+    let mut arena = StagingArena::new(&meta);
+    arena.stage(&batch_a, &graph, false).unwrap();
+    assert_staged_bits_eq(arena.staged(), &fresh_a, "first use");
+    // Different batch AND different normalization through the same slots.
+    arena.stage(&batch_b, &graph, true).unwrap();
+    assert_staged_bits_eq(arena.staged(), &fresh_b_mean, "reuse, mean norm");
+    // Back to the first batch: no stale values may survive the round trip.
+    arena.stage(&batch_a, &graph, false).unwrap();
+    assert_staged_bits_eq(arena.staged(), &fresh_a, "reuse after round trip");
+}
+
+#[test]
+fn arena_capacity_error_leaves_arena_usable() {
+    let graph = small_graph(0xA7E3);
+    let meta = NativeBackend::new(1).resolve("small").unwrap();
+    let sampler = NeighborSampler::new(&graph.adj, vec![4, 4]);
+    let mut rng = SplitMix64::new(0xA7E4);
+    // A batch bigger than the "small" tag's b = 64 capacity.
+    let big_ids: Vec<u32> = (0..200).collect();
+    let big = sampler.sample(&big_ids, &mut rng);
+    let ids: Vec<u32> = (0..32).collect();
+    let ok = sampler.sample(&ids, &mut rng);
+
+    let mut arena = StagingArena::new(&meta);
+    let err = arena.stage(&big, &graph, false).unwrap_err();
+    // Same rejection (first overflowing dimension) as the one-shot path.
+    let fresh_err = stage(&big, &graph, &meta, false).unwrap_err();
+    assert_eq!(err.dim, fresh_err.dim);
+    assert_eq!((err.got, err.cap), (fresh_err.got, fresh_err.cap));
+    arena.stage(&ok, &graph, false).unwrap();
+    let fresh = stage(&ok, &graph, &meta, false).unwrap();
+    assert_staged_bits_eq(arena.staged(), &fresh, "after capacity error");
+}
+
+#[test]
+fn sample_into_reuse_matches_fresh_sample() {
+    let graph = small_graph(0xA7E5);
+    let sampler = NeighborSampler::new(&graph.adj, vec![4, 3]);
+    let ids_a: Vec<u32> = (0..24).collect();
+    let ids_b: Vec<u32> = (100..140).collect();
+
+    let fresh = sampler.sample(&ids_b, &mut SplitMix64::new(77));
+
+    let mut scratch = SampleScratch::default();
+    let mut out = SampledBatch::default();
+    // Dirty every recycled buffer with an unrelated batch first.
+    sampler.sample_into(&ids_a, &mut SplitMix64::new(5), &mut scratch, &mut out);
+    sampler.sample_into(&ids_b, &mut SplitMix64::new(77), &mut scratch, &mut out);
+
+    assert_eq!(out.batch_nodes, fresh.batch_nodes);
+    assert_eq!(out.layers.len(), fresh.layers.len());
+    for (hop, (got, want)) in out.layers.iter().zip(&fresh.layers).enumerate() {
+        assert_eq!(got.dst, want.dst, "hop {hop} dst");
+        assert_eq!(got.src, want.src, "hop {hop} src");
+        assert_eq!(got.adj, want.adj, "hop {hop} adj");
+    }
+}
+
+#[test]
+fn steady_state_train_step_allocates_nothing_on_the_calling_thread() {
+    let graph = small_graph(0xA7E6);
+    let cfg = TrainerConfig {
+        steps: 0,
+        lr: 0.1,
+        log_every: 0,
+        threads: 2, // pooled parallel matmuls engaged
+        seed: 0xA7E7,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(&graph, cfg).unwrap();
+
+    // Reach initial high-water marks, then checkpoint the trainer cursor.
+    for _ in 0..5 {
+        trainer.step().unwrap();
+    }
+    let ck = trainer.checkpoint();
+    // Warm the exact window: run the next 10 steps once...
+    let mut warm = [0u32; 10];
+    for slot in warm.iter_mut() {
+        *slot = trainer.step().unwrap().to_bits();
+    }
+    // ...rewind, and replay the identical draws.  Every buffer already
+    // grew to this window's high-water mark, so zero is an exact bound.
+    // (The loss array lives on the stack — the window must not allocate.)
+    trainer.restore(&ck).unwrap();
+    let mut replay = [0u32; 10];
+    let before = allocs_on_this_thread();
+    for slot in replay.iter_mut() {
+        *slot = trainer.step().unwrap().to_bits();
+    }
+    let during = allocs_on_this_thread() - before;
+    assert_eq!(replay, warm, "checkpoint replay must be byte-identical");
+    assert_eq!(
+        during, 0,
+        "steady-state train step performed {during} heap allocations over 10 steps"
+    );
+}
