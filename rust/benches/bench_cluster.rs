@@ -1,0 +1,97 @@
+//! **Cluster scaling bench** — steps/sec and modeled inter-card sync
+//! cost of the data-parallel sharded trainer at 1/2/4/8 cards on one
+//! synthetic replica.  Writes a `BENCH_cluster.json` baseline so the
+//! multi-card path is machine-comparable across PRs, and asserts every
+//! sweep point produced a finite loss curve.
+//!
+//! The 1-card point doubles as a sanity anchor: it is pinned
+//! byte-identical to the single-card `Trainer` by `rust/tests/cluster.rs`,
+//! so its steps/sec is directly comparable to `BENCH_train.json`'s
+//! small-shape point.
+
+mod common;
+
+use common::{banner, compare_baseline, fmt_time, time_it, trials};
+use gcn_noc::cluster::{ClusterTrainer, GraphSharder};
+use gcn_noc::graph::generate::community_graph;
+use gcn_noc::train::trainer::TrainerConfig;
+use gcn_noc::util::rng::SplitMix64;
+
+struct Point {
+    shards: usize,
+    steps_per_sec: f64,
+    sync_cycles_per_step: f64,
+    kb_per_step: f64,
+}
+
+fn main() {
+    let mut rng = SplitMix64::new(0xC105);
+    let graph = community_graph(4096, 12.0, 2.3, 64, 8, 0.6, &mut rng);
+    let steps = trials(20);
+
+    banner("data-parallel sharded training: 1/2/4/8 cards (small shapes, batch 32)");
+    let mut points: Vec<Point> = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let plan = GraphSharder::new(shards).shard(&graph);
+        let cfg = TrainerConfig {
+            batch_size: 32,
+            steps,
+            lr: 0.05,
+            seed: 0xC106,
+            log_every: 0,
+            ..Default::default()
+        };
+        let mut trainer = ClusterTrainer::new(&graph, &plan, cfg).unwrap();
+        let mut curve = None;
+        let t = time_it(0, 1, || {
+            curve = Some(trainer.train().unwrap());
+        });
+        let curve = curve.expect("trained once");
+        assert!(curve.records.iter().all(|r| r.loss.is_finite()));
+        let sps = curve.len() as f64 / t.max(1e-12);
+        let totals = trainer.traffic_totals();
+        println!(
+            "cards={shards}: {} / step  ({sps:.1} steps/s), sync {:.0} cycles/step, \
+             {:.1} KB moved/step",
+            fmt_time(curve.mean_step_seconds()),
+            totals.cycles_per_step(),
+            totals.bytes_per_step() / 1e3
+        );
+        points.push(Point {
+            shards,
+            steps_per_sec: sps,
+            sync_cycles_per_step: totals.cycles_per_step(),
+            kb_per_step: totals.bytes_per_step() / 1e3,
+        });
+    }
+
+    // --- Baseline artifact. ---
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let sweep = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"shards\": {}, \"steps_per_sec\": {:.3}, \
+                 \"sync_cycles_per_step\": {:.1}, \"kb_per_step\": {:.2}}}",
+                p.shards, p.steps_per_sec, p.sync_cycles_per_step, p.kb_per_step
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"bench_cluster\",\n  \"host_cores\": {cores},\n  \
+         \"smoke\": {},\n  \"steps\": {steps},\n  \"sweep\": [\n{sweep}\n  ],\n  \
+         \"sync_cycles_8\": {:.1}\n}}\n",
+        common::smoke(),
+        points[3].sync_cycles_per_step,
+    );
+    let path = "BENCH_cluster.json";
+    // First "steps_per_sec" in the artifact = 1 card (the Trainer-equal
+    // anchor); sync cycles are a cost, so lower is better.
+    compare_baseline(path, "steps_per_sec", points[0].steps_per_sec, true);
+    compare_baseline(path, "sync_cycles_8", points[3].sync_cycles_per_step, false);
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nbaseline written to {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+}

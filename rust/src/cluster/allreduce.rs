@@ -1,0 +1,131 @@
+//! Deterministic gradient all-reduce.
+//!
+//! Data-parallel training sums per-card gradients before the single
+//! optimizer update.  Floating-point addition is not associative, so the
+//! *order* of that sum is part of the model's semantics: this module
+//! fixes it as a binary tree over the card indices — level ℓ folds slot
+//! `i + 2^ℓ` into slot `i` for every `i ≡ 0 (mod 2^{ℓ+1})` — which is
+//! simultaneously (a) a total order independent of how many pool workers
+//! computed the gradients, so the final model is **bit-identical for a
+//! given shard count at any thread count**, and (b) the classic
+//! hypercube reduce: with cards addressed as the outermost hypercube
+//! axis, every tree edge is a single card-level hop (what
+//! [`crate::cluster::traffic`] charges).
+//!
+//! Weighting: each card's gradient is the *mean* over its sub-batch, so
+//! the global mean gradient is `Σ_k (b_k / B) · g_k`.  The weights are
+//! applied before the fold; a card that drew no rows this step has
+//! weight 0, which also neutralizes its stale buffers.
+
+use std::sync::Mutex;
+
+use crate::runtime::backend::GradBuffers;
+
+/// The fixed fold schedule over `n` slots: `(dst, src)` pairs in
+/// execution order.  After applying every pair in order, slot 0 holds
+/// the sum of all slots.  Pairs sharing a level (same `src − dst` gap)
+/// touch disjoint slots, so the traffic model treats each level as one
+/// parallel exchange round.
+pub fn tree_schedule(n: usize) -> Vec<(usize, usize)> {
+    let mut pairs = Vec::new();
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            pairs.push((i, i + gap));
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+    pairs
+}
+
+/// Scale slot `k` by `weights[k]`, then fold all slots into slot 0 in
+/// the fixed tree order.  Runs on the calling thread — the summation
+/// order is the schedule's, never the workers'.
+pub fn weighted_tree_reduce(slots: &[Mutex<GradBuffers>], weights: &[f32]) {
+    assert_eq!(slots.len(), weights.len());
+    for (slot, &w) in slots.iter().zip(weights) {
+        slot.lock().unwrap().scale(w);
+    }
+    for (dst, src) in tree_schedule(slots.len()) {
+        let mut d = slots[dst].lock().unwrap();
+        let s = slots[src].lock().unwrap();
+        d.add_assign(&s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::matrix::Matrix;
+
+    fn buffers(vals: &[f32]) -> Vec<Mutex<GradBuffers>> {
+        vals.iter()
+            .map(|&v| {
+                Mutex::new(GradBuffers {
+                    g1: Matrix::from_vec(1, 2, vec![v, 2.0 * v]),
+                    g2: Matrix::from_vec(1, 1, vec![-v]),
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn schedule_reaches_every_slot_once_as_source() {
+        for n in [1usize, 2, 3, 4, 5, 8, 13] {
+            let sched = tree_schedule(n);
+            // Every slot except 0 is folded away exactly once.
+            let mut folded = vec![0usize; n];
+            for &(dst, src) in &sched {
+                assert!(dst < src && src < n);
+                folded[src] += 1;
+            }
+            assert_eq!(folded[0], 0);
+            assert!(folded[1..].iter().all(|&c| c == 1), "n={n}: {folded:?}");
+            assert_eq!(sched.len(), n.saturating_sub(1));
+        }
+    }
+
+    #[test]
+    fn schedule_levels_are_single_hypercube_hops() {
+        // dst ≡ 0 (mod 2·gap) and src = dst + gap differ in exactly one
+        // bit — each tree edge is one card-level hop.
+        for n in [2usize, 4, 6, 8, 16] {
+            for (dst, src) in tree_schedule(n) {
+                assert_eq!((dst ^ src).count_ones(), 1, "n={n}: ({dst},{src})");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_reduce_matches_serial_sum() {
+        let slots = buffers(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let weights = [0.1f32, 0.2, 0.0, 0.3, 0.4];
+        weighted_tree_reduce(&slots, &weights);
+        let got = slots[0].lock().unwrap();
+        // Recompute in the same tree order on scalars.
+        let mut vals: Vec<f32> = [1.0f32, 2.0, 3.0, 4.0, 5.0]
+            .iter()
+            .zip(&weights)
+            .map(|(&v, &w)| v * w)
+            .collect();
+        for (dst, src) in tree_schedule(5) {
+            let s = vals[src];
+            vals[dst] += s;
+        }
+        assert_eq!(got.g1.data[0].to_bits(), vals[0].to_bits());
+        assert_eq!(got.g1.data[1], 2.0 * vals[0]);
+        assert_eq!(got.g2.data[0], -vals[0]);
+    }
+
+    #[test]
+    fn single_slot_reduce_is_a_pure_scale() {
+        let slots = buffers(&[7.0]);
+        weighted_tree_reduce(&slots, &[1.0]);
+        let got = slots[0].lock().unwrap();
+        // ×1.0 is exact: a 1-card cluster alters nothing.
+        assert_eq!(got.g1.data, vec![7.0, 14.0]);
+        assert_eq!(got.g2.data, vec![-7.0]);
+    }
+}

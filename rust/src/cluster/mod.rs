@@ -1,0 +1,31 @@
+//! Multi-accelerator sharded training — the cluster layer.
+//!
+//! The paper scales GCN training *inside* one HBM-FPGA card (16 cores on
+//! a 4-D hypercube NoC); this module opens the next axis: **data-parallel
+//! training across N simulated cards**, MultiGCN-style.
+//!
+//! - [`shard`] — deterministic greedy edge-cut sharding of a
+//!   [`crate::graph::generate::LabeledGraph`] with halo (ghost-vertex)
+//!   replication, one shard per card.
+//! - [`replica`] — per-card state: local subgraph, sampler, staging
+//!   arena and a private `NativeBackend`, so shard steps run
+//!   allocation-free and concurrently on [`crate::util::pool`] workers.
+//! - [`allreduce`] — the fixed-order binary-tree gradient reduction:
+//!   deterministic summation order ⇒ bit-identical models at any thread
+//!   count.
+//! - [`traffic`] — modeled inter-card halo-exchange and all-reduce
+//!   volume, with the hypercube addressing extended one dimension up
+//!   (cards as the outermost axis) and per-card bytes + sync cycles
+//!   reported per step.
+//! - [`trainer`] — [`ClusterTrainer`]: drives the N shard replicas with
+//!   the same checkpoint/metrics surface as the single-card trainer;
+//!   at one shard it replays [`crate::train::Trainer`] byte for byte.
+
+pub mod allreduce;
+pub mod replica;
+pub mod shard;
+pub mod traffic;
+pub mod trainer;
+
+pub use shard::{GraphShard, GraphSharder, ShardPlan};
+pub use trainer::ClusterTrainer;

@@ -1,0 +1,128 @@
+//! Per-card training state: one [`ShardReplica`] per simulated
+//! accelerator.
+//!
+//! A replica bundles everything a card needs to turn its slice of a
+//! global mini-batch into a gradient contribution without touching any
+//! other card's memory: the shard's local subgraph, a neighbor sampler
+//! over it, a recycled [`StagingArena`], and its own [`NativeBackend`]
+//! (each card has its own scratch, so shard steps run concurrently on
+//! [`crate::util::pool`] workers).  Steady state a `grad_step` performs
+//! the same zero-allocation sample → stage → fused-compute path as the
+//! single-card trainer — only the optimizer update is lifted out, into
+//! the cluster-level all-reduce.
+
+use crate::cluster::shard::GraphShard;
+use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
+use crate::runtime::backend::{ComputeBackend, GradBuffers, ModelState};
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::native::NativeBackend;
+use crate::train::batch::StagingArena;
+use crate::train::trainer::TrainerConfig;
+use crate::util::rng::SplitMix64;
+
+/// One card's sampler + staging + compute state.
+pub struct ShardReplica<'g> {
+    pub shard: &'g GraphShard,
+    backend: NativeBackend,
+    sampler: NeighborSampler<'g>,
+    arena: StagingArena,
+    scratch: SampleScratch,
+    sampled: SampledBatch,
+    /// Local batch ids of the step being computed — routed to this card
+    /// serially by the cluster trainer, consumed on a pool worker.
+    pub ids: Vec<u32>,
+    /// This card's sampling stream for the step (assigned serially in
+    /// canonical shard order, so results never depend on worker timing).
+    pub rng: SplitMix64,
+    /// Masked mean loss of the last computed step (0.0 when the card drew
+    /// no batch rows).
+    pub last_loss: f32,
+    /// Correct predictions of the last [`ShardReplica::eval_step`].
+    pub last_correct: f32,
+    /// Real batch rows behind `last_loss` (the all-reduce weight).
+    pub last_batch: usize,
+    /// Ghost-feature fetches of the last sampled input frontier, counted
+    /// per owning card — the halo-exchange volume the traffic model
+    /// charges.
+    pub halo_fetches: Vec<u32>,
+}
+
+impl<'g> ShardReplica<'g> {
+    /// Build the replica and prepare its backend; returns the prepared
+    /// artifact metadata (identical across replicas of one cluster).
+    pub fn new(
+        shard: &'g GraphShard,
+        num_shards: usize,
+        cfg: &TrainerConfig,
+        ordering: &str,
+    ) -> anyhow::Result<(Self, ArtifactMeta)> {
+        let mut backend = NativeBackend::new(cfg.threads);
+        let meta = backend.prepare(&cfg.artifact_tag, cfg.optimizer, ordering, cfg.loss_head)?;
+        let sampler = NeighborSampler::new(&shard.graph.adj, cfg.fanouts.clone());
+        let arena = StagingArena::new(&meta);
+        let replica = ShardReplica {
+            shard,
+            backend,
+            sampler,
+            arena,
+            scratch: SampleScratch::default(),
+            sampled: SampledBatch::default(),
+            ids: Vec::new(),
+            rng: SplitMix64::new(0),
+            last_loss: 0.0,
+            last_correct: 0.0,
+            last_batch: 0,
+            halo_fetches: vec![0; num_shards],
+        };
+        Ok((replica, meta))
+    }
+
+    /// Compute this card's gradient contribution for the routed step:
+    /// sample the local frontier, stage it, extract gradients into
+    /// `grads` (weights untouched — the update happens once, after the
+    /// all-reduce).  A card with no batch rows this step is a no-op; its
+    /// zero all-reduce weight neutralizes whatever `grads` holds.
+    pub fn grad_step(&mut self, state: &ModelState, grads: &mut GradBuffers) -> anyhow::Result<()> {
+        self.last_batch = self.ids.len();
+        self.halo_fetches.iter_mut().for_each(|c| *c = 0);
+        if self.ids.is_empty() {
+            self.last_loss = 0.0;
+            return Ok(());
+        }
+        self.sampler.sample_into(&self.ids, &mut self.rng, &mut self.scratch, &mut self.sampled);
+        self.record_halo();
+        self.arena.stage(&self.sampled, &self.shard.graph, false)?;
+        self.last_loss = self.backend.train_grads(self.arena.staged(), state, grads)?;
+        Ok(())
+    }
+
+    /// Masked evaluation of the routed ids into the `last_*` slots
+    /// (`last_loss`, `last_correct`, `last_batch`) — same fan-out shape
+    /// as [`ShardReplica::grad_step`].
+    pub fn eval_step(&mut self, state: &ModelState) -> anyhow::Result<()> {
+        self.last_batch = self.ids.len();
+        if self.ids.is_empty() {
+            self.last_loss = 0.0;
+            self.last_correct = 0.0;
+            return Ok(());
+        }
+        self.sampler.sample_into(&self.ids, &mut self.rng, &mut self.scratch, &mut self.sampled);
+        self.arena.stage(&self.sampled, &self.shard.graph, false)?;
+        let (loss, correct) = self.backend.eval_batch(self.arena.staged(), state)?;
+        self.last_loss = loss;
+        self.last_correct = correct;
+        Ok(())
+    }
+
+    /// Count ghost-feature fetches in the sampled input frontier, per
+    /// owning card.
+    fn record_halo(&mut self) {
+        let n_owned = self.shard.owned_count();
+        for &l in self.sampled.input_nodes() {
+            if self.shard.is_halo(l) {
+                let owner = self.shard.halo_owner[l as usize - n_owned] as usize;
+                self.halo_fetches[owner] += 1;
+            }
+        }
+    }
+}

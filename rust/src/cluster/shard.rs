@@ -1,0 +1,263 @@
+//! Graph sharding for multi-card data-parallel training.
+//!
+//! [`GraphSharder`] cuts a [`LabeledGraph`] into N balanced **edge-cut**
+//! shards, one per simulated accelerator card.  Each shard owns a
+//! disjoint node set; every directed edge is assigned to exactly one
+//! shard (its source's owner), and out-of-shard destination endpoints
+//! become **halo** (ghost) vertices: their features are replicated
+//! locally so per-card sampling/staging never leaves the card, while the
+//! cluster traffic model charges the replication as inter-card
+//! halo-exchange bytes (MultiGCN-style ghosting).
+//!
+//! The assignment is greedy and deterministic — one pass over the nodes
+//! in descending weight order (weight = 1 + degree, ties by ascending
+//! id), each node going to the lightest shard that still has node
+//! capacity.  The hard per-shard cap of ⌈n/N⌉ owned nodes pins the
+//! balance bound the tests assert.
+//!
+//! With a single shard the "cut" is exact: the local subgraph reproduces
+//! the input graph byte for byte (same CSR layout, same features, same
+//! labels, empty halo), which is what lets a 1-shard
+//! [`crate::cluster::ClusterTrainer`] replay the single-card
+//! [`crate::train::Trainer`] identically.
+
+use crate::graph::coo::Coo;
+use crate::graph::generate::LabeledGraph;
+use crate::util::matrix::Matrix;
+
+/// One card's slice of the global graph.
+#[derive(Clone, Debug)]
+pub struct GraphShard {
+    pub id: usize,
+    /// Global ids of owned nodes, ascending.  Local index `l < owned.len()`
+    /// addresses `owned[l]`.
+    pub owned: Vec<u32>,
+    /// Global ids of ghost vertices, ascending.  Local index
+    /// `owned.len() + h` addresses `halo[h]`.
+    pub halo: Vec<u32>,
+    /// Owning card of each halo vertex (parallel to `halo`).
+    pub halo_owner: Vec<u16>,
+    /// The local subgraph over `owned ++ halo`: every edge sourced at an
+    /// owned node, destinations relabeled to local ids; halo rows are
+    /// empty (ghosts carry features, not adjacency).  Features and labels
+    /// cover owned and halo rows.
+    pub graph: LabeledGraph,
+}
+
+impl GraphShard {
+    pub fn owned_count(&self) -> usize {
+        self.owned.len()
+    }
+
+    /// True when local index `l` addresses a ghost vertex.
+    pub fn is_halo(&self, local: u32) -> bool {
+        (local as usize) >= self.owned.len()
+    }
+
+    /// Directed edges assigned to this shard (all sourced at owned rows).
+    pub fn local_edges(&self) -> usize {
+        self.graph.adj.nnz()
+    }
+}
+
+/// The full sharding: per-card shards plus the global routing maps.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub shards: Vec<GraphShard>,
+    /// Global node id → owning card.
+    pub owner: Vec<u16>,
+    /// Global node id → local index within its owner's shard.
+    pub local: Vec<u32>,
+}
+
+impl ShardPlan {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Deterministic greedy edge-cut sharder.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphSharder {
+    pub shards: usize,
+}
+
+impl GraphSharder {
+    pub fn new(shards: usize) -> Self {
+        assert!(
+            (1..=u16::MAX as usize).contains(&shards),
+            "shard count must be in 1..=65535, got {shards}"
+        );
+        GraphSharder { shards }
+    }
+
+    /// Cut `graph` into `self.shards` shards (one deterministic pass).
+    pub fn shard(&self, graph: &LabeledGraph) -> ShardPlan {
+        let n = graph.num_nodes();
+        let k = self.shards;
+        let cap = n.div_ceil(k).max(1);
+
+        // Greedy assignment: heaviest nodes first (LPT), lightest shard
+        // that still has node capacity, ties toward the lowest shard id.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&u| (std::cmp::Reverse(graph.adj.degree(u as usize)), u));
+        let mut owner = vec![0u16; n];
+        let mut load = vec![0u64; k];
+        let mut count = vec![0usize; k];
+        for &u in &order {
+            let w = 1 + graph.adj.degree(u as usize) as u64;
+            let mut best = usize::MAX;
+            for s in 0..k {
+                if count[s] < cap && (best == usize::MAX || load[s] < load[best]) {
+                    best = s;
+                }
+            }
+            debug_assert!(best != usize::MAX, "capacity sums to >= n");
+            owner[u as usize] = best as u16;
+            load[best] += w;
+            count[best] += 1;
+        }
+
+        // Owned sets in ascending global order define the local id space
+        // (for one shard this is the identity relabeling).
+        let mut local = vec![0u32; n];
+        let mut owned_sets: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for g in 0..n as u32 {
+            let s = owner[g as usize] as usize;
+            local[g as usize] = owned_sets[s].len() as u32;
+            owned_sets[s].push(g);
+        }
+
+        let shards = owned_sets
+            .into_iter()
+            .enumerate()
+            .map(|(s, ow)| build_shard(s, graph, &owner, &local, ow))
+            .collect();
+        ShardPlan { shards, owner, local }
+    }
+}
+
+/// Materialize one shard: discover the halo, relabel the owned rows'
+/// edges into local ids, gather features/labels for owned ++ halo.
+fn build_shard(
+    id: usize,
+    graph: &LabeledGraph,
+    owner: &[u16],
+    local: &[u32],
+    owned: Vec<u32>,
+) -> GraphShard {
+    // Halo: out-of-shard neighbors of owned nodes, ascending + deduped.
+    let mut halo: Vec<u32> = Vec::new();
+    for &u in &owned {
+        let (cols, _) = graph.adj.row(u as usize);
+        for &v in cols {
+            if owner[v as usize] as usize != id {
+                halo.push(v);
+            }
+        }
+    }
+    halo.sort_unstable();
+    halo.dedup();
+
+    let n_owned = owned.len();
+    let n_local = n_owned + halo.len();
+    let halo_local =
+        |g: u32| -> u32 { (n_owned + halo.binary_search(&g).expect("halo member")) as u32 };
+
+    // Owned rows keep their CSR edge order, so a 1-shard build reproduces
+    // the input CSR exactly.  Halo rows stay empty.
+    let mut coo = Coo::new(n_local, n_local);
+    for (li, &u) in owned.iter().enumerate() {
+        let (cols, vals) = graph.adj.row(u as usize);
+        for (&v, &w) in cols.iter().zip(vals) {
+            let lv = if owner[v as usize] as usize == id {
+                local[v as usize]
+            } else {
+                halo_local(v)
+            };
+            coo.push(li as u32, lv, w);
+        }
+    }
+
+    let d = graph.features.cols;
+    let mut features = Matrix::zeros(n_local, d);
+    let mut labels = Vec::with_capacity(n_local);
+    for (li, &g) in owned.iter().chain(halo.iter()).enumerate() {
+        features.row_mut(li).copy_from_slice(graph.features.row(g as usize));
+        labels.push(graph.labels[g as usize]);
+    }
+    let halo_owner: Vec<u16> = halo.iter().map(|&g| owner[g as usize]).collect();
+
+    GraphShard {
+        id,
+        owned,
+        halo,
+        halo_owner,
+        graph: LabeledGraph {
+            adj: coo.to_csr(),
+            features,
+            labels,
+            num_classes: graph.num_classes,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::community_graph;
+    use crate::util::rng::SplitMix64;
+
+    fn graph(n: usize) -> LabeledGraph {
+        let mut rng = SplitMix64::new(0x5A4D);
+        community_graph(n, 8.0, 2.3, 12, 5, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn one_shard_reproduces_the_graph_exactly() {
+        let g = graph(400);
+        let plan = GraphSharder::new(1).shard(&g);
+        assert_eq!(plan.num_shards(), 1);
+        let s = &plan.shards[0];
+        assert!(s.halo.is_empty());
+        assert_eq!(s.owned, (0..400u32).collect::<Vec<_>>());
+        assert_eq!(s.graph.adj, g.adj);
+        assert_eq!(s.graph.features, g.features);
+        assert_eq!(s.graph.labels, g.labels);
+        assert_eq!(plan.local, (0..400u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn node_caps_and_ownership_partition() {
+        let g = graph(503); // non-divisible on purpose
+        for k in [2usize, 3, 4, 8] {
+            let plan = GraphSharder::new(k).shard(&g);
+            let cap = 503usize.div_ceil(k);
+            let mut seen = vec![false; 503];
+            for (s, shard) in plan.shards.iter().enumerate() {
+                assert!(!shard.owned.is_empty(), "shard {s}/{k} empty");
+                assert!(shard.owned.len() <= cap, "shard {s}/{k} over cap");
+                for &u in &shard.owned {
+                    assert!(!seen[u as usize], "node {u} owned twice");
+                    seen[u as usize] = true;
+                    assert_eq!(plan.owner[u as usize] as usize, s);
+                    assert_eq!(shard.owned[plan.local[u as usize] as usize], u);
+                }
+            }
+            assert!(seen.iter().all(|&v| v), "some node unowned at k={k}");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let g = graph(300);
+        let a = GraphSharder::new(4).shard(&g);
+        let b = GraphSharder::new(4).shard(&g);
+        assert_eq!(a.owner, b.owner);
+        for (x, y) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(x.owned, y.owned);
+            assert_eq!(x.halo, y.halo);
+            assert_eq!(x.graph.adj, y.graph.adj);
+        }
+    }
+}

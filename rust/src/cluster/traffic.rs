@@ -1,0 +1,315 @@
+//! Modeled inter-card traffic: halo exchange + gradient all-reduce.
+//!
+//! The paper's NoC is a 4-D hypercube inside one card; this module
+//! extends the addressing **one dimension up** — cards are the outermost
+//! hypercube axis, so a global address is `card << 4 | core` and hop
+//! distance stays the XOR popcount of the whole address (the same
+//! XOR-array principle as [`crate::noc::topology::Hypercube`], one level
+//! out).  Two flows are charged per training step:
+//!
+//! - **Halo exchange** — every ghost feature a card's sampled input
+//!   frontier touched is `d × 4` bytes pulled from the owner card's NF
+//!   region (the owner serves it from HBM at the
+//!   [`HbmSimulator::sequential_read_time`] rate over its
+//!   [`CHANNELS_PER_CORE`] channels, then ships it over the card link).
+//! - **All-reduce** — the fixed fold tree of
+//!   [`crate::cluster::allreduce`]: each level is one parallel exchange
+//!   round of a full gradient set up the tree, and one down for the
+//!   broadcast; every tree edge is a single card-level hop.
+//!
+//! Reported per card: bytes in/out per flow and a hop-weighted byte count
+//! (congestion proxy), plus an estimated per-step sync-cycle cost at the
+//! system clock.
+
+use crate::core_model::CLOCK_HZ;
+use crate::hbm::simulator::HbmSimulator;
+use crate::hbm::CHANNELS_PER_CORE;
+use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
+
+/// Bytes per cycle of one inter-card serial link (matches the AXI beat
+/// width of the intra-card fabric).
+pub const CARD_LINK_BYTES_PER_CYCLE: f64 = 32.0;
+/// Store-and-forward latency per card-level hop (cycles).
+pub const CARD_HOP_LATENCY: u64 = 8;
+
+/// Cards as the outermost hypercube axis.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterTopology {
+    pub cards: usize,
+    /// Card-level hypercube dimensions (⌈log₂ cards⌉).
+    pub card_dims: u32,
+}
+
+impl ClusterTopology {
+    pub fn new(cards: usize) -> Self {
+        assert!(cards >= 1);
+        let card_dims = (cards as u64).next_power_of_two().trailing_zeros();
+        ClusterTopology { cards, card_dims }
+    }
+
+    /// Global address of `core` on `card`: card bits above the 4 core
+    /// bits.
+    pub fn addr(&self, card: usize, core: u8) -> u32 {
+        debug_assert!(card < self.cards && (core as usize) < NUM_CORES);
+        ((card as u32) << DIMS) | core as u32
+    }
+
+    pub fn card_of(addr: u32) -> usize {
+        (addr >> DIMS) as usize
+    }
+
+    pub fn core_of(addr: u32) -> u8 {
+        (addr as usize & (NUM_CORES - 1)) as u8
+    }
+
+    /// Hop distance between two global addresses: XOR popcount — the
+    /// card-level Hamming distance plus the intra-card hypercube
+    /// distance.
+    pub fn distance(a: u32, b: u32) -> u32 {
+        let card_hops = ((a >> DIMS) ^ (b >> DIMS)).count_ones();
+        card_hops + Hypercube::distance(Self::core_of(a), Self::core_of(b))
+    }
+
+    /// Card-level hop distance.
+    pub fn card_distance(a: usize, b: usize) -> u32 {
+        ((a ^ b) as u64).count_ones()
+    }
+}
+
+/// Per-card byte totals (one step, or accumulated over a run).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CardTraffic {
+    /// Ghost features this card pulled in.
+    pub halo_bytes_in: u64,
+    /// Ghost features this card served to others.
+    pub halo_bytes_out: u64,
+    /// Gradient bytes this card sent during reduce + broadcast.
+    pub allreduce_bytes: u64,
+    /// Bytes × card-level hops originated here (congestion proxy).
+    pub hop_bytes: u64,
+}
+
+impl CardTraffic {
+    pub fn add(&mut self, o: &CardTraffic) {
+        self.halo_bytes_in += o.halo_bytes_in;
+        self.halo_bytes_out += o.halo_bytes_out;
+        self.allreduce_bytes += o.allreduce_bytes;
+        self.hop_bytes += o.hop_bytes;
+    }
+
+    /// Bytes this card put on the inter-card network.
+    pub fn sent_bytes(&self) -> u64 {
+        self.halo_bytes_out + self.allreduce_bytes
+    }
+}
+
+/// One step's modeled exchange.
+#[derive(Clone, Debug)]
+pub struct StepTraffic {
+    pub per_card: Vec<CardTraffic>,
+    /// Estimated cycles the step spends synchronizing (halo serve + link
+    /// + all-reduce rounds) at the system clock.
+    pub sync_cycles: u64,
+}
+
+/// Accumulated traffic over a run.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficTotals {
+    pub steps: u64,
+    pub per_card: Vec<CardTraffic>,
+    pub sync_cycles: u64,
+}
+
+impl TrafficTotals {
+    pub fn absorb(&mut self, step: &StepTraffic) {
+        if self.per_card.is_empty() {
+            self.per_card = vec![CardTraffic::default(); step.per_card.len()];
+        }
+        for (a, b) in self.per_card.iter_mut().zip(&step.per_card) {
+            a.add(b);
+        }
+        self.sync_cycles += step.sync_cycles;
+        self.steps += 1;
+    }
+
+    pub fn cycles_per_step(&self) -> f64 {
+        self.sync_cycles as f64 / self.steps.max(1) as f64
+    }
+
+    /// Total bytes moved card-to-card per step, averaged over the run.
+    pub fn bytes_per_step(&self) -> f64 {
+        let total: u64 = self.per_card.iter().map(|c| c.sent_bytes()).sum();
+        total as f64 / self.steps.max(1) as f64
+    }
+}
+
+/// The per-step traffic estimator.
+#[derive(Clone, Debug)]
+pub struct TrafficModel {
+    pub topo: ClusterTopology,
+    /// Bytes per ghost feature row (d × 4).
+    pub feat_bytes: u64,
+    /// Bytes of one full gradient set ((d·h + h·c) × 4).
+    pub grad_bytes: u64,
+    hbm: HbmSimulator,
+}
+
+impl TrafficModel {
+    pub fn new(cards: usize, feat_dim: usize, grad_elems: usize) -> Self {
+        TrafficModel {
+            topo: ClusterTopology::new(cards),
+            feat_bytes: 4 * feat_dim as u64,
+            grad_bytes: 4 * grad_elems as u64,
+            hbm: HbmSimulator::default(),
+        }
+    }
+
+    /// Model one training step.  `halo_fetches[k][j]` = ghost features
+    /// card `k` pulled from card `j` this step; the all-reduce always
+    /// moves one full gradient set along the fold tree and back.
+    pub fn step(&self, halo_fetches: &[Vec<u32>]) -> StepTraffic {
+        let n = self.topo.cards;
+        debug_assert_eq!(halo_fetches.len(), n);
+        let mut per_card = vec![CardTraffic::default(); n];
+
+        // --- Halo exchange. ---
+        for (k, fetches) in halo_fetches.iter().enumerate() {
+            for (j, &cnt) in fetches.iter().enumerate() {
+                if cnt == 0 || j == k {
+                    continue;
+                }
+                let bytes = cnt as u64 * self.feat_bytes;
+                per_card[k].halo_bytes_in += bytes;
+                per_card[j].halo_bytes_out += bytes;
+                per_card[j].hop_bytes += bytes * ClusterTopology::card_distance(k, j) as u64;
+            }
+        }
+        let max_link = per_card
+            .iter()
+            .map(|c| c.halo_bytes_in + c.halo_bytes_out)
+            .max()
+            .unwrap_or(0);
+        let max_served = per_card.iter().map(|c| c.halo_bytes_out).max().unwrap_or(0);
+        let hbm_secs = self.hbm.sequential_read_time(max_served, CHANNELS_PER_CORE, 128);
+        let mut cycles = (hbm_secs * CLOCK_HZ) as u64
+            + (max_link as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
+        if max_link > 0 {
+            cycles += CARD_HOP_LATENCY * self.topo.card_dims.max(1) as u64;
+        }
+
+        // --- All-reduce: the exact fold tree the reduction executes
+        // (`cluster::allreduce::tree_schedule`), up then broadcast back
+        // down.  Pairs of one level (same fold gap) touch disjoint
+        // cards, so a level costs one gradient transfer over its longest
+        // edge; every flow is charged to its sender. ---
+        let grad_cycles = (self.grad_bytes as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
+        let schedule = crate::cluster::allreduce::tree_schedule(n);
+        let mut i = 0;
+        while i < schedule.len() {
+            let gap = schedule[i].1 - schedule[i].0;
+            let mut max_hops = 0u64;
+            while i < schedule.len() && schedule[i].1 - schedule[i].0 == gap {
+                let (dst, src) = schedule[i];
+                let hops = ClusterTopology::card_distance(dst, src) as u64;
+                per_card[src].allreduce_bytes += self.grad_bytes; // reduce up
+                per_card[dst].allreduce_bytes += self.grad_bytes; // broadcast down
+                per_card[src].hop_bytes += self.grad_bytes * hops;
+                per_card[dst].hop_bytes += self.grad_bytes * hops;
+                max_hops = max_hops.max(hops);
+                i += 1;
+            }
+            cycles += 2 * (grad_cycles + CARD_HOP_LATENCY * max_hops);
+        }
+        StepTraffic { per_card, sync_cycles: cycles }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addressing_extends_the_hypercube_one_level_up() {
+        let topo = ClusterTopology::new(4);
+        assert_eq!(topo.card_dims, 2);
+        let a = topo.addr(0, 0b0110);
+        let b = topo.addr(3, 0b0110);
+        // Same core, two card bits apart.
+        assert_eq!(ClusterTopology::card_of(b), 3);
+        assert_eq!(ClusterTopology::core_of(b), 0b0110);
+        assert_eq!(ClusterTopology::distance(a, b), 2);
+        // Card + core hops compose.
+        let c = topo.addr(1, 0b0111);
+        assert_eq!(ClusterTopology::distance(a, c), 1 + 1);
+        // Intra-card distances match the paper's topology exactly.
+        for x in 0..NUM_CORES as u8 {
+            for y in 0..NUM_CORES as u8 {
+                assert_eq!(
+                    ClusterTopology::distance(topo.addr(2, x), topo.addr(2, y)),
+                    Hypercube::distance(x, y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_card_has_zero_traffic() {
+        let model = TrafficModel::new(1, 64, 64 * 32 + 32 * 8);
+        let st = model.step(&[vec![0]]);
+        assert_eq!(st.sync_cycles, 0);
+        assert_eq!(st.per_card[0], CardTraffic::default());
+    }
+
+    #[test]
+    fn halo_bytes_balance_and_hops_count() {
+        let model = TrafficModel::new(4, 10, 100);
+        // Card 0 pulls 3 features from card 1 and 2 from card 3.
+        let fetches = vec![vec![0, 3, 0, 2], vec![0; 4], vec![0; 4], vec![0; 4]];
+        let st = model.step(&fetches);
+        let fb = model.feat_bytes;
+        assert_eq!(st.per_card[0].halo_bytes_in, 5 * fb);
+        assert_eq!(st.per_card[1].halo_bytes_out, 3 * fb);
+        assert_eq!(st.per_card[3].halo_bytes_out, 2 * fb);
+        // Card 1 is one card-hop from card 0, card 3 is two; on top of the
+        // halo hops each leaf card sends one gradient up its fold edge
+        // (1 hop).
+        let gb = model.grad_bytes;
+        assert_eq!(st.per_card[1].hop_bytes, 3 * fb + gb);
+        assert_eq!(st.per_card[3].hop_bytes, 2 * fb * 2 + gb);
+        let total_in: u64 = st.per_card.iter().map(|c| c.halo_bytes_in).sum();
+        let total_out: u64 = st.per_card.iter().map(|c| c.halo_bytes_out).sum();
+        assert_eq!(total_in, total_out);
+        assert!(st.sync_cycles > 0);
+    }
+
+    #[test]
+    fn allreduce_volume_scales_with_tree_size() {
+        let model = |n| TrafficModel::new(n, 8, 1000);
+        let empty = |n: usize| vec![vec![0u32; n]; n];
+        let b2: u64 = model(2).step(&empty(2)).per_card.iter().map(|c| c.allreduce_bytes).sum();
+        let b4: u64 = model(4).step(&empty(4)).per_card.iter().map(|c| c.allreduce_bytes).sum();
+        let b8: u64 = model(8).step(&empty(8)).per_card.iter().map(|c| c.allreduce_bytes).sum();
+        // n−1 tree edges × 2 transfers (up + down), each charged to its
+        // sender; grad_bytes = 4 × 1000.
+        assert_eq!(b2, 2 * 4000);
+        assert_eq!(b4, 2 * 3 * 4000);
+        assert_eq!(b8, 2 * 7 * 4000);
+        assert!(
+            model(8).step(&empty(8)).sync_cycles > model(2).step(&empty(2)).sync_cycles,
+            "deeper trees must cost more sync"
+        );
+    }
+
+    #[test]
+    fn totals_accumulate_per_step() {
+        let model = TrafficModel::new(2, 4, 10);
+        let mut totals = TrafficTotals::default();
+        let st = model.step(&[vec![0, 0], vec![3, 0]]);
+        totals.absorb(&st);
+        totals.absorb(&st);
+        assert_eq!(totals.steps, 2);
+        assert_eq!(totals.sync_cycles, 2 * st.sync_cycles);
+        assert_eq!(totals.per_card[1].halo_bytes_in, 2 * st.per_card[1].halo_bytes_in);
+        assert!((totals.cycles_per_step() - st.sync_cycles as f64).abs() < 1e-9);
+    }
+}

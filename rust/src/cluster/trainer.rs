@@ -1,0 +1,330 @@
+//! The cluster trainer: data-parallel sharded training over N simulated
+//! accelerator cards.
+//!
+//! Per step: draw the **global** mini-batch from one master RNG (exactly
+//! like the single-card [`crate::train::Trainer`]), route each id to its owner card,
+//! fan the per-card sample → stage → gradient-extraction steps out on
+//! the persistent worker pool, then combine with the fixed-order
+//! weighted tree all-reduce and apply **one** optimizer update to the
+//! shared [`ModelState`] (the Weight Bank image every card would hold a
+//! synchronized copy of).
+//!
+//! # Determinism contract
+//!
+//! - Gradients are bit-identical per card at any matmul worker count
+//!   (the tiled-matmul contract), per-card sampling streams are assigned
+//!   serially in canonical shard order, and the all-reduce order is a
+//!   fixed tree — so the loss curve and final model are **bit-identical
+//!   for a given shard count at any thread/pool configuration** (pinned
+//!   in `rust/tests/cluster.rs`).
+//! - With **one** shard the trainer consumes the master RNG exactly as
+//!   [`crate::train::Trainer`] does (same probe, same Glorot init, the single card
+//!   samples the master stream itself) and the update applies the same
+//!   f32 expressions to the same gradients — the loss curve equals the
+//!   single-card trainer's **byte for byte**.
+//!
+//! Checkpoints carry the same payload as [`crate::train::Trainer`] checkpoints
+//! (weights, velocities, step counter, master RNG state), so cluster
+//! runs resume byte-identically and single-card checkpoints interchange.
+
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cluster::allreduce::weighted_tree_reduce;
+use crate::cluster::replica::ShardReplica;
+use crate::cluster::shard::ShardPlan;
+use crate::cluster::traffic::{TrafficModel, TrafficTotals};
+use crate::graph::generate::LabeledGraph;
+use crate::runtime::backend::{GradBuffers, ModelState};
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::native::NativeBackend;
+use crate::train::metrics::LossCurve;
+use crate::train::trainer::TrainerConfig;
+use crate::util::pool;
+use crate::util::rng::SplitMix64;
+
+/// Data-parallel trainer over the shards of a [`ShardPlan`].
+pub struct ClusterTrainer<'g> {
+    pub graph: &'g LabeledGraph,
+    pub plan: &'g ShardPlan,
+    pub cfg: TrainerConfig,
+    replicas: Vec<Mutex<ShardReplica<'g>>>,
+    grad_slots: Vec<Mutex<GradBuffers>>,
+    /// The synchronized model (all cards hold this after each update).
+    pub state: ModelState,
+    meta: ArtifactMeta,
+    rng: SplitMix64,
+    steps_done: u64,
+    /// Recycled global-batch draw.
+    ids: Vec<u32>,
+    /// Recycled per-card local-id routes.
+    route: Vec<Vec<u32>>,
+    /// Recycled all-reduce weights (b_k / B).
+    weights: Vec<f32>,
+    /// Recycled per-card halo-fetch counts for the traffic model.
+    halo_fetches: Vec<Vec<u32>>,
+    traffic: TrafficModel,
+    totals: TrafficTotals,
+}
+
+impl<'g> ClusterTrainer<'g> {
+    pub fn new(
+        graph: &'g LabeledGraph,
+        plan: &'g ShardPlan,
+        cfg: TrainerConfig,
+    ) -> anyhow::Result<Self> {
+        let shards = plan.num_shards();
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+
+        // Mirror Trainer::with_backend's master-RNG consumption exactly —
+        // the shared `choose_ordering` helper is the single spelling of
+        // the probe/estimator prefix, so the two constructors cannot
+        // drift apart.
+        let mut rng = SplitMix64::new(cfg.seed);
+        let probe_backend = NativeBackend::new(cfg.threads);
+        let ordering =
+            crate::train::trainer::choose_ordering(graph, &cfg, &probe_backend, &mut rng)?;
+
+        let mut replicas = Vec::with_capacity(shards);
+        let mut grad_slots = Vec::with_capacity(shards);
+        let mut meta: Option<ArtifactMeta> = None;
+        for shard in &plan.shards {
+            let (rep, m) = ShardReplica::new(shard, shards, &cfg, ordering)?;
+            grad_slots.push(Mutex::new(GradBuffers::new(&m)));
+            replicas.push(Mutex::new(rep));
+            meta = Some(m);
+        }
+        let meta = meta.expect("at least one shard");
+        let state = ModelState::glorot(&meta, &mut rng);
+        let traffic = TrafficModel::new(shards, meta.d, meta.d * meta.h + meta.h * meta.c);
+
+        Ok(ClusterTrainer {
+            graph,
+            plan,
+            cfg,
+            replicas,
+            grad_slots,
+            state,
+            meta,
+            rng,
+            steps_done: 0,
+            ids: Vec::new(),
+            route: vec![Vec::new(); shards],
+            weights: vec![0.0; shards],
+            halo_fetches: vec![vec![0; shards]; shards],
+            traffic,
+            totals: TrafficTotals::default(),
+        })
+    }
+
+    /// Convenience: shard-count accessor.
+    pub fn num_shards(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
+    /// Name of the prepared artifact (identical across cards).
+    pub fn artifact(&self) -> &str {
+        &self.meta.name
+    }
+
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Accumulated inter-card traffic over the steps run so far.
+    pub fn traffic_totals(&self) -> &TrafficTotals {
+        &self.totals
+    }
+
+    pub fn traffic_model(&self) -> &TrafficModel {
+        &self.traffic
+    }
+
+    /// Draw the next global mini-batch and route it: fill each card's
+    /// local id list and hand it its sampling stream for this step (a
+    /// single card consumes the master stream itself — Trainer
+    /// compatibility; multiple cards get one fork each, in canonical
+    /// shard order).
+    fn route_batch(&mut self) {
+        let n = self.graph.num_nodes();
+        self.ids.clear();
+        for _ in 0..self.cfg.batch_size {
+            self.ids.push(self.rng.gen_range(n) as u32);
+        }
+        for v in &mut self.route {
+            v.clear();
+        }
+        for &g in &self.ids {
+            let k = self.plan.owner[g as usize] as usize;
+            self.route[k].push(self.plan.local[g as usize]);
+        }
+        let shards = self.replicas.len();
+        for (slot, route) in self.replicas.iter().zip(&self.route) {
+            let mut rep = slot.lock().unwrap();
+            rep.ids.clear();
+            rep.ids.extend_from_slice(route);
+            rep.rng = if shards == 1 {
+                SplitMix64::new(self.rng.state())
+            } else {
+                self.rng.fork()
+            };
+        }
+    }
+
+    /// A single card hands its advanced stream back to the master (the
+    /// byte-identical Trainer replay).
+    fn reclaim_master_stream(&mut self) {
+        if self.replicas.len() == 1 {
+            let state = self.replicas[0].lock().unwrap().rng.state();
+            self.rng = SplitMix64::new(state);
+        }
+    }
+
+    /// Run one closure per card on the worker pool (card index queue,
+    /// first error wins).
+    fn for_each_card(
+        &self,
+        f: impl Fn(&mut ShardReplica<'g>, &mut GradBuffers) -> anyhow::Result<()> + Sync,
+    ) -> anyhow::Result<()> {
+        let shards = self.replicas.len();
+        let parallelism = shards.min(pool::resolve_threads(self.cfg.threads));
+        let next = AtomicUsize::new(0);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let replicas = &self.replicas;
+        let grad_slots = &self.grad_slots;
+        pool::global().run(parallelism, || loop {
+            let k = next.fetch_add(1, AtomicOrdering::Relaxed);
+            if k >= shards {
+                break;
+            }
+            let mut rep = replicas[k].lock().unwrap();
+            let mut grads = grad_slots[k].lock().unwrap();
+            if let Err(e) = f(&mut rep, &mut grads) {
+                let mut slot = first_err.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+        });
+        match first_err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// One data-parallel training step; returns the batch-weighted global
+    /// loss.
+    pub fn step(&mut self) -> anyhow::Result<f32> {
+        self.route_batch();
+        let state = &self.state;
+        self.for_each_card(|rep, grads| rep.grad_step(state, grads))?;
+        self.reclaim_master_stream();
+
+        // Collect weights + loss + halo counts in canonical card order.
+        let mut total_b = 0usize;
+        for slot in &self.replicas {
+            total_b += slot.lock().unwrap().last_batch;
+        }
+        anyhow::ensure!(total_b > 0, "empty global batch");
+        let mut loss = 0.0f32;
+        for ((slot, weight), halo) in
+            self.replicas.iter().zip(&mut self.weights).zip(&mut self.halo_fetches)
+        {
+            let rep = slot.lock().unwrap();
+            let w = rep.last_batch as f32 / total_b as f32;
+            *weight = w;
+            loss += rep.last_loss * w;
+            halo.copy_from_slice(&rep.halo_fetches);
+        }
+
+        // Fixed-order weighted all-reduce into slot 0, then one update.
+        weighted_tree_reduce(&self.grad_slots, &self.weights);
+        self.apply_update();
+        self.totals.absorb(&self.traffic.step(&self.halo_fetches));
+        self.steps_done += 1;
+        Ok(loss)
+    }
+
+    /// The single post-reduce optimizer update — delegates to
+    /// [`ModelState::apply_gradients`], the one spelling of the update
+    /// expressions the native fused step also uses, so a 1-shard cluster
+    /// matches the single-card trainer bit for bit.
+    fn apply_update(&mut self) {
+        let acc = self.grad_slots[0].lock().unwrap();
+        self.state.apply_gradients(&acc.g1.data, &acc.g2.data, self.cfg.optimizer, self.cfg.lr);
+    }
+
+    /// Run the configured number of steps, recording the loss curve
+    /// (step indices continue from the checkpointed counter on resume).
+    pub fn train(&mut self) -> anyhow::Result<LossCurve> {
+        let mut curve = LossCurve::default();
+        for _ in 0..self.cfg.steps {
+            let t0 = Instant::now();
+            let s = self.steps_done;
+            let loss = self.step()?;
+            curve.push(s, loss, t0.elapsed());
+            if self.cfg.log_every > 0 && (s as usize) % self.cfg.log_every == 0 {
+                eprintln!(
+                    "step {s:>5}  loss {loss:.4}  ({:.1} ms, {} cards)",
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    self.replicas.len()
+                );
+            }
+        }
+        Ok(curve)
+    }
+
+    /// Evaluate mean loss and accuracy on `n_eval` random nodes, routed
+    /// through the shard replicas like training batches (same pool
+    /// fan-out as [`ClusterTrainer::step`]; results are combined in
+    /// canonical card order either way).
+    pub fn evaluate(&mut self, n_eval: usize) -> anyhow::Result<(f32, f32)> {
+        let mut total_loss = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut seen = 0usize;
+        let batches = n_eval.div_ceil(self.cfg.batch_size);
+        for _ in 0..batches {
+            self.route_batch();
+            let state = &self.state;
+            self.for_each_card(|rep, _| rep.eval_step(state))?;
+            self.reclaim_master_stream();
+            let mut batch_rows = 0usize;
+            for slot in &self.replicas {
+                batch_rows += slot.lock().unwrap().last_batch;
+            }
+            for slot in &self.replicas {
+                let rep = slot.lock().unwrap();
+                if rep.last_batch > 0 {
+                    let w = rep.last_batch as f32 / batch_rows.max(1) as f32;
+                    total_loss += rep.last_loss * w;
+                    correct += rep.last_correct;
+                    seen += rep.last_batch;
+                }
+            }
+        }
+        Ok((total_loss / batches as f32, correct / seen.max(1) as f32))
+    }
+
+    /// Snapshot the synchronized model + trainer cursor — the same
+    /// payload as [`crate::train::Trainer::checkpoint`] (one shared
+    /// implementation, [`ModelState::to_checkpoint`]), so cluster and
+    /// single-card checkpoints interchange.
+    pub fn checkpoint(&self) -> crate::train::Checkpoint {
+        self.state.to_checkpoint(self.steps_done, self.rng.state())
+    }
+
+    /// Restore model + cursor from a checkpoint (same contract as
+    /// [`crate::train::Trainer::restore`]: resume with the same config
+    /// and shard count).
+    pub fn restore(&mut self, ck: &crate::train::Checkpoint) -> anyhow::Result<()> {
+        let (step, rng_state) = self.state.restore_from(ck)?;
+        self.steps_done = step;
+        self.rng = SplitMix64::new(rng_state);
+        Ok(())
+    }
+}

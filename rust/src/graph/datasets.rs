@@ -28,6 +28,18 @@ impl DatasetSpec {
         2.0 * self.edges as f64 / self.nodes as f64
     }
 
+    /// Loss head this dataset trains with: sigmoid + BCE for the
+    /// multi-label graphs (Yelp, AmazonProducts), softmax CE otherwise.
+    /// The CLI `train` command wires this into
+    /// [`crate::train::TrainerConfig::loss_head`].
+    pub fn loss_head(&self) -> crate::train::LossHead {
+        if self.multilabel {
+            crate::train::LossHead::SigmoidBce
+        } else {
+            crate::train::LossHead::SoftmaxXent
+        }
+    }
+
     /// Mini-batches per epoch at the paper's batch size (1024).
     pub fn batches_per_epoch(&self, batch_size: usize) -> u64 {
         self.nodes.div_ceil(batch_size as u64)
@@ -140,5 +152,13 @@ mod tests {
         assert!(!by_name("reddit").unwrap().multilabel);
         assert!(by_name("yelp").unwrap().multilabel);
         assert!(by_name("amazonproducts").unwrap().multilabel);
+    }
+
+    #[test]
+    fn multilabel_datasets_select_the_bce_head() {
+        use crate::train::LossHead;
+        assert_eq!(by_name("flickr").unwrap().loss_head(), LossHead::SoftmaxXent);
+        assert_eq!(by_name("yelp").unwrap().loss_head(), LossHead::SigmoidBce);
+        assert_eq!(by_name("amazonproducts").unwrap().loss_head(), LossHead::SigmoidBce);
     }
 }

@@ -128,17 +128,63 @@ pub fn community_graph(
             coo.push(v, u, 1.0);
         }
     }
-    // Label-centroid features with noise.
+    // Label-centroid features with noise — the replica build's heaviest
+    // loop, sharded over the worker pool (byte-identical to serial).
     let centroids = Matrix::randn(classes, feat_dim, 1.0, rng);
-    let mut features = Matrix::zeros(n, feat_dim);
-    for i in 0..n {
-        let c = centroids.row(labels[i] as usize);
-        let row = features.row_mut(i);
-        for (f, &cv) in row.iter_mut().zip(c) {
-            *f = cv + 0.5 * rng.normal_f32();
-        }
-    }
+    let features = centroid_features(&labels, &centroids, 0.5, rng);
     LabeledGraph { adj: coo.to_csr(), features, labels, num_classes: classes }
+}
+
+/// Label-centroid features with Gaussian noise: `x_i = c_{label_i} + noise·ε`.
+///
+/// This is the dominant cost of instantiating a large synthetic replica
+/// (`n × feat_dim` Box–Muller draws), so the rows are built in segments on
+/// [`crate::util::pool::global`] workers and spliced in canonical order:
+/// each row tile gets a [`SplitMix64`] jumped to the exact draw offset the
+/// serial pass would reach ([`SplitMix64::normal_f32`] consumes exactly
+/// two `next_u64` draws per element, and SplitMix64 jumps in O(1)), and
+/// tiles write disjoint row ranges.  Output **and** the caller's RNG
+/// cursor are byte-identical to the serial loop at any worker count
+/// (pinned by `sharded_feature_build_matches_serial`).
+pub fn centroid_features(
+    labels: &[u32],
+    centroids: &Matrix,
+    noise: f32,
+    rng: &mut SplitMix64,
+) -> Matrix {
+    let n = labels.len();
+    let d = centroids.cols;
+    let mut features = Matrix::zeros(n, d);
+    // Box–Muller: two next_u64 draws per feature element.
+    let draws_per_row = 2 * d as u64;
+    let base = rng.state();
+    rng.jump(draws_per_row * n as u64);
+    if n == 0 || d == 0 {
+        return features;
+    }
+    const TILE_ROWS: usize = 512;
+    let n_tiles = n.div_ceil(TILE_ROWS);
+    let threads = crate::util::pool::resolve_threads(0).min(n_tiles);
+    {
+        // Scope the queue so its borrow of the feature buffer ends
+        // before the matrix is returned.
+        let queue = std::sync::Mutex::new(features.data.chunks_mut(TILE_ROWS * d).enumerate());
+        crate::util::pool::global().run(threads, || loop {
+            // Pop under the lock, fill the tile outside it.
+            let item = queue.lock().unwrap().next();
+            let Some((idx, tile)) = item else { break };
+            let r0 = idx * TILE_ROWS;
+            let mut r = SplitMix64::new(base);
+            r.jump(draws_per_row * r0 as u64);
+            for (i, row) in tile.chunks_mut(d).enumerate() {
+                let c = centroids.row(labels[r0 + i] as usize);
+                for (f, &cv) in row.iter_mut().zip(c) {
+                    *f = cv + noise * r.normal_f32();
+                }
+            }
+        });
+    }
+    features
 }
 
 #[cfg(test)]
@@ -194,6 +240,32 @@ mod tests {
         assert_eq!(g.labels.len(), 500);
         assert!(g.labels.iter().all(|&l| l < 5));
         assert!(g.num_edges() > 500); // self-loops at minimum
+    }
+
+    #[test]
+    fn sharded_feature_build_matches_serial() {
+        // The pool-sharded build must reproduce the serial draw sequence
+        // byte for byte, including the caller's RNG cursor (sizes chosen
+        // to cover the multi-tile path and a ragged final tile).
+        let mut rng = SplitMix64::new(0x51AB);
+        let classes = 6;
+        let centroids = Matrix::randn(classes, 17, 1.0, &mut rng);
+        for n in [1usize, 511, 512, 1300] {
+            let labels: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+            let mut par_rng = SplitMix64::new(0xFEED + n as u64);
+            let mut ser_rng = par_rng.clone();
+            let par = centroid_features(&labels, &centroids, 0.5, &mut par_rng);
+            // Serial reference: the exact loop the parallel build shards.
+            let mut ser = Matrix::zeros(n, 17);
+            for i in 0..n {
+                let c = centroids.row(labels[i] as usize);
+                for (f, &cv) in ser.row_mut(i).iter_mut().zip(c) {
+                    *f = cv + 0.5 * ser_rng.normal_f32();
+                }
+            }
+            assert_eq!(par.data, ser.data, "n={n}: sharded build diverges from serial");
+            assert_eq!(par_rng.state(), ser_rng.state(), "n={n}: RNG cursor diverges");
+        }
     }
 
     #[test]

@@ -16,13 +16,16 @@
 //!   ([`noc`]), graph partitioning and block-message compression
 //!   ([`graph`]), the system controller with the Table-1 sequence estimator
 //!   ([`coordinator`]), baselines ([`baselines`]) and power/resource models
-//!   ([`perf`]).
+//!   ([`perf`]).  [`cluster`] scales the trainer *across* cards:
+//!   data-parallel sharded training over N simulated accelerators with a
+//!   deterministic tree all-reduce and modeled inter-card traffic.
 //!
 //! See `DESIGN.md` for the experiment index (which bench regenerates which
 //! paper table/figure) and `EXPERIMENTS.md` for measured results.
 
 pub mod baselines;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core_model;

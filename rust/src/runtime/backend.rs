@@ -29,6 +29,8 @@ use crate::train::batch::StagedBatch;
 use crate::util::matrix::Matrix;
 use crate::util::rng::SplitMix64;
 
+pub use crate::train::reference::LossHead;
+
 /// Optimizer selection (the momentum variant carries Weight-Bank velocity
 /// state: `v ← μv + g`, `w ← w − ηv`).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -59,6 +61,111 @@ impl ModelState {
             v2: Matrix::zeros(meta.h, meta.c),
         }
     }
+
+    /// Apply one optimizer update from raw gradient slices — the single
+    /// spelling of the update expressions, shared by the native fused
+    /// step and the cluster trainer's post-all-reduce update (their
+    /// bit-identity contract depends on there being exactly one copy).
+    pub fn apply_gradients(&mut self, g1: &[f32], g2: &[f32], optimizer: Optimizer, lr: f32) {
+        match optimizer {
+            Optimizer::Sgd => {
+                for (w, &g) in self.w1.data.iter_mut().zip(g1) {
+                    *w -= lr * g;
+                }
+                for (w, &g) in self.w2.data.iter_mut().zip(g2) {
+                    *w -= lr * g;
+                }
+            }
+            Optimizer::Momentum { mu } => {
+                for ((w, v), &g) in self.w1.data.iter_mut().zip(&mut self.v1.data).zip(g1) {
+                    *v = mu * *v + g;
+                    *w -= lr * *v;
+                }
+                for ((w, v), &g) in self.w2.data.iter_mut().zip(&mut self.v2.data).zip(g2) {
+                    *v = mu * *v + g;
+                    *w -= lr * *v;
+                }
+            }
+        }
+    }
+
+    /// Snapshot as a v2 trainer checkpoint (weights + velocities + the
+    /// trainer cursor scalars) — one spelling shared by the single-card
+    /// and cluster trainers, which is what keeps their checkpoints
+    /// interchangeable.
+    pub fn to_checkpoint(&self, steps_done: u64, rng_state: u64) -> crate::train::Checkpoint {
+        crate::train::Checkpoint::with_scalars(
+            vec![
+                ("w1".into(), self.w1.clone()),
+                ("w2".into(), self.w2.clone()),
+                ("v1".into(), self.v1.clone()),
+                ("v2".into(), self.v2.clone()),
+            ],
+            vec![("step".into(), steps_done), ("rng".into(), rng_state)],
+        )
+    }
+
+    /// Restore weights/velocities in place and return the `(step, rng)`
+    /// trainer cursor.  Refuses weights-only (pre-v2) checkpoints:
+    /// without the cursor a "resume" would silently replay the initial
+    /// sample stream over already-trained weights.
+    pub fn restore_from(&mut self, ck: &crate::train::Checkpoint) -> anyhow::Result<(u64, u64)> {
+        for (name, slot) in [
+            ("w1", &mut self.w1),
+            ("w2", &mut self.w2),
+            ("v1", &mut self.v1),
+            ("v2", &mut self.v2),
+        ] {
+            let m = ck.get(name).ok_or_else(|| anyhow::anyhow!("checkpoint missing {name}"))?;
+            anyhow::ensure!(m.shape() == slot.shape(), "{name} shape mismatch");
+            *slot = m.clone();
+        }
+        let step = ck.scalar("step").ok_or_else(|| {
+            anyhow::anyhow!("checkpoint has no trainer cursor (pre-v2); cannot resume")
+        })?;
+        let rng = ck
+            .scalar("rng")
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing RNG state; cannot resume"))?;
+        Ok((step, rng))
+    }
+}
+
+/// Per-step weight gradients, extracted *before* the optimizer update —
+/// the unit the cluster layer's all-reduce sums across shard replicas.
+/// Shaped once from the prepared artifact and recycled every step.
+#[derive(Clone, Debug)]
+pub struct GradBuffers {
+    pub g1: Matrix,
+    pub g2: Matrix,
+}
+
+impl GradBuffers {
+    pub fn new(meta: &ArtifactMeta) -> Self {
+        GradBuffers { g1: Matrix::zeros(meta.d, meta.h), g2: Matrix::zeros(meta.h, meta.c) }
+    }
+
+    /// Scale both gradients in place (the all-reduce's per-shard
+    /// batch-fraction weighting).
+    pub fn scale(&mut self, s: f32) {
+        for g in &mut self.g1.data {
+            *g *= s;
+        }
+        for g in &mut self.g2.data {
+            *g *= s;
+        }
+    }
+
+    /// Elementwise-accumulate `other` into `self` (one tree-reduce edge).
+    pub fn add_assign(&mut self, other: &GradBuffers) {
+        debug_assert_eq!(self.g1.shape(), other.g1.shape());
+        debug_assert_eq!(self.g2.shape(), other.g2.shape());
+        for (a, &b) in self.g1.data.iter_mut().zip(&other.g1.data) {
+            *a += b;
+        }
+        for (a, &b) in self.g2.data.iter_mut().zip(&other.g2.data) {
+            *a += b;
+        }
+    }
 }
 
 /// A compute engine for the fused two-layer GCN train step.
@@ -72,13 +179,14 @@ pub trait ComputeBackend {
     fn resolve(&self, tag: &str) -> anyhow::Result<ArtifactMeta>;
 
     /// Load/compile/allocate whatever the fused step needs for this
-    /// (tag, optimizer, ordering) triple; returns the final metadata
-    /// (its `name` encodes the chosen ordering).
+    /// (tag, optimizer, ordering, loss head) tuple; returns the final
+    /// metadata (its `name` encodes the chosen ordering and head).
     fn prepare(
         &mut self,
         tag: &str,
         optimizer: Optimizer,
         ordering: &str,
+        loss_head: LossHead,
     ) -> anyhow::Result<ArtifactMeta>;
 
     /// One fused training step on a staged batch: forward + transpose-free
@@ -95,6 +203,22 @@ pub trait ComputeBackend {
         optimizer: Optimizer,
         lr: f32,
     ) -> anyhow::Result<f32>;
+
+    /// Forward + backward only: write the weight gradients of one staged
+    /// batch into `grads` **without** touching `state`, and return the
+    /// masked mean loss.  This is the hook the cluster layer's data-parallel
+    /// all-reduce needs (gradients must be summed across shard replicas
+    /// *before* the single optimizer update).  Backends whose fused step
+    /// cannot expose gradients (the AOT-compiled PJRT artifacts fuse the
+    /// update) keep this default error.
+    fn train_grads(
+        &mut self,
+        _staged: &StagedBatch,
+        _state: &ModelState,
+        _grads: &mut GradBuffers,
+    ) -> anyhow::Result<f32> {
+        anyhow::bail!("backend '{}' does not expose per-step gradients", self.name())
+    }
 
     /// Masked evaluation on one staged batch → `(mean loss, correct count)`.
     ///
@@ -160,7 +284,14 @@ impl ComputeBackend for PjrtBackend {
         tag: &str,
         optimizer: Optimizer,
         ordering: &str,
+        loss_head: LossHead,
     ) -> anyhow::Result<ArtifactMeta> {
+        // The AOT artifacts are compiled with the softmax head baked into
+        // the fused step; the multi-label head is native-only.
+        anyhow::ensure!(
+            loss_head == LossHead::SoftmaxXent,
+            "PJRT artifacts only implement the softmax loss head (use --backend native)"
+        );
         let artifact = match optimizer {
             Optimizer::Sgd => format!("gcn2_train_step_{tag}_{ordering}"),
             // The momentum artifact is compiled for the CoAg ordering.

@@ -29,10 +29,12 @@
 //! thread count (the tiled matmuls keep a fixed per-element accumulation
 //! order).
 
-use crate::runtime::backend::{check_staged, ComputeBackend, ModelState, Optimizer};
+use crate::runtime::backend::{
+    check_staged, ComputeBackend, GradBuffers, LossHead, ModelState, Optimizer,
+};
 use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
 use crate::train::batch::StagedBatch;
-use crate::train::reference::softmax_xent_into;
+use crate::train::reference::{sigmoid_bce_into, softmax_xent_into};
 use crate::util::matrix::{
     par_matmul_into, par_matmul_nt_into, par_matmul_tn_into, resolve_threads, Matrix,
 };
@@ -108,12 +110,21 @@ pub struct NativeBackend {
     /// contractions free byproducts of the forward; CoAg combines first
     /// (`A·(X·W)`), the cheaper forward when the feature dim shrinks.
     agco: bool,
+    /// Loss head selected at prepare() (softmax CE for single-label
+    /// datasets, sigmoid BCE for the multi-label ones).
+    loss_head: LossHead,
 }
 
 impl NativeBackend {
     /// `threads = 0` resolves to one worker per available CPU.
     pub fn new(threads: usize) -> Self {
-        NativeBackend { threads: resolve_threads(threads), meta: None, scratch: None, agco: false }
+        NativeBackend {
+            threads: resolve_threads(threads),
+            meta: None,
+            scratch: None,
+            agco: false,
+            loss_head: LossHead::SoftmaxXent,
+        }
     }
 
     /// Resolved matmul worker count.
@@ -178,62 +189,31 @@ impl NativeBackend {
             par_matmul_into(&mut scratch.z2, a2, scratch.h1w2.view(), t);
         }
     }
-}
 
-impl ComputeBackend for NativeBackend {
-    fn name(&self) -> String {
-        format!("native({} threads)", self.threads)
-    }
-
-    fn resolve(&self, tag: &str) -> anyhow::Result<ArtifactMeta> {
-        Self::meta_for(tag, format!("native_gcn2_{tag}"), ArtifactKind::GcnTrain, "coag")
-    }
-
-    fn prepare(
-        &mut self,
-        tag: &str,
-        optimizer: Optimizer,
-        ordering: &str,
-    ) -> anyhow::Result<ArtifactMeta> {
-        let (name, kind, ordering) = match optimizer {
-            Optimizer::Sgd => {
-                (format!("native_gcn2_{tag}_{ordering}"), ArtifactKind::GcnTrain, ordering)
-            }
-            // Momentum mirrors the AOT pipeline: one CoAg-ordered variant.
-            Optimizer::Momentum { .. } => {
-                (format!("native_gcn2_{tag}_mom"), ArtifactKind::GcnTrainMomentum, "coag")
-            }
-        };
-        let meta = Self::meta_for(tag, name, kind, ordering)?;
-        self.scratch = Some(Scratch::new(&meta));
-        self.agco = ordering == "agco";
-        self.meta = Some(meta.clone());
-        Ok(meta)
-    }
-
-    fn train_step(
-        &mut self,
-        staged: &StagedBatch,
-        state: &mut ModelState,
-        optimizer: Optimizer,
-        lr: f32,
-    ) -> anyhow::Result<f32> {
-        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
-        check_staged(staged, meta)?;
-        let t = self.threads;
-        let agco = self.agco;
-        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
-
-        Self::forward(s, staged, state, agco, t);
+    /// Loss head dispatch: write the error `dZ2` into scratch and return
+    /// the masked mean loss.
+    fn loss_into(s: &mut Scratch, staged: &StagedBatch, head: LossHead) -> f32 {
         let yhot = staged.yhot.as_mat();
         let nvalid = staged.nvalid();
-        let loss = softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2);
+        match head {
+            LossHead::SoftmaxXent => {
+                softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2)
+            }
+            LossHead::SigmoidBce => {
+                sigmoid_bce_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2)
+            }
+        }
+    }
 
-        // Backward, transpose-free: dW2 = (A2·H1)ᵀ·dZ2.  Under AgCo the
-        // forward already produced Q2 = A2·H1 and P1 = A1·X.
+    /// Backward pass, transpose-free: consumes `dZ2` (and the forward
+    /// activations) from scratch and leaves the weight gradients in
+    /// `scratch.g1` / `scratch.g2`.  Under AgCo the forward already
+    /// produced `Q2 = A2·H1` and `P1 = A1·X`; CoAg recomputes them here.
+    fn backward(s: &mut Scratch, staged: &StagedBatch, state: &ModelState, agco: bool, t: usize) {
         let a1 = staged.a1.as_mat();
         let a2 = staged.a2.as_mat();
         let x = staged.x.as_mat();
+        // dW2 = (A2·H1)ᵀ·dZ2.
         if !agco {
             par_matmul_into(&mut s.q2, a2, s.h1.view(), t);
         }
@@ -252,31 +232,89 @@ impl ComputeBackend for NativeBackend {
             par_matmul_into(&mut s.p1, a1, x, t);
         }
         par_matmul_tn_into(&mut s.g1, s.p1.view(), s.dh1.view(), t);
+    }
+}
 
-        match optimizer {
+impl ComputeBackend for NativeBackend {
+    fn name(&self) -> String {
+        format!("native({} threads)", self.threads)
+    }
+
+    fn resolve(&self, tag: &str) -> anyhow::Result<ArtifactMeta> {
+        Self::meta_for(tag, format!("native_gcn2_{tag}"), ArtifactKind::GcnTrain, "coag")
+    }
+
+    fn prepare(
+        &mut self,
+        tag: &str,
+        optimizer: Optimizer,
+        ordering: &str,
+        loss_head: LossHead,
+    ) -> anyhow::Result<ArtifactMeta> {
+        let (mut name, kind, ordering) = match optimizer {
             Optimizer::Sgd => {
-                for (w, &g) in state.w1.data.iter_mut().zip(&s.g1.data) {
-                    *w -= lr * g;
-                }
-                for (w, &g) in state.w2.data.iter_mut().zip(&s.g2.data) {
-                    *w -= lr * g;
-                }
+                (format!("native_gcn2_{tag}_{ordering}"), ArtifactKind::GcnTrain, ordering)
             }
-            Optimizer::Momentum { mu } => {
-                for ((w, v), &g) in
-                    state.w1.data.iter_mut().zip(&mut state.v1.data).zip(&s.g1.data)
-                {
-                    *v = mu * *v + g;
-                    *w -= lr * *v;
-                }
-                for ((w, v), &g) in
-                    state.w2.data.iter_mut().zip(&mut state.v2.data).zip(&s.g2.data)
-                {
-                    *v = mu * *v + g;
-                    *w -= lr * *v;
-                }
+            // Momentum mirrors the AOT pipeline: one CoAg-ordered variant.
+            Optimizer::Momentum { .. } => {
+                (format!("native_gcn2_{tag}_mom"), ArtifactKind::GcnTrainMomentum, "coag")
             }
-        }
+        };
+        name.push_str(loss_head.name_suffix());
+        let meta = Self::meta_for(tag, name, kind, ordering)?;
+        self.scratch = Some(Scratch::new(&meta));
+        self.agco = ordering == "agco";
+        self.loss_head = loss_head;
+        self.meta = Some(meta.clone());
+        Ok(meta)
+    }
+
+    fn train_step(
+        &mut self,
+        staged: &StagedBatch,
+        state: &mut ModelState,
+        optimizer: Optimizer,
+        lr: f32,
+    ) -> anyhow::Result<f32> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
+        check_staged(staged, meta)?;
+        let t = self.threads;
+        let agco = self.agco;
+        let head = self.loss_head;
+        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+
+        Self::forward(s, staged, state, agco, t);
+        let loss = Self::loss_into(s, staged, head);
+        Self::backward(s, staged, state, agco, t);
+        state.apply_gradients(&s.g1.data, &s.g2.data, optimizer, lr);
+        Ok(loss)
+    }
+
+    fn train_grads(
+        &mut self,
+        staged: &StagedBatch,
+        state: &ModelState,
+        grads: &mut GradBuffers,
+    ) -> anyhow::Result<f32> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
+        check_staged(staged, meta)?;
+        anyhow::ensure!(
+            grads.g1.shape() == (meta.d, meta.h) && grads.g2.shape() == (meta.h, meta.c),
+            "gradient buffers shaped for a different artifact than {}",
+            meta.name
+        );
+        let t = self.threads;
+        let agco = self.agco;
+        let head = self.loss_head;
+        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+        // Exactly the train_step pipeline minus the update: same matmuls,
+        // same accumulation orders, so the extracted gradients are
+        // bit-identical to the ones the fused step would have applied.
+        Self::forward(s, staged, state, agco, t);
+        let loss = Self::loss_into(s, staged, head);
+        Self::backward(s, staged, state, agco, t);
+        grads.g1.data.copy_from_slice(&s.g1.data);
+        grads.g2.data.copy_from_slice(&s.g2.data);
         Ok(loss)
     }
 
@@ -289,11 +327,11 @@ impl ComputeBackend for NativeBackend {
         check_staged(staged, meta)?;
         let t = self.threads;
         let agco = self.agco;
+        let head = self.loss_head;
         let s = self.scratch.as_mut().expect("scratch allocated in prepare");
         Self::forward(s, staged, state, agco, t);
+        let loss = Self::loss_into(s, staged, head);
         let yhot = staged.yhot.as_mat();
-        let nvalid = staged.nvalid();
-        let loss = softmax_xent_into(&s.z2, yhot, &staged.row_mask.data, nvalid, &mut s.dz2);
         let argmax = |row: &[f32]| -> usize {
             let mut best = 0;
             for (j, &v) in row.iter().enumerate() {
@@ -335,13 +373,18 @@ mod tests {
     #[test]
     fn prepare_names_encode_optimizer_and_ordering() {
         let mut b = NativeBackend::new(2);
-        let m = b.prepare("small", Optimizer::Sgd, "agco").unwrap();
+        let m = b.prepare("small", Optimizer::Sgd, "agco", LossHead::SoftmaxXent).unwrap();
         assert_eq!(m.name, "native_gcn2_small_agco");
         assert_eq!(m.kind, ArtifactKind::GcnTrain);
-        let m = b.prepare("small", Optimizer::Momentum { mu: 0.9 }, "agco").unwrap();
+        let m = b
+            .prepare("small", Optimizer::Momentum { mu: 0.9 }, "agco", LossHead::SoftmaxXent)
+            .unwrap();
         assert_eq!(m.name, "native_gcn2_small_mom");
         assert_eq!(m.kind, ArtifactKind::GcnTrainMomentum);
         assert_eq!(m.ordering, "coag");
+        // The multi-label head is encoded in the artifact name.
+        let m = b.prepare("small", Optimizer::Sgd, "coag", LossHead::SigmoidBce).unwrap();
+        assert_eq!(m.name, "native_gcn2_small_coag_bce");
     }
 
     #[test]

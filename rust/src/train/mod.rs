@@ -16,4 +16,4 @@ pub mod trainer;
 pub use batch::StagedBatch;
 pub use checkpoint::Checkpoint;
 pub use metrics::LossCurve;
-pub use trainer::{ModelState, Optimizer, Trainer, TrainerConfig};
+pub use trainer::{LossHead, ModelState, Optimizer, Trainer, TrainerConfig};

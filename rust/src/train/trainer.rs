@@ -33,7 +33,7 @@ use crate::train::batch::StagingArena;
 use crate::train::metrics::LossCurve;
 use crate::util::rng::SplitMix64;
 
-pub use crate::runtime::backend::{ModelState, Optimizer};
+pub use crate::runtime::backend::{LossHead, ModelState, Optimizer};
 
 /// Trainer configuration.
 #[derive(Clone, Debug)]
@@ -51,6 +51,10 @@ pub struct TrainerConfig {
     /// Native-backend matmul workers (0 = one per available CPU).
     /// Results are bit-identical at any thread count.
     pub threads: usize,
+    /// Loss head: softmax CE (single-label) or sigmoid BCE (multi-label
+    /// datasets — Yelp/AmazonProducts select it via
+    /// [`crate::graph::datasets::DatasetSpec::loss_head`]).
+    pub loss_head: LossHead,
 }
 
 impl Default for TrainerConfig {
@@ -65,8 +69,41 @@ impl Default for TrainerConfig {
             seed: 0xBEEF,
             log_every: 10,
             threads: 0,
+            loss_head: LossHead::SoftmaxXent,
         }
     }
+}
+
+/// Consume the master RNG's init prefix exactly once — draw one probe
+/// batch, consult the §4.4 sequence estimator, return the chosen forward
+/// ordering.  This is the **single** spelling of that prefix, shared by
+/// [`Trainer::with_backend`] and the cluster trainer's constructor: the
+/// 1-shard byte-identity contract requires both to replay the identical
+/// master stream (probe draws → probe sample → Glorot init).
+pub(crate) fn choose_ordering(
+    graph: &LabeledGraph,
+    cfg: &TrainerConfig,
+    backend: &dyn ComputeBackend,
+    rng: &mut SplitMix64,
+) -> anyhow::Result<&'static str> {
+    let sampler = NeighborSampler::new(&graph.adj, cfg.fanouts.clone());
+    // Estimate frontier shapes with one probe batch.
+    let ids: Vec<u32> =
+        (0..cfg.batch_size).map(|_| rng.gen_range(graph.num_nodes()) as u32).collect();
+    let probe = sampler.sample(&ids, rng);
+    let (n2, n1, b) = probe.dims();
+    // Pick the ordering the controller would program (§4.4).
+    let tmp_meta = backend.resolve(&cfg.artifact_tag)?;
+    let est = SequenceEstimator::new(ShapeParams {
+        b: b as u64,
+        n: n1 as u64,
+        nbar: n2 as u64,
+        d: tmp_meta.d as u64,
+        h: tmp_meta.h as u64,
+        c: tmp_meta.c as u64,
+        e: probe.layers[0].adj.nnz() as u64,
+    });
+    Ok(est.best_ours().forward())
 }
 
 /// The trainer.
@@ -117,24 +154,8 @@ impl<'g> Trainer<'g> {
     ) -> anyhow::Result<Self> {
         let mut rng = SplitMix64::new(cfg.seed);
         let sampler = NeighborSampler::new(&graph.adj, cfg.fanouts.clone());
-
-        // Estimate frontier shapes with one probe batch.
-        let ids: Vec<u32> =
-            (0..cfg.batch_size).map(|_| rng.gen_range(graph.num_nodes()) as u32).collect();
-        let probe = sampler.sample(&ids, &mut rng);
-        let (n2, n1, b) = probe.dims();
-        // Pick the ordering the controller would program (§4.4).
-        let tmp_meta = backend.resolve(&cfg.artifact_tag)?;
-        let est = SequenceEstimator::new(ShapeParams {
-            b: b as u64,
-            n: n1 as u64,
-            nbar: n2 as u64,
-            d: tmp_meta.d as u64,
-            h: tmp_meta.h as u64,
-            c: tmp_meta.c as u64,
-            e: probe.layers[0].adj.nnz() as u64,
-        });
-        let meta = backend.prepare(&cfg.artifact_tag, cfg.optimizer, est.best_ours().forward())?;
+        let ordering = choose_ordering(graph, &cfg, backend.as_ref(), &mut rng)?;
+        let meta = backend.prepare(&cfg.artifact_tag, cfg.optimizer, ordering, cfg.loss_head)?;
 
         // Weight init (Glorot-ish), deterministic from the seed.
         let state = ModelState::glorot(&meta, &mut rng);
@@ -159,15 +180,7 @@ impl<'g> Trainer<'g> {
     /// state) as a [`crate::train::Checkpoint`].  Restoring it resumes
     /// the run with a byte-identical loss curve.
     pub fn checkpoint(&self) -> crate::train::Checkpoint {
-        crate::train::Checkpoint::with_scalars(
-            vec![
-                ("w1".into(), self.state.w1.clone()),
-                ("w2".into(), self.state.w2.clone()),
-                ("v1".into(), self.state.v1.clone()),
-                ("v2".into(), self.state.v2.clone()),
-            ],
-            vec![("step".into(), self.steps_done), ("rng".into(), self.rng.state())],
-        )
+        self.state.to_checkpoint(self.steps_done, self.rng.state())
     }
 
     /// Restore learnable state plus the step counter and RNG state from
@@ -179,28 +192,10 @@ impl<'g> Trainer<'g> {
     /// as the interrupted run, or the continuation will silently train
     /// under different semantics.
     pub fn restore(&mut self, ck: &crate::train::Checkpoint) -> anyhow::Result<()> {
-        for (name, slot) in [
-            ("w1", &mut self.state.w1),
-            ("w2", &mut self.state.w2),
-            ("v1", &mut self.state.v1),
-            ("v2", &mut self.state.v2),
-        ] {
-            let m = ck
-                .get(name)
-                .ok_or_else(|| anyhow::anyhow!("checkpoint missing {name}"))?;
-            anyhow::ensure!(m.shape() == slot.shape(), "{name} shape mismatch");
-            *slot = m.clone();
-        }
-        // Refuse weights-only (pre-v2) checkpoints: without the cursor a
-        // "resume" would silently replay the initial sample stream over
-        // already-trained weights.  Warm-start from bare weights by
-        // assigning `trainer.state` directly instead.
-        let step = ck.scalar("step").ok_or_else(|| {
-            anyhow::anyhow!("checkpoint has no trainer cursor (pre-v2); cannot resume")
-        })?;
-        let rng_state = ck
-            .scalar("rng")
-            .ok_or_else(|| anyhow::anyhow!("checkpoint missing RNG state; cannot resume"))?;
+        // Weights-only (pre-v2) checkpoints are refused by restore_from;
+        // warm-start from bare weights by assigning `trainer.state`
+        // directly instead.
+        let (step, rng_state) = self.state.restore_from(ck)?;
         self.steps_done = step;
         self.rng = SplitMix64::new(rng_state);
         Ok(())

@@ -1,0 +1,212 @@
+//! Cluster-layer integration tests — sharding invariants, the 1-shard
+//! Trainer-equivalence contract, N-shard bit-determinism, and checkpoint
+//! resume.  Everything runs on the native backend on any host.
+
+use gcn_noc::cluster::{ClusterTrainer, GraphSharder};
+use gcn_noc::graph::generate::{community_graph, LabeledGraph};
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::util::rng::SplitMix64;
+
+/// A small learnable graph matching the "small" tag's feature/class dims.
+fn small_graph(seed: u64) -> LabeledGraph {
+    let mut rng = SplitMix64::new(seed);
+    community_graph(1200, 10.0, 2.3, 64, 8, 0.7, &mut rng)
+}
+
+fn cfg(steps: usize, threads: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig { steps, lr: 0.1, log_every: 0, threads, seed, ..Default::default() }
+}
+
+#[test]
+fn sharder_assigns_every_edge_exactly_once_with_correct_halos() {
+    let g = small_graph(0xC1A0);
+    for shards in [2usize, 4, 5] {
+        let plan = GraphSharder::new(shards).shard(&g);
+        // All global directed edges, as a sorted multiset.
+        let mut global_edges: Vec<(u32, u32)> = Vec::new();
+        for u in 0..g.num_nodes() {
+            for &v in g.adj.row(u).0 {
+                global_edges.push((u as u32, v));
+            }
+        }
+        global_edges.sort_unstable();
+
+        let mut shard_edges: Vec<(u32, u32)> = Vec::new();
+        for shard in &plan.shards {
+            let n_owned = shard.owned_count();
+            for lu in 0..shard.graph.adj.n_rows {
+                let cols = shard.graph.adj.row(lu).0;
+                if lu >= n_owned {
+                    assert!(cols.is_empty(), "halo rows must not carry edges");
+                    continue;
+                }
+                let gu = shard.owned[lu];
+                for &lv in cols {
+                    let gv = if (lv as usize) < n_owned {
+                        shard.owned[lv as usize]
+                    } else {
+                        shard.halo[lv as usize - n_owned]
+                    };
+                    shard_edges.push((gu, gv));
+                }
+            }
+            // Halo = exactly the out-of-shard neighbors of owned nodes.
+            let mut expect: Vec<u32> = shard
+                .owned
+                .iter()
+                .flat_map(|&u| g.adj.row(u as usize).0.iter().copied())
+                .filter(|&v| plan.owner[v as usize] as usize != shard.id)
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            assert_eq!(shard.halo, expect, "halo mismatch on shard {}", shard.id);
+            // Ghost features/labels replicate the global rows.
+            for (h, &gv) in shard.halo.iter().enumerate() {
+                let l = n_owned + h;
+                assert_eq!(shard.graph.features.row(l), g.features.row(gv as usize));
+                assert_eq!(shard.graph.labels[l], g.labels[gv as usize]);
+                assert_eq!(shard.halo_owner[h], plan.owner[gv as usize]);
+            }
+        }
+        shard_edges.sort_unstable();
+        assert_eq!(shard_edges, global_edges, "edge multiset mismatch at {shards} shards");
+    }
+}
+
+#[test]
+fn sharder_balance_bounds_hold() {
+    let g = small_graph(0xC1A1);
+    let node_weight = |u: usize| 1 + g.adj.degree(u) as u64;
+    for shards in [2usize, 4, 8] {
+        let plan = GraphSharder::new(shards).shard(&g);
+        let cap = g.num_nodes().div_ceil(shards);
+        let weights: Vec<u64> = plan
+            .shards
+            .iter()
+            .map(|s| s.owned.iter().map(|&u| node_weight(u as usize)).sum())
+            .collect();
+        let total: u64 = weights.iter().sum();
+        let avg = total / shards as u64;
+        let max_item = (0..g.num_nodes()).map(node_weight).max().unwrap();
+        for (s, shard) in plan.shards.iter().enumerate() {
+            assert!(!shard.owned.is_empty(), "empty shard {s}");
+            assert!(shard.owned.len() <= cap, "node cap violated on shard {s}");
+            // LPT-greedy balance with generous slack for the node cap.
+            assert!(
+                weights[s] <= avg + max_item + avg / 2,
+                "shard {s}: weight {} vs avg {avg} (max item {max_item})",
+                weights[s]
+            );
+        }
+    }
+}
+
+#[test]
+fn one_shard_cluster_matches_single_card_trainer_byte_for_byte() {
+    let g = small_graph(0xC1A2);
+    let mut solo = Trainer::new(&g, cfg(20, 2, 0xC1A3)).unwrap();
+    let solo_curve = solo.train().unwrap();
+
+    let plan = GraphSharder::new(1).shard(&g);
+    let mut cluster = ClusterTrainer::new(&g, &plan, cfg(20, 2, 0xC1A3)).unwrap();
+    assert_eq!(cluster.artifact(), solo.artifact());
+    let cluster_curve = cluster.train().unwrap();
+
+    assert_eq!(solo_curve.len(), cluster_curve.len());
+    for (a, b) in solo_curve.records.iter().zip(&cluster_curve.records) {
+        assert_eq!(a.step, b.step, "step indices diverge");
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverges at step {}", a.step);
+    }
+    assert_eq!(solo.state.w1, cluster.state.w1, "final w1 diverges");
+    assert_eq!(solo.state.w2, cluster.state.w2, "final w2 diverges");
+
+    // One card ⇒ zero modeled inter-card traffic.
+    let totals = cluster.traffic_totals();
+    assert_eq!(totals.steps, 20);
+    assert_eq!(totals.sync_cycles, 0);
+    assert!(totals.per_card.iter().all(|c| c.sent_bytes() == 0));
+
+    // The evaluation stream matches too.
+    let (el_solo, acc_solo) = solo.evaluate(128).unwrap();
+    let (el_cluster, acc_cluster) = cluster.evaluate(128).unwrap();
+    assert_eq!(el_solo.to_bits(), el_cluster.to_bits());
+    assert_eq!(acc_solo.to_bits(), acc_cluster.to_bits());
+}
+
+#[test]
+fn four_shard_run_is_bit_deterministic_across_pool_sizes() {
+    let g = small_graph(0xC1A4);
+    let plan = GraphSharder::new(4).shard(&g);
+    let mut reference: Option<(Vec<u32>, gcn_noc::train::ModelState)> = None;
+    for threads in [1usize, 2, 8] {
+        let mut trainer = ClusterTrainer::new(&g, &plan, cfg(12, threads, 0xC1A5)).unwrap();
+        let curve = trainer.train().unwrap();
+        assert!(curve.records.iter().all(|r| r.loss.is_finite()));
+        let bits: Vec<u32> = curve.records.iter().map(|r| r.loss.to_bits()).collect();
+        match &reference {
+            None => reference = Some((bits, trainer.state.clone())),
+            Some((ref_bits, ref_state)) => {
+                assert_eq!(&bits, ref_bits, "curve diverges at {threads} threads");
+                assert_eq!(&trainer.state.w1, &ref_state.w1, "w1 diverges at {threads} threads");
+                assert_eq!(&trainer.state.w2, &ref_state.w2, "w2 diverges at {threads} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_shard_training_reduces_loss_and_reports_traffic() {
+    let g = small_graph(0xC1A8);
+    let plan = GraphSharder::new(4).shard(&g);
+    let mut trainer = ClusterTrainer::new(&g, &plan, cfg(40, 2, 0xC1A9)).unwrap();
+    let curve = trainer.train().unwrap();
+    let (head, tail) = curve.head_tail_means(10);
+    assert!(tail < head, "4-card run failed to learn: {head} -> {tail}");
+
+    // Some step must have crossed a shard boundary on this graph.
+    let totals = trainer.traffic_totals();
+    assert_eq!(totals.steps, 40);
+    assert!(totals.sync_cycles > 0, "all-reduce sync must be charged");
+    let halo: u64 = totals.per_card.iter().map(|c| c.halo_bytes_in).sum();
+    let sent: u64 = totals.per_card.iter().map(|c| c.sent_bytes()).sum();
+    assert!(halo > 0, "no halo traffic on an edge-cut shard run");
+    assert!(sent > 0);
+    let (eval_loss, acc) = trainer.evaluate(128).unwrap();
+    assert!(eval_loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn sharded_run_resumes_from_checkpoint_byte_identically() {
+    let g = small_graph(0xC1A6);
+    let plan = GraphSharder::new(3).shard(&g);
+
+    // Uninterrupted: 16 steps.
+    let mut full = ClusterTrainer::new(&g, &plan, cfg(16, 2, 0xC1A7)).unwrap();
+    let full_curve = full.train().unwrap();
+
+    // Interrupted: 8 steps, checkpoint to disk, fresh trainer, resume.
+    let mut first = ClusterTrainer::new(&g, &plan, cfg(8, 2, 0xC1A7)).unwrap();
+    let first_curve = first.train().unwrap();
+    let path = std::env::temp_dir().join("gcn_noc_cluster_resume_ck.bin");
+    first.checkpoint().save(&path).unwrap();
+
+    let loaded = gcn_noc::train::Checkpoint::load(&path).unwrap();
+    let mut resumed = ClusterTrainer::new(&g, &plan, cfg(8, 2, 0xC1A7)).unwrap();
+    resumed.restore(&loaded).unwrap();
+    assert_eq!(resumed.steps_done(), 8);
+    let resumed_curve = resumed.train().unwrap();
+    std::fs::remove_file(path).ok();
+
+    assert_eq!(full_curve.len(), 16);
+    let stitched = first_curve.records.iter().chain(&resumed_curve.records);
+    for (full_rec, rec) in full_curve.records.iter().zip(stitched) {
+        assert_eq!(full_rec.step, rec.step, "step indices diverge");
+        assert_eq!(
+            full_rec.loss.to_bits(),
+            rec.loss.to_bits(),
+            "loss diverges at step {}",
+            full_rec.step
+        );
+    }
+}

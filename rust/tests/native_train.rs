@@ -13,7 +13,7 @@
 
 use gcn_noc::graph::generate::{community_graph, LabeledGraph};
 use gcn_noc::graph::sampler::NeighborSampler;
-use gcn_noc::runtime::backend::{ComputeBackend, ModelState, Optimizer};
+use gcn_noc::runtime::backend::{ComputeBackend, LossHead, ModelState, Optimizer};
 use gcn_noc::runtime::native::NativeBackend;
 use gcn_noc::train::batch::{stage, StagedBatch};
 use gcn_noc::train::reference;
@@ -47,7 +47,7 @@ fn native_backend_matches_reference_oracle_per_step() {
     // per element.
     let graph = small_graph(0x0AC1);
     let mut backend = NativeBackend::new(4);
-    let meta = backend.prepare("small", Optimizer::Sgd, "coag").unwrap();
+    let meta = backend.prepare("small", Optimizer::Sgd, "coag", LossHead::SoftmaxXent).unwrap();
     let mut rng = SplitMix64::new(0x0AC2);
     let mut state = ModelState::glorot(&meta, &mut rng);
     let lr = 0.1f32;
@@ -94,7 +94,7 @@ fn agco_ordering_matches_oracle_loss_and_learns() {
     // correctness is covered end-to-end by requiring the run to learn.
     let graph = small_graph(0x0AC1);
     let mut backend = NativeBackend::new(2);
-    let meta = backend.prepare("small", Optimizer::Sgd, "agco").unwrap();
+    let meta = backend.prepare("small", Optimizer::Sgd, "agco", LossHead::SoftmaxXent).unwrap();
     assert!(meta.name.ends_with("_agco"));
     let mut rng = SplitMix64::new(0x0ACB);
     let mut state = ModelState::glorot(&meta, &mut rng);
@@ -122,12 +122,71 @@ fn agco_ordering_matches_oracle_loss_and_learns() {
 }
 
 #[test]
+fn sigmoid_bce_head_matches_reference_and_learns() {
+    // Multi-label head end to end: the native backend with the BCE head
+    // must agree with the reference head on identical staged tensors and
+    // reduce the loss over a short run.
+    let graph = small_graph(0x0ACE);
+    let mut backend = NativeBackend::new(2);
+    let meta = backend.prepare("small", Optimizer::Sgd, "coag", LossHead::SigmoidBce).unwrap();
+    assert!(meta.name.ends_with("_bce"));
+    let mut rng = SplitMix64::new(0x0ACF);
+    let mut state = ModelState::glorot(&meta, &mut rng);
+    let mut losses = Vec::new();
+    for step in 0..10 {
+        let staged = staged_batch(&graph, &meta, &mut rng);
+        let x = Matrix::from_vec(meta.n2, meta.d, staged.x.data.clone());
+        let a1 = Matrix::from_vec(meta.n1, meta.n2, staged.a1.data.clone());
+        let a2 = Matrix::from_vec(meta.b, meta.n1, staged.a2.data.clone());
+        let yhot = Matrix::from_vec(meta.b, meta.c, staged.yhot.data.clone());
+        let nvalid = staged.nvalid.data[0];
+        let cache = reference::gcn2_forward(&x, &a1, &a2, &state.w1, &state.w2);
+        let (loss_ref, _) =
+            reference::sigmoid_bce(&cache.z2, &yhot, &staged.row_mask.data, nvalid);
+        let loss = backend.train_step(&staged, &mut state, Optimizer::Sgd, 0.5).unwrap();
+        assert!(
+            (loss - loss_ref).abs() < 1e-4,
+            "bce step {step}: loss {loss} vs oracle {loss_ref}"
+        );
+        losses.push(loss);
+    }
+    assert!(losses[9] < losses[0], "bce run failed to learn: {losses:?}");
+    assert!(state.w1.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_grads_equal_fused_step_update() {
+    // The gradient-extraction hook must produce exactly the gradients the
+    // fused step applies: w' = w − lr·g bit for bit.
+    let graph = small_graph(0x0AD0);
+    let mut backend = NativeBackend::new(2);
+    let meta = backend.prepare("small", Optimizer::Sgd, "coag", LossHead::SoftmaxXent).unwrap();
+    let mut rng = SplitMix64::new(0x0AD1);
+    let state = ModelState::glorot(&meta, &mut rng);
+    let staged = staged_batch(&graph, &meta, &mut rng);
+    let lr = 0.1f32;
+
+    let mut grads = gcn_noc::runtime::backend::GradBuffers::new(&meta);
+    let loss_g = backend.train_grads(&staged, &state, &mut grads).unwrap();
+
+    let mut fused = state.clone();
+    let loss_f = backend.train_step(&staged, &mut fused, Optimizer::Sgd, lr).unwrap();
+    assert_eq!(loss_g.to_bits(), loss_f.to_bits());
+    for ((&w0, &g), &w1) in state.w1.data.iter().zip(&grads.g1.data).zip(&fused.w1.data) {
+        assert_eq!((w0 - lr * g).to_bits(), w1.to_bits(), "w1 update mismatch");
+    }
+    for ((&w0, &g), &w1) in state.w2.data.iter().zip(&grads.g2.data).zip(&fused.w2.data) {
+        assert_eq!((w0 - lr * g).to_bits(), w1.to_bits(), "w2 update mismatch");
+    }
+}
+
+#[test]
 fn momentum_with_zero_mu_equals_sgd() {
     let graph = small_graph(0x0AC3);
     let mut sgd = NativeBackend::new(2);
-    let meta = sgd.prepare("small", Optimizer::Sgd, "coag").unwrap();
+    let meta = sgd.prepare("small", Optimizer::Sgd, "coag", LossHead::SoftmaxXent).unwrap();
     let mut mom = NativeBackend::new(2);
-    mom.prepare("small", Optimizer::Momentum { mu: 0.0 }, "coag").unwrap();
+    mom.prepare("small", Optimizer::Momentum { mu: 0.0 }, "coag", LossHead::SoftmaxXent).unwrap();
 
     let mut rng = SplitMix64::new(0x0AC4);
     let init = ModelState::glorot(&meta, &mut rng);
@@ -151,7 +210,7 @@ fn results_bit_identical_at_any_thread_count() {
     let mut reference_state: Option<(ModelState, Vec<u32>)> = None;
     for threads in [1usize, 2, 4, 8] {
         let mut backend = NativeBackend::new(threads);
-        let meta = backend.prepare("small", Optimizer::Sgd, "coag").unwrap();
+        let meta = backend.prepare("small", Optimizer::Sgd, "coag", LossHead::SoftmaxXent).unwrap();
         let mut rng = SplitMix64::new(0x0AC6);
         let mut state = ModelState::glorot(&meta, &mut rng);
         let mut loss_bits = Vec::new();
