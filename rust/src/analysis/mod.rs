@@ -1,0 +1,185 @@
+//! # `pallas-lint` — static enforcement of the repo's invariant contracts
+//!
+//! The reproduction's value rests on contracts the compiler cannot see:
+//! byte-identical routing reports and loss curves at any thread/card
+//! count, zero steady-state allocations on hot paths, and all parallelism
+//! flowing through [`crate::util::pool`].  Runtime tests guard these late
+//! and only on exercised paths; this subsystem guards them *statically*,
+//! over every line of the tree, with named rules and `file:line`
+//! diagnostics:
+//!
+//! | rule | name              | contract                                          |
+//! |------|-------------------|---------------------------------------------------|
+//! | R1   | raw-thread        | no `thread::spawn`/`scope`/`Builder` outside `util::pool` |
+//! | R2   | hash-iteration    | no HashMap/HashSet iteration in non-test code      |
+//! | R3   | hot-path-alloc    | no allocation constructs in `lint: hot-path` fns   |
+//! | R4   | wallclock-entropy | no wall-clock/entropy in deterministic modules     |
+//! | R5   | order-unwrap      | no unwrap on `partial_cmp` / lock poisoning        |
+//!
+//! Violations are either fixed or blessed with an inline
+//! `// lint: allow(Rn, reason)` — the suppressions are the permanent,
+//! reviewable ledger of every exception to the determinism contract.
+//!
+//! Zero registry dependencies (the vendored-`anyhow` constraint): a
+//! hand-rolled lexer ([`lexer`]) scrubs comments/strings, [`source`]
+//! models files (class, module, fn spans, test regions), [`rules`] holds
+//! the five checks, [`suppress`] the ledger, [`walk`] the deterministic
+//! repo walker.  The `pallas-lint` binary (`rust/src/bin/pallas_lint.rs`)
+//! drives it all; `rust/tests/lint.rs` pins each rule against a fixture
+//! corpus and the repo tree itself against zero findings.
+
+pub mod diag;
+pub mod lexer;
+pub mod rules;
+pub mod source;
+pub mod suppress;
+pub mod walk;
+
+use std::path::{Path, PathBuf};
+
+use diag::{Diagnostic, Warning};
+use suppress::Suppressions;
+
+/// Lint configuration: the hot-path manifest (static twin of the
+/// counting-allocator test's function list).
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    /// `module::fn_name` entries marking hot functions without an inline
+    /// `// lint: hot-path` marker.
+    pub hot_manifest: Vec<String>,
+}
+
+impl LintConfig {
+    /// Parse a manifest file: one `module::fn_name` per line, `#`
+    /// comments and blank lines ignored.
+    pub fn parse_manifest(text: &str) -> Vec<String> {
+        text.lines()
+            .map(|l| l.split('#').next().unwrap_or("").trim())
+            .filter(|l| !l.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+}
+
+/// Result of linting one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileReport {
+    pub violations: Vec<Diagnostic>,
+    pub warnings: Vec<Warning>,
+}
+
+/// Lint one source text under its repo-relative path.  Returns `None`
+/// for files the linter skips (vendored code).
+pub fn lint_file(path: &str, src: &str, cfg: &LintConfig) -> Option<FileReport> {
+    let file = source::parse_source(path, src, &cfg.hot_manifest)?;
+    let mut report = FileReport::default();
+
+    // Malformed directives are violations in their own right and can
+    // never be suppressed — the ledger must stay parseable.
+    report.violations.extend(Suppressions::malformed_diags(&file.directives, path));
+    // Unknown rule ids in allows are malformed too (a typo'd allow would
+    // otherwise silently suppress nothing forever).
+    for a in &file.directives.allows {
+        if !diag::is_known_rule(&a.rule) {
+            report.violations.push(Diagnostic {
+                rule: "lint-syntax",
+                file: path.to_string(),
+                line: a.line,
+                msg: format!("allow names unknown rule `{}`", a.rule),
+            });
+        }
+    }
+
+    let mut raw = Vec::new();
+    rules::check_all(&file, &mut raw);
+    // One finding per (rule, line): pattern scans can double-hit a line.
+    raw.dedup_by(|a, b| a.rule == b.rule && a.line == b.line);
+
+    let mut supp = Suppressions::new(&file.directives, &file.lines);
+    for d in raw {
+        if !supp.check(d.rule, d.line) {
+            report.violations.push(d);
+        }
+    }
+    for stale in supp.unused() {
+        if diag::is_known_rule(&stale.rule) {
+            report.warnings.push(Warning {
+                file: path.to_string(),
+                line: stale.line,
+                msg: format!(
+                    "unused `lint: allow({}, ..)` — the violation it blessed is gone; retire \
+                     the ledger entry",
+                    stale.rule
+                ),
+            });
+        }
+    }
+    Some(report)
+}
+
+/// Lint every `.rs` file under `roots` (paths are made repo-relative to
+/// `repo_root` for diagnostics).  Returns per-file results merged in
+/// sorted path order.
+pub fn lint_tree(
+    repo_root: &Path,
+    roots: &[PathBuf],
+    cfg: &LintConfig,
+) -> std::io::Result<FileReport> {
+    let files = walk::collect_rust_files(roots)?;
+    let mut merged = FileReport::default();
+    for f in files {
+        let rel = f
+            .strip_prefix(repo_root)
+            .unwrap_or(&f)
+            .to_string_lossy()
+            .replace(std::path::MAIN_SEPARATOR, "/");
+        let src = std::fs::read_to_string(&f)?;
+        if let Some(rep) = lint_file(&rel, &src, cfg) {
+            merged.violations.extend(rep.violations);
+            merged.warnings.extend(rep.warnings);
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_suppresses_and_unused_warns() {
+        let src = "\
+fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // lint: allow(R5, poisoning implies a sibling panicked)
+}
+
+// lint: allow(R1, stale entry)
+fn g() {}
+";
+        let rep = lint_file("rust/src/util/demo.rs", src, &LintConfig::default()).unwrap();
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.warnings.len(), 1, "stale allow warns");
+    }
+
+    #[test]
+    fn unknown_rule_in_allow_is_violation() {
+        let src = "// lint: allow(R99, no such rule)\nfn f() {}\n";
+        let rep = lint_file("rust/src/util/demo.rs", src, &LintConfig::default()).unwrap();
+        assert_eq!(rep.violations.len(), 1);
+        assert_eq!(rep.violations[0].rule, "lint-syntax");
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let m = LintConfig::parse_manifest(
+            "# hot fns\nutil::matrix::axpy_row\n\nnoc::routing::route_wave # planner\n",
+        );
+        assert_eq!(m, vec!["util::matrix::axpy_row", "noc::routing::route_wave"]);
+    }
+
+    #[test]
+    fn vendored_code_skipped() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert!(lint_file("rust/vendor/anyhow/src/lib.rs", src, &LintConfig::default()).is_none());
+    }
+}

@@ -1,0 +1,487 @@
+//! The five invariant rules.  Each rule is a line-pattern scan over the
+//! scrubbed source, gated by file class / module / test region — cheap,
+//! deterministic, and honest about being lexical: anything blessed on
+//! purpose carries a `lint: allow(Rn, reason)` ledger entry instead of
+//! being special-cased here.
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::source::{FileClass, SourceFile};
+
+/// Top-level modules whose outputs are bit-determinism contracts
+/// (routing reports, loss curves, shard cuts): R4 bans wall-clock and
+/// entropy here.
+pub const DETERMINISTIC_MODULES: &[&str] = &["noc", "coordinator", "cluster", "train", "graph"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Occurrences of `pat` in `line` at word boundaries (both sides, when
+/// the pattern starts/ends with an identifier character).
+fn find_bounded(line: &str, pat: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(off) = line[from..].find(pat) {
+        let at = from + off;
+        let pre_ok = at == 0 || !is_ident(line[..at].chars().next_back().unwrap_or(' '));
+        let post_ok = !pat.chars().next_back().map(is_ident).unwrap_or(false)
+            || !line[at + pat.len()..].chars().next().map(is_ident).unwrap_or(false);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = at + pat.len().max(1);
+    }
+    false
+}
+
+/// The identifier ending right before byte offset `at` (e.g. the
+/// receiver of `.iter()` found at `at`).
+fn ident_before(line: &str, at: usize) -> Option<&str> {
+    let head = &line[..at];
+    let end = head.len();
+    let start = head
+        .char_indices()
+        .rev()
+        .take_while(|&(_, c)| is_ident(c))
+        .last()
+        .map(|(i, _)| i)?;
+    if start == end {
+        return None;
+    }
+    Some(&head[start..end])
+}
+
+/// Does this file carry library-contract rules at all?
+fn contract_code(class: FileClass) -> bool {
+    matches!(class, FileClass::Library | FileClass::Bin | FileClass::Example)
+}
+
+/// R1 — all parallelism flows through `util::pool`.
+pub fn check_r1(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !contract_code(file.class) || file.module == "util::pool" {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        let ln = i + 1;
+        if file.is_test_line(ln) {
+            continue;
+        }
+        for pat in ["thread::spawn", "thread::scope", "thread::Builder"] {
+            if line.contains(pat) {
+                out.push(Diagnostic {
+                    rule: "R1",
+                    file: file.path.clone(),
+                    line: ln,
+                    msg: format!(
+                        "`{pat}` outside util::pool — route this through the persistent worker \
+                         pool (util::pool::global / WorkerPool::run)"
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// Collect identifiers declared with a HashMap/HashSet type in this file:
+/// type-annotated bindings, struct fields, fn params, and
+/// `let x = HashMap::new()`-style initializers.
+fn hash_idents(file: &SourceFile) -> Vec<String> {
+    let mut idents: Vec<String> = Vec::new();
+    for line in &file.lines {
+        for pat in ["HashMap", "HashSet"] {
+            let mut from = 0usize;
+            while let Some(off) = line[from..].find(pat) {
+                let at = from + off;
+                from = at + pat.len();
+                // Word-bounded occurrence of the type name?
+                let pre = line[..at].chars().next_back();
+                let post = line[at + pat.len()..].chars().next();
+                if pre.map(is_ident).unwrap_or(false) || !matches!(post, Some('<' | ':')) {
+                    continue;
+                }
+                // Walk back over the optional module path (`std::collections::`).
+                let mut head = &line[..at];
+                loop {
+                    let trimmed = head.trim_end_matches(is_ident);
+                    if let Some(h) = trimmed.strip_suffix("::") {
+                        head = h;
+                    } else {
+                        head = trimmed;
+                        break;
+                    }
+                }
+                // Reference types: `name: &HashMap<..>` / `&mut HashMap<..>`.
+                let mut head = head.trim_end();
+                if let Some(h) = head.strip_suffix("mut").map(str::trim_end) {
+                    if let Some(h2) = h.strip_suffix('&') {
+                        head = h2.trim_end();
+                    }
+                } else if let Some(h) = head.strip_suffix('&') {
+                    head = h.trim_end();
+                }
+                if let Some(h) = head.strip_suffix(':') {
+                    // `name: HashMap<..>` — field, param or let binding.
+                    if h.ends_with(':') {
+                        continue; // `::HashMap` path remnant, not a binding
+                    }
+                    if let Some(id) = ident_before(h, h.len()) {
+                        idents.push(id.to_string());
+                    }
+                } else if let Some(h) = head.strip_suffix('=') {
+                    // `let [mut] name = HashMap::new()`.
+                    let h = h.trim_end();
+                    if let Some(id) = ident_before(h, h.len()) {
+                        if id != "=" && !id.is_empty() {
+                            idents.push(id.to_string());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    idents.sort();
+    idents.dedup();
+    idents
+}
+
+const HASH_ITER_METHODS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+];
+
+/// R2 — no iteration over hash-ordered collections in non-test code.
+pub fn check_r2(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if !contract_code(file.class) {
+        return;
+    }
+    let idents = hash_idents(file);
+    if idents.is_empty() {
+        return;
+    }
+    let is_hash = |id: &str| idents.iter().any(|i| i == id);
+    for (i, line) in file.lines.iter().enumerate() {
+        let ln = i + 1;
+        if file.is_test_line(ln) {
+            continue;
+        }
+        let mut hit: Option<String> = None;
+        for pat in HASH_ITER_METHODS {
+            let mut from = 0usize;
+            while let Some(off) = line[from..].find(pat) {
+                let at = from + off;
+                from = at + pat.len();
+                if let Some(id) = ident_before(line, at) {
+                    if is_hash(id) {
+                        hit = Some(format!("`{id}{}`", pat.trim_end_matches('(')));
+                        break;
+                    }
+                }
+            }
+            if hit.is_some() {
+                break;
+            }
+        }
+        // `for x in &map {` / `for x in map {` forms.
+        if hit.is_none() && find_bounded(line, "for") {
+            if let Some(pos) = line.find(" in ") {
+                let rest = line[pos + 4..].trim_start();
+                let rest = rest.strip_prefix("&mut ").unwrap_or(rest);
+                let rest = rest.strip_prefix('&').unwrap_or(rest);
+                let id: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+                let tail = rest[id.len()..].trim_start();
+                if !id.is_empty() && is_hash(&id) && (tail.is_empty() || tail.starts_with('{')) {
+                    hit = Some(format!("`for .. in {id}`"));
+                }
+            }
+        }
+        if let Some(what) = hit {
+            out.push(Diagnostic {
+                rule: "R2",
+                file: file.path.clone(),
+                line: ln,
+                msg: format!(
+                    "{what} iterates a hash-ordered collection — hash order is per-process \
+                     random; drain via sort or use a BTreeMap/BTreeSet"
+                ),
+            });
+        }
+    }
+}
+
+/// Allocation constructs forbidden on hot paths (R3).
+const ALLOC_PATTERNS: &[&str] = &[
+    "Vec::new",
+    "VecDeque::new",
+    "vec!",
+    "Box::new",
+    "Rc::new",
+    "Arc::new",
+    "format!",
+    "String::new",
+    "String::from",
+    "with_capacity(",
+    ".to_vec(",
+    ".to_string(",
+    ".to_owned(",
+    ".collect(",
+    ".collect::<",
+    ".push_str(",
+];
+
+/// R3 — allocation-free hot paths, statically.
+pub fn check_r3(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    for (i, line) in file.lines.iter().enumerate() {
+        let ln = i + 1;
+        let Some(f) = file.hot_fn_at(ln) else { continue };
+        // The signature line may legitimately *name* types; audit the body.
+        if ln < f.start_line {
+            continue;
+        }
+        for pat in ALLOC_PATTERNS {
+            if line.contains(pat) {
+                out.push(Diagnostic {
+                    rule: "R3",
+                    file: file.path.clone(),
+                    line: ln,
+                    msg: format!(
+                        "allocation construct `{}` inside hot-path fn `{}` — hot paths must \
+                         reuse caller-provided scratch (see util::pool / StagingArena)",
+                        pat.trim_end_matches('('),
+                        f.name
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// Wall-clock / entropy constructs forbidden in deterministic modules (R4).
+const TIME_ENTROPY_PATTERNS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "UNIX_EPOCH",
+    "thread_rng",
+    "from_entropy",
+    "getrandom",
+    "RandomState",
+    "rand::",
+];
+
+/// R4 — deterministic modules take no wall-clock and no OS entropy.
+pub fn check_r4(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if file.class != FileClass::Library
+        || !DETERMINISTIC_MODULES.contains(&file.top_module())
+    {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        let ln = i + 1;
+        if file.is_test_line(ln) {
+            continue;
+        }
+        for pat in TIME_ENTROPY_PATTERNS {
+            if find_bounded(line, pat) {
+                out.push(Diagnostic {
+                    rule: "R4",
+                    file: file.path.clone(),
+                    line: ln,
+                    msg: format!(
+                        "`{}` in deterministic module `{}` — outputs here are bit-identity \
+                         contracts; timing belongs in perf/bench code",
+                        pat.trim_end_matches(':'),
+                        file.module
+                    ),
+                });
+                break;
+            }
+        }
+    }
+}
+
+/// R5 — no unchecked unwrap/expect on NaN-partial orders or poisoned locks.
+pub fn check_r5(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    if file.class != FileClass::Library {
+        return;
+    }
+    for (i, line) in file.lines.iter().enumerate() {
+        let ln = i + 1;
+        if file.is_test_line(ln) {
+            continue;
+        }
+        let unwrapping = line.contains(".unwrap()") || line.contains(".expect(");
+        if !unwrapping {
+            continue;
+        }
+        let msg = if line.contains("partial_cmp") {
+            Some(
+                "unwrap on `partial_cmp` panics on NaN — use `total_cmp` (or bless with an allow)"
+                    .to_string(),
+            )
+        } else if line.contains(".lock().unwrap()")
+            || line.contains(".lock().expect(")
+            || line.contains(".read().unwrap()")
+            || line.contains(".read().expect(")
+            || line.contains(".write().unwrap()")
+            || line.contains(".write().expect(")
+            || line.contains(".into_inner().unwrap()")
+            || line.contains(".into_inner().expect(")
+            || (line.contains(".wait(") && line.contains(".unwrap()"))
+        {
+            Some(
+                "unwrap on lock poisoning — if propagating a sibling panic is intended, say so \
+                 with `lint: allow(R5, ..)`"
+                    .to_string(),
+            )
+        } else {
+            None
+        };
+        if let Some(msg) = msg {
+            out.push(Diagnostic { rule: "R5", file: file.path.clone(), line: ln, msg });
+        }
+    }
+}
+
+/// Run every rule over one parsed file.
+pub fn check_all(file: &SourceFile, out: &mut Vec<Diagnostic>) {
+    check_r1(file, out);
+    check_r2(file, out);
+    check_r3(file, out);
+    check_r4(file, out);
+    check_r5(file, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::parse_source;
+
+    fn lint(path: &str, src: &str) -> Vec<Diagnostic> {
+        let f = parse_source(path, src, &[]).unwrap();
+        let mut out = Vec::new();
+        check_all(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn r1_fires_outside_pool_only() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let d = lint("rust/src/cluster/replica.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "R1");
+        assert_eq!(d[0].line, 1);
+        assert!(lint("rust/src/util/pool.rs", src).is_empty(), "pool is the blessed home");
+        assert!(lint("rust/tests/x.rs", src).is_empty(), "tests may thread freely");
+    }
+
+    #[test]
+    fn r2_tracks_declared_idents() {
+        let src = "\
+use std::collections::HashMap;
+struct S { map: HashMap<u32, u32> }
+fn f(s: &S) {
+    for (k, v) in s.map.iter() {
+        let _ = (k, v);
+    }
+}
+fn g() {
+    let lookup = HashMap::new();
+    let _ = lookup.get(&1);
+}
+";
+        let d = lint("rust/src/graph/demo.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "R2");
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn r2_for_loop_over_set() {
+        let src = "\
+fn f() {
+    let mut edges = std::collections::HashSet::new();
+    edges.insert((1u32, 2u32));
+    for e in &edges {
+        let _ = e;
+    }
+}
+";
+        let d = lint("rust/src/graph/demo.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn r2_lookup_is_fine() {
+        let src = "\
+fn f() {
+    let mut m = std::collections::HashMap::new();
+    m.insert(1u32, 2u32);
+    let _ = m.get(&1).copied();
+    let _ = m.contains_key(&1);
+}
+";
+        assert!(lint("rust/src/graph/demo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_audits_hot_fns_only() {
+        let src = "\
+// lint: hot-path
+fn hot(buf: &mut Vec<u32>) {
+    let v = vec![1, 2, 3];
+    buf.extend_from_slice(&v);
+}
+
+fn cold() -> Vec<u32> {
+    vec![4, 5]
+}
+";
+        let d = lint("rust/src/noc/demo.rs", src);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, "R3");
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn r4_deterministic_modules_only() {
+        let src = "fn f() -> u128 { let t = std::time::Instant::now(); t.elapsed().as_nanos() }\n";
+        let d = lint("rust/src/coordinator/epoch.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "R4");
+        assert!(lint("rust/src/perf/power.rs", src).is_empty(), "perf may time");
+        assert!(lint("rust/src/util/stats.rs", src).is_empty(), "util not gated");
+    }
+
+    #[test]
+    fn r5_partial_cmp_and_locks() {
+        let src = "\
+fn f(v: &mut [f32], m: &std::sync::Mutex<u32>) -> u32 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    *m.lock().unwrap()
+}
+";
+        let d = lint("rust/src/util/stats2.rs", src);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|x| x.rule == "R5"));
+        assert_eq!((d[0].line, d[1].line), (2, 3));
+    }
+
+    #[test]
+    fn r5_total_cmp_is_clean() {
+        let src = "fn f(v: &mut [f32]) { v.sort_by(f32::total_cmp); }\n";
+        assert!(lint("rust/src/util/stats2.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_comments_never_fire() {
+        let src = "/// Unlike `thread::spawn`, `HashMap.iter()` or `Instant::now`...\nfn f() {}\n";
+        assert!(lint("rust/src/train/demo.rs", src).is_empty());
+    }
+}

@@ -1,0 +1,397 @@
+//! Per-file source model for `pallas-lint`: file classification, module
+//! paths, function spans (brace tracking) and `#[cfg(test)]` regions —
+//! everything the rules need to know *where* a pattern match landed.
+
+use crate::analysis::lexer::{scrub, Comment};
+use crate::analysis::suppress::{parse_directives, Directives};
+
+/// What kind of code a file holds; rules gate on this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    /// `rust/src/**` (minus binaries): the invariant-carrying library.
+    Library,
+    /// `rust/src/main.rs` and `rust/src/bin/**`: CLI front-ends.
+    Bin,
+    /// `rust/tests/**` and `#[cfg(test)]` regions.
+    Test,
+    /// `rust/benches/**`: perf harnesses (wall-clock is their job).
+    Bench,
+    /// `examples/**`.
+    Example,
+}
+
+/// A `fn` item's location: declaration line, body span, hot-path flag.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub decl_line: usize,
+    /// First/last line of the body (inclusive); equal to `decl_line`
+    /// for bodyless declarations (trait methods, extern fns).
+    pub start_line: usize,
+    pub end_line: usize,
+    /// Marked `// lint: hot-path` or listed in the hot-path manifest.
+    pub hot: bool,
+}
+
+/// A lexed + classified source file, ready for rule checks.
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators (diagnostic label).
+    pub path: String,
+    pub class: FileClass,
+    /// `gcn_noc` module path (`graph::sampler`); empty for non-library
+    /// files and the crate root.
+    pub module: String,
+    /// Scrubbed code, split into lines (index 0 = line 1).
+    pub lines: Vec<String>,
+    pub comments: Vec<Comment>,
+    /// `test_lines[i]` — line `i + 1` sits inside `#[cfg(test)]` /
+    /// `#[test]` scope (always all-true for `FileClass::Test` files).
+    pub test_lines: Vec<bool>,
+    pub fns: Vec<FnSpan>,
+    pub directives: Directives,
+}
+
+/// Classify a repo-relative path.  Returns `None` for files the linter
+/// skips wholesale (vendored code).
+pub fn classify(path: &str) -> Option<(FileClass, String)> {
+    if path.starts_with("rust/vendor/") {
+        return None;
+    }
+    if path.starts_with("rust/tests/") {
+        return Some((FileClass::Test, String::new()));
+    }
+    if path.starts_with("rust/benches/") {
+        return Some((FileClass::Bench, String::new()));
+    }
+    if path.starts_with("examples/") {
+        return Some((FileClass::Example, String::new()));
+    }
+    if path == "rust/src/main.rs" || path.starts_with("rust/src/bin/") {
+        return Some((FileClass::Bin, String::new()));
+    }
+    if let Some(rest) = path.strip_prefix("rust/src/") {
+        let stem = rest.strip_suffix(".rs").unwrap_or(rest);
+        let module = if stem == "lib" {
+            String::new()
+        } else {
+            stem.strip_suffix("/mod").unwrap_or(stem).replace('/', "::")
+        };
+        return Some((FileClass::Library, module));
+    }
+    // Anything else (stray .rs outside the known trees): treat as example
+    // code — R3 markers still apply, contract rules do not.
+    Some((FileClass::Example, String::new()))
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Build the model for one file.  `hot_manifest` holds
+/// `module::fn_name` entries marking hot functions without an inline
+/// marker.
+pub fn parse_source(path: &str, src: &str, hot_manifest: &[String]) -> Option<SourceFile> {
+    let scrubbed = scrub(src);
+    let directives = parse_directives(&scrubbed.comments);
+    let (class, module) = match directives.fixture_class {
+        // Fixture files self-describe their class/module so the corpus
+        // under rust/tests/lint_fixtures exercises library-context rules.
+        Some((c, ref m)) => (c, m.clone()),
+        None => classify(path)?,
+    };
+    let lines: Vec<String> = scrubbed.code.lines().map(str::to_string).collect();
+    let n_lines = lines.len().max(1);
+
+    let mut test_lines = vec![class == FileClass::Test; n_lines];
+    if class != FileClass::Test {
+        mark_test_regions(&lines, &mut test_lines);
+    }
+
+    let mut fns = find_fns(&lines);
+    // Hot markers: each `lint: hot-path` comment marks the next declared fn.
+    for &marker_line in &directives.hot_markers {
+        if let Some(f) = fns
+            .iter_mut()
+            .filter(|f| f.decl_line >= marker_line)
+            .min_by_key(|f| f.decl_line)
+        {
+            f.hot = true;
+        }
+    }
+    for f in fns.iter_mut() {
+        let qualified = if module.is_empty() {
+            f.name.clone()
+        } else {
+            format!("{}::{}", module, f.name)
+        };
+        if hot_manifest.iter().any(|e| e == &qualified) {
+            f.hot = true;
+        }
+    }
+
+    Some(SourceFile {
+        path: path.to_string(),
+        class,
+        module,
+        lines,
+        comments: scrubbed.comments,
+        test_lines,
+        fns,
+        directives,
+    })
+}
+
+impl SourceFile {
+    /// Is 1-based line `line` inside test scope?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        self.test_lines.get(line.saturating_sub(1)).copied().unwrap_or(false)
+    }
+
+    /// Hot fn containing 1-based `line`, if any (innermost wins).
+    pub fn hot_fn_at(&self, line: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| f.hot && f.start_line <= line && line <= f.end_line)
+            .min_by_key(|f| f.end_line - f.start_line)
+    }
+
+    /// Top-level module segment (`graph` for `graph::sampler`).
+    pub fn top_module(&self) -> &str {
+        self.module.split("::").next().unwrap_or("")
+    }
+}
+
+/// Mark lines covered by `#[cfg(test)]` / `#[test]` items: from each
+/// attribute, the next brace-delimited block (or terminating `;`).
+fn mark_test_regions(lines: &[String], test_lines: &mut [bool]) {
+    let flat: Vec<(usize, char)> = lines
+        .iter()
+        .enumerate()
+        .flat_map(|(i, l)| l.chars().map(move |c| (i, c)).chain(std::iter::once((i, '\n'))))
+        .collect();
+    let text: String = flat.iter().map(|&(_, c)| c).collect();
+
+    for pat in ["#[cfg(test)]", "#[test]"] {
+        let mut from = 0usize;
+        while let Some(off) = text[from..].find(pat) {
+            let start = from + off;
+            from = start + pat.len();
+            // Scan forward for the item's opening brace or a bare `;`.
+            let bytes: Vec<char> = text.chars().collect();
+            let mut depth = 0usize;
+            let mut k = start + pat.len();
+            while k < bytes.len() {
+                match bytes[k] {
+                    '{' => {
+                        depth += 1;
+                        break;
+                    }
+                    ';' => {
+                        // Attribute on a bodyless item; mark just that line.
+                        let line = flat[k.min(flat.len() - 1)].0;
+                        test_lines[line] = true;
+                        k = usize::MAX - 1;
+                        break;
+                    }
+                    _ => k += 1,
+                }
+            }
+            if k >= bytes.len() || depth == 0 {
+                continue;
+            }
+            let open = k;
+            let mut close = open;
+            let mut d = 0usize;
+            for (idx, &c) in bytes.iter().enumerate().skip(open) {
+                match c {
+                    '{' => d += 1,
+                    '}' => {
+                        d -= 1;
+                        if d == 0 {
+                            close = idx;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            let first = flat[start.min(flat.len() - 1)].0;
+            let last = flat[close.min(flat.len() - 1)].0;
+            for t in test_lines.iter_mut().take(last + 1).skip(first) {
+                *t = true;
+            }
+        }
+    }
+}
+
+/// Find every `fn name` item and its body span by brace matching over the
+/// scrubbed text (no braces hide in strings or comments after scrubbing).
+fn find_fns(lines: &[String]) -> Vec<FnSpan> {
+    let flat: Vec<(usize, char)> = lines
+        .iter()
+        .enumerate()
+        .flat_map(|(i, l)| l.chars().map(move |c| (i, c)).chain(std::iter::once((i, '\n'))))
+        .collect();
+    let chars: Vec<char> = flat.iter().map(|&(_, c)| c).collect();
+    let mut fns = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < chars.len() {
+        // Keyword `fn` at a word boundary.
+        if chars[i] == 'f'
+            && chars[i + 1] == 'n'
+            && (i == 0 || !is_ident(chars[i - 1]))
+            && chars.get(i + 2).map(|&c| !is_ident(c)).unwrap_or(true)
+        {
+            let decl_line = flat[i].0 + 1;
+            let mut k = i + 2;
+            while k < chars.len() && chars[k].is_whitespace() {
+                k += 1;
+            }
+            let name_start = k;
+            while k < chars.len() && is_ident(chars[k]) {
+                k += 1;
+            }
+            if k == name_start {
+                // `fn(` — function-pointer type, not an item.
+                i += 2;
+                continue;
+            }
+            let name: String = chars[name_start..k].iter().collect();
+            // Find the body `{` (or `;` for bodyless declarations),
+            // skipping angle-bracketed generics and parenthesized args.
+            let mut body_open = None;
+            while k < chars.len() {
+                match chars[k] {
+                    '{' => {
+                        body_open = Some(k);
+                        break;
+                    }
+                    ';' => break,
+                    _ => k += 1,
+                }
+            }
+            let (start_line, end_line) = match body_open {
+                None => (decl_line, decl_line),
+                Some(open) => {
+                    let mut d = 0usize;
+                    let mut close = open;
+                    for (idx, &c) in chars.iter().enumerate().skip(open) {
+                        match c {
+                            '{' => d += 1,
+                            '}' => {
+                                d -= 1;
+                                if d == 0 {
+                                    close = idx;
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                    (flat[open].0 + 1, flat[close].0 + 1)
+                }
+            };
+            fns.push(FnSpan { name, decl_line, start_line, end_line, hot: false });
+            i = k;
+        } else {
+            i += 1;
+        }
+    }
+    fns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_trees() {
+        assert_eq!(
+            classify("rust/src/graph/sampler.rs"),
+            Some((FileClass::Library, "graph::sampler".into()))
+        );
+        assert_eq!(classify("rust/src/cluster/mod.rs"), Some((FileClass::Library, "cluster".into())));
+        assert_eq!(classify("rust/src/lib.rs"), Some((FileClass::Library, String::new())));
+        assert_eq!(classify("rust/src/main.rs"), Some((FileClass::Bin, String::new())));
+        assert_eq!(classify("rust/src/bin/pallas_lint.rs"), Some((FileClass::Bin, String::new())));
+        assert_eq!(classify("rust/tests/pool.rs"), Some((FileClass::Test, String::new())));
+        assert_eq!(classify("rust/benches/bench_train.rs"), Some((FileClass::Bench, String::new())));
+        assert_eq!(classify("examples/quickstart.rs"), Some((FileClass::Example, String::new())));
+        assert_eq!(classify("rust/vendor/anyhow/src/lib.rs"), None);
+    }
+
+    #[test]
+    fn fn_spans_and_hot_marker() {
+        let src = "\
+// lint: hot-path
+fn hot_one(x: usize) -> usize {
+    x + 1
+}
+
+fn cold_one() {
+    ()
+}
+";
+        let f = parse_source("rust/src/util/demo.rs", src, &[]).unwrap();
+        assert_eq!(f.fns.len(), 2);
+        assert!(f.fns[0].hot, "marker marks the next fn");
+        assert!(!f.fns[1].hot);
+        assert_eq!(f.fns[0].name, "hot_one");
+        assert_eq!(f.fns[0].decl_line, 2);
+        assert_eq!(f.fns[0].end_line, 4);
+        assert!(f.hot_fn_at(3).is_some());
+        assert!(f.hot_fn_at(7).is_none());
+    }
+
+    #[test]
+    fn manifest_marks_hot() {
+        let src = "fn tile_kernel() { let x = 1; }\n";
+        let f = parse_source(
+            "rust/src/util/matrix.rs",
+            src,
+            &["util::matrix::tile_kernel".to_string()],
+        )
+        .unwrap();
+        assert!(f.fns[0].hot);
+        let g = parse_source("rust/src/util/matrix.rs", src, &["other::fn_name".to_string()])
+            .unwrap();
+        assert!(!g.fns[0].hot);
+    }
+
+    #[test]
+    fn cfg_test_region_marked() {
+        let src = "\
+fn lib_code() {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let x = 1;
+    }
+}
+";
+        let f = parse_source("rust/src/util/demo.rs", src, &[]).unwrap();
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(3));
+        assert!(f.is_test_line(7));
+        assert!(f.is_test_line(9));
+    }
+
+    #[test]
+    fn nested_fn_innermost_hot() {
+        let src = "\
+fn outer() {
+    // lint: hot-path
+    fn inner() {
+        let y = 2;
+    }
+    inner();
+}
+";
+        let f = parse_source("rust/src/util/demo.rs", src, &[]).unwrap();
+        let hot = f.hot_fn_at(4).expect("line 4 is in inner");
+        assert_eq!(hot.name, "inner");
+        assert!(f.hot_fn_at(6).is_none(), "outer is not hot");
+    }
+}

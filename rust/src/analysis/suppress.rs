@@ -1,0 +1,240 @@
+//! `lint:` comment directives — the reviewable ledger of every blessed
+//! exception to the repo's invariant contracts.
+//!
+//! Three forms are recognized inside comments:
+//!
+//! - `// lint: hot-path` — the next `fn` item is allocation-audited
+//!   (rule R3), the static twin of the counting-allocator test.
+//! - `// lint: allow(R5, poisoning implies a sibling panicked)` —
+//!   suppress one rule on the annotated line (trailing comment) or on the
+//!   next code line (comment-only line).  The reason is **mandatory**:
+//!   an allow without a rationale is itself a violation (`lint-syntax`),
+//!   so the ledger always says *why*.
+//! - `// lint-fixture: library module=noc::demo` — fixture corpus files
+//!   under `rust/tests/lint_fixtures/` self-describe the file class they
+//!   should be linted as (they would otherwise classify as test code and
+//!   bypass the contract rules).
+//!
+//! Unused `allow`s are reported as warnings (never failures): a stale
+//! suppression means the violation it blessed is gone and the ledger
+//! entry should be retired.
+
+use crate::analysis::diag::Diagnostic;
+use crate::analysis::lexer::Comment;
+use crate::analysis::source::FileClass;
+
+/// One parsed `lint: allow(rule, reason)` entry.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub rule: String,
+    pub reason: String,
+    /// Line the comment sits on (1-based).
+    pub line: usize,
+    /// True when the comment shares its line with code (suppresses that
+    /// line); false when comment-only (suppresses the next code line).
+    pub trailing: bool,
+}
+
+/// All directives of one file.
+#[derive(Clone, Debug, Default)]
+pub struct Directives {
+    pub hot_markers: Vec<usize>,
+    pub allows: Vec<Allow>,
+    /// Malformed `lint:` comments — reported as unsuppressable
+    /// `lint-syntax` violations.
+    pub malformed: Vec<(usize, String)>,
+    /// `lint-fixture:` override, if present.
+    pub fixture_class: Option<(FileClass, String)>,
+}
+
+/// Parse the `lint:` directives out of a file's comments.
+pub fn parse_directives(comments: &[Comment]) -> Directives {
+    let mut d = Directives::default();
+    for c in comments {
+        let t = c.text.trim();
+        if let Some(rest) = t.strip_prefix("lint-fixture:") {
+            match parse_fixture(rest.trim()) {
+                Some(fc) => d.fixture_class = Some(fc),
+                None => d.malformed.push((
+                    c.line,
+                    format!("malformed fixture directive `{t}` (want `lint-fixture: <class> [module=a::b]`)"),
+                )),
+            }
+            continue;
+        }
+        let Some(rest) = t.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            d.hot_markers.push(c.line);
+        } else if let Some(body) = rest.strip_prefix("allow(").and_then(|r| r.strip_suffix(')')) {
+            match body.split_once(',') {
+                Some((rule, reason)) if !reason.trim().is_empty() => {
+                    d.allows.push(Allow {
+                        rule: rule.trim().to_string(),
+                        reason: reason.trim().to_string(),
+                        line: c.line,
+                        trailing: false, // fixed up by the caller
+                    });
+                }
+                _ => d.malformed.push((
+                    c.line,
+                    format!("allow without a reason: `{rest}` (want `lint: allow(RULE, reason)`)"),
+                )),
+            }
+        } else {
+            d.malformed.push((c.line, format!("unknown lint directive `{t}`")));
+        }
+    }
+    d
+}
+
+fn parse_fixture(spec: &str) -> Option<(FileClass, String)> {
+    let mut class = None;
+    let mut module = String::new();
+    for word in spec.split_whitespace() {
+        if let Some(m) = word.strip_prefix("module=") {
+            module = m.to_string();
+        } else {
+            class = Some(match word {
+                "library" => FileClass::Library,
+                "bin" => FileClass::Bin,
+                "test" => FileClass::Test,
+                "bench" => FileClass::Bench,
+                "example" => FileClass::Example,
+                _ => return None,
+            });
+        }
+    }
+    class.map(|c| (c, module))
+}
+
+/// Suppression table for one file: resolves which source line each allow
+/// guards and tracks usage so stale entries can be reported.
+pub struct Suppressions {
+    entries: Vec<(Allow, usize, bool)>, // (allow, guarded line, used)
+}
+
+impl Suppressions {
+    /// Build from directives + the scrubbed lines (needed to tell
+    /// trailing comments from comment-only lines and to find the next
+    /// code line).
+    pub fn new(directives: &Directives, scrubbed_lines: &[String]) -> Self {
+        let entries = directives
+            .allows
+            .iter()
+            .map(|a| {
+                let own = scrubbed_lines
+                    .get(a.line - 1)
+                    .map(|l| !l.trim().is_empty())
+                    .unwrap_or(false);
+                let guarded = if own {
+                    a.line
+                } else {
+                    // Comment-only line: guard the next non-blank code line.
+                    scrubbed_lines
+                        .iter()
+                        .enumerate()
+                        .skip(a.line)
+                        .find(|(_, l)| !l.trim().is_empty())
+                        .map(|(i, _)| i + 1)
+                        .unwrap_or(a.line)
+                };
+                (Allow { trailing: own, ..a.clone() }, guarded, false)
+            })
+            .collect();
+        Suppressions { entries }
+    }
+
+    /// Is `rule` suppressed at `line`?  Marks the matching allow used.
+    pub fn check(&mut self, rule: &str, line: usize) -> bool {
+        let mut hit = false;
+        for (a, guarded, used) in self.entries.iter_mut() {
+            if a.rule == rule && *guarded == line {
+                *used = true;
+                hit = true;
+            }
+        }
+        hit
+    }
+
+    /// Allows that never matched a violation — stale ledger entries.
+    pub fn unused(&self) -> impl Iterator<Item = &Allow> {
+        self.entries.iter().filter(|(_, _, used)| !used).map(|(a, _, _)| a)
+    }
+
+    /// Malformed directives as unsuppressable diagnostics.
+    pub fn malformed_diags(directives: &Directives, path: &str) -> Vec<Diagnostic> {
+        directives
+            .malformed
+            .iter()
+            .map(|(line, msg)| Diagnostic {
+                rule: "lint-syntax",
+                file: path.to_string(),
+                line: *line,
+                msg: msg.clone(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::scrub;
+
+    fn directives_of(src: &str) -> (Directives, Vec<String>) {
+        let s = scrub(src);
+        let lines = s.code.lines().map(str::to_string).collect();
+        (parse_directives(&s.comments), lines)
+    }
+
+    #[test]
+    fn trailing_allow_guards_its_own_line() {
+        let (d, lines) = directives_of("let x = m.lock().unwrap(); // lint: allow(R5, test rig)\n");
+        let mut s = Suppressions::new(&d, &lines);
+        assert!(s.check("R5", 1));
+        assert!(!s.check("R5", 2));
+        assert_eq!(s.unused().count(), 0);
+    }
+
+    #[test]
+    fn comment_only_allow_guards_next_code_line() {
+        let (d, lines) =
+            directives_of("// lint: allow(R2, sorted on the next line)\n\nlet v = m.keys();\n");
+        let mut s = Suppressions::new(&d, &lines);
+        assert!(s.check("R2", 3));
+    }
+
+    #[test]
+    fn allow_requires_reason() {
+        let (d, _) = directives_of("// lint: allow(R1)\n");
+        assert_eq!(d.allows.len(), 0);
+        assert_eq!(d.malformed.len(), 1);
+    }
+
+    #[test]
+    fn unknown_directive_is_malformed() {
+        let (d, _) = directives_of("// lint: disable-everything\n");
+        assert_eq!(d.malformed.len(), 1);
+    }
+
+    #[test]
+    fn unused_allow_reported() {
+        let (d, lines) = directives_of("// lint: allow(R4, stale)\nlet x = 1;\n");
+        let mut s = Suppressions::new(&d, &lines);
+        assert!(!s.check("R1", 2));
+        assert_eq!(s.unused().count(), 1);
+    }
+
+    #[test]
+    fn fixture_directive_parsed() {
+        let (d, _) = directives_of("// lint-fixture: library module=noc::demo\n");
+        assert_eq!(d.fixture_class, Some((FileClass::Library, "noc::demo".into())));
+    }
+
+    #[test]
+    fn hot_marker_parsed() {
+        let (d, _) = directives_of("// lint: hot-path\nfn f() {}\n");
+        assert_eq!(d.hot_markers, vec![1]);
+    }
+}

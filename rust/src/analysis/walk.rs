@@ -1,0 +1,70 @@
+//! Deterministic repo walker: collect `.rs` files under the given roots
+//! in sorted path order (diagnostics must not depend on readdir order),
+//! skipping vendored code, build output and the bad-on-purpose lint
+//! fixture corpus (unless a fixture directory is the root itself).
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Directory names never descended into.
+const SKIP_DIRS: &[&str] = &["target", "vendor", "lint_fixtures", ".git"];
+
+/// Collect all `.rs` files under `roots` (files in `roots` pass through).
+pub fn collect_rust_files(roots: &[PathBuf]) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for root in roots {
+        if root.is_file() {
+            if root.extension().map(|e| e == "rs").unwrap_or(false) {
+                out.push(root.clone());
+            }
+            continue;
+        }
+        walk_dir(root, &mut out)?;
+    }
+    out.sort();
+    out.dedup();
+    Ok(out)
+}
+
+fn walk_dir(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if SKIP_DIRS.contains(&name) {
+                continue;
+            }
+            walk_dir(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_sorted_and_skips_vendor() {
+        // The crate's own tree is available when tests run from the
+        // package root.
+        let files = collect_rust_files(&[PathBuf::from("rust/src")]).unwrap();
+        assert!(files.iter().any(|p| p.ends_with("rust/src/lib.rs")));
+        assert!(files.windows(2).all(|w| w[0] <= w[1]), "sorted order");
+        assert!(!files.iter().any(|p| p.to_string_lossy().contains("vendor")));
+    }
+
+    #[test]
+    fn fixture_dir_skipped_unless_rooted() {
+        let all = collect_rust_files(&[PathBuf::from("rust/tests")]).unwrap();
+        assert!(!all.iter().any(|p| p.to_string_lossy().contains("lint_fixtures")));
+        let rooted =
+            collect_rust_files(&[PathBuf::from("rust/tests/lint_fixtures")]).unwrap();
+        assert!(!rooted.is_empty(), "explicit fixture root is collected");
+    }
+}

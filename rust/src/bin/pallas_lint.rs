@@ -1,0 +1,109 @@
+//! `pallas-lint` — static invariant checker for the gcn-noc tree.
+//!
+//! Walks the repo's Rust sources and enforces the determinism /
+//! allocation-free / pool-only contracts as named rules (R1–R5) with
+//! `file:line` diagnostics.  Exit status: 0 = clean, 1 = violations,
+//! 2 = usage/IO error.
+//!
+//! ```text
+//! pallas-lint [--manifest FILE] [--rules] [ROOT...]
+//! ```
+//!
+//! Default roots: `rust/src rust/tests rust/benches examples` relative to
+//! the current directory (the package root — where cargo runs binaries).
+//! Default hot-path manifest: `rust/lint/hot_paths.txt` when present.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use gcn_noc::analysis::{diag, lint_tree, LintConfig};
+
+fn main() -> ExitCode {
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut manifest: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--rules" => {
+                println!("pallas-lint rules:");
+                for (id, name, contract) in diag::RULES {
+                    println!("  {id:<11} {name:<18} {contract}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--manifest" => match args.next() {
+                Some(p) => manifest = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("pallas-lint: --manifest needs a file argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("usage: pallas-lint [--manifest FILE] [--rules] [ROOT...]");
+                println!("default roots: rust/src rust/tests rust/benches examples");
+                return ExitCode::SUCCESS;
+            }
+            flag if flag.starts_with('-') => {
+                eprintln!("pallas-lint: unknown flag `{flag}` (see --help)");
+                return ExitCode::from(2);
+            }
+            path => roots.push(PathBuf::from(path)),
+        }
+    }
+    if roots.is_empty() {
+        roots = ["rust/src", "rust/tests", "rust/benches", "examples"]
+            .iter()
+            .map(PathBuf::from)
+            .filter(|p| p.exists())
+            .collect();
+        if roots.is_empty() {
+            eprintln!("pallas-lint: no default roots found — run from the package root");
+            return ExitCode::from(2);
+        }
+    }
+
+    let manifest_path = manifest.unwrap_or_else(|| PathBuf::from("rust/lint/hot_paths.txt"));
+    let mut cfg = LintConfig::default();
+    match std::fs::read_to_string(&manifest_path) {
+        Ok(text) => cfg.hot_manifest = LintConfig::parse_manifest(&text),
+        Err(_) => {
+            // Missing default manifest is fine; an explicit one must load.
+            if manifest_path != PathBuf::from("rust/lint/hot_paths.txt") {
+                eprintln!("pallas-lint: cannot read manifest {}", manifest_path.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let repo_root = PathBuf::from(".");
+    let report = match lint_tree(&repo_root, &roots, &cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for w in &report.warnings {
+        eprintln!("{w}");
+    }
+    for v in &report.violations {
+        println!("{v}");
+    }
+    if report.violations.is_empty() {
+        println!(
+            "pallas-lint: clean ({} warning{})",
+            report.warnings.len(),
+            if report.warnings.len() == 1 { "" } else { "s" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "pallas-lint: {} violation{} — fix them or bless each with \
+             `// lint: allow(Rn, reason)`",
+            report.violations.len(),
+            if report.violations.len() == 1 { "" } else { "s" }
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -46,11 +46,11 @@ pub fn tree_schedule(n: usize) -> Vec<(usize, usize)> {
 pub fn weighted_tree_reduce(slots: &[Mutex<GradBuffers>], weights: &[f32]) {
     assert_eq!(slots.len(), weights.len());
     for (slot, &w) in slots.iter().zip(weights) {
-        slot.lock().unwrap().scale(w);
+        slot.lock().unwrap().scale(w); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
     }
     for (dst, src) in tree_schedule(slots.len()) {
-        let mut d = slots[dst].lock().unwrap();
-        let s = slots[src].lock().unwrap();
+        let mut d = slots[dst].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
+        let s = slots[src].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
         d.add_assign(&s);
     }
 }

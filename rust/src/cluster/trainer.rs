@@ -165,7 +165,7 @@ impl<'g> ClusterTrainer<'g> {
         }
         let shards = self.replicas.len();
         for (slot, route) in self.replicas.iter().zip(&self.route) {
-            let mut rep = slot.lock().unwrap();
+            let mut rep = slot.lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
             rep.ids.clear();
             rep.ids.extend_from_slice(route);
             rep.rng = if shards == 1 {
@@ -180,7 +180,7 @@ impl<'g> ClusterTrainer<'g> {
     /// byte-identical Trainer replay).
     fn reclaim_master_stream(&mut self) {
         if self.replicas.len() == 1 {
-            let state = self.replicas[0].lock().unwrap().rng.state();
+            let state = self.replicas[0].lock().unwrap().rng.state(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
             self.rng = SplitMix64::new(state);
         }
     }
@@ -202,16 +202,16 @@ impl<'g> ClusterTrainer<'g> {
             if k >= shards {
                 break;
             }
-            let mut rep = replicas[k].lock().unwrap();
-            let mut grads = grad_slots[k].lock().unwrap();
+            let mut rep = replicas[k].lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
+            let mut grads = grad_slots[k].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
             if let Err(e) = f(&mut rep, &mut grads) {
-                let mut slot = first_err.lock().unwrap();
+                let mut slot = first_err.lock().unwrap(); // lint: allow(R5, poisoned error slot means a card worker panicked; propagating is correct)
                 if slot.is_none() {
                     *slot = Some(e);
                 }
             }
         });
-        match first_err.into_inner().unwrap() {
+        match first_err.into_inner().unwrap() { // lint: allow(R5, pool barrier re-threw any worker panic before this point)
             Some(e) => Err(e),
             None => Ok(()),
         }
@@ -228,14 +228,14 @@ impl<'g> ClusterTrainer<'g> {
         // Collect weights + loss + halo counts in canonical card order.
         let mut total_b = 0usize;
         for slot in &self.replicas {
-            total_b += slot.lock().unwrap().last_batch;
+            total_b += slot.lock().unwrap().last_batch; // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
         }
         anyhow::ensure!(total_b > 0, "empty global batch");
         let mut loss = 0.0f32;
         for ((slot, weight), halo) in
             self.replicas.iter().zip(&mut self.weights).zip(&mut self.halo_fetches)
         {
-            let rep = slot.lock().unwrap();
+            let rep = slot.lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
             let w = rep.last_batch as f32 / total_b as f32;
             *weight = w;
             loss += rep.last_loss * w;
@@ -255,7 +255,7 @@ impl<'g> ClusterTrainer<'g> {
     /// expressions the native fused step also uses, so a 1-shard cluster
     /// matches the single-card trainer bit for bit.
     fn apply_update(&mut self) {
-        let acc = self.grad_slots[0].lock().unwrap();
+        let acc = self.grad_slots[0].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
         self.state.apply_gradients(&acc.g1.data, &acc.g2.data, self.cfg.optimizer, self.cfg.lr);
     }
 
@@ -264,7 +264,7 @@ impl<'g> ClusterTrainer<'g> {
     pub fn train(&mut self) -> anyhow::Result<LossCurve> {
         let mut curve = LossCurve::default();
         for _ in 0..self.cfg.steps {
-            let t0 = Instant::now();
+            let t0 = Instant::now(); // lint: allow(R4, wall clock feeds only the reported step timing and log line, never the computation)
             let s = self.steps_done;
             let loss = self.step()?;
             curve.push(s, loss, t0.elapsed());
@@ -295,10 +295,10 @@ impl<'g> ClusterTrainer<'g> {
             self.reclaim_master_stream();
             let mut batch_rows = 0usize;
             for slot in &self.replicas {
-                batch_rows += slot.lock().unwrap().last_batch;
+                batch_rows += slot.lock().unwrap().last_batch; // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
             }
             for slot in &self.replicas {
-                let rep = slot.lock().unwrap();
+                let rep = slot.lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
                 if rep.last_batch > 0 {
                     let w = rep.last_batch as f32 / batch_rows.max(1) as f32;
                     total_loss += rep.last_loss * w;

@@ -276,13 +276,13 @@ fn route_tasks(tasks: Vec<(&Coo, SplitMix64)>, threads: usize) -> Vec<PassResult
     );
     let done: Mutex<Vec<(usize, PassResult)>> = Mutex::new(Vec::with_capacity(n_tasks));
     crate::util::pool::global().run(threads.min(n_tasks), || loop {
-        let Some((i, block, mut rng)) = queue.lock().unwrap().pop() else {
+        let Some((i, block, mut rng)) = queue.lock().unwrap().pop() else { // lint: allow(R5, poisoned queue means a worker panicked; propagating is correct)
             break;
         };
         let result = route_pass(block, &mut rng);
-        done.lock().unwrap().push((i, result));
+        done.lock().unwrap().push((i, result)); // lint: allow(R5, poisoned results lock means a worker panicked; propagating is correct)
     });
-    let mut done = done.into_inner().unwrap();
+    let mut done = done.into_inner().unwrap(); // lint: allow(R5, pool barrier re-threw any worker panic before this point)
     done.sort_by_key(|&(i, _)| i);
     done.into_iter().map(|(_, r)| r).collect()
 }

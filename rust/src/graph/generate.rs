@@ -57,7 +57,7 @@ pub fn power_law_graph(
     // Preferential endpoint table (heavy nodes attract more edges).
     let hubs: Vec<u32> = {
         let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&a, &b| degs[b].partial_cmp(&degs[a]).unwrap());
+        idx.sort_by(|&a, &b| degs[b].total_cmp(&degs[a]));
         idx.iter().map(|&i| i as u32).collect()
     };
     let mut edges: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
@@ -77,8 +77,15 @@ pub fn power_law_graph(
             }
         }
     }
+    // Sort before emitting: HashSet iteration order is seeded per process
+    // (std RandomState), and Coo::to_csr preserves per-row insertion
+    // order, so draining the set directly would give the same graph a
+    // different column order on every run — the one wall of cross-process
+    // determinism.  Sorting restores it.
+    let mut ordered: Vec<(u32, u32)> = edges.into_iter().collect(); // lint: allow(R2, sorted on the next line before any ordered use)
+    ordered.sort_unstable();
     let mut coo = Coo::new(n, n);
-    for &(u, v) in &edges {
+    for (u, v) in ordered {
         coo.push(u, v, 1.0);
         coo.push(v, u, 1.0);
     }
@@ -171,7 +178,7 @@ pub fn centroid_features(
         let queue = std::sync::Mutex::new(features.data.chunks_mut(TILE_ROWS * d).enumerate());
         crate::util::pool::global().run(threads, || loop {
             // Pop under the lock, fill the tile outside it.
-            let item = queue.lock().unwrap().next();
+            let item = queue.lock().unwrap().next(); // lint: allow(R5, poisoned queue means a worker panicked; propagating is correct)
             let Some((idx, tile)) = item else { break };
             let r0 = idx * TILE_ROWS;
             let mut r = SplitMix64::new(base);

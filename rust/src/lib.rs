@@ -23,6 +23,7 @@
 //! See `DESIGN.md` for the experiment index (which bench regenerates which
 //! paper table/figure) and `EXPERIMENTS.md` for measured results.
 
+pub mod analysis;
 pub mod baselines;
 pub mod cli;
 pub mod cluster;

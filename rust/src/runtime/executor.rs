@@ -116,7 +116,7 @@ impl Executor {
 
     /// Names of already-compiled artifacts.
     pub fn loaded(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.compiled.keys().map(|s| s.as_str()).collect();
+        let mut v: Vec<&str> = self.compiled.keys().map(|s| s.as_str()).collect(); // lint: allow(R2, sorted on the next line before any ordered use)
         v.sort_unstable();
         v
     }

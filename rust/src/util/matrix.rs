@@ -246,7 +246,7 @@ fn for_each_row_tile<F>(
     let queue = Mutex::new(data.chunks_mut(tile_rows * out_cols).enumerate());
     crate::util::pool::global().run(threads.min(n_tiles), || loop {
         // Pop under the lock, compute outside it.
-        let item = queue.lock().unwrap().next();
+        let item = queue.lock().unwrap().next(); // lint: allow(R5, poisoned tile queue means a worker panicked; propagating is correct)
         let Some((idx, tile)) = item else { break };
         tile_fn(idx * tile_rows, tile);
     });

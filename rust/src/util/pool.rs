@@ -36,6 +36,7 @@
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Resolve a thread-count knob (0 = one worker per available CPU) — the
@@ -98,6 +99,34 @@ struct PoolShared {
     queue: Mutex<Queue>,
     /// Signalled when jobs arrive or the pool shuts down.
     available: Condvar,
+    /// Schedule-perturbation hook, test use only: 0 = off, nonzero = a
+    /// seed.  Armed, every dispatch yields the worker a pseudo-random
+    /// number of times before running its job copy, shaking thread
+    /// interleavings so stress tests can prove the hot paths are
+    /// schedule-independent.
+    jitter: AtomicU64,
+    /// Dispatch counter feeding the jitter hash.
+    dispatches: AtomicU64,
+}
+
+/// Park the dispatching worker for a jitter-derived number of yields.
+/// The count is a SplitMix64-style hash of the seed and the dispatch
+/// index — no OS entropy, but intentionally racy across workers: which
+/// worker draws which index depends on arrival order, which is the whole
+/// perturbation.
+fn jitter_pause(shared: &PoolShared) {
+    let seed = shared.jitter.load(Ordering::Relaxed);
+    if seed == 0 {
+        return;
+    }
+    let n = shared.dispatches.fetch_add(1, Ordering::Relaxed);
+    let mut z = seed ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    for _ in 0..(z % 8) {
+        std::thread::yield_now();
+    }
 }
 
 /// A fixed set of long-lived worker threads executing scoped jobs.
@@ -112,7 +141,7 @@ pub struct WorkerPool {
 fn worker_loop(shared: &'static PoolShared) {
     loop {
         let msg = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock().unwrap(); // lint: allow(R5, pool internals never panic under this lock so poisoning is unreachable)
             loop {
                 if let Some(m) = q.jobs.pop_front() {
                     break m;
@@ -120,14 +149,15 @@ fn worker_loop(shared: &'static PoolShared) {
                 if q.shutdown {
                     return;
                 }
-                q = shared.available.wait(q).unwrap();
+                q = shared.available.wait(q).unwrap(); // lint: allow(R5, same queue lock — poisoning unreachable)
             }
         };
+        jitter_pause(shared);
         // SAFETY: the job's completion barrier keeps the closure and the
         // state alive until we decrement `remaining` below.
         let result = catch_unwind(AssertUnwindSafe(|| unsafe { (msg.call)(msg.data) }));
         let state = unsafe { &*msg.state };
-        let mut p = state.lock.lock().unwrap();
+        let mut p = state.lock.lock().unwrap(); // lint: allow(R5, job panics are caught by catch_unwind above — this lock cannot be poisoned)
         if let Err(payload) = result {
             if p.panic.is_none() {
                 p.panic = Some(payload);
@@ -159,17 +189,17 @@ impl Drop for CompletionGuard<'_> {
             // Copies no worker picked up yet will never run: the caller's
             // copy has already drained the job's work queue.  Pull them
             // back so the barrier only waits on genuinely in-flight work.
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock().unwrap(); // lint: allow(R5, pool internals never panic under this lock so poisoning is unreachable)
             let before = q.jobs.len();
             q.jobs.retain(|m| !std::ptr::eq(m.state, me));
             let reclaimed = before - q.jobs.len();
             if reclaimed > 0 {
-                self.state.lock.lock().unwrap().remaining -= reclaimed;
+                self.state.lock.lock().unwrap().remaining -= reclaimed; // lint: allow(R5, job panics are caught before the progress lock — poisoning unreachable)
             }
         }
-        let mut p = self.state.lock.lock().unwrap();
+        let mut p = self.state.lock.lock().unwrap(); // lint: allow(R5, job panics are caught before the progress lock — poisoning unreachable)
         while p.remaining > 0 {
-            p = self.state.done.wait(p).unwrap();
+            p = self.state.done.wait(p).unwrap(); // lint: allow(R5, same progress lock — poisoning unreachable)
         }
     }
 }
@@ -182,6 +212,8 @@ impl WorkerPool {
         let shared: &'static PoolShared = Box::leak(Box::new(PoolShared {
             queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
             available: Condvar::new(),
+            jitter: AtomicU64::new(0),
+            dispatches: AtomicU64::new(0),
         }));
         let handles = (0..workers)
             .map(|i| {
@@ -199,6 +231,17 @@ impl WorkerPool {
         self.handles.len()
     }
 
+    /// Arm (nonzero seed) or disarm (0) the dispatch jitter hook.  Test
+    /// use only: stress tests perturb worker scheduling to prove results
+    /// are byte-identical under any interleaving.  Takes effect for jobs
+    /// dispatched after the store; resets the dispatch counter so a given
+    /// seed replays a comparable yield sequence.
+    #[doc(hidden)]
+    pub fn set_dispatch_jitter(&self, seed: u64) {
+        self.shared.dispatches.store(0, Ordering::Relaxed);
+        self.shared.jitter.store(seed, Ordering::Relaxed);
+    }
+
     /// Execute `f` on the calling thread plus up to `parallelism - 1`
     /// pool workers; returns once every copy has finished.  `f` is
     /// typically a queue-drain loop over shared tasks.  Steady state this
@@ -214,7 +257,7 @@ impl WorkerPool {
             done: Condvar::new(),
         };
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock().unwrap(); // lint: allow(R5, pool internals never panic under this lock so poisoning is unreachable)
             for _ in 0..helpers {
                 q.jobs.push_back(JobMsg {
                     data: &f as *const F as *const (),
@@ -229,7 +272,7 @@ impl WorkerPool {
             f();
             // Guard drops here: reclaim + barrier, even if f() unwound.
         }
-        let payload = state.lock.lock().unwrap().panic.take();
+        let payload = state.lock.lock().unwrap().panic.take(); // lint: allow(R5, job panics are caught before the progress lock — poisoning unreachable)
         if let Some(p) = payload {
             resume_unwind(p);
         }
@@ -242,7 +285,7 @@ impl Drop for WorkerPool {
             return;
         }
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = self.shared.queue.lock().unwrap(); // lint: allow(R5, pool internals never panic under this lock so poisoning is unreachable)
             q.shutdown = true;
         }
         self.shared.available.notify_all();

@@ -31,7 +31,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: NaN-total order — `partial_cmp().unwrap()` would panic on
+    // a NaN sample (e.g. a 0/0 rate from an empty bench window).
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank.min(v.len() - 1)]
 }
@@ -103,6 +105,20 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // Regression: the old `partial_cmp().unwrap()` comparator panicked
+        // on NaN input.  total_cmp sorts NaN above +inf, so finite
+        // percentiles of a mostly-finite sample stay finite.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p0 = percentile(&xs, 0.0);
+        assert_eq!(p0, 1.0);
+        let p100 = percentile(&xs, 100.0);
+        assert!(p100.is_nan(), "NaN sorts last under total_cmp");
+        // All-NaN input must not panic either.
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 
     #[test]

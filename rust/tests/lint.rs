@@ -1,0 +1,125 @@
+//! Tier-1 tests for `pallas-lint`: every rule pinned against a fixture
+//! corpus with exact rule ids and line numbers, suppression semantics,
+//! and — the acceptance contract — the repo tree itself against zero
+//! findings and zero stale allows.
+//!
+//! Fixture files live in `rust/tests/lint_fixtures/` and are never
+//! compiled; each carries a `// lint-fixture: <class> [module=a::b]`
+//! directive so it is linted under the declared class regardless of
+//! where it sits on disk.  The default-roots walker skips the fixture
+//! directory, so the bad fixtures cannot fail the tree-clean check.
+
+use std::path::PathBuf;
+
+use gcn_noc::analysis::{lint_file, lint_tree, FileReport, LintConfig};
+
+fn lint_fixture(name: &str) -> FileReport {
+    let rel = format!("rust/tests/lint_fixtures/{name}");
+    let src = std::fs::read_to_string(&rel).unwrap_or_else(|e| panic!("fixture {name}: {e}"));
+    lint_file(&rel, &src, &LintConfig::default()).expect("fixtures are never skipped")
+}
+
+/// (rule id, line) pairs of a fixture's violations, in file order.
+fn findings(name: &str) -> Vec<(&'static str, usize)> {
+    lint_fixture(name).violations.iter().map(|d| (d.rule, d.line)).collect()
+}
+
+#[test]
+fn r1_flags_raw_thread_spawn() {
+    assert_eq!(findings("bad_r1.rs"), vec![("R1", 5)]);
+}
+
+#[test]
+fn r2_flags_hash_map_iteration() {
+    assert_eq!(findings("bad_r2.rs"), vec![("R2", 7)]);
+}
+
+#[test]
+fn r3_flags_allocation_in_marked_hot_path() {
+    assert_eq!(findings("bad_r3.rs"), vec![("R3", 6)]);
+}
+
+#[test]
+fn r4_flags_wall_clock_in_deterministic_module() {
+    assert_eq!(findings("bad_r4.rs"), vec![("R4", 4)]);
+}
+
+#[test]
+fn r5_flags_partial_cmp_and_lock_unwraps() {
+    assert_eq!(findings("bad_r5.rs"), vec![("R5", 4), ("R5", 8)]);
+}
+
+#[test]
+fn malformed_allow_is_a_lint_syntax_violation() {
+    assert_eq!(findings("bad_syntax.rs"), vec![("lint-syntax", 3)]);
+}
+
+#[test]
+fn allow_directives_suppress_without_stale_warnings() {
+    let rep = lint_fixture("good_allow.rs");
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert!(rep.warnings.is_empty(), "{:?}", rep.warnings);
+}
+
+#[test]
+fn clean_and_test_exempt_fixtures_pass() {
+    for name in ["good_clean.rs", "good_test_exempt.rs"] {
+        let rep = lint_fixture(name);
+        assert!(rep.violations.is_empty(), "{name}: {:?}", rep.violations);
+    }
+}
+
+#[test]
+fn hot_path_manifest_marks_functions_without_inline_markers() {
+    // The manifest route to R3: same fixture as the inline marker, but
+    // hot via `module::fn_name` — an unmarked copy must stay clean.
+    let src = "\
+// lint-fixture: library module=fixture::manifesty
+
+pub fn accumulate(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for &x in xs {
+        out.push(x);
+    }
+    out
+}
+";
+    let clean = lint_file("rust/src/demo.rs", src, &LintConfig::default()).unwrap();
+    assert!(clean.violations.is_empty(), "{:?}", clean.violations);
+
+    let cfg = LintConfig { hot_manifest: vec!["fixture::manifesty::accumulate".to_string()] };
+    let hot = lint_file("rust/src/demo.rs", src, &cfg).unwrap();
+    assert_eq!(
+        hot.violations.iter().map(|d| (d.rule, d.line)).collect::<Vec<_>>(),
+        vec![("R3", 4)]
+    );
+}
+
+#[test]
+fn repo_tree_is_clean() {
+    // The acceptance contract: `pallas-lint` exits 0 over the real tree.
+    // Every historical violation is either fixed or carries an inline
+    // `// lint: allow(Rn, reason)` ledger entry — and no entry is stale.
+    let roots: Vec<PathBuf> = ["rust/src", "rust/tests", "rust/benches", "examples"]
+        .iter()
+        .map(PathBuf::from)
+        .filter(|p| p.exists())
+        .collect();
+    let cfg = LintConfig {
+        hot_manifest: LintConfig::parse_manifest(
+            &std::fs::read_to_string("rust/lint/hot_paths.txt").expect("hot-path manifest"),
+        ),
+    };
+    let rep = lint_tree(&PathBuf::from("."), &roots, &cfg).expect("tree walk");
+    assert!(
+        rep.violations.is_empty(),
+        "pallas-lint found {} violation(s):\n{}",
+        rep.violations.len(),
+        rep.violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    assert!(
+        rep.warnings.is_empty(),
+        "stale allow entries:\n{}",
+        rep.warnings.iter().map(|w| w.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

@@ -1,0 +1,6 @@
+// lint-fixture: library module=fixture::spawny
+// Bad fixture: raw thread spawn outside util::pool.
+
+pub fn launch() {
+    std::thread::spawn(|| {});
+}

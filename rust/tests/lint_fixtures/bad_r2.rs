@@ -1,0 +1,11 @@
+// lint-fixture: library module=fixture::hashy
+
+use std::collections::HashMap;
+
+pub fn dump(m: &HashMap<String, u32>) -> Vec<u32> {
+    let mut out = Vec::new();
+    for (_k, v) in m.iter() {
+        out.push(*v);
+    }
+    out
+}

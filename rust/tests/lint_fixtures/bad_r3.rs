@@ -1,0 +1,11 @@
+// lint-fixture: library module=fixture::hotty
+
+/// A marked hot path that allocates.
+// lint: hot-path
+pub fn accumulate(xs: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for &x in xs {
+        out.push(x);
+    }
+    out
+}

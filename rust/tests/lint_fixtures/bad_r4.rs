@@ -1,0 +1,6 @@
+// lint-fixture: library module=noc::fixture
+
+pub fn stamp_nanos() -> u128 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos()
+}

@@ -1,0 +1,9 @@
+// lint-fixture: library module=fixture::sorty
+
+pub fn sort_floats(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn read_locked(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}

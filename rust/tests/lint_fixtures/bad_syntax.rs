@@ -1,0 +1,4 @@
+// lint-fixture: library module=fixture::syntaxy
+
+// lint: allow(R5)
+pub fn fine() {}

@@ -1,0 +1,10 @@
+// lint-fixture: library module=fixture::blessed
+
+pub fn sort_floats(v: &mut [f64]) {
+    // lint: allow(R5, inputs are NaN-free by construction in this fixture)
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn read_locked(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // lint: allow(R5, poisoning implies a sibling panicked)
+}

@@ -1,0 +1,6 @@
+// lint-fixture: library module=fixture::cleanly
+
+/// Total-order float sort: the blessed spelling of the comparator.
+pub fn sort_floats(v: &mut [f64]) {
+    v.sort_by(f64::total_cmp);
+}

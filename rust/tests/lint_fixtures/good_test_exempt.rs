@@ -1,0 +1,13 @@
+// lint-fixture: library module=fixture::testy
+
+pub fn double(x: u32) -> u32 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn spawn_is_fine_in_tests() {
+        std::thread::spawn(|| {}).join().unwrap();
+    }
+}

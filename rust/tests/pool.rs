@@ -13,7 +13,11 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use gcn_noc::util::pool::WorkerPool;
+use gcn_noc::coordinator::epoch::{EpochModel, ModelKind, TrainConfig};
+use gcn_noc::graph::datasets::by_name;
+use gcn_noc::util::matrix::{par_matmul_into, Matrix};
+use gcn_noc::util::pool::{self, WorkerPool};
+use gcn_noc::util::rng::SplitMix64;
 
 /// The canonical pool usage: drain an indexed task queue, commit results
 /// by task index.  Returns the committed results in task order.
@@ -132,4 +136,63 @@ fn drop_joins_workers_without_hanging() {
     let pool = WorkerPool::new(4);
     assert_eq!(queue_drain_squares(&pool, 5, 32), expected(32));
     drop(pool); // must join all workers promptly, not hang
+}
+
+/// Re-arms the jitter to 0 on scope exit so a failing assert cannot
+/// leave the global pool perturbed for unrelated tests.
+struct JitterGuard;
+
+impl Drop for JitterGuard {
+    fn drop(&mut self) {
+        pool::global().set_dispatch_jitter(0);
+    }
+}
+
+#[test]
+fn results_identical_under_schedule_perturbation() {
+    // Schedule-perturbation stress: arm the pool's test-only dispatch
+    // jitter (each worker yields a pseudo-random number of times before
+    // running its job copy) and re-run the two real hot-path consumers —
+    // the tiled parallel matmul and the epoch router's pass queue — under
+    // 50 different perturbation seeds.  The determinism contract says
+    // scheduling may change wall time only, never a byte of the result.
+    let mut rng = SplitMix64::new(0xD15);
+    let a = Matrix::randn(96, 64, 1.0, &mut rng);
+    let b = Matrix::randn(64, 80, 1.0, &mut rng);
+    let mut base_mm = Matrix::zeros(96, 80);
+    par_matmul_into(&mut base_mm, a.view(), b.view(), 8);
+    let base_bits: Vec<u32> = base_mm.data.iter().map(|v| v.to_bits()).collect();
+    let base_drain = queue_drain_squares(pool::global(), 8, 300);
+
+    let epoch_cfg = TrainConfig {
+        batch_size: 32,
+        measured_batches: 1,
+        replica_nodes: 512,
+        sample_passes: 4,
+        threads: 8,
+        ..Default::default()
+    };
+    let spec = by_name("Flickr").unwrap();
+    let base_report = EpochModel::new(spec, ModelKind::Gcn, epoch_cfg)
+        .run(&mut SplitMix64::new(7));
+
+    let _guard = JitterGuard;
+    for run in 0..50u64 {
+        pool::global().set_dispatch_jitter(0x9E37_79B9_7F4A_7C15 ^ (run + 1));
+
+        let mut out = Matrix::zeros(96, 80);
+        par_matmul_into(&mut out, a.view(), b.view(), 8);
+        let bits: Vec<u32> = out.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, base_bits, "matmul diverged under jitter seed #{run}");
+
+        assert_eq!(
+            queue_drain_squares(pool::global(), 8, 300),
+            base_drain,
+            "queue drain diverged under jitter seed #{run}"
+        );
+
+        let report = EpochModel::new(spec, ModelKind::Gcn, epoch_cfg)
+            .run(&mut SplitMix64::new(7));
+        assert_eq!(report, base_report, "epoch report diverged under jitter seed #{run}");
+    }
 }
