@@ -8,13 +8,18 @@
 //! byte-identical to the single-card `Trainer` by `rust/tests/cluster.rs`,
 //! so its steps/sec is directly comparable to `BENCH_train.json`'s
 //! small-shape point.
+//!
+//! A recovery drill rides along: kill card 2 of 4 mid-run, roll back to
+//! the last durable checkpoint generation and re-shard N−1 — the modeled
+//! re-shard cost and the steps re-trained land in the baseline too.
 
 mod common;
 
 use common::{banner, compare_baseline, fmt_time, time_it, trials};
-use gcn_noc::cluster::{ClusterTrainer, GraphSharder};
+use gcn_noc::cluster::{train_with_recovery, ClusterTrainer, FaultEvent, FaultPlan, GraphSharder};
 use gcn_noc::graph::generate::community_graph;
 use gcn_noc::train::trainer::TrainerConfig;
+use gcn_noc::train::CheckpointStore;
 use gcn_noc::util::rng::SplitMix64;
 
 struct Point {
@@ -65,6 +70,42 @@ fn main() {
         });
     }
 
+    // --- Recovery drill: kill card 2 of 4 at step 6, recover N−1. ---
+    // Fixed sizes (10 steps, checkpoint every 4) keep the drill cheap
+    // enough to run unclamped under BENCH_SMOKE.
+    banner("recovery drill: kill card 2/4 at step 6, roll back + re-shard N-1");
+    let dir = std::env::temp_dir().join("gcn_noc_bench_drill_ck");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = CheckpointStore::open(&dir, 2).unwrap();
+    let drill_cfg = TrainerConfig {
+        batch_size: 32,
+        steps: 10,
+        lr: 0.05,
+        seed: 0xC107,
+        log_every: 0,
+        ..Default::default()
+    };
+    let faults = FaultPlan::new(0xC108).with(FaultEvent::CardDeath { step: 6, card: 2 });
+    let mut outcome = None;
+    let drill_secs = time_it(0, 1, || {
+        outcome = Some(train_with_recovery(&graph, &drill_cfg, 4, &faults, &store, 4).unwrap());
+    });
+    std::fs::remove_dir_all(&dir).ok();
+    let outcome = outcome.expect("drill ran once");
+    assert!(outcome.curve.records.iter().all(|r| r.loss.is_finite()));
+    assert_eq!(outcome.final_shards, 3);
+    let ev = outcome.recoveries[0];
+    println!(
+        "card {} died at step {}: resumed from generation {}, {} step(s) re-trained, \
+         ~{} modeled re-shard cycles, drill wall time {}",
+        ev.card,
+        ev.step,
+        ev.resumed_from,
+        ev.steps_lost,
+        ev.reshard_cycles,
+        fmt_time(drill_secs)
+    );
+
     // --- Baseline artifact. ---
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let sweep = points
@@ -81,15 +122,20 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"bench_cluster\",\n  \"host_cores\": {cores},\n  \
          \"smoke\": {},\n  \"steps\": {steps},\n  \"sweep\": [\n{sweep}\n  ],\n  \
-         \"sync_cycles_8\": {:.1}\n}}\n",
+         \"sync_cycles_8\": {:.1},\n  \"reshard_cycles\": {},\n  \
+         \"recovery_steps_lost\": {}\n}}\n",
         common::smoke(),
         points[3].sync_cycles_per_step,
+        ev.reshard_cycles,
+        ev.steps_lost,
     );
     let path = "BENCH_cluster.json";
     // First "steps_per_sec" in the artifact = 1 card (the Trainer-equal
-    // anchor); sync cycles are a cost, so lower is better.
+    // anchor); sync cycles and the modeled re-shard cost are costs, so
+    // lower is better.
     compare_baseline(path, "steps_per_sec", points[0].steps_per_sec, true);
     compare_baseline(path, "sync_cycles_8", points[3].sync_cycles_per_step, false);
+    compare_baseline(path, "reshard_cycles", ev.reshard_cycles as f64, false);
     match std::fs::write(path, &json) {
         Ok(()) => println!("\nbaseline written to {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),

@@ -1,0 +1,329 @@
+//! Deterministic fault injection for the cluster layer.
+//!
+//! A [`FaultPlan`] is a seed plus a list of scheduled [`FaultEvent`]s —
+//! card death at step *k*, a worker panic mid-step, transient link/HBM
+//! degradation windows, checkpoint-write corruption.  The plan is pure
+//! data: it draws **no wall clock and no OS entropy** (R4), so every
+//! drill replays bit-identically.  The trainer arms the per-step events
+//! through explicit hooks ([`crate::cluster::ClusterTrainer::set_fault_plan`] →
+//! [`crate::cluster::replica::ShardReplica::fault`]), and the traffic
+//! model consumes the per-step [`LinkFaults`] view to charge
+//! retry-with-backoff costs for degraded windows.
+//!
+//! Plans come from code (the builder) or from the CLI `--fault-plan`
+//! string, e.g.:
+//!
+//! ```text
+//!   seed=7;kill:step=7,card=2;degrade:card=1,from=3,to=6;corrupt:step=10
+//! ```
+//!
+//! Events, `;`-separated: `kill:step=K,card=J` (card J's worker returns a
+//! typed [`CardFailure`] at step K), `panic:step=K,card=J` (the worker
+//! panics instead), `degrade:card=J,from=A,to=B` (card J's links retry
+//! during steps `A..B`), `hbm:card=J,from=A,to=B` (card J's HBM serves
+//! halo reads slower during `A..B`), `corrupt:step=K` (the checkpoint
+//! written at step K is torn), and `seed=N` (the retry-draw seed).
+
+use std::fmt;
+
+use crate::util::rng::SplitMix64;
+
+/// Retransmissions drawn per degraded flow: `1..=MAX_LINK_RETRIES`.
+pub const MAX_LINK_RETRIES: u32 = 3;
+
+/// Typed "card died" error — carried through the step's `anyhow` error so
+/// [`crate::cluster::recovery`] can recognize a recoverable failure
+/// (`downcast_ref::<CardFailure>()`) among ordinary errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CardFailure {
+    /// Shard/card index that died.
+    pub card: usize,
+}
+
+impl fmt::Display for CardFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "card {} failed mid-step (injected or detected card death)", self.card)
+    }
+}
+
+impl std::error::Error for CardFailure {}
+
+/// What an armed replica does at the top of its next `grad_step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepFault {
+    /// Return a typed [`CardFailure`] error (clean detected death).
+    Die,
+    /// Panic on the pool worker (crash-style death).
+    Panic,
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Card `card`'s worker reports [`CardFailure`] at step `step`.
+    CardDeath { step: u64, card: usize },
+    /// Card `card`'s worker panics at step `step`.
+    CardPanic { step: u64, card: usize },
+    /// Card `card`'s inter-card links need retries during steps
+    /// `from..to`.
+    LinkDegrade { from: u64, to: u64, card: usize },
+    /// Card `card`'s HBM serves halo reads degraded during steps
+    /// `from..to`.
+    HbmDegrade { from: u64, to: u64, card: usize },
+    /// The checkpoint written at step `step` is torn (drill for the
+    /// rotation/checksum fallback).
+    CheckpointCorrupt { step: u64 },
+}
+
+/// Per-step view of the transient-degradation events, handed to the
+/// traffic model.  `step_seed` makes the retry draws deterministic per
+/// (plan, step).
+#[derive(Clone, Debug, Default)]
+pub struct LinkFaults {
+    /// Cards whose links are degraded this step (sorted, deduped).
+    pub degraded_links: Vec<usize>,
+    /// Cards whose HBM is degraded this step (sorted, deduped).
+    pub degraded_hbm: Vec<usize>,
+    /// Seed for this step's retry draws.
+    pub step_seed: u64,
+}
+
+impl LinkFaults {
+    pub fn is_clear(&self) -> bool {
+        self.degraded_links.is_empty() && self.degraded_hbm.is_empty()
+    }
+
+    pub fn link_degraded(&self, card: usize) -> bool {
+        self.degraded_links.binary_search(&card).is_ok()
+    }
+
+    pub fn hbm_degraded(&self, card: usize) -> bool {
+        self.degraded_hbm.binary_search(&card).is_ok()
+    }
+
+    /// Retransmission count for the `src → dst` flow this step:
+    /// `1..=MAX_LINK_RETRIES`, a pure function of (plan seed, step, src,
+    /// dst).
+    pub fn retries(&self, src: usize, dst: usize) -> u32 {
+        let key = ((src as u64) << 32) | dst as u64;
+        let draw = mix(self.step_seed, key);
+        1 + (draw % MAX_LINK_RETRIES as u64) as u32
+    }
+}
+
+/// A deterministic, seed-driven fault schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for the retry/backoff draws (NOT the training seed).
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, events: Vec::new() }
+    }
+
+    /// Builder: append an event.
+    pub fn with(mut self, ev: FaultEvent) -> Self {
+        self.events.push(ev);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The checkpoint written at `step` should be torn.
+    pub fn checkpoint_corrupt_at(&self, step: u64) -> bool {
+        self.events
+            .iter()
+            .any(|ev| matches!(ev, FaultEvent::CheckpointCorrupt { step: s } if *s == step))
+    }
+
+    /// Remove a handled card-death event so the rebuilt (re-sharded)
+    /// trainer does not re-fire it — the recovery protocol calls this
+    /// after rolling back.
+    pub fn retire_death(&mut self, step: u64, card: usize) {
+        self.events.retain(|ev| {
+            !matches!(ev, FaultEvent::CardDeath { step: s, card: c }
+                if *s == step && *c == card)
+        });
+    }
+
+    /// The transient-degradation view of `step` for the traffic model.
+    pub fn link_faults_at(&self, step: u64) -> LinkFaults {
+        let mut lf = LinkFaults {
+            degraded_links: Vec::new(),
+            degraded_hbm: Vec::new(),
+            step_seed: mix(self.seed, step),
+        };
+        for ev in &self.events {
+            match *ev {
+                FaultEvent::LinkDegrade { from, to, card } if (from..to).contains(&step) => {
+                    lf.degraded_links.push(card);
+                }
+                FaultEvent::HbmDegrade { from, to, card } if (from..to).contains(&step) => {
+                    lf.degraded_hbm.push(card);
+                }
+                _ => {}
+            }
+        }
+        lf.degraded_links.sort_unstable();
+        lf.degraded_links.dedup();
+        lf.degraded_hbm.sort_unstable();
+        lf.degraded_hbm.dedup();
+        lf
+    }
+
+    /// Parse the CLI plan grammar (see the module docs).
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(';') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(v) = item.strip_prefix("seed=") {
+                plan.seed = parse_u64("seed", v)?;
+                continue;
+            }
+            let (kind, rest) = item.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("fault event '{item}' lacks ':' (expected e.g. kill:step=7,card=2)")
+            })?;
+            let mut step: Option<u64> = None;
+            let mut card: Option<usize> = None;
+            let mut from: Option<u64> = None;
+            let mut to: Option<u64> = None;
+            for kv in rest.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("fault field '{kv}' in '{item}' lacks '='"))?;
+                match k.trim() {
+                    "step" => step = Some(parse_u64("step", v)?),
+                    "card" => card = Some(parse_u64("card", v)? as usize),
+                    "from" => from = Some(parse_u64("from", v)?),
+                    "to" => to = Some(parse_u64("to", v)?),
+                    other => anyhow::bail!("unknown fault field '{other}' in '{item}'"),
+                }
+            }
+            let need = |o: Option<u64>, name: &str| {
+                o.ok_or_else(|| anyhow::anyhow!("fault event '{item}' needs {name}=N"))
+            };
+            let need_card =
+                || card.ok_or_else(|| anyhow::anyhow!("fault event '{item}' needs card=N"));
+            let ev = match kind.trim() {
+                "kill" => FaultEvent::CardDeath { step: need(step, "step")?, card: need_card()? },
+                "panic" => FaultEvent::CardPanic { step: need(step, "step")?, card: need_card()? },
+                "degrade" => FaultEvent::LinkDegrade {
+                    from: need(from, "from")?,
+                    to: need(to, "to")?,
+                    card: need_card()?,
+                },
+                "hbm" => FaultEvent::HbmDegrade {
+                    from: need(from, "from")?,
+                    to: need(to, "to")?,
+                    card: need_card()?,
+                },
+                "corrupt" => FaultEvent::CheckpointCorrupt { step: need(step, "step")? },
+                other => anyhow::bail!(
+                    "unknown fault kind '{other}' (kill|panic|degrade|hbm|corrupt|seed=N)"
+                ),
+            };
+            if let FaultEvent::LinkDegrade { from, to, .. }
+            | FaultEvent::HbmDegrade { from, to, .. } = ev
+            {
+                anyhow::ensure!(from < to, "fault window '{item}' is empty (from must be < to)");
+            }
+            plan.events.push(ev);
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_u64(name: &str, v: &str) -> anyhow::Result<u64> {
+    v.trim()
+        .parse::<u64>()
+        .map_err(|_| anyhow::anyhow!("fault field {name}: '{v}' is not an unsigned integer"))
+}
+
+/// One SplitMix64 draw of `a ⊕ h(b)` — the deterministic mixing primitive
+/// behind per-step retry seeds and retry counts.
+fn mix(a: u64, b: u64) -> u64 {
+    SplitMix64::new(a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_the_readme_example() {
+        let spec = "seed=7;kill:step=7,card=2;degrade:card=1,from=3,to=6;corrupt:step=10";
+        let plan = FaultPlan::parse(spec).unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(
+            plan.events,
+            vec![
+                FaultEvent::CardDeath { step: 7, card: 2 },
+                FaultEvent::LinkDegrade { from: 3, to: 6, card: 1 },
+                FaultEvent::CheckpointCorrupt { step: 10 },
+            ]
+        );
+        assert!(plan.checkpoint_corrupt_at(10));
+        assert!(!plan.checkpoint_corrupt_at(9));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "explode:step=1",
+            "kill:card=2",
+            "kill:step=x,card=2",
+            "degrade:card=1,from=6,to=6",
+            "kill",
+            "kill:step7",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn link_faults_window_is_half_open_and_deterministic() {
+        let plan = FaultPlan::new(0xAB)
+            .with(FaultEvent::LinkDegrade { from: 3, to: 6, card: 1 })
+            .with(FaultEvent::HbmDegrade { from: 4, to: 5, card: 0 });
+        assert!(plan.link_faults_at(2).is_clear());
+        assert!(plan.link_faults_at(6).is_clear());
+        let lf = plan.link_faults_at(4);
+        assert!(lf.link_degraded(1) && !lf.link_degraded(0));
+        assert!(lf.hbm_degraded(0) && !lf.hbm_degraded(1));
+        // Retries are a pure function of (seed, step, src, dst) in range.
+        let again = plan.link_faults_at(4);
+        for (src, dst) in [(0usize, 1usize), (1, 0), (2, 1)] {
+            let r = lf.retries(src, dst);
+            assert_eq!(r, again.retries(src, dst));
+            assert!((1..=MAX_LINK_RETRIES).contains(&r));
+        }
+        // Different steps reseed the draws.
+        assert_ne!(plan.link_faults_at(3).step_seed, lf.step_seed);
+    }
+
+    #[test]
+    fn retire_death_removes_exactly_the_handled_event() {
+        let mut plan = FaultPlan::new(0)
+            .with(FaultEvent::CardDeath { step: 7, card: 2 })
+            .with(FaultEvent::CardDeath { step: 9, card: 0 });
+        plan.retire_death(7, 2);
+        assert_eq!(plan.events, vec![FaultEvent::CardDeath { step: 9, card: 0 }]);
+        plan.retire_death(7, 2); // idempotent
+        assert_eq!(plan.events.len(), 1);
+    }
+
+    #[test]
+    fn card_failure_is_a_typed_anyhow_source() {
+        let e: anyhow::Error = CardFailure { card: 3 }.into();
+        assert_eq!(e.downcast_ref::<CardFailure>(), Some(&CardFailure { card: 3 }));
+        assert!(e.to_string().contains("card 3"));
+    }
+}

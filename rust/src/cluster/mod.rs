@@ -20,12 +20,23 @@
 //! - [`trainer`] — [`ClusterTrainer`]: drives the N shard replicas with
 //!   the same checkpoint/metrics surface as the single-card trainer;
 //!   at one shard it replays [`crate::train::Trainer`] byte for byte.
+//! - [`fault`] — deterministic seed-driven fault injection: a parsed
+//!   [`FaultPlan`] schedules card deaths, worker panics, degraded
+//!   link/HBM windows and checkpoint-write corruption, with zero
+//!   wall-clock or OS entropy.
+//! - [`recovery`] — the elastic N−1 drill: on a detected card failure,
+//!   roll back to the last durable checkpoint generation, re-shard one
+//!   card narrower, rebuild the replicas and keep training.
 
 pub mod allreduce;
+pub mod fault;
+pub mod recovery;
 pub mod replica;
 pub mod shard;
 pub mod traffic;
 pub mod trainer;
 
+pub use fault::{CardFailure, FaultEvent, FaultPlan};
+pub use recovery::{train_with_recovery, RecoveryEvent, RecoveryOutcome};
 pub use shard::{GraphShard, GraphSharder, ShardPlan};
 pub use trainer::ClusterTrainer;

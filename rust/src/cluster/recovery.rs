@@ -1,0 +1,237 @@
+//! Elastic N−1 recovery: turn a detected card death into a rollback +
+//! re-shard instead of a dead run.
+//!
+//! [`train_with_recovery`] drives a [`ClusterTrainer`] in **eras**.  An
+//! era trains until either the configured step count is reached or a
+//! step fails with a typed [`CardFailure`].  On failure the driver
+//!
+//! 1. retires the handled death from the [`FaultPlan`] (so the rebuilt
+//!    cluster does not replay it),
+//! 2. re-shards the graph one card narrower with the same deterministic
+//!    [`GraphSharder`],
+//! 3. rebuilds the replicas, restores the last durable checkpoint
+//!    generation from the [`CheckpointStore`] (falling back past torn
+//!    generations), truncates the loss curve to the restored step, and
+//! 4. keeps training on the surviving N−1 cards.
+//!
+//! The whole protocol is wall-clock-free and seed-driven, so a recovered
+//! run is bit-reproducible at any pool size — the drill in
+//! `rust/tests/fault.rs` pins that.  A failure at `--shards 1` has no
+//! surviving card to re-shard onto and is reported as a clean error,
+//! never a hang.
+
+use std::time::Duration;
+
+use crate::cluster::fault::{CardFailure, FaultPlan};
+use crate::cluster::shard::{GraphSharder, ShardPlan};
+use crate::cluster::traffic::{TrafficTotals, CARD_HOP_LATENCY, CARD_LINK_BYTES_PER_CYCLE};
+use crate::cluster::trainer::ClusterTrainer;
+use crate::graph::generate::LabeledGraph;
+use crate::runtime::backend::ModelState;
+use crate::train::checkpoint::CheckpointStore;
+use crate::train::metrics::LossCurve;
+use crate::train::trainer::TrainerConfig;
+
+/// One handled card failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryEvent {
+    /// Step whose fan-out detected the failure (the step was not
+    /// committed — the model never saw its batch).
+    pub step: u64,
+    /// The card that died.
+    pub card: usize,
+    /// Checkpoint generation the rebuilt cluster resumed from (0 when no
+    /// generation was durable yet).
+    pub resumed_from: u64,
+    /// Committed-then-rolled-back steps the resumed run re-trains:
+    /// `step - resumed_from`.
+    pub steps_lost: u64,
+    /// Cluster width after the re-shard.
+    pub shards_after: usize,
+    /// Modeled cost of rebuilding the N−1 placement (halo re-replication
+    /// over the inter-card links).
+    pub reshard_cycles: u64,
+}
+
+/// What a fault-tolerant run produced.
+#[derive(Clone, Debug)]
+pub struct RecoveryOutcome {
+    /// The loss curve actually committed (rolled-back steps re-recorded
+    /// by the resumed eras, never duplicated).
+    pub curve: LossCurve,
+    /// Every handled card death, in order.
+    pub recoveries: Vec<RecoveryEvent>,
+    /// Surviving cluster width.
+    pub final_shards: usize,
+    /// The synchronized model after the last step.
+    pub final_state: ModelState,
+    /// Torn/corrupt checkpoint generations skipped while restoring
+    /// (summed over all rollbacks).
+    pub checkpoint_fallbacks: usize,
+    /// Inter-card traffic accumulated across all eras, including the
+    /// degraded-window retry charges.
+    pub traffic: TrafficTotals,
+}
+
+/// Modeled cycles to stand up a fresh shard placement: every ghost
+/// feature row must be re-replicated to its reader over the inter-card
+/// links, plus one hop-latency charge per card for the rendezvous.
+/// Purely a function of the plan — deterministic by construction.
+pub fn reshard_cost_cycles(plan: &ShardPlan, feat_dim: usize) -> u64 {
+    let halo_bytes: u64 =
+        plan.shards.iter().map(|s| s.halo.len() as u64 * feat_dim as u64 * 4).sum();
+    (halo_bytes as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64
+        + CARD_HOP_LATENCY * plan.num_shards() as u64
+}
+
+/// The validity contract both fault-free and post-recovery curves must
+/// meet: every loss finite, and the trailing moving average (window
+/// `window`) lower at the end than at the start.
+pub fn curve_is_healthy(curve: &LossCurve, window: usize) -> bool {
+    if curve.is_empty() || curve.records.iter().any(|r| !r.loss.is_finite()) {
+        return false;
+    }
+    let s = curve.smoothed(window);
+    s.len() < 2 || s[s.len() - 1] < s[0]
+}
+
+/// Train `cfg.steps` steps over `shards` cards under the fault schedule
+/// `faults`, checkpointing every `checkpoint_every` committed steps into
+/// `store` and recovering N−1 from any injected/detected card death.
+///
+/// Non-card-death errors (including caught worker panics, whose failing
+/// card is not reliably attributable) propagate unchanged — recovery
+/// only absorbs failures it can re-shard around.
+pub fn train_with_recovery(
+    graph: &LabeledGraph,
+    cfg: &TrainerConfig,
+    shards: usize,
+    faults: &FaultPlan,
+    store: &CheckpointStore,
+    checkpoint_every: u64,
+) -> anyhow::Result<RecoveryOutcome> {
+    anyhow::ensure!(shards >= 1, "need at least one shard");
+    anyhow::ensure!(checkpoint_every >= 1, "checkpoint interval must be >= 1");
+    let total_steps = cfg.steps as u64;
+    let mut shards = shards;
+    let mut plan_faults = faults.clone();
+    let mut curve = LossCurve::default();
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    let mut pending: Option<(u64, usize)> = None;
+    let mut checkpoint_fallbacks = 0usize;
+    let mut traffic = TrafficTotals::default();
+
+    loop {
+        let shard_plan = GraphSharder::new(shards).shard(graph);
+        let mut trainer = ClusterTrainer::new(graph, &shard_plan, cfg.clone())?;
+        trainer.set_fault_plan(plan_faults.clone());
+
+        if let Some(restored) = store.load_latest()? {
+            trainer.restore(&restored.checkpoint)?;
+            checkpoint_fallbacks += restored.fell_back;
+        }
+        let resumed_from = trainer.steps_done();
+        curve.truncate_to_step(resumed_from);
+        if let Some((failed_step, card)) = pending.take() {
+            recoveries.push(RecoveryEvent {
+                step: failed_step,
+                card,
+                resumed_from,
+                steps_lost: failed_step - resumed_from,
+                shards_after: shards,
+                reshard_cycles: reshard_cost_cycles(&shard_plan, trainer.meta().d),
+            });
+        }
+
+        let mut failed: Option<CardFailure> = None;
+        while trainer.steps_done() < total_steps {
+            let s = trainer.steps_done();
+            match trainer.step() {
+                Ok(loss) => {
+                    curve.push(s, loss, Duration::ZERO);
+                    let done = s + 1;
+                    if done % checkpoint_every == 0 || done == total_steps {
+                        let ck = trainer.checkpoint();
+                        if plan_faults.checkpoint_corrupt_at(done) {
+                            store.save_torn(&ck)?;
+                        } else {
+                            store.save(&ck)?;
+                        }
+                    }
+                }
+                Err(e) => match e.downcast_ref::<CardFailure>() {
+                    Some(cf) => {
+                        failed = Some(*cf);
+                        break;
+                    }
+                    None => return Err(e),
+                },
+            }
+        }
+        traffic.merge(trainer.traffic_totals());
+
+        match failed {
+            Some(cf) => {
+                let step = trainer.steps_done();
+                anyhow::ensure!(
+                    shards > 1,
+                    "card {} failed at step {step} with a single shard — no surviving card \
+                     to re-shard onto; rerun with --shards >= 2",
+                    cf.card
+                );
+                plan_faults.retire_death(step, cf.card);
+                pending = Some((step, cf.card));
+                shards -= 1;
+            }
+            None => {
+                return Ok(RecoveryOutcome {
+                    curve,
+                    recoveries,
+                    final_shards: shards,
+                    final_state: trainer.state.clone(),
+                    checkpoint_fallbacks,
+                    traffic,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::community_graph;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn reshard_cost_is_deterministic_and_charges_the_halo() {
+        let mut rng = SplitMix64::new(0xFA17);
+        let g = community_graph(600, 8.0, 2.3, 16, 5, 0.5, &mut rng);
+        let plan3 = GraphSharder::new(3).shard(&g);
+        let a = reshard_cost_cycles(&plan3, 16);
+        let b = reshard_cost_cycles(&plan3, 16);
+        assert_eq!(a, b);
+        // Multi-shard plans have ghosts; the cost must see them.
+        assert!(plan3.shards.iter().any(|s| !s.halo.is_empty()));
+        assert!(a > CARD_HOP_LATENCY * 3);
+        // A 1-shard plan has no halo — only the rendezvous term remains.
+        let plan1 = GraphSharder::new(1).shard(&g);
+        assert_eq!(reshard_cost_cycles(&plan1, 16), CARD_HOP_LATENCY);
+    }
+
+    #[test]
+    fn curve_health_rejects_nan_and_rising_loss() {
+        let mut good = LossCurve::default();
+        let mut rising = LossCurve::default();
+        let mut nan = LossCurve::default();
+        for i in 0..12u64 {
+            good.push(i, 2.0 - 0.1 * i as f32, Duration::ZERO);
+            rising.push(i, 1.0 + 0.1 * i as f32, Duration::ZERO);
+            nan.push(i, if i == 6 { f32::NAN } else { 1.0 }, Duration::ZERO);
+        }
+        assert!(curve_is_healthy(&good, 4));
+        assert!(!curve_is_healthy(&rising, 4));
+        assert!(!curve_is_healthy(&nan, 4));
+        assert!(!curve_is_healthy(&LossCurve::default(), 4));
+    }
+}

@@ -11,6 +11,7 @@
 //! single-card trainer — only the optimizer update is lifted out, into
 //! the cluster-level all-reduce.
 
+use crate::cluster::fault::{CardFailure, StepFault};
 use crate::cluster::shard::GraphShard;
 use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
 use crate::runtime::backend::{ComputeBackend, GradBuffers, ModelState};
@@ -45,6 +46,10 @@ pub struct ShardReplica<'g> {
     /// per owning card — the halo-exchange volume the traffic model
     /// charges.
     pub halo_fetches: Vec<u32>,
+    /// Armed injected fault, consumed (one-shot) at the top of the next
+    /// [`ShardReplica::grad_step`] — set serially by the cluster
+    /// trainer's fault hook, never by the worker itself.
+    pub fault: Option<StepFault>,
 }
 
 impl<'g> ShardReplica<'g> {
@@ -73,6 +78,7 @@ impl<'g> ShardReplica<'g> {
             last_correct: 0.0,
             last_batch: 0,
             halo_fetches: vec![0; num_shards],
+            fault: None,
         };
         Ok((replica, meta))
     }
@@ -83,6 +89,14 @@ impl<'g> ShardReplica<'g> {
     /// all-reduce).  A card with no batch rows this step is a no-op; its
     /// zero all-reduce weight neutralizes whatever `grads` holds.
     pub fn grad_step(&mut self, state: &ModelState, grads: &mut GradBuffers) -> anyhow::Result<()> {
+        if let Some(fault) = self.fault.take() {
+            match fault {
+                StepFault::Die => return Err(CardFailure { card: self.shard.id }.into()),
+                StepFault::Panic => {
+                    panic!("injected fault: card {} worker panicked mid-step", self.shard.id)
+                }
+            }
+        }
         self.last_batch = self.ids.len();
         self.halo_fetches.iter_mut().for_each(|c| *c = 0);
         if self.ids.is_empty() {

@@ -20,7 +20,20 @@
 //! Reported per card: bytes in/out per flow and a hop-weighted byte count
 //! (congestion proxy), plus an estimated per-step sync-cycle cost at the
 //! system clock.
+//!
+//! # Degraded windows
+//!
+//! [`TrafficModel::step_with_faults`] takes the per-step [`LinkFaults`]
+//! view of a [`crate::cluster::fault::FaultPlan`]: every halo or
+//! all-reduce flow with a degraded endpoint retransmits `1..=3` times
+//! (drawn deterministically from the plan seed + step + endpoints) and
+//! pays a bounded exponential backoff; a card with degraded HBM serves
+//! its halo reads [`HBM_DEGRADE_FACTOR`]× slower.  The extra bytes land
+//! in [`CardTraffic::retry_bytes`] (and the hop proxy), the extra cycles
+//! in `sync_cycles` with the retry share broken out — so a degraded run
+//! is visibly, reproducibly more expensive in the same report.
 
+use crate::cluster::fault::LinkFaults;
 use crate::core_model::CLOCK_HZ;
 use crate::hbm::simulator::HbmSimulator;
 use crate::hbm::CHANNELS_PER_CORE;
@@ -31,6 +44,16 @@ use crate::noc::topology::{Hypercube, DIMS, NUM_CORES};
 pub const CARD_LINK_BYTES_PER_CYCLE: f64 = 32.0;
 /// Store-and-forward latency per card-level hop (cycles).
 pub const CARD_HOP_LATENCY: u64 = 8;
+/// First retry backoff (cycles); retry *r* waits `BASE << (r-1)`.
+pub const LINK_RETRY_BACKOFF_BASE: u64 = 16;
+/// Serve-time multiplier of a card whose HBM is in a degraded window.
+pub const HBM_DEGRADE_FACTOR: f64 = 4.0;
+
+/// Total backoff cycles of `retries` attempts: `BASE · (2^retries − 1)`,
+/// exponent bounded so the model never explodes.
+fn backoff_cycles(retries: u64) -> u64 {
+    LINK_RETRY_BACKOFF_BASE * ((1u64 << retries.min(6)) - 1)
+}
 
 /// Cards as the outermost hypercube axis.
 #[derive(Clone, Copy, Debug)]
@@ -87,6 +110,9 @@ pub struct CardTraffic {
     pub allreduce_bytes: u64,
     /// Bytes × card-level hops originated here (congestion proxy).
     pub hop_bytes: u64,
+    /// Retransmitted bytes this card originated inside degraded link
+    /// windows (zero on a fault-free run).
+    pub retry_bytes: u64,
 }
 
 impl CardTraffic {
@@ -95,11 +121,13 @@ impl CardTraffic {
         self.halo_bytes_out += o.halo_bytes_out;
         self.allreduce_bytes += o.allreduce_bytes;
         self.hop_bytes += o.hop_bytes;
+        self.retry_bytes += o.retry_bytes;
     }
 
-    /// Bytes this card put on the inter-card network.
+    /// Bytes this card put on the inter-card network (retransmissions
+    /// included).
     pub fn sent_bytes(&self) -> u64 {
-        self.halo_bytes_out + self.allreduce_bytes
+        self.halo_bytes_out + self.allreduce_bytes + self.retry_bytes
     }
 }
 
@@ -108,8 +136,11 @@ impl CardTraffic {
 pub struct StepTraffic {
     pub per_card: Vec<CardTraffic>,
     /// Estimated cycles the step spends synchronizing (halo serve + link
-    /// + all-reduce rounds) at the system clock.
+    /// + all-reduce rounds + any retry/backoff) at the system clock.
     pub sync_cycles: u64,
+    /// The share of `sync_cycles` spent on retries + backoff in degraded
+    /// link windows (zero on a fault-free step).
+    pub retry_cycles: u64,
 }
 
 /// Accumulated traffic over a run.
@@ -118,6 +149,7 @@ pub struct TrafficTotals {
     pub steps: u64,
     pub per_card: Vec<CardTraffic>,
     pub sync_cycles: u64,
+    pub retry_cycles: u64,
 }
 
 impl TrafficTotals {
@@ -129,7 +161,22 @@ impl TrafficTotals {
             a.add(b);
         }
         self.sync_cycles += step.sync_cycles;
+        self.retry_cycles += step.retry_cycles;
         self.steps += 1;
+    }
+
+    /// Fold another run's totals in (card lists may differ in length
+    /// across recovery eras — shorter lists fold into the prefix).
+    pub fn merge(&mut self, other: &TrafficTotals) {
+        if self.per_card.len() < other.per_card.len() {
+            self.per_card.resize(other.per_card.len(), CardTraffic::default());
+        }
+        for (a, b) in self.per_card.iter_mut().zip(&other.per_card) {
+            a.add(b);
+        }
+        self.sync_cycles += other.sync_cycles;
+        self.retry_cycles += other.retry_cycles;
+        self.steps += other.steps;
     }
 
     pub fn cycles_per_step(&self) -> f64 {
@@ -164,13 +211,27 @@ impl TrafficModel {
         }
     }
 
-    /// Model one training step.  `halo_fetches[k][j]` = ghost features
-    /// card `k` pulled from card `j` this step; the all-reduce always
-    /// moves one full gradient set along the fold tree and back.
+    /// Model one fault-free training step.  `halo_fetches[k][j]` = ghost
+    /// features card `k` pulled from card `j` this step; the all-reduce
+    /// always moves one full gradient set along the fold tree and back.
     pub fn step(&self, halo_fetches: &[Vec<u32>]) -> StepTraffic {
+        self.step_with_faults(halo_fetches, None)
+    }
+
+    /// Model one training step under an optional degraded-window view.
+    /// With `faults: None` (or a clear view) the numbers are identical
+    /// to the fault-free model; inside a window, flows touching a
+    /// degraded card retransmit with deterministic backoff and degraded
+    /// HBM serves slower (see the module docs).
+    pub fn step_with_faults(
+        &self,
+        halo_fetches: &[Vec<u32>],
+        faults: Option<&LinkFaults>,
+    ) -> StepTraffic {
         let n = self.topo.cards;
         debug_assert_eq!(halo_fetches.len(), n);
         let mut per_card = vec![CardTraffic::default(); n];
+        let mut retry_cycles = 0u64;
 
         // --- Halo exchange. ---
         for (k, fetches) in halo_fetches.iter().enumerate() {
@@ -179,18 +240,37 @@ impl TrafficModel {
                     continue;
                 }
                 let bytes = cnt as u64 * self.feat_bytes;
+                let hops = ClusterTopology::card_distance(k, j) as u64;
                 per_card[k].halo_bytes_in += bytes;
                 per_card[j].halo_bytes_out += bytes;
-                per_card[j].hop_bytes += bytes * ClusterTopology::card_distance(k, j) as u64;
+                per_card[j].hop_bytes += bytes * hops;
+                if let Some(lf) = faults {
+                    if lf.link_degraded(j) || lf.link_degraded(k) {
+                        let retries = lf.retries(j, k) as u64;
+                        let extra = bytes * retries;
+                        per_card[j].retry_bytes += extra;
+                        per_card[j].hop_bytes += extra * hops;
+                        retry_cycles += backoff_cycles(retries)
+                            + (extra as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
+                    }
+                }
             }
         }
         let max_link = per_card
             .iter()
-            .map(|c| c.halo_bytes_in + c.halo_bytes_out)
+            .map(|c| c.halo_bytes_in + c.halo_bytes_out + c.retry_bytes)
             .max()
             .unwrap_or(0);
-        let max_served = per_card.iter().map(|c| c.halo_bytes_out).max().unwrap_or(0);
-        let hbm_secs = self.hbm.sequential_read_time(max_served, CHANNELS_PER_CORE, 128);
+        // Serve time: each owner reads its served halo bytes from HBM —
+        // degraded HBM serves slower; the step waits for the slowest.
+        let mut hbm_secs = 0.0f64;
+        for (j, c) in per_card.iter().enumerate() {
+            let mut secs = self.hbm.sequential_read_time(c.halo_bytes_out, CHANNELS_PER_CORE, 128);
+            if faults.is_some_and(|lf| lf.hbm_degraded(j)) {
+                secs *= HBM_DEGRADE_FACTOR;
+            }
+            hbm_secs = hbm_secs.max(secs);
+        }
         let mut cycles = (hbm_secs * CLOCK_HZ) as u64
             + (max_link as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
         if max_link > 0 {
@@ -215,12 +295,24 @@ impl TrafficModel {
                 per_card[dst].allreduce_bytes += self.grad_bytes; // broadcast down
                 per_card[src].hop_bytes += self.grad_bytes * hops;
                 per_card[dst].hop_bytes += self.grad_bytes * hops;
+                if let Some(lf) = faults {
+                    if lf.link_degraded(src) || lf.link_degraded(dst) {
+                        let retries = lf.retries(src, dst) as u64;
+                        let extra = self.grad_bytes * retries;
+                        per_card[src].retry_bytes += extra; // re-send up
+                        per_card[dst].retry_bytes += extra; // re-broadcast down
+                        per_card[src].hop_bytes += extra * hops;
+                        per_card[dst].hop_bytes += extra * hops;
+                        retry_cycles += 2 * (backoff_cycles(retries) + retries * grad_cycles);
+                    }
+                }
                 max_hops = max_hops.max(hops);
                 i += 1;
             }
             cycles += 2 * (grad_cycles + CARD_HOP_LATENCY * max_hops);
         }
-        StepTraffic { per_card, sync_cycles: cycles }
+        cycles += retry_cycles;
+        StepTraffic { per_card, sync_cycles: cycles, retry_cycles }
     }
 }
 
@@ -298,6 +390,52 @@ mod tests {
             model(8).step(&empty(8)).sync_cycles > model(2).step(&empty(2)).sync_cycles,
             "deeper trees must cost more sync"
         );
+    }
+
+    #[test]
+    fn degraded_links_charge_deterministic_retries() {
+        use crate::cluster::fault::{FaultEvent, FaultPlan};
+        let model = TrafficModel::new(4, 10, 100);
+        let fetches = vec![vec![0, 3, 0, 2], vec![0; 4], vec![0; 4], vec![0; 4]];
+        let window = FaultEvent::LinkDegrade { from: 0, to: 4, card: 1 };
+        let plan = FaultPlan::new(0xD16).with(window);
+        let clean = model.step(&fetches);
+        let lf = plan.link_faults_at(2);
+        let slow = model.step_with_faults(&fetches, Some(&lf));
+        assert!(slow.retry_cycles > 0);
+        assert!(slow.sync_cycles > clean.sync_cycles);
+        assert_eq!(slow.sync_cycles - clean.sync_cycles, slow.retry_cycles);
+        // Card 1 retransmits its halo serve and its fold edge; card 3's
+        // flows have no degraded endpoint (its fold edge pairs with card
+        // 2), so its counters match the clean step.
+        assert!(slow.per_card[1].retry_bytes > 0);
+        assert_eq!(slow.per_card[3].retry_bytes, 0);
+        assert_eq!(slow.per_card[3], clean.per_card[3]);
+        // Bit-reproducible: the same view yields the same step.
+        let again = model.step_with_faults(&fetches, Some(&lf));
+        assert_eq!(again.per_card, slow.per_card);
+        assert_eq!(again.sync_cycles, slow.sync_cycles);
+        // A clear view is the fault-free model exactly.
+        let clear = model.step_with_faults(&fetches, Some(&plan.link_faults_at(9)));
+        assert_eq!(clear.per_card, clean.per_card);
+        assert_eq!(clear.sync_cycles, clean.sync_cycles);
+    }
+
+    #[test]
+    fn degraded_hbm_slows_the_serve() {
+        use crate::cluster::fault::{FaultEvent, FaultPlan};
+        let model = TrafficModel::new(2, 16, 50);
+        // Card 0 pulls 70 features from card 1 — enough serve time for the
+        // 4× factor to surface in whole cycles.
+        let fetches = vec![vec![0, 70], vec![0, 0]];
+        let window = FaultEvent::HbmDegrade { from: 0, to: 2, card: 1 };
+        let plan = FaultPlan::new(0x4B).with(window);
+        let clean = model.step(&fetches);
+        let slow = model.step_with_faults(&fetches, Some(&plan.link_faults_at(1)));
+        assert!(slow.sync_cycles > clean.sync_cycles, "{slow:?} not slower than {clean:?}");
+        // HBM degradation costs time, not bytes.
+        assert_eq!(slow.per_card, clean.per_card);
+        assert_eq!(slow.retry_cycles, 0);
     }
 
     #[test]

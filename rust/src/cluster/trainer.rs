@@ -27,11 +27,13 @@
 //! (weights, velocities, step counter, master RNG state), so cluster
 //! runs resume byte-identically and single-card checkpoints interchange.
 
+use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cluster::allreduce::weighted_tree_reduce;
+use crate::cluster::fault::{FaultEvent, FaultPlan, StepFault};
 use crate::cluster::replica::ShardReplica;
 use crate::cluster::shard::ShardPlan;
 use crate::cluster::traffic::{TrafficModel, TrafficTotals};
@@ -66,6 +68,12 @@ pub struct ClusterTrainer<'g> {
     halo_fetches: Vec<Vec<u32>>,
     traffic: TrafficModel,
     totals: TrafficTotals,
+    /// Injected fault schedule (None = fault-free run).
+    faults: Option<FaultPlan>,
+    /// One flag per plan event: armed events never re-fire, even after a
+    /// `restore` rolls the step counter back past their step — a dead
+    /// card stays dead until the plan is rebuilt (recovery retires it).
+    fired: Vec<bool>,
 }
 
 impl<'g> ClusterTrainer<'g> {
@@ -115,7 +123,18 @@ impl<'g> ClusterTrainer<'g> {
             halo_fetches: vec![vec![0; shards]; shards],
             traffic,
             totals: TrafficTotals::default(),
+            faults: None,
+            fired: Vec::new(),
         })
+    }
+
+    /// Attach a deterministic fault schedule (replacing any previous
+    /// one).  Events fire by step number as training proceeds; transient
+    /// degradation windows route the traffic model through its
+    /// retry-with-backoff path.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fired = vec![false; plan.events.len()];
+        self.faults = Some(plan);
     }
 
     /// Convenience: shard-count accessor.
@@ -186,7 +205,8 @@ impl<'g> ClusterTrainer<'g> {
     }
 
     /// Run one closure per card on the worker pool (card index queue,
-    /// first error wins).
+    /// lowest-failing-card error wins — a deterministic tiebreak when
+    /// several cards fail in one step, independent of worker timing).
     fn for_each_card(
         &self,
         f: impl Fn(&mut ShardReplica<'g>, &mut GradBuffers) -> anyhow::Result<()> + Sync,
@@ -194,7 +214,7 @@ impl<'g> ClusterTrainer<'g> {
         let shards = self.replicas.len();
         let parallelism = shards.min(pool::resolve_threads(self.cfg.threads));
         let next = AtomicUsize::new(0);
-        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let err_slot: Mutex<Option<(usize, anyhow::Error)>> = Mutex::new(None);
         let replicas = &self.replicas;
         let grad_slots = &self.grad_slots;
         pool::global().run(parallelism, || loop {
@@ -205,24 +225,86 @@ impl<'g> ClusterTrainer<'g> {
             let mut rep = replicas[k].lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
             let mut grads = grad_slots[k].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
             if let Err(e) = f(&mut rep, &mut grads) {
-                let mut slot = first_err.lock().unwrap(); // lint: allow(R5, poisoned error slot means a card worker panicked; propagating is correct)
-                if slot.is_none() {
-                    *slot = Some(e);
+                let mut slot = err_slot.lock().unwrap(); // lint: allow(R5, poisoned error slot means a card worker panicked; propagating is correct)
+                if slot.as_ref().is_none_or(|(c, _)| k < *c) {
+                    *slot = Some((k, e));
                 }
             }
         });
-        match first_err.into_inner().unwrap() { // lint: allow(R5, pool barrier re-threw any worker panic before this point)
-            Some(e) => Err(e),
+        match err_slot.into_inner().unwrap() { // lint: allow(R5, pool barrier re-threw any worker panic before this point)
+            Some((_, e)) => Err(e),
             None => Ok(()),
+        }
+    }
+
+    /// Arm this step's scheduled card faults on their replicas (serially,
+    /// before the fan-out).  Each event fires at most once per plan —
+    /// `fired` survives `restore`, so a rolled-back run does not replay a
+    /// death that was already handled.
+    fn arm_faults(&mut self) {
+        let step = self.steps_done;
+        let Some(plan) = &self.faults else { return };
+        let shards = self.replicas.len();
+        for (ev, fired) in plan.events.iter().zip(&mut self.fired) {
+            let (s, card, fault) = match *ev {
+                FaultEvent::CardDeath { step: s, card } => (s, card, StepFault::Die),
+                FaultEvent::CardPanic { step: s, card } => (s, card, StepFault::Panic),
+                _ => continue,
+            };
+            if *fired || s != step {
+                continue;
+            }
+            *fired = true;
+            if card < shards {
+                let mut rep = self.replicas[card].lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
+                rep.fault = Some(fault);
+            }
+        }
+    }
+
+    /// A worker panic poisons the replica/grad mutexes it held; clear the
+    /// poison so the trainer stays usable — the *data* behind the locks
+    /// is stale either way, and the contract after a failed step is
+    /// restore-from-checkpoint, never continue-in-place.
+    fn clear_poison(&mut self) {
+        for slot in &self.replicas {
+            slot.clear_poison();
+        }
+        for slot in &self.grad_slots {
+            slot.clear_poison();
         }
     }
 
     /// One data-parallel training step; returns the batch-weighted global
     /// loss.
+    ///
+    /// On a card failure (injected or real) the step returns `Err` —
+    /// typed [`crate::cluster::fault::CardFailure`] for detected card
+    /// death — and the trainer is left *callable but stale*: the master
+    /// RNG has advanced past the failed batch while the model has not,
+    /// so the caller must `restore` from a checkpoint before stepping
+    /// again ([`crate::cluster::recovery`] automates this).  A worker
+    /// panic is caught at the pool barrier and surfaced the same way.
     pub fn step(&mut self) -> anyhow::Result<f32> {
+        self.arm_faults();
         self.route_batch();
         let state = &self.state;
-        self.for_each_card(|rep, grads| rep.grad_step(state, grads))?;
+        let fan = panic::catch_unwind(AssertUnwindSafe(|| {
+            self.for_each_card(|rep, grads| rep.grad_step(state, grads))
+        }));
+        let fan = match fan {
+            Ok(result) => result,
+            Err(payload) => {
+                self.clear_poison();
+                anyhow::bail!(
+                    "card worker panicked during step {}: {}; trainer state is stale — \
+                     restore from a checkpoint before continuing",
+                    self.steps_done,
+                    panic_message(payload.as_ref())
+                );
+            }
+        };
+        fan?;
         self.reclaim_master_stream();
 
         // Collect weights + loss + halo counts in canonical card order.
@@ -245,7 +327,13 @@ impl<'g> ClusterTrainer<'g> {
         // Fixed-order weighted all-reduce into slot 0, then one update.
         weighted_tree_reduce(&self.grad_slots, &self.weights);
         self.apply_update();
-        self.totals.absorb(&self.traffic.step(&self.halo_fetches));
+        let link_faults = self
+            .faults
+            .as_ref()
+            .map(|p| p.link_faults_at(self.steps_done))
+            .filter(|lf| !lf.is_clear());
+        self.totals
+            .absorb(&self.traffic.step_with_faults(&self.halo_fetches, link_faults.as_ref()));
         self.steps_done += 1;
         Ok(loss)
     }
@@ -325,6 +413,20 @@ impl<'g> ClusterTrainer<'g> {
         let (step, rng_state) = self.state.restore_from(ck)?;
         self.steps_done = step;
         self.rng = SplitMix64::new(rng_state);
+        // Note: `fired` is deliberately NOT reset — a fault that already
+        // fired stays fired across the rollback (the recovery protocol
+        // retires handled deaths from the plan instead).
         Ok(())
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }

@@ -25,6 +25,19 @@ pub fn artifact_dir(flag: Option<&str>) -> std::path::PathBuf {
     }
 }
 
+/// Default checkpoint-store directory for fault-tolerant runs,
+/// overridable via `--ckpt-dir` or the `GCN_NOC_CKPTS` environment
+/// variable.
+pub fn checkpoint_store_dir(flag: Option<&str>) -> std::path::PathBuf {
+    if let Some(f) = flag {
+        return f.into();
+    }
+    if let Ok(env) = std::env::var("GCN_NOC_CKPTS") {
+        return env.into();
+    }
+    "checkpoints".into()
+}
+
 /// Fast epoch-model configuration for interactive runs.
 ///
 /// `threads: 0` routes sampled passes on every available CPU; reports are
@@ -61,6 +74,12 @@ mod tests {
     fn artifact_dir_flag_wins() {
         let d = super::artifact_dir(Some("/tmp/zzz"));
         assert_eq!(d, std::path::PathBuf::from("/tmp/zzz"));
+    }
+
+    #[test]
+    fn checkpoint_dir_flag_wins() {
+        let d = super::checkpoint_store_dir(Some("/tmp/cks"));
+        assert_eq!(d, std::path::PathBuf::from("/tmp/cks"));
     }
 
     #[test]

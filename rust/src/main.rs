@@ -15,7 +15,8 @@
 
 use gcn_noc::baselines::{paper_row, GpuBaseline, HpGnnBaseline};
 use gcn_noc::cli::Args;
-use gcn_noc::cluster::{ClusterTrainer, GraphSharder};
+use gcn_noc::cluster::traffic::TrafficTotals;
+use gcn_noc::cluster::{recovery, ClusterTrainer, FaultPlan, GraphSharder};
 use gcn_noc::config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
 use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
@@ -74,7 +75,10 @@ commands:
              --backend pjrt runs AOT artifacts, --threads N, --resume CK,
              --checkpoint CK, --optimizer sgd|momentum; --shards N trains
              data-parallel over N simulated cards and reports the modeled
-             inter-card halo/all-reduce traffic)
+             inter-card halo/all-reduce traffic; --fault-plan SPEC injects
+             deterministic faults and recovers N-1 from card deaths, with
+             durable rotated checkpoints: --keep-checkpoints K
+             --ckpt-every N --ckpt-dir DIR)
   cluster    multi-card scaling report: steps/s + modeled traffic at
              1/2/4/8 shards (--dataset --nodes --steps --batch)
   route      Fig. 9 routing-cycle experiment (Fuse 1..4)
@@ -177,6 +181,9 @@ fn cmd_train_cluster(
         shards <= u16::MAX as usize,
         "--shards {shards} out of range (max 65535)"
     );
+    if let Some(spec) = args.get("fault-plan") {
+        return cmd_train_cluster_recovery(args, graph, cfg, shards, spec);
+    }
     eprintln!("sharding into {shards} cards...");
     let plan = GraphSharder::new(shards).shard(graph);
     for shard in &plan.shards {
@@ -219,25 +226,85 @@ fn cmd_train_cluster(
     Ok(())
 }
 
+/// `train --shards N --fault-plan SPEC`: the fault-tolerant path —
+/// deterministic injected faults, durable rotated checkpoints, N−1
+/// re-shard recovery on card death.
+fn cmd_train_cluster_recovery(
+    args: &Args,
+    graph: &gcn_noc::graph::generate::LabeledGraph,
+    cfg: TrainerConfig,
+    shards: usize,
+    spec: &str,
+) -> anyhow::Result<()> {
+    let faults = FaultPlan::parse(spec)?;
+    let keep = args.get_usize("keep-checkpoints", 3)?;
+    let every = args.get_u64("ckpt-every", 25)?;
+    let dir = config::checkpoint_store_dir(args.get("ckpt-dir"));
+    let store = gcn_noc::train::CheckpointStore::open(&dir, keep)?;
+    eprintln!(
+        "fault plan: {} event(s); checkpoints every {every} steps -> {} (keep {keep})",
+        faults.events.len(),
+        dir.display()
+    );
+    let outcome = recovery::train_with_recovery(graph, &cfg, shards, &faults, &store, every)?;
+    for ev in &outcome.recoveries {
+        println!(
+            "recovered: card {} died at step {} -> resumed from checkpoint {} \
+             ({} step(s) re-trained) on {} cards, ~{} re-shard cycles",
+            ev.card, ev.step, ev.resumed_from, ev.steps_lost, ev.shards_after, ev.reshard_cycles
+        );
+    }
+    if outcome.checkpoint_fallbacks > 0 {
+        println!(
+            "skipped {} torn/corrupt checkpoint generation(s) while restoring",
+            outcome.checkpoint_fallbacks
+        );
+    }
+    let (head, tail) = outcome.curve.head_tail_means(10);
+    println!(
+        "trained {} steps ({} -> {} cards): loss {head:.4} -> {tail:.4}, curve {}",
+        outcome.curve.len(),
+        shards,
+        outcome.final_shards,
+        if recovery::curve_is_healthy(&outcome.curve, 8) { "healthy" } else { "UNHEALTHY" }
+    );
+    if let Some(path) = args.get("csv") {
+        outcome.curve.write_csv(path)?;
+        println!("loss curve written to {path}");
+    }
+    let dims = gcn_noc::cluster::traffic::ClusterTopology::new(shards).card_dims;
+    print_traffic_totals(&outcome.traffic, shards, dims);
+    Ok(())
+}
+
 /// Render the per-card traffic table + sync estimate of a cluster run.
 fn print_traffic_report(trainer: &ClusterTrainer<'_>) {
-    let totals = trainer.traffic_totals();
+    let model = trainer.traffic_model();
+    print_traffic_totals(trainer.traffic_totals(), model.topo.cards, model.topo.card_dims);
+}
+
+fn print_traffic_totals(totals: &TrafficTotals, cards: usize, card_dims: u32) {
     if totals.steps == 0 {
         return;
     }
-    let model = trainer.traffic_model();
     println!(
-        "\ninter-card traffic ({} cards = outermost hypercube axis, {} card dim(s)):",
-        model.topo.cards, model.topo.card_dims
+        "\ninter-card traffic ({cards} cards = outermost hypercube axis, {card_dims} card dim(s)):"
     );
-    let mut table =
-        Table::new(vec!["card", "halo in MB", "halo out MB", "allreduce MB", "hop-MB"]);
+    let mut table = Table::new(vec![
+        "card",
+        "halo in MB",
+        "halo out MB",
+        "allreduce MB",
+        "retry MB",
+        "hop-MB",
+    ]);
     for (k, c) in totals.per_card.iter().enumerate() {
         table.row(vec![
             format!("{k}"),
             format!("{:.3}", c.halo_bytes_in as f64 / 1e6),
             format!("{:.3}", c.halo_bytes_out as f64 / 1e6),
             format!("{:.3}", c.allreduce_bytes as f64 / 1e6),
+            format!("{:.3}", c.retry_bytes as f64 / 1e6),
             format!("{:.3}", c.hop_bytes as f64 / 1e6),
         ]);
     }
@@ -248,6 +315,13 @@ fn print_traffic_report(trainer: &ClusterTrainer<'_>) {
         totals.cycles_per_step() / gcn_noc::core_model::CLOCK_HZ * 1e6,
         totals.bytes_per_step() / 1e3
     );
+    if totals.retry_cycles > 0 {
+        println!(
+            "degraded windows: {} retry cycles total ({:.1}% of sync)",
+            totals.retry_cycles,
+            100.0 * totals.retry_cycles as f64 / totals.sync_cycles.max(1) as f64
+        );
+    }
 }
 
 /// `cluster`: the multi-card scaling report — steps/s + modeled traffic

@@ -116,8 +116,16 @@ impl ModelState {
             ("v1", &mut self.v1),
             ("v2", &mut self.v2),
         ] {
-            let m = ck.get(name).ok_or_else(|| anyhow::anyhow!("checkpoint missing {name}"))?;
-            anyhow::ensure!(m.shape() == slot.shape(), "{name} shape mismatch");
+            let m = ck.get(name).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint missing tensor {name} (weights-only or foreign file?)")
+            })?;
+            anyhow::ensure!(
+                m.shape() == slot.shape(),
+                "checkpoint tensor {name} has shape {:?} but the prepared model expects {:?} — \
+                 was this written under a different artifact tag?",
+                m.shape(),
+                slot.shape()
+            );
             *slot = m.clone();
         }
         let step = ck.scalar("step").ok_or_else(|| {

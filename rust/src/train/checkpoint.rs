@@ -5,19 +5,30 @@
 //!   magic "GCNW" | version u32 | count u32 |
 //!   per tensor: name_len u32 | name bytes | rows u32 | cols u32 | f32 LE data
 //!   (v2) scalar_count u32 | per scalar: name_len u32 | name bytes | u64 LE
+//!   (v3) fnv1a64 checksum u64 LE over everything above
 //! ```
 //!
 //! Version 2 adds the named-u64 scalar section so a checkpoint carries
 //! the trainer's step counter and RNG state — enough to resume a run
-//! with a **byte-identical** loss curve.  Version-1 files still load
-//! (empty scalar section).
+//! with a **byte-identical** loss curve.  Version 3 appends an FNV-1a64
+//! checksum footer, verified on load, so a torn or bit-rotted file is a
+//! descriptive error instead of silently misloaded weights.  Version-1
+//! and version-2 files still load.
+//!
+//! Durability: [`Checkpoint::save`] writes to `<path>.tmp` and renames —
+//! a crash mid-write leaves the previous file intact.  The
+//! [`CheckpointStore`] rotates the last `keep` generations (named by the
+//! step counter) and [`CheckpointStore::load_latest`] falls back,
+//! newest-first, past generations that fail to parse — the recovery
+//! protocol in [`crate::cluster::recovery`] rolls back through it.
 
 use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
 
 use crate::util::matrix::Matrix;
 
 const MAGIC: &[u8; 4] = b"GCNW";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// A named set of weight tensors plus named u64 scalars (v2).
 #[derive(Clone, Debug, PartialEq)]
@@ -43,7 +54,8 @@ impl Checkpoint {
         self.scalars.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
     }
 
-    /// Serialize to the binary format (always writes version 2).
+    /// Serialize to the binary format (always writes version 3: scalar
+    /// section + checksum footer).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
@@ -64,13 +76,43 @@ impl Checkpoint {
             out.extend_from_slice(name.as_bytes());
             out.extend_from_slice(&v.to_le_bytes());
         }
+        let sum = fnv1a64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
         out
     }
 
-    /// Parse from the binary format.
-    pub fn from_bytes(mut buf: &[u8]) -> anyhow::Result<Checkpoint> {
+    /// Parse from the binary format.  v3 files are checksum-verified
+    /// before any field is trusted; truncation, trailing garbage and
+    /// version/magic mismatches are all descriptive errors.
+    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(buf.len() >= 8, "checkpoint truncated: {} byte header", buf.len());
+        anyhow::ensure!(&buf[..4] == MAGIC, "bad magic (not a GCNW checkpoint)");
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        anyhow::ensure!(
+            (1..=VERSION).contains(&version),
+            "unsupported checkpoint version {version} (this build reads 1..={VERSION})"
+        );
+        let body = if version >= 3 {
+            anyhow::ensure!(buf.len() >= 16, "checkpoint truncated: no checksum footer");
+            let (body, footer) = buf.split_at(buf.len() - 8);
+            let stored = u64::from_le_bytes(footer.try_into().unwrap());
+            let computed = fnv1a64(body);
+            anyhow::ensure!(
+                stored == computed,
+                "checkpoint checksum mismatch (stored {stored:#018x}, computed \
+                 {computed:#018x}) — the file is torn or corrupted"
+            );
+            body
+        } else {
+            buf
+        };
+
         fn take<'a>(buf: &mut &'a [u8], n: usize) -> anyhow::Result<&'a [u8]> {
-            anyhow::ensure!(buf.len() >= n, "checkpoint truncated");
+            anyhow::ensure!(
+                buf.len() >= n,
+                "checkpoint truncated: needed {n} more bytes, {} left",
+                buf.len()
+            );
             let (head, tail) = buf.split_at(n);
             *buf = tail;
             Ok(head)
@@ -78,9 +120,7 @@ impl Checkpoint {
         fn take_u32(buf: &mut &[u8]) -> anyhow::Result<u32> {
             Ok(u32::from_le_bytes(take(buf, 4)?.try_into().unwrap()))
         }
-        anyhow::ensure!(take(&mut buf, 4)? == MAGIC, "bad magic");
-        let version = take_u32(&mut buf)?;
-        anyhow::ensure!((1..=VERSION).contains(&version), "unsupported version {version}");
+        let mut buf = &body[8..];
         let count = take_u32(&mut buf)? as usize;
         let mut tensors = Vec::with_capacity(count);
         for _ in 0..count {
@@ -115,16 +155,170 @@ impl Checkpoint {
         Ok(Checkpoint { tensors, scalars })
     }
 
-    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&self.to_bytes())?;
+    /// Atomic save: write `<path>.tmp`, fsync, rename over `path` — a
+    /// crash mid-write never leaves a half-written checkpoint under the
+    /// final name.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        write_atomic(path.as_ref(), &self.to_bytes())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+        let path = path.as_ref();
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open checkpoint {}: {e}", path.display()))?
+            .read_to_end(&mut buf)
+            .map_err(|e| anyhow::anyhow!("read checkpoint {}: {e}", path.display()))?;
+        Self::from_bytes(&buf).map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+}
+
+/// FNV-1a 64-bit — the footer hash (fast, dependency-free, and plenty to
+/// catch torn writes and bit rot; this is an integrity check, not crypto).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Write-to-temp + fsync + rename.
+fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("create {}: {e}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("rename {} over {}: {e}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// A directory of rotated checkpoint generations: `ck-<step:08>.bin`,
+/// newest `keep` kept, every write atomic.
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+/// What [`CheckpointStore::load_latest`] found.
+pub struct RestoredCheckpoint {
+    pub checkpoint: Checkpoint,
+    /// Generation (= step counter) the bytes came from.
+    pub generation: u64,
+    /// Newer generations skipped because they failed to load (torn /
+    /// corrupted / unreadable).
+    pub fell_back: usize,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a rotation directory keeping the newest
+    /// `keep` generations.
+    pub fn open(dir: impl AsRef<Path>, keep: usize) -> anyhow::Result<CheckpointStore> {
+        anyhow::ensure!(keep >= 1, "checkpoint store must keep at least one generation");
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("create checkpoint dir {}: {e}", dir.display()))?;
+        Ok(CheckpointStore { dir, keep })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
+    fn gen_path(&self, generation: u64) -> PathBuf {
+        self.dir.join(format!("ck-{generation:08}.bin"))
+    }
+
+    /// Sorted (oldest-first) generation numbers currently on disk.
+    pub fn generations(&self) -> anyhow::Result<Vec<u64>> {
+        let mut gens = Vec::new();
+        let entries = std::fs::read_dir(&self.dir)
+            .map_err(|e| anyhow::anyhow!("read checkpoint dir {}: {e}", self.dir.display()))?;
+        for entry in entries {
+            let name = entry?.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(num) = name.strip_prefix("ck-").and_then(|s| s.strip_suffix(".bin")) else {
+                continue;
+            };
+            if let Ok(g) = num.parse::<u64>() {
+                gens.push(g);
+            }
+        }
+        gens.sort_unstable();
+        Ok(gens)
+    }
+
+    /// Durably save a generation (named by the checkpoint's `step`
+    /// scalar) and prune to the newest `keep`; returns the generation
+    /// number.
+    pub fn save(&self, ck: &Checkpoint) -> anyhow::Result<u64> {
+        self.write_generation(ck, &ck.to_bytes())
+    }
+
+    /// Drill hook: write this generation **torn** — only the first ⅔ of
+    /// the bytes land, as if the process died mid-write on a filesystem
+    /// without atomic rename.  The checksum catches it on load and
+    /// [`CheckpointStore::load_latest`] falls back a generation.
+    pub fn save_torn(&self, ck: &Checkpoint) -> anyhow::Result<u64> {
+        let bytes = ck.to_bytes();
+        let torn = &bytes[..bytes.len() - bytes.len() / 3];
+        self.write_generation(ck, torn)
+    }
+
+    fn write_generation(&self, ck: &Checkpoint, bytes: &[u8]) -> anyhow::Result<u64> {
+        let generation = ck.scalar("step").ok_or_else(|| {
+            anyhow::anyhow!("checkpoint lacks the 'step' scalar the store names generations by")
+        })?;
+        write_atomic(&self.gen_path(generation), bytes)?;
+        self.prune()?;
+        Ok(generation)
+    }
+
+    fn prune(&self) -> anyhow::Result<()> {
+        let gens = self.generations()?;
+        if gens.len() > self.keep {
+            for &g in &gens[..gens.len() - self.keep] {
+                std::fs::remove_file(self.gen_path(g)).ok();
+            }
+        }
         Ok(())
     }
 
-    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Checkpoint> {
-        let mut buf = Vec::new();
-        std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        Self::from_bytes(&buf)
+    /// Load the newest generation that parses, falling back past torn or
+    /// corrupted ones.  `Ok(None)` when the store is empty; an error
+    /// (listing every per-generation failure) when generations exist but
+    /// none loads.
+    pub fn load_latest(&self) -> anyhow::Result<Option<RestoredCheckpoint>> {
+        let gens = self.generations()?;
+        let mut failures: Vec<String> = Vec::new();
+        for (fell_back, &g) in gens.iter().rev().enumerate() {
+            match Checkpoint::load(self.gen_path(g)) {
+                Ok(checkpoint) => {
+                    return Ok(Some(RestoredCheckpoint { checkpoint, generation: g, fell_back }))
+                }
+                Err(e) => failures.push(e.to_string()),
+            }
+        }
+        if gens.is_empty() {
+            return Ok(None);
+        }
+        anyhow::bail!(
+            "no loadable checkpoint generation in {} ({} candidates): {}",
+            self.dir.display(),
+            gens.len(),
+            failures.join("; ")
+        )
     }
 }
 
@@ -159,6 +353,16 @@ mod tests {
     }
 
     #[test]
+    fn atomic_save_leaves_no_temp_file() {
+        let path = std::env::temp_dir().join("gcn_noc_ck_atomic.bin");
+        sample().save(&path).unwrap();
+        assert!(path.exists());
+        let tmp = std::env::temp_dir().join("gcn_noc_ck_atomic.bin.tmp");
+        assert!(!tmp.exists(), "temp file must be renamed away");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn get_by_name() {
         let ck = sample();
         assert_eq!(ck.get("w1").unwrap().shape(), (8, 4));
@@ -178,6 +382,17 @@ mod tests {
     }
 
     #[test]
+    fn checksum_catches_payload_bit_flips() {
+        let mut bytes = sample().to_bytes();
+        // Flip one bit in the middle of the tensor payload — the length,
+        // magic and version all stay plausible, only the checksum knows.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "wrong error: {err}");
+    }
+
+    #[test]
     fn scalars_roundtrip() {
         let mut ck = sample();
         ck.scalars = vec![("step".into(), 1234), ("rng".into(), u64::MAX - 7)];
@@ -190,14 +405,84 @@ mod tests {
 
     #[test]
     fn version1_files_still_load() {
-        // A v1 writer stops after the tensor section.
+        // A v1 writer stops after the tensor section: strip the checksum
+        // footer (8) and the empty scalar count (4), rewrite the version.
         let ck = sample();
         let mut bytes = ck.to_bytes();
-        // Strip the (empty) scalar section and rewrite the version field.
-        bytes.truncate(bytes.len() - 4);
+        bytes.truncate(bytes.len() - 12);
         bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
         let parsed = Checkpoint::from_bytes(&bytes).unwrap();
         assert_eq!(parsed.tensors, ck.tensors);
         assert!(parsed.scalars.is_empty());
+    }
+
+    #[test]
+    fn version2_files_still_load() {
+        // A v2 writer stops before the checksum footer.
+        let mut ck = sample();
+        ck.scalars = vec![("step".into(), 8), ("rng".into(), 42)];
+        let mut bytes = ck.to_bytes();
+        bytes.truncate(bytes.len() - 8);
+        bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+        let parsed = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(parsed, ck);
+    }
+
+    #[test]
+    fn future_versions_are_refused_descriptively() {
+        let mut bytes = sample().to_bytes();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "wrong error: {err}");
+    }
+
+    fn stamped(step: u64) -> Checkpoint {
+        let mut ck = sample();
+        ck.scalars = vec![("step".into(), step), ("rng".into(), 0xAB)];
+        ck
+    }
+
+    fn fresh_store(tag: &str, keep: usize) -> CheckpointStore {
+        let dir = std::env::temp_dir().join(format!("gcn_noc_ck_store_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        CheckpointStore::open(&dir, keep).unwrap()
+    }
+
+    #[test]
+    fn store_rotates_to_keep_newest_generations() {
+        let store = fresh_store("rotate", 2);
+        for step in [5u64, 10, 15, 20] {
+            store.save(&stamped(step)).unwrap();
+        }
+        assert_eq!(store.generations().unwrap(), vec![15, 20]);
+        let latest = store.load_latest().unwrap().unwrap();
+        assert_eq!(latest.generation, 20);
+        assert_eq!(latest.fell_back, 0);
+        assert_eq!(latest.checkpoint.scalar("step"), Some(20));
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn store_falls_back_past_a_torn_latest() {
+        let store = fresh_store("torn", 3);
+        store.save(&stamped(5)).unwrap();
+        store.save(&stamped(10)).unwrap();
+        store.save_torn(&stamped(15)).unwrap();
+        let restored = store.load_latest().unwrap().unwrap();
+        assert_eq!(restored.generation, 10, "must fall back to generation K-1");
+        assert_eq!(restored.fell_back, 1);
+        assert_eq!(restored.checkpoint.scalar("step"), Some(10));
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn store_empty_is_none_and_all_torn_is_an_error() {
+        let store = fresh_store("allbad", 2);
+        assert!(store.load_latest().unwrap().is_none());
+        store.save_torn(&stamped(5)).unwrap();
+        store.save_torn(&stamped(10)).unwrap();
+        let err = store.load_latest().unwrap_err().to_string();
+        assert!(err.contains("no loadable checkpoint"), "wrong error: {err}");
+        std::fs::remove_dir_all(store.dir()).ok();
     }
 }

@@ -29,6 +29,14 @@ impl LossCurve {
         self.records.is_empty()
     }
 
+    /// Drop every record at or past `step` — the rollback companion to
+    /// [`LossCurve::push`]: after restoring a checkpoint stamped at
+    /// `step`, the curve must not retain losses the resumed run will
+    /// re-record.
+    pub fn truncate_to_step(&mut self, step: u64) {
+        self.records.retain(|r| r.step < step);
+    }
+
     /// Mean loss over the first/last `k` steps (trend check).
     pub fn head_tail_means(&self, k: usize) -> (f64, f64) {
         let k = k.min(self.records.len());
@@ -122,6 +130,16 @@ mod tests {
         assert_eq!(c.mean_step_seconds(), 0.0);
         assert!(c.is_empty());
         assert!(c.smoothed(5).is_empty());
+    }
+
+    #[test]
+    fn truncate_drops_records_at_and_past_the_step() {
+        let mut c = curve();
+        c.truncate_to_step(4);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.records.last().unwrap().step, 3);
+        c.truncate_to_step(0);
+        assert!(c.is_empty());
     }
 
     #[test]

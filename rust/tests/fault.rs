@@ -1,0 +1,257 @@
+//! Fault-tolerance integration tests — checkpoint durability contracts,
+//! worker-panic containment, and the full N−1 killer drill: kill a card
+//! mid-run, roll back to the last durable generation, re-shard, and
+//! finish bit-deterministically at any pool size.
+
+use std::time::Duration;
+
+use gcn_noc::cluster::{
+    recovery, train_with_recovery, ClusterTrainer, FaultEvent, FaultPlan, GraphSharder,
+};
+use gcn_noc::graph::generate::{community_graph, LabeledGraph};
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::train::{Checkpoint, CheckpointStore, LossCurve};
+use gcn_noc::util::matrix::Matrix;
+use gcn_noc::util::rng::SplitMix64;
+
+/// A small learnable graph matching the "small" tag's feature/class dims.
+fn small_graph(seed: u64) -> LabeledGraph {
+    let mut rng = SplitMix64::new(seed);
+    community_graph(1200, 10.0, 2.3, 64, 8, 0.7, &mut rng)
+}
+
+fn cfg(steps: usize, threads: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig { steps, lr: 0.1, log_every: 0, threads, seed, ..Default::default() }
+}
+
+fn fresh_store(tag: &str, keep: usize) -> CheckpointStore {
+    let dir = std::env::temp_dir().join(format!("gcn_noc_fault_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    CheckpointStore::open(&dir, keep).unwrap()
+}
+
+/// The sharder invariants the re-sharded N−1 cut must keep satisfying
+/// (mirrors the bounds pinned in `rust/tests/cluster.rs`).
+fn assert_plan_invariants(g: &LabeledGraph, shards: usize) {
+    let plan = GraphSharder::new(shards).shard(g);
+    let cap = g.num_nodes().div_ceil(shards);
+    let node_weight = |u: usize| 1 + g.adj.degree(u) as u64;
+    let weights: Vec<u64> = plan
+        .shards
+        .iter()
+        .map(|s| s.owned.iter().map(|&u| node_weight(u as usize)).sum())
+        .collect();
+    let avg = weights.iter().sum::<u64>() / shards as u64;
+    let max_item = (0..g.num_nodes()).map(node_weight).max().unwrap();
+    for (s, shard) in plan.shards.iter().enumerate() {
+        assert!(!shard.owned.is_empty(), "empty shard {s}/{shards}");
+        assert!(shard.owned.len() <= cap, "node cap violated on shard {s}/{shards}");
+        assert!(
+            weights[s] <= avg + max_item + avg / 2,
+            "shard {s}: weight {} vs avg {avg} (max item {max_item})",
+            weights[s]
+        );
+        // Halo = exactly the out-of-shard neighbors of owned nodes.
+        let mut expect: Vec<u32> = shard
+            .owned
+            .iter()
+            .flat_map(|&u| g.adj.row(u as usize).0.iter().copied())
+            .filter(|&v| plan.owner[v as usize] as usize != shard.id)
+            .collect();
+        expect.sort_unstable();
+        expect.dedup();
+        assert_eq!(shard.halo, expect, "halo mismatch on shard {}/{shards}", shard.id);
+    }
+}
+
+#[test]
+fn truncated_and_mismatched_checkpoints_are_rejected_descriptively() {
+    let g = small_graph(0xFA01);
+    let plan = GraphSharder::new(2).shard(&g);
+    let mut trainer = ClusterTrainer::new(&g, &plan, cfg(2, 1, 0xFA02)).unwrap();
+
+    // A v2-era file (no checksum footer) torn mid-tensor must be a
+    // descriptive truncation error, not a panic or a silent misload.
+    let mut bytes = trainer.checkpoint().to_bytes();
+    bytes.truncate(bytes.len() - 8); // strip the v3 footer
+    bytes[4..8].copy_from_slice(&2u32.to_le_bytes());
+    Checkpoint::from_bytes(&bytes).expect("intact v2 files must still load");
+    bytes.truncate(bytes.len() / 2);
+    let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "wrong error: {err}");
+
+    // Shape mismatch: the restore names the tensor and both shapes.
+    let mut bad = trainer.checkpoint();
+    for (name, m) in &mut bad.tensors {
+        if name == "w1" {
+            *m = Matrix::zeros(3, 3);
+        }
+    }
+    let err = trainer.restore(&bad).unwrap_err().to_string();
+    assert!(err.contains("w1") && err.contains("shape"), "wrong error: {err}");
+    let mut solo = Trainer::new(&g, cfg(2, 1, 0xFA02)).unwrap();
+    let err = solo.restore(&bad).unwrap_err().to_string();
+    assert!(err.contains("w1") && err.contains("shape"), "wrong error: {err}");
+
+    // Missing tensor: named, with the likely cause.
+    let mut missing = trainer.checkpoint();
+    missing.tensors.retain(|(n, _)| n != "v2");
+    let err = trainer.restore(&missing).unwrap_err().to_string();
+    assert!(err.contains("missing tensor v2"), "wrong error: {err}");
+}
+
+#[test]
+fn panicking_card_surfaces_as_error_and_trainer_stays_usable() {
+    let g = small_graph(0xFA10);
+    let plan = GraphSharder::new(4).shard(&g);
+
+    // Fault-free reference run.
+    let mut clean = ClusterTrainer::new(&g, &plan, cfg(6, 2, 0xFA11)).unwrap();
+    let clean_curve = clean.train().unwrap();
+
+    // Same run, but card 1's worker panics at step 3: the step must
+    // surface as Err (not abort the process), and restore + step must
+    // replay the failed step bit-identically.
+    let mut faulted = ClusterTrainer::new(&g, &plan, cfg(6, 2, 0xFA11)).unwrap();
+    faulted.set_fault_plan(FaultPlan::new(1).with(FaultEvent::CardPanic { step: 3, card: 1 }));
+    let mut curve = LossCurve::default();
+    let mut ck = faulted.checkpoint();
+    let mut failures = 0;
+    while faulted.steps_done() < 6 {
+        let s = faulted.steps_done();
+        match faulted.step() {
+            Ok(loss) => {
+                curve.push(s, loss, Duration::ZERO);
+                ck = faulted.checkpoint();
+            }
+            Err(e) => {
+                failures += 1;
+                let msg = e.to_string();
+                assert_eq!(s, 3, "panic fired at the wrong step");
+                assert!(msg.contains("panicked"), "wrong error: {msg}");
+                curve.truncate_to_step(ck.scalar("step").unwrap());
+                faulted.restore(&ck).unwrap();
+            }
+        }
+    }
+    assert_eq!(failures, 1, "the injected panic must fire exactly once");
+    assert_eq!(curve.len(), clean_curve.len());
+    for (a, b) in clean_curve.records.iter().zip(&curve.records) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverges at step {}", a.step);
+    }
+    assert_eq!(clean.state.w1, faulted.state.w1, "final w1 diverges after recovery");
+    assert_eq!(clean.state.w2, faulted.state.w2, "final w2 diverges after recovery");
+    // The trainer remains fully usable (poison cleared, pool intact).
+    let (eval_loss, acc) = faulted.evaluate(64).unwrap();
+    assert!(eval_loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn killer_drill_kills_card_2_of_4_and_recovers_bit_deterministically() {
+    let g = small_graph(0xFA20);
+    let total = 16usize;
+    let mut reference: Option<(Vec<u32>, gcn_noc::train::ModelState)> = None;
+    for threads in [1usize, 2, 8] {
+        let store = fresh_store(&format!("drill_t{threads}"), 3);
+        let faults = FaultPlan::new(0xD811).with(FaultEvent::CardDeath { step: 7, card: 2 });
+        let outcome =
+            train_with_recovery(&g, &cfg(total, threads, 0xFA21), 4, &faults, &store, 5).unwrap();
+        std::fs::remove_dir_all(store.dir()).ok();
+
+        assert_eq!(outcome.final_shards, 3);
+        assert_eq!(outcome.checkpoint_fallbacks, 0);
+        assert_eq!(outcome.recoveries.len(), 1);
+        let ev = outcome.recoveries[0];
+        assert_eq!(ev.step, 7, "death must be detected at step 7");
+        assert_eq!(ev.card, 2);
+        assert_eq!(ev.resumed_from, 5, "last durable generation before step 7");
+        assert_eq!(ev.steps_lost, 2);
+        assert_eq!(ev.shards_after, 3);
+        assert!(ev.reshard_cycles > 0);
+
+        // The committed curve covers exactly 0..16, once each, finite and
+        // trending down.
+        let steps: Vec<u64> = outcome.curve.records.iter().map(|r| r.step).collect();
+        assert_eq!(steps, (0..total as u64).collect::<Vec<_>>());
+        assert!(outcome.curve.records.iter().all(|r| r.loss.is_finite()));
+        assert!(recovery::curve_is_healthy(&outcome.curve, 5), "recovered curve unhealthy");
+
+        // Era 1 commits steps 0..7, era 2 re-trains 5..16: 18 modeled
+        // steps of traffic, none of it retry (no degraded windows).
+        assert_eq!(outcome.traffic.steps, 18);
+        assert_eq!(outcome.traffic.retry_cycles, 0);
+
+        let bits: Vec<u32> = outcome.curve.records.iter().map(|r| r.loss.to_bits()).collect();
+        match &reference {
+            None => reference = Some((bits, outcome.final_state.clone())),
+            Some((ref_bits, ref_state)) => {
+                assert_eq!(&bits, ref_bits, "recovered curve diverges at {threads} threads");
+                assert_eq!(outcome.final_state.w1, ref_state.w1, "w1 diverges at {threads}");
+                assert_eq!(outcome.final_state.w2, ref_state.w2, "w2 diverges at {threads}");
+            }
+        }
+    }
+    // The deterministic 3-way cut the recovery rebuilt must satisfy the
+    // sharder's balance and halo invariants.
+    assert_plan_invariants(&g, 3);
+}
+
+#[test]
+fn corrupted_latest_generation_falls_back_to_k_minus_1() {
+    let g = small_graph(0xFA30);
+    let store = fresh_store("corrupt", 3);
+    let faults = FaultPlan::new(3)
+        .with(FaultEvent::CheckpointCorrupt { step: 6 })
+        .with(FaultEvent::CardDeath { step: 7, card: 1 });
+    let outcome = train_with_recovery(&g, &cfg(10, 2, 0xFA31), 3, &faults, &store, 3).unwrap();
+    std::fs::remove_dir_all(store.dir()).ok();
+
+    assert_eq!(outcome.recoveries.len(), 1);
+    let ev = outcome.recoveries[0];
+    assert_eq!(ev.step, 7);
+    assert_eq!(ev.resumed_from, 3, "torn generation 6 must fall back to generation 3");
+    assert_eq!(ev.steps_lost, 4);
+    assert_eq!(outcome.checkpoint_fallbacks, 1, "exactly one torn generation skipped");
+    assert_eq!(outcome.final_shards, 2);
+    assert_eq!(outcome.curve.len(), 10);
+    assert!(outcome.curve.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn single_shard_death_is_a_clean_error_not_a_hang() {
+    let g = small_graph(0xFA40);
+    let store = fresh_store("single", 2);
+    let faults = FaultPlan::new(1).with(FaultEvent::CardDeath { step: 2, card: 0 });
+    let err = train_with_recovery(&g, &cfg(6, 1, 0xFA41), 1, &faults, &store, 2)
+        .unwrap_err()
+        .to_string();
+    std::fs::remove_dir_all(store.dir()).ok();
+    assert!(err.contains("--shards"), "wrong error: {err}");
+    assert!(err.contains("card 0"), "wrong error: {err}");
+}
+
+#[test]
+fn fault_free_recovery_run_matches_plain_cluster_training() {
+    let g = small_graph(0xFA50);
+    let plan = GraphSharder::new(3).shard(&g);
+    let mut plain = ClusterTrainer::new(&g, &plan, cfg(8, 2, 0xFA51)).unwrap();
+    let plain_curve = plain.train().unwrap();
+
+    let store = fresh_store("faultfree", 2);
+    let no_faults = FaultPlan::default();
+    let outcome = train_with_recovery(&g, &cfg(8, 2, 0xFA51), 3, &no_faults, &store, 4).unwrap();
+    std::fs::remove_dir_all(store.dir()).ok();
+
+    assert!(outcome.recoveries.is_empty());
+    assert_eq!(outcome.final_shards, 3);
+    assert_eq!(outcome.checkpoint_fallbacks, 0);
+    assert_eq!(outcome.curve.len(), plain_curve.len());
+    for (a, b) in plain_curve.records.iter().zip(&outcome.curve.records) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverges at step {}", a.step);
+    }
+    assert_eq!(plain.state.w1, outcome.final_state.w1);
+    assert_eq!(plain.state.w2, outcome.final_state.w2);
+}

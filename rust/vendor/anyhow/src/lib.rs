@@ -33,6 +33,14 @@ impl Error {
     pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
         self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
     }
+
+    /// Borrow the retained source as a concrete error type (the subset of
+    /// upstream `downcast_ref` this crate's callers need: typed errors
+    /// enter via the blanket `From`, which stores them as the boxed
+    /// source, so downcasting the source recovers the original).
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source().and_then(|s| s.downcast_ref::<E>())
+    }
 }
 
 impl fmt::Display for Error {
@@ -110,6 +118,24 @@ mod tests {
         let e = parse("nope").unwrap_err();
         assert!(e.source().is_some());
         assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_source() {
+        #[derive(Debug, PartialEq)]
+        struct Custom(u32);
+        impl fmt::Display for Custom {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "custom error {}", self.0)
+            }
+        }
+        impl StdError for Custom {}
+
+        let e: Error = Custom(7).into();
+        assert_eq!(e.downcast_ref::<Custom>(), Some(&Custom(7)));
+        assert!(e.downcast_ref::<std::num::ParseIntError>().is_none());
+        // A message-only error has no source to downcast.
+        assert!(Error::msg("plain").downcast_ref::<Custom>().is_none());
     }
 
     #[test]
