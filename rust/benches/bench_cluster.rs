@@ -140,4 +140,5 @@ fn main() {
         Ok(()) => println!("\nbaseline written to {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
+    common::check_exit();
 }

@@ -111,6 +111,40 @@ fn main() {
         sweep[sweep.len() - 1]
     );
 
+    // --- Sweep 3: redundancy-eliminated aggregation, dedup on vs off. ---
+    banner("epoch model: redundancy-eliminated aggregation (dedup on vs off)");
+    let mut on_cfg = cfg;
+    on_cfg.dedup = true;
+    let mut off_cfg = cfg;
+    off_cfg.dedup = false;
+    let rep_on = EpochModel::new(spec, ModelKind::Gcn, on_cfg).run(&mut SplitMix64::new(7));
+    let rep_off = EpochModel::new(spec, ModelKind::Gcn, off_cfg).run(&mut SplitMix64::new(7));
+    assert_eq!(
+        rep_off.noc_messages_saved_per_epoch, 0,
+        "dedup off must not report savings"
+    );
+    assert!(
+        rep_on.noc_messages_per_epoch <= rep_off.noc_messages_per_epoch,
+        "dedup must not route more messages than the plain schedule"
+    );
+    let routed = rep_on.noc_messages_per_epoch;
+    let saved = rep_on.noc_messages_saved_per_epoch;
+    let msg_cut = saved as f64 / (routed + saved).max(1) as f64;
+    println!(
+        "dedup off: {} msgs/epoch | dedup on: {routed} msgs/epoch \
+         ({saved} saved, {:.1}% cut, {} agg MACs saved)",
+        rep_off.noc_messages_per_epoch,
+        msg_cut * 100.0,
+        rep_on.agg_macs_saved_per_epoch
+    );
+    println!(
+        "dedup structure: {} shared partials, {} duplicate rows | sample cache {} hits / {} misses",
+        rep_on.dedup_shared_partials,
+        rep_on.dedup_duplicate_rows,
+        rep_on.sample_cache_hits,
+        rep_on.sample_cache_misses
+    );
+
     // --- Baseline artifact. ---
     let thread_json: Vec<String> = sweep
         .iter()
@@ -125,18 +159,28 @@ fn main() {
          \"stats_sink_waves_per_sec\": {:.1},\n  \
          \"stats_vs_table_speedup\": {wave_speedup:.3},\n  \
          \"epoch_model\": [\n{}\n  ],\n  \
-         \"epoch_speedup_1_to_8\": {epoch_speedup:.3}\n}}\n",
+         \"epoch_speedup_1_to_8\": {epoch_speedup:.3},\n  \
+         \"noc_messages_per_epoch\": {routed},\n  \
+         \"noc_messages_saved_per_epoch\": {saved},\n  \
+         \"agg_macs_saved_per_epoch\": {},\n  \
+         \"dedup_msg_cut\": {msg_cut:.4}\n}}\n",
         common::smoke(),
         1.0 / t_stats,
         thread_json.join(",\n"),
+        rep_on.agg_macs_saved_per_epoch,
     );
     let path = "BENCH_routing.json";
     compare_baseline(path, "stats_sink_waves_per_sec", 1.0 / t_stats, true);
     // First "seconds" in the artifact = epoch model at 1 thread.
     compare_baseline(path, "seconds", epoch_times[0], false);
     compare_baseline(path, "epoch_speedup_1_to_8", epoch_speedup, true);
+    // Routed messages are a deterministic count: more of them means the
+    // dedup pass lost coverage, so gate on it like a cost.
+    compare_baseline(path, "noc_messages_per_epoch", routed as f64, false);
+    compare_baseline(path, "dedup_msg_cut", msg_cut, true);
     match std::fs::write(path, &json) {
         Ok(()) => println!("\nbaseline written to {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
+    common::check_exit();
 }

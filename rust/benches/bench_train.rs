@@ -122,6 +122,38 @@ fn main() {
 
     steady_state_alloc_probe(&graph);
 
+    // --- Aggregation dedup: bit-exactness + savings ledger. ---
+    // The sweeps above already run with dedup on (the default); here the
+    // same schedule re-runs with it off and the loss curves must agree
+    // bit for bit — row-level dedup is exact, not an approximation.
+    banner("aggregation dedup: loss bit-identity + MAC savings, on vs off (small shapes)");
+    let dedup_run = |dedup: bool| {
+        let cfg = TrainerConfig {
+            artifact_tag: "small".into(),
+            batch_size: 32,
+            steps: trials(20),
+            lr: 0.05,
+            seed: 0xB347,
+            log_every: 0,
+            threads: 2,
+            dedup,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(&graph, cfg).unwrap();
+        let curve = trainer.train().unwrap();
+        let bits: Vec<u32> = curve.records.iter().map(|r| r.loss.to_bits()).collect();
+        (bits, trainer.dedup_stats())
+    };
+    let (bits_on, ds_on) = dedup_run(true);
+    let (bits_off, ds_off) = dedup_run(false);
+    assert_eq!(bits_on, bits_off, "dedup on/off loss curves must be bit-identical");
+    assert_eq!(ds_off.dedup_matmuls, 0, "dedup off must leave the ledger untouched");
+    println!(
+        "dedup on: {} matmuls, {} rows reused, {} MACs saved \
+         (loss curve bit-identical to dedup off)",
+        ds_on.dedup_matmuls, ds_on.rows_reused, ds_on.macs_saved
+    );
+
     let speedup = |pts: &[SweepPoint]| pts[pts.len() - 1].steps_per_sec / pts[0].steps_per_sec;
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!(
@@ -148,20 +180,28 @@ fn main() {
          \"smoke\": {},\n  \"configs\": [\n    {{\"tag\": \"small\", \"batch\": 32, \
          \"steps\": {small_steps}, \"sweep\": [\n{}\n    ]}},\n    \
          {{\"tag\": \"base\", \"batch\": 64, \"steps\": {base_steps}, \"sweep\": [\n{}\n    ]}}\n  ],\n  \
-         \"speedup_1_to_8_small\": {:.3},\n  \"speedup_1_to_8_base\": {:.3}\n}}\n",
+         \"speedup_1_to_8_small\": {:.3},\n  \"speedup_1_to_8_base\": {:.3},\n  \
+         \"dedup_matmuls\": {},\n  \"dedup_rows_reused\": {},\n  \
+         \"dedup_macs_saved\": {}\n}}\n",
         common::smoke(),
         fmt_points(&small),
         fmt_points(&base),
         speedup(&small),
         speedup(&base),
+        ds_on.dedup_matmuls,
+        ds_on.rows_reused,
+        ds_on.macs_saved,
     );
     let path = "BENCH_train.json";
     // First "steps_per_sec" in the artifact = small shapes at 1 worker.
     compare_baseline(path, "steps_per_sec", small[0].steps_per_sec, true);
     compare_baseline(path, "speedup_1_to_8_small", speedup(&small), true);
     compare_baseline(path, "speedup_1_to_8_base", speedup(&base), true);
+    // Deterministic count: fewer reused rows means lost dedup coverage.
+    compare_baseline(path, "dedup_macs_saved", ds_on.macs_saved as f64, true);
     match std::fs::write(path, &json) {
         Ok(()) => println!("\nbaseline written to {path}"),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
+    common::check_exit();
 }

@@ -3,6 +3,7 @@
 
 #![allow(dead_code)]
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 /// True when `BENCH_SMOKE` is set: CI smoke mode.  Every [`time_it`] runs
@@ -10,6 +11,31 @@ use std::time::Instant;
 /// bench binary exercises its full code path on a one-iteration budget.
 pub fn smoke() -> bool {
     std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// True when `BENCH_CHECK` is set: regression-gate mode.  Any
+/// [`compare_baseline`] ratio worse than [`REGRESSION_FLOOR`] flips the
+/// shared flag, and [`check_exit`] (called at the end of every bench
+/// main) exits nonzero so a CI job can surface the regression.
+pub fn check_mode() -> bool {
+    std::env::var_os("BENCH_CHECK").is_some()
+}
+
+/// Worst acceptable current/baseline ratio before [`check_exit`] fails
+/// the run: >10% regression trips the gate.
+pub const REGRESSION_FLOOR: f64 = 0.90;
+
+/// Set by [`compare_baseline`] when any key regressed past the floor.
+static REGRESSED: AtomicBool = AtomicBool::new(false);
+
+/// Exit nonzero under `BENCH_CHECK=1` if any [`compare_baseline`] call
+/// saw a >10% regression against the committed baseline.  A no-op
+/// otherwise, so plain bench runs keep their advisory-only behavior.
+pub fn check_exit() {
+    if REGRESSED.load(Ordering::Relaxed) && check_mode() {
+        eprintln!("BENCH_CHECK: at least one metric regressed >10% vs the committed baseline");
+        std::process::exit(3);
+    }
 }
 
 /// Clamp a trial count to the smoke budget (1) when `BENCH_SMOKE` is set.
@@ -97,6 +123,12 @@ pub fn compare_baseline(path: &str, key: &str, current: f64, higher_is_better: b
         println!("baseline {path} [{key}]: committed baseline is a smoke run, skipping");
         return;
     }
+    // Hand-seeded placeholder (committed before any real run on this
+    // class of host): advisory only, never a gate.
+    if text.contains("\"provisional\": true") {
+        println!("baseline {path} [{key}]: committed baseline is provisional, skipping");
+        return;
+    }
     let Some(prev) = json_number(&text, key) else {
         println!("baseline {path} [{key}]: key absent in committed baseline, skipping");
         return;
@@ -110,4 +142,10 @@ pub fn compare_baseline(path: &str, key: &str, current: f64, higher_is_better: b
     println!(
         "baseline {path} [{key}]: {prev:.4} -> {current:.4}  ({ratio:.2}x {verdict} vs committed)"
     );
+    if ratio < REGRESSION_FLOOR {
+        REGRESSED.store(true, Ordering::Relaxed);
+        if check_mode() {
+            println!("baseline {path} [{key}]: REGRESSION past the {REGRESSION_FLOOR:.2} floor");
+        }
+    }
 }

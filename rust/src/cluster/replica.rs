@@ -62,6 +62,7 @@ impl<'g> ShardReplica<'g> {
         ordering: &str,
     ) -> anyhow::Result<(Self, ArtifactMeta)> {
         let mut backend = NativeBackend::new(cfg.threads);
+        backend.set_dedup(cfg.dedup);
         let meta = backend.prepare(&cfg.artifact_tag, cfg.optimizer, ordering, cfg.loss_head)?;
         let sampler = NeighborSampler::new(&shard.graph.adj, cfg.fanouts.clone());
         let arena = StagingArena::new(&meta);

@@ -51,6 +51,7 @@ pub fn quick_epoch_config() -> TrainConfig {
         replica_nodes: 8_192,
         sample_passes: 4,
         threads: 0,
+        dedup: true,
     }
 }
 
@@ -65,6 +66,7 @@ pub fn bench_epoch_config() -> TrainConfig {
         replica_nodes: 16_384,
         sample_passes: 8,
         threads: 0,
+        dedup: true,
     }
 }
 

@@ -57,7 +57,7 @@ use crate::core_model::timing::{
     multicore_layer_time, multicore_utilization, CoreTiming, LayerPhaseTimes,
 };
 use crate::core_model::NUM_CORES;
-use crate::graph::blocks::{sample_nonempty, SampleCache};
+use crate::graph::blocks::{prepare_blocks, DedupStats, SampleCache, SampledBlocks};
 use crate::graph::coo::Coo;
 use crate::graph::datasets::DatasetSpec;
 use crate::graph::generate::LabeledGraph;
@@ -110,6 +110,12 @@ pub struct TrainConfig {
     /// Worker threads for routing sampled passes (0 = one per available
     /// CPU).  Reports are byte-identical at any thread count.
     pub threads: usize,
+    /// Redundancy-eliminated aggregation: rewrite sampled pass blocks so
+    /// duplicate rows forward one finished partial and shared neighbor
+    /// pairs are materialized once ([`crate::graph::blocks::dedup_block`]).
+    /// Off routes the raw sampled blocks — byte-identical to the
+    /// pre-dedup engine.
+    pub dedup: bool,
 }
 
 impl Default for TrainConfig {
@@ -122,6 +128,7 @@ impl Default for TrainConfig {
             replica_nodes: 16_384,
             sample_passes: 4,
             threads: 1,
+            dedup: true,
         }
     }
 }
@@ -137,6 +144,15 @@ pub struct LayerSim {
     pub link_utilization: Vec<f64>,
     /// Total edges aggregated in the layer.
     pub edges: usize,
+    /// NoC messages actually routed for the layer (post-dedup,
+    /// extrapolated from the sampled passes the same way as
+    /// `noc_cycles`).  Equals `edges` with dedup off.
+    pub messages_routed: u64,
+    /// NoC messages the dedup rewrite eliminated (extrapolated; 0 off).
+    pub messages_saved: u64,
+    /// Aggregation MACs eliminated (edge-ops saved × feature width,
+    /// extrapolated; 0 off).
+    pub macs_saved: u64,
 }
 
 /// One simulated batch.
@@ -151,6 +167,9 @@ pub struct BatchSim {
     /// Execution ordering the controller keys on for this batch (chosen by
     /// the sequence estimator for the outermost layer's shape).
     pub ordering: Ordering,
+    /// Redundancy-elimination ledger over this batch's *sampled* blocks
+    /// (exact counts, not extrapolated; all-zero with dedup off).
+    pub dedup: DedupStats,
 }
 
 /// Epoch-level results.
@@ -174,6 +193,23 @@ pub struct EpochReport {
     /// batches were measured.
     pub link_utilization_trace: Vec<f64>,
     pub batches: u64,
+    /// NoC messages routed per epoch (post-dedup), extrapolated the same
+    /// way as `seconds_per_epoch`: mean per measured batch × batches.
+    pub noc_messages_per_epoch: u64,
+    /// NoC messages per epoch the dedup rewrite eliminated (0 when off).
+    pub noc_messages_saved_per_epoch: u64,
+    /// Aggregation MACs per epoch the dedup rewrite eliminated (0 off).
+    pub agg_macs_saved_per_epoch: u64,
+    /// Shared neighbor-pair partials materialized across the measured
+    /// sampled blocks (exact sampled count, not extrapolated).
+    pub dedup_shared_partials: u64,
+    /// Duplicate rows collapsed to result-forwards across the measured
+    /// sampled blocks (exact sampled count).
+    pub dedup_duplicate_rows: u64,
+    /// Planning-cache lookups served without rebucketing ([`SampleCache`]).
+    pub sample_cache_hits: u64,
+    /// Planning-cache lookups that had to bucket (and dedup) fresh.
+    pub sample_cache_misses: u64,
 }
 
 /// Progress resolution of [`EpochReport::link_utilization_trace`]
@@ -216,12 +252,14 @@ fn route_pass(block: &Coo, rng: &mut SplitMix64) -> PassResult {
     PassResult { cycles, edges: block.nnz(), link_utilization }
 }
 
-/// Per-layer slice of a batch plan: the sampled pass blocks plus the RNG
-/// forked for each, in canonical (row-major pass) order.  Blocks are
-/// shared with the planning cache (`Rc`): batches whose sampled layer
-/// structure repeats reuse one materialization instead of rebucketing.
+/// Per-layer slice of a batch plan: the sampled (and, with the dedup
+/// knob on, redundancy-eliminated) pass blocks plus the RNG forked for
+/// each, in canonical (row-major pass) order.  Blocks are shared with
+/// the planning cache (`Rc`): batches whose sampled layer structure
+/// repeats reuse one materialization — and one dedup rewrite — instead
+/// of rebucketing.
 struct LayerPlan {
-    blocks: Rc<Vec<Coo>>,
+    blocks: Rc<SampledBlocks>,
     rngs: Vec<SplitMix64>,
 }
 
@@ -235,7 +273,7 @@ struct BatchPlan {
 impl BatchPlan {
     /// Number of routing tasks this batch contributes to the work graph.
     fn total_passes(&self) -> usize {
-        self.layers.iter().map(|lp| lp.blocks.len()).sum()
+        self.layers.iter().map(|lp| lp.blocks.blocks.len()).sum()
     }
 }
 
@@ -245,7 +283,7 @@ fn work_graph(plans: &[BatchPlan]) -> Vec<(&Coo, SplitMix64)> {
     plans
         .iter()
         .flat_map(|plan| plan.layers.iter())
-        .flat_map(|lp| lp.blocks.iter().zip(lp.rngs.iter().cloned()))
+        .flat_map(|lp| lp.blocks.blocks.iter().zip(lp.rngs.iter().cloned()))
         .collect()
 }
 
@@ -355,9 +393,15 @@ impl EpochModel {
             // the fingerprint pass entirely.
             let blocks = match cache.as_deref_mut() {
                 Some(c) => c.sample(&layer.adj),
-                None => Rc::new(sample_nonempty(&layer.adj, SUBGRAPH_NODES, k)),
+                None => {
+                    Rc::new(prepare_blocks(&layer.adj, SUBGRAPH_NODES, k, self.cfg.dedup))
+                }
             };
-            let rngs: Vec<SplitMix64> = blocks.iter().map(|_| rng.fork()).collect();
+            // One fork per *block*: the rewrite never empties a block
+            // (every non-empty row keeps at least one edge), so the fork
+            // count — and the master RNG stream — is identical with the
+            // dedup knob on or off.
+            let rngs: Vec<SplitMix64> = blocks.blocks.iter().map(|_| rng.fork()).collect();
             layers.push(LayerPlan { blocks, rngs });
         }
         BatchPlan { batch, layers }
@@ -366,27 +410,46 @@ impl EpochModel {
     /// One planning cache per run: shared sampled-block materializations
     /// across all measured batches.
     fn sample_cache(&self) -> SampleCache {
-        SampleCache::new(SUBGRAPH_NODES, self.cfg.sample_passes.max(1))
+        SampleCache::new(SUBGRAPH_NODES, self.cfg.sample_passes.max(1), self.cfg.dedup)
     }
 
     /// Phase 3 (serial): extrapolate one layer's routed sample to the full
     /// layer and price the per-core phases.  `results` holds the layer's
-    /// passes in canonical order.
-    fn finish_layer(&self, batch: &SampledBatch, l: usize, results: &[PassResult]) -> LayerSim {
+    /// passes in canonical order; `lp` is the plan slice they came from
+    /// (raw edge counts + dedup ledger).
+    fn finish_layer(
+        &self,
+        batch: &SampledBatch,
+        l: usize,
+        lp: &LayerPlan,
+        results: &[PassResult],
+    ) -> LayerSim {
         let layer = &batch.layers[l];
         let sp = self.shape_params(batch, l);
         let n_src = layer.src.len();
 
         let sampled_cycles: u64 = results.iter().map(|r| r.cycles).sum();
-        let sampled_edges: usize = results.iter().map(|r| r.edges).sum();
+        let sampled_routed: usize = results.iter().map(|r| r.edges).sum();
         let link_util: Vec<f64> =
             results.iter().flat_map(|r| r.link_utilization.iter().copied()).collect();
         let total_edges = layer.adj.nnz();
-        let noc_cycles = if sampled_edges == 0 {
-            0
-        } else {
-            (sampled_cycles as f64 * total_edges as f64 / sampled_edges as f64) as u64
+        // Extrapolate over *raw* (pre-dedup) sampled edges: the sample's
+        // share of the layer is structural, so shrinking the denominator
+        // with the rewrite would inflate the per-edge estimate.  With
+        // dedup off, raw == routed and this is the pre-dedup expression
+        // bit for bit.
+        let sampled_raw = lp.blocks.raw_nnz();
+        let scale = |x: u64| -> u64 {
+            if sampled_raw == 0 {
+                0
+            } else {
+                (x as f64 * total_edges as f64 / sampled_raw as f64) as u64
+            }
         };
+        let noc_cycles = scale(sampled_cycles);
+        let messages_routed = scale(sampled_routed as u64);
+        let messages_saved = scale(lp.blocks.stats.messages_saved());
+        let macs_saved = scale(lp.blocks.stats.agg_adds_saved) * sp.h;
 
         // --- Per-core combination + aggregation loads.
         // Destination rows are striped over cores in 64-row slices; the
@@ -420,7 +483,15 @@ impl EpochModel {
             })
             .collect();
 
-        LayerSim { cores, noc_cycles, link_utilization: link_util, edges: total_edges }
+        LayerSim {
+            cores,
+            noc_cycles,
+            link_utilization: link_util,
+            edges: total_edges,
+            messages_routed,
+            messages_saved,
+            macs_saved,
+        }
     }
 
     /// Phase 3 (serial): assemble one batch's simulation from its plan and
@@ -432,11 +503,17 @@ impl EpochModel {
         let mut fwd_time = 0.0;
         let mut bwd_time = 0.0;
         let mut ordering = Ordering::OursCoAg;
+        let mut dedup = DedupStats::default();
         let mut cursor = 0usize;
         for l in 0..batch.layers.len() {
-            let n_passes = plan.layers[l].blocks.len();
-            let sim = self.finish_layer(batch, l, &results[cursor..cursor + n_passes]);
+            let lp = &plan.layers[l];
+            let n_passes = lp.blocks.blocks.len();
+            let sim = self.finish_layer(batch, l, lp, &results[cursor..cursor + n_passes]);
             cursor += n_passes;
+            // Each routed occurrence of a (possibly cache-shared) block
+            // set realizes its savings again, so the ledger merges per
+            // layer, not per distinct materialization.
+            dedup.merge(&lp.blocks.stats);
             let est = SequenceEstimator::new(self.shape_params(batch, l));
             let ord = est.best_ours();
             if l == 0 {
@@ -470,6 +547,7 @@ impl EpochModel {
             accel_time: fwd_time + bwd_time,
             host_time: sampling + pcie,
             ordering,
+            dedup,
         }
     }
 
@@ -514,10 +592,20 @@ impl EpochModel {
         let mut measured_layers = 0usize;
         let mut trace_sum = vec![0.0f64; TRACE_POINTS];
         let mut traced_layers = 0usize;
+        let mut messages_routed = 0u64;
+        let mut messages_saved = 0u64;
+        let mut macs_saved = 0u64;
+        let mut shared_partials = 0u64;
+        let mut duplicate_rows = 0u64;
         for sim in sims {
             // Pipelined host/accelerator: the slower side dominates.
             batch_times.push(sim.accel_time.max(sim.host_time));
+            shared_partials += sim.dedup.shared_partials;
+            duplicate_rows += sim.dedup.duplicate_rows;
             for layer in &sim.layers {
+                messages_routed += layer.messages_routed;
+                messages_saved += layer.messages_saved;
+                macs_saved += layer.macs_saved;
                 utils.push(multicore_utilization(&layer.cores));
                 for (i, core) in layer.cores.iter().enumerate() {
                     per_core_sum[i] += core.ctc_ratio();
@@ -544,6 +632,10 @@ impl EpochModel {
         } else {
             trace_sum.iter().map(|s| s / traced_layers as f64).collect()
         };
+        // Message/MAC counters extrapolate like seconds_per_epoch: mean
+        // per measured batch × batches per epoch.
+        let per_epoch =
+            |sum: u64| (sum as f64 / sims.len().max(1) as f64 * batches as f64) as u64;
         EpochReport {
             dataset: self.spec.name,
             model: self.model,
@@ -556,6 +648,15 @@ impl EpochModel {
             per_core_ctc,
             link_utilization_trace: link_trace,
             batches,
+            noc_messages_per_epoch: per_epoch(messages_routed),
+            noc_messages_saved_per_epoch: per_epoch(messages_saved),
+            agg_macs_saved_per_epoch: per_epoch(macs_saved),
+            dedup_shared_partials: shared_partials,
+            dedup_duplicate_rows: duplicate_rows,
+            // Cache counters belong to a run, not a batch list; `run`
+            // fills them after aggregation.
+            sample_cache_hits: 0,
+            sample_cache_misses: 0,
         }
     }
 
@@ -587,7 +688,10 @@ impl EpochModel {
                 sim
             })
             .collect();
-        self.report_from_batches(&sims)
+        let mut report = self.report_from_batches(&sims);
+        report.sample_cache_hits = cache.hits;
+        report.sample_cache_misses = cache.misses;
+        report
     }
 }
 
@@ -661,6 +765,9 @@ mod tests {
             noc_cycles: 10,
             link_utilization: util,
             edges: 5,
+            messages_routed: 4,
+            messages_saved: 1,
+            macs_saved: 8,
         };
         let batch = |mp: f64, u0: f64, u1: f64| BatchSim {
             dims: (4, 2, 1),
@@ -668,6 +775,7 @@ mod tests {
             accel_time: 1.0,
             host_time: 0.5,
             ordering: Ordering::OursAgCo,
+            dedup: DedupStats { shared_partials: 1, duplicate_rows: 2, ..Default::default() },
         };
         let rep = model.report_from_batches(&[batch(2.0, 0.1, 0.2), batch(4.0, 0.3, 0.4)]);
         // Trace averages the four layer traces position-wise over the
@@ -688,6 +796,15 @@ mod tests {
         // seconds_per_epoch = mean(max(accel, host)) × batches.
         let expect = 1.0 * spec.batches_per_epoch(256) as f64;
         assert!((rep.seconds_per_epoch - expect).abs() < 1e-9);
+        // Message/MAC counters: mean per batch × batches per epoch, and
+        // sampled dedup detail sums exactly.
+        let batches = spec.batches_per_epoch(256);
+        assert_eq!(rep.noc_messages_per_epoch, 8 * batches);
+        assert_eq!(rep.noc_messages_saved_per_epoch, 2 * batches);
+        assert_eq!(rep.agg_macs_saved_per_epoch, 16 * batches);
+        assert_eq!(rep.dedup_shared_partials, 2);
+        assert_eq!(rep.dedup_duplicate_rows, 4);
+        assert_eq!((rep.sample_cache_hits, rep.sample_cache_misses), (0, 0));
     }
 
     #[test]

@@ -130,7 +130,7 @@ pub fn sample_nonempty(adj: &Coo, sub: usize, k: usize) -> Vec<Coo> {
 
 /// SplitMix64's finalizer as a stateless mixing step.
 #[inline]
-fn mix64(mut z: u64) -> u64 {
+pub(crate) fn mix64(mut z: u64) -> u64 {
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
@@ -140,7 +140,7 @@ fn mix64(mut z: u64) -> u64 {
 /// order, coordinates and value bits all contribute), computed as two
 /// independently seeded chains in **one** pass over the edge list.  Edge
 /// order matters because the sampled blocks preserve it.
-fn fingerprint128(adj: &Coo) -> (u64, u64) {
+pub fn fingerprint128(adj: &Coo) -> (u64, u64) {
     let shape = (adj.n_rows as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
         ^ (adj.n_cols as u64).rotate_left(24)
         ^ (adj.nnz() as u64).rotate_left(48);
@@ -154,17 +154,269 @@ fn fingerprint128(adj: &Coo) -> (u64, u64) {
     (lo, hi)
 }
 
-/// Memoizes [`sample_nonempty`] across measured batches: when two layers
+/// Savings ledger of one redundancy-elimination pass ([`dedup_block`]):
+/// how many NoC messages and aggregation adds the rewritten schedule
+/// avoids.  All counters are exact (counted, not modeled) and zero when
+/// the pass finds no redundancy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DedupStats {
+    /// Edges (≡ routed NoC messages) before the pass.
+    pub messages_before: u64,
+    /// Edges after the pass — what actually gets routed.
+    pub messages_after: u64,
+    /// Rows whose entire aggregation was replaced by one result-forward
+    /// from a byte-identical earlier row.
+    pub duplicate_rows: u64,
+    /// Distinct shared neighbor-pair partial sums materialized once and
+    /// reused by later rows (GraphACT-style).
+    pub shared_partials: u64,
+    /// Pair occurrences that consumed a previously built partial (each
+    /// turns two routed messages into one).
+    pub partial_uses: u64,
+    /// Aggregation adds eliminated, in edge-op units (multiply by the
+    /// feature width for MACs): a duplicate row saves its full degree, a
+    /// reused pair saves one add.
+    pub agg_adds_saved: u64,
+}
+
+impl DedupStats {
+    /// Messages the rewritten schedule no longer routes.
+    pub fn messages_saved(&self) -> u64 {
+        self.messages_before - self.messages_after
+    }
+
+    /// Accumulate another block's ledger into this one.
+    pub fn merge(&mut self, other: &DedupStats) {
+        self.messages_before += other.messages_before;
+        self.messages_after += other.messages_after;
+        self.duplicate_rows += other.duplicate_rows;
+        self.shared_partials += other.shared_partials;
+        self.partial_uses += other.partial_uses;
+        self.agg_adds_saved += other.agg_adds_saved;
+    }
+}
+
+/// Pack one (col, value-bits) edge into a sortable u64 key half.
+#[inline]
+fn edge_key(col: u32, bits: u32) -> u64 {
+    ((col as u64) << 32) | bits as u64
+}
+
+/// Redundancy-eliminated rewrite of one pass block (GraphACT's
+/// precompute-shared-partials idea, applied per sampled 1024×1024 pass):
+///
+/// 1. **Duplicate rows** — rows with byte-identical (col, value) edge
+///    multisets aggregate to the same partial sum; every duplicate's
+///    edges are replaced by **one** result-forwarding edge to the
+///    representative row's first neighbor (the core holding the finished
+///    partial ships it once).
+/// 2. **Shared neighbor pairs** — adjacent edge pairs (in canonical
+///    per-row sorted order) that recur across surviving rows are
+///    materialized once at their first occurrence; every later
+///    occurrence collapses its two edges into **one** partial-sum edge.
+///
+/// The rewritten block routes strictly fewer (or equal) messages and is
+/// produced deterministically: rows ascending, edges in canonical sorted
+/// order, pair selection by first-occurrence in that same order.  Runs in
+/// the epoch model's serial plan phase, so it may allocate freely.
+pub fn dedup_block(block: &Coo) -> (Coo, DedupStats) {
+    let n = block.n_rows;
+    let nnz = block.nnz();
+    let mut stats = DedupStats { messages_before: nnz as u64, ..DedupStats::default() };
+
+    // CSR build (counting sort, stable), then canonical per-row ordering:
+    // sorting each row's edges by (col, value bits) makes identical
+    // neighbor sets comparable no matter how the sampler emitted them.
+    let mut start = vec![0usize; n + 1];
+    for (r, _, _) in block.iter() {
+        start[r as usize + 1] += 1;
+    }
+    for i in 0..n {
+        start[i + 1] += start[i];
+    }
+    let mut fill = start.clone();
+    let mut edges = vec![(0u32, 0u32); nnz];
+    for (r, c, v) in block.iter() {
+        let slot = fill[r as usize];
+        fill[r as usize] += 1;
+        edges[slot] = (c, v.to_bits());
+    }
+    for r in 0..n {
+        edges[start[r]..start[r + 1]].sort_unstable();
+    }
+
+    // --- Pass 1: group byte-identical rows. ---
+    // Fingerprint-sorted candidate runs, verified by exact comparison so
+    // a 64-bit collision can never alias two different rows.
+    let mut keys: Vec<(u64, u32)> = Vec::with_capacity(n);
+    for r in 0..n {
+        if start[r] == start[r + 1] {
+            continue; // empty rows carry no aggregation to reuse
+        }
+        let mut h = mix64(0x5B1C_E1F0 ^ (start[r + 1] - start[r]) as u64);
+        for &(c, b) in &edges[start[r]..start[r + 1]] {
+            h = mix64(h.wrapping_add(edge_key(c, b)));
+        }
+        keys.push((h, r as u32));
+    }
+    keys.sort_unstable();
+    let mut row_src: Vec<u32> = (0..n as u32).collect();
+    let mut i = 0;
+    while i < keys.len() {
+        let mut j = i + 1;
+        while j < keys.len() && keys[j].0 == keys[i].0 {
+            j += 1;
+        }
+        for x in i + 1..j {
+            let r = keys[x].1 as usize;
+            for cand in keys[i..x].iter().map(|&(_, c)| c as usize) {
+                if row_src[cand] as usize != cand {
+                    continue; // already aliased — its representative was seen earlier
+                }
+                if edges[start[r]..start[r + 1]] == edges[start[cand]..start[cand + 1]] {
+                    row_src[r] = cand as u32;
+                    break;
+                }
+            }
+        }
+        i = j;
+    }
+
+    // --- Pass 2: count shared neighbor pairs across surviving rows. ---
+    // Candidates are adjacent edges in canonical order; a pair key that
+    // occurs ≥ 2 times is worth materializing once.
+    let mut pair_keys: Vec<(u64, u64)> = Vec::new();
+    for r in 0..n {
+        if row_src[r] as usize != r {
+            continue;
+        }
+        for w in edges[start[r]..start[r + 1]].windows(2) {
+            pair_keys.push((edge_key(w[0].0, w[0].1), edge_key(w[1].0, w[1].1)));
+        }
+    }
+    pair_keys.sort_unstable();
+    // Qualified pairs (count ≥ 2), with per-pair rewrite state:
+    // built = the first occurrence kept both edges (the build site),
+    // uses = later occurrences collapsed onto the partial.
+    let mut qualified: Vec<(u64, u64)> = Vec::new();
+    let mut i = 0;
+    while i < pair_keys.len() {
+        let mut j = i + 1;
+        while j < pair_keys.len() && pair_keys[j] == pair_keys[i] {
+            j += 1;
+        }
+        if j - i >= 2 {
+            qualified.push(pair_keys[i]);
+        }
+        i = j;
+    }
+    let mut built = vec![false; qualified.len()];
+    let mut uses = vec![0u64; qualified.len()];
+
+    // --- Rewrite, row-major. ---
+    let mut out = Coo::new(block.n_rows, block.n_cols);
+    for r in 0..n {
+        let row = &edges[start[r]..start[r + 1]];
+        if row.is_empty() {
+            continue;
+        }
+        let rep = row_src[r] as usize;
+        if rep != r {
+            // Forward the representative's finished partial sum: one
+            // message to this row, no adds re-executed.
+            out.push(r as u32, edges[start[rep]].0, 1.0);
+            stats.duplicate_rows += 1;
+            stats.agg_adds_saved += row.len() as u64;
+            continue;
+        }
+        let mut e = 0usize;
+        while e < row.len() {
+            if e + 1 < row.len() {
+                let key = (edge_key(row[e].0, row[e].1), edge_key(row[e + 1].0, row[e + 1].1));
+                if let Ok(q) = qualified.binary_search(&key) {
+                    if built[q] {
+                        // Reuse the materialized partial: two messages
+                        // and two adds become one of each.
+                        let sum = f32::from_bits(row[e].1) + f32::from_bits(row[e + 1].1);
+                        out.push(r as u32, row[e].0, sum);
+                        uses[q] += 1;
+                        stats.partial_uses += 1;
+                        stats.agg_adds_saved += 1;
+                        e += 2;
+                        continue;
+                    }
+                    // Build site: both edges route as-is, and later
+                    // occurrences collapse onto the result.
+                    built[q] = true;
+                    out.push(r as u32, row[e].0, f32::from_bits(row[e].1));
+                    out.push(r as u32, row[e + 1].0, f32::from_bits(row[e + 1].1));
+                    e += 2;
+                    continue;
+                }
+            }
+            out.push(r as u32, row[e].0, f32::from_bits(row[e].1));
+            e += 1;
+        }
+    }
+    stats.shared_partials = uses.iter().filter(|&&u| u > 0).count() as u64;
+    stats.messages_after = out.nnz() as u64;
+    (out, stats)
+}
+
+/// The sampled pass blocks of one layer, ready for routing, plus the
+/// redundancy-elimination ledger the epoch model extrapolates from.
+#[derive(Clone, Debug)]
+pub struct SampledBlocks {
+    /// Blocks as routed: rewritten by [`dedup_block`] when the dedup knob
+    /// is on, raw [`sample_nonempty`] output when off.
+    pub blocks: Vec<Coo>,
+    /// Pre-dedup edge count per block — the layer-extrapolation
+    /// denominator must not shrink with the rewrite, or savings would
+    /// silently inflate the per-edge cycle estimate.
+    pub raw_edges: Vec<usize>,
+    /// Aggregate savings across the sampled blocks (zeros when off).
+    pub stats: DedupStats,
+}
+
+impl SampledBlocks {
+    /// Total pre-dedup edges across the sampled blocks.
+    pub fn raw_nnz(&self) -> usize {
+        self.raw_edges.iter().sum()
+    }
+}
+
+/// Materialize the first `k` non-empty pass blocks of `adj` and (when
+/// `dedup` is on) run the redundancy-elimination rewrite over each.
+pub fn prepare_blocks(adj: &Coo, sub: usize, k: usize, dedup: bool) -> SampledBlocks {
+    let raw = sample_nonempty(adj, sub, k);
+    let raw_edges: Vec<usize> = raw.iter().map(|b| b.nnz()).collect();
+    if !dedup {
+        return SampledBlocks { blocks: raw, raw_edges, stats: DedupStats::default() };
+    }
+    let mut stats = DedupStats::default();
+    let blocks = raw
+        .iter()
+        .map(|b| {
+            let (rewritten, s) = dedup_block(b);
+            stats.merge(&s);
+            rewritten
+        })
+        .collect();
+    SampledBlocks { blocks, raw_edges, stats }
+}
+
+/// Memoizes [`prepare_blocks`] across measured batches: when two layers
 /// share the exact same sampled adjacency (structure *and* edge order),
-/// the second skips both bucketing scans and the block copies and shares
-/// the first result.  Keys are two independent 64-bit structural
-/// fingerprints (a 128-bit collision budget); `sub`/`k` are fixed per
-/// cache, so an entry can never be reused under different pass
-/// parameters.
+/// the second skips both bucketing scans, the block copies *and* the
+/// dedup rewrite, sharing the first result.  Keys are two independent
+/// 64-bit structural fingerprints (a 128-bit collision budget);
+/// `sub`/`k`/`dedup` are fixed per cache, so an entry can never be
+/// reused under different pass parameters.
 pub struct SampleCache {
     sub: usize,
     k: usize,
-    map: HashMap<(u64, u64), Rc<Vec<Coo>>>,
+    dedup: bool,
+    map: HashMap<(u64, u64), Rc<SampledBlocks>>,
     /// Lookups served from the cache.
     pub hits: u64,
     /// Lookups that had to bucket.
@@ -176,14 +428,14 @@ pub struct SampleCache {
 const SAMPLE_CACHE_CAP: usize = 256;
 
 impl SampleCache {
-    pub fn new(sub: usize, k: usize) -> Self {
+    pub fn new(sub: usize, k: usize, dedup: bool) -> Self {
         assert!(sub > 0, "pass size must be positive");
-        SampleCache { sub, k, map: HashMap::new(), hits: 0, misses: 0 }
+        SampleCache { sub, k, dedup, map: HashMap::new(), hits: 0, misses: 0 }
     }
 
-    /// `sample_nonempty(adj, sub, k)`, shared with every prior identical
-    /// layer.
-    pub fn sample(&mut self, adj: &Coo) -> Rc<Vec<Coo>> {
+    /// `prepare_blocks(adj, sub, k, dedup)`, shared with every prior
+    /// identical layer.
+    pub fn sample(&mut self, adj: &Coo) -> Rc<SampledBlocks> {
         let key = fingerprint128(adj);
         if let Some(hit) = self.map.get(&key) {
             self.hits += 1;
@@ -193,7 +445,7 @@ impl SampleCache {
         if self.map.len() >= SAMPLE_CACHE_CAP {
             self.map.clear();
         }
-        let blocks = Rc::new(sample_nonempty(adj, self.sub, self.k));
+        let blocks = Rc::new(prepare_blocks(adj, self.sub, self.k, self.dedup));
         self.map.insert(key, Rc::clone(&blocks));
         blocks
     }
@@ -316,10 +568,11 @@ mod tests {
     #[test]
     fn sample_cache_hits_on_identical_structure_only() {
         let adj = random_coo(2000, 3000, 5000, 7);
-        let mut cache = SampleCache::new(1024, 3);
+        let mut cache = SampleCache::new(1024, 3, false);
         let first = cache.sample(&adj);
         assert_eq!((cache.hits, cache.misses), (0, 1));
-        assert_eq!(&*first, &sample_nonempty(&adj, 1024, 3));
+        assert_eq!(first.blocks, sample_nonempty(&adj, 1024, 3));
+        assert_eq!(first.stats, DedupStats::default());
         // Identical layer: served from cache, shared storage.
         let again = cache.sample(&adj);
         assert_eq!((cache.hits, cache.misses), (1, 1));
@@ -328,7 +581,7 @@ mod tests {
         let other = random_coo(2000, 3000, 5000, 8);
         let sampled = cache.sample(&other);
         assert_eq!((cache.hits, cache.misses), (1, 2));
-        assert_eq!(&*sampled, &sample_nonempty(&other, 1024, 3));
+        assert_eq!(sampled.blocks, sample_nonempty(&other, 1024, 3));
         // Same edge multiset, different order: structurally different
         // (block edge order must be preserved), so it must miss too.
         let mut reordered = Coo::new(other.n_rows, other.n_cols);
@@ -337,6 +590,76 @@ mod tests {
         }
         cache.sample(&reordered);
         assert_eq!((cache.hits, cache.misses), (1, 3));
+    }
+
+    #[test]
+    fn dedup_block_no_redundancy_is_stats_free() {
+        // One edge per row: no duplicate rows, no pairs — the rewrite is
+        // the identity and the ledger stays zero.
+        let mut b = Coo::new(8, 8);
+        for r in 0..8u32 {
+            b.push(r, r, (r + 1) as f32);
+        }
+        let (out, stats) = dedup_block(&b);
+        assert_eq!(out, b);
+        assert_eq!(
+            stats,
+            DedupStats { messages_before: 8, messages_after: 8, ..DedupStats::default() }
+        );
+        assert_eq!(stats.messages_saved(), 0);
+    }
+
+    #[test]
+    fn dedup_block_collapses_duplicate_rows_and_shared_pairs() {
+        let mut b = Coo::new(6, 16);
+        // Rows 0–2 byte-identical (degree 3): 1 and 2 collapse to one
+        // forwarding edge each.
+        for r in 0..3u32 {
+            for c in 0..3u32 {
+                b.push(r, c, 1.0);
+            }
+        }
+        // Rows 3 and 4 share the neighbor pair (5, 6): row 3 builds the
+        // partial, row 4 reuses it as one merged edge.
+        b.push(3, 5, 1.0);
+        b.push(3, 6, 1.0);
+        b.push(4, 5, 1.0);
+        b.push(4, 6, 1.0);
+        b.push(4, 7, 2.0);
+        let (out, stats) = dedup_block(&b);
+        assert_eq!(stats.messages_before, 14);
+        assert_eq!(stats.messages_after, 9);
+        assert_eq!(out.nnz(), 9);
+        assert_eq!(stats.duplicate_rows, 2);
+        assert_eq!(stats.shared_partials, 1);
+        assert_eq!(stats.partial_uses, 1);
+        // Two duplicate rows save their full degree (3 each); the reused
+        // pair saves one add.
+        assert_eq!(stats.agg_adds_saved, 7);
+        // Row 4's merged edge carries the materialized partial sum.
+        let row4: Vec<(u32, f32)> =
+            out.iter().filter(|&(r, _, _)| r == 4).map(|(_, c, v)| (c, v)).collect();
+        assert_eq!(row4, vec![(5, 2.0), (7, 2.0)]);
+        // Duplicate rows forward from the representative's first neighbor.
+        let row1: Vec<(u32, f32)> =
+            out.iter().filter(|&(r, _, _)| r == 1).map(|(_, c, v)| (c, v)).collect();
+        assert_eq!(row1, vec![(0, 1.0)]);
+    }
+
+    #[test]
+    fn prepare_blocks_off_path_matches_raw_sampling() {
+        let adj = random_coo(2000, 3000, 5000, 11);
+        let off = prepare_blocks(&adj, 1024, 3, false);
+        assert_eq!(off.blocks, sample_nonempty(&adj, 1024, 3));
+        assert_eq!(off.stats, DedupStats::default());
+        assert_eq!(off.raw_nnz(), off.blocks.iter().map(|b| b.nnz()).sum::<usize>());
+        // The on-path never routes more than the raw sample, and its raw
+        // ledger matches the off-path's edge counts.
+        let on = prepare_blocks(&adj, 1024, 3, true);
+        assert_eq!(on.raw_edges, off.raw_edges);
+        assert_eq!(on.stats.messages_before as usize, off.raw_nnz());
+        assert!(on.stats.messages_after <= on.stats.messages_before);
+        assert_eq!(on.blocks.len(), off.blocks.len());
     }
 
     #[test]

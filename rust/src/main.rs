@@ -78,14 +78,16 @@ commands:
              inter-card halo/all-reduce traffic; --fault-plan SPEC injects
              deterministic faults and recovers N-1 from card deaths, with
              durable rotated checkpoints: --keep-checkpoints K
-             --ckpt-every N --ckpt-dir DIR)
+             --ckpt-every N --ckpt-dir DIR; --dedup on|off toggles
+             redundancy-eliminated aggregation, exact either way)
   cluster    multi-card scaling report: steps/s + modeled traffic at
              1/2/4/8 shards (--dataset --nodes --steps --batch)
   route      Fig. 9 routing-cycle experiment (Fuse 1..4)
   hbm        Fig. 1 HBM bandwidth scenarios
   epoch      Table 2 single row (ours vs HP-GNN vs GPU)
   table2     Table 2, all datasets x both models
-             (epoch/table2 flags: --sample-passes N --threads N --batches N)
+             (epoch/table2 flags: --sample-passes N --threads N --batches N
+             --dedup on|off; epoch also reports dedup savings + cache hits)
   resources  Table 3 resource consumption
   power      Fig. 11(a)/Fig. 12 power analysis
   estimate   Table 1 sequence estimator for given layer shapes
@@ -118,6 +120,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // Multi-label datasets (Yelp/AmazonProducts) train with the
         // sigmoid+BCE head, matching their published objective.
         loss_head: spec.loss_head(),
+        dedup: args.get_or("dedup", "on") != "off",
     };
     let shards = args.get_usize("shards", 0)?;
     if shards > 0 {
@@ -148,6 +151,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         curve.len(),
         curve.mean_step_seconds() * 1e3
     );
+    let ds = trainer.dedup_stats();
+    if ds.dedup_matmuls > 0 {
+        println!(
+            "aggregation dedup: {} matmuls, {} rows reused, {} MACs saved",
+            ds.dedup_matmuls, ds.rows_reused, ds.macs_saved
+        );
+    }
     // Snapshot before evaluate(): evaluation draws from the training RNG,
     // and the checkpoint must capture the state a resumed run continues
     // from for the byte-identical-curve contract to hold.
@@ -445,6 +455,7 @@ fn epoch_cfg_from_args(args: &Args) -> anyhow::Result<gcn_noc::coordinator::epoc
     cfg.sample_passes = args.get_usize("sample-passes", cfg.sample_passes)?;
     cfg.threads = args.get_usize("threads", cfg.threads)?;
     cfg.measured_batches = args.get_usize("batches", cfg.measured_batches)?;
+    cfg.dedup = args.get_or("dedup", "on") != "off";
     Ok(cfg)
 }
 
@@ -467,6 +478,18 @@ fn cmd_epoch(args: &Args) -> anyhow::Result<()> {
         rep.ordering.name(),
         rep.avg_core_utilization * 100.0,
         rep.avg_ctc_ratio
+    );
+    println!(
+        "noc messages/epoch {} (dedup saved {} msgs, {} agg MACs; {} shared partials, {} dup rows)",
+        rep.noc_messages_per_epoch,
+        rep.noc_messages_saved_per_epoch,
+        rep.agg_macs_saved_per_epoch,
+        rep.dedup_shared_partials,
+        rep.dedup_duplicate_rows
+    );
+    println!(
+        "sample cache: {} hits / {} misses",
+        rep.sample_cache_hits, rep.sample_cache_misses
     );
     Ok(())
 }

@@ -176,6 +176,31 @@ impl GradBuffers {
     }
 }
 
+/// Cumulative redundancy-elimination counters a backend may keep for its
+/// aggregation matmuls (duplicate adjacency rows computed once and
+/// scattered by alias).  All-zero for backends without the optimization
+/// or with the `dedup` knob off.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AggDedupStats {
+    /// Aggregation matmuls that actually ran the gather/scatter path.
+    pub dedup_matmuls: u64,
+    /// Output rows served by copying a representative's finished row
+    /// instead of recomputing it.
+    pub rows_reused: u64,
+    /// Multiply-accumulates those reused rows would have cost
+    /// (Σ row-nnz × feature width).
+    pub macs_saved: u64,
+}
+
+impl AggDedupStats {
+    /// Accumulate another ledger into this one (cluster-wide totals).
+    pub fn merge(&mut self, other: &AggDedupStats) {
+        self.dedup_matmuls += other.dedup_matmuls;
+        self.rows_reused += other.rows_reused;
+        self.macs_saved += other.macs_saved;
+    }
+}
+
 /// A compute engine for the fused two-layer GCN train step.
 pub trait ComputeBackend {
     /// Human-readable backend description (shown by the CLI).
@@ -240,6 +265,12 @@ pub trait ComputeBackend {
         staged: &StagedBatch,
         state: &ModelState,
     ) -> anyhow::Result<(f32, f32)>;
+
+    /// Cumulative aggregation-dedup savings since `prepare` (all-zero for
+    /// backends without the optimization).
+    fn dedup_stats(&self) -> AggDedupStats {
+        AggDedupStats::default()
+    }
 }
 
 /// Staged-shape guard shared by the backends: the batch must have been

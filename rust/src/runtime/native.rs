@@ -29,14 +29,16 @@
 //! thread count (the tiled matmuls keep a fixed per-element accumulation
 //! order).
 
+use crate::graph::blocks::mix64;
 use crate::runtime::backend::{
-    check_staged, ComputeBackend, GradBuffers, LossHead, ModelState, Optimizer,
+    check_staged, AggDedupStats, ComputeBackend, GradBuffers, LossHead, ModelState, Optimizer,
 };
 use crate::runtime::manifest::{ArtifactKind, ArtifactMeta};
 use crate::train::batch::StagedBatch;
 use crate::train::reference::{sigmoid_bce_into, softmax_xent_into};
 use crate::util::matrix::{
-    par_matmul_into, par_matmul_nt_into, par_matmul_tn_into, resolve_threads, Matrix,
+    par_matmul_gather_into, par_matmul_into, par_matmul_nt_into, par_matmul_tn_into,
+    resolve_threads, MatRef, Matrix,
 };
 
 /// Built-in shape table mirroring the AOT pipeline's `GCN_CONFIGS`
@@ -99,6 +101,150 @@ impl Scratch {
     }
 }
 
+/// Row-dedup plan for one staged adjacency: which rows are bitwise
+/// duplicates of an earlier row, and the compact gather list of
+/// representatives.  Aggregation matmuls (`A·X`-shaped, adjacency on the
+/// left) then compute each distinct row once and scatter by alias —
+/// sampled power-law batches repeat neighbor sets across destinations,
+/// and the staged zero-padding rows all collapse to one.  Buffers are
+/// sized once at `prepare()` and rewritten in place every step (the
+/// adjacency changes per batch), so replanning allocates nothing.
+struct RowDedupPlan {
+    /// `(row content hash, row)` scratch, sorted for duplicate grouping.
+    keys: Vec<(u64, u32)>,
+    /// `src[r]` = lowest row whose content is bitwise equal to row `r`'s
+    /// (itself for representatives).
+    src: Vec<u32>,
+    /// Representative rows, ascending — the gather list.
+    reps: Vec<u32>,
+    /// `rank[r]` = position of `src[r]` in `reps`.
+    rank: Vec<u32>,
+    /// Nonzeros per row (exact MAC accounting for reuse).
+    nnz: Vec<u32>,
+}
+
+impl RowDedupPlan {
+    fn new(rows: usize) -> Self {
+        RowDedupPlan {
+            keys: Vec::with_capacity(rows),
+            src: vec![0; rows],
+            reps: Vec::with_capacity(rows),
+            rank: vec![0; rows],
+            nnz: vec![0; rows],
+        }
+    }
+}
+
+/// Rebuild `plan` for the staged adjacency `a` (serial, in place).
+/// Rows group by a 64-bit content hash and are verified by exact bitwise
+/// comparison, so a hash collision can never alias two different rows;
+/// comparing bit patterns (not f32 `==`) also keeps `-0.0` rows distinct
+/// from `+0.0` ones, making the alias-copy trivially bit-exact.
+fn plan_row_dedup(a: MatRef<'_>, plan: &mut RowDedupPlan) {
+    let rows = a.rows;
+    plan.keys.clear();
+    for r in 0..rows {
+        let mut h = 0x243F_6A88_85A3_08D3u64;
+        let mut count = 0u32;
+        for &v in a.row(r) {
+            h = mix64(h ^ v.to_bits() as u64);
+            if v != 0.0 {
+                count += 1;
+            }
+        }
+        plan.nnz[r] = count;
+        plan.keys.push((h, r as u32));
+    }
+    plan.keys.sort_unstable();
+    for (r, s) in plan.src.iter_mut().enumerate() {
+        *s = r as u32;
+    }
+    let mut i = 0;
+    while i < rows {
+        let mut j = i + 1;
+        while j < rows && plan.keys[j].0 == plan.keys[i].0 {
+            j += 1;
+        }
+        // Rows in an equal-hash run are sorted ascending, so the first
+        // content match is the lowest-index (representative) copy.
+        for x in i + 1..j {
+            let r = plan.keys[x].1 as usize;
+            for y in i..x {
+                let cand = plan.keys[y].1 as usize;
+                if plan.src[cand] as usize != cand {
+                    continue;
+                }
+                let (lhs, rhs) = (a.row(r), a.row(cand));
+                if lhs.iter().zip(rhs).all(|(p, q)| p.to_bits() == q.to_bits()) {
+                    plan.src[r] = cand as u32;
+                    break;
+                }
+            }
+        }
+        i = j;
+    }
+    plan.reps.clear();
+    for r in 0..rows {
+        if plan.src[r] as usize == r {
+            plan.rank[r] = plan.reps.len() as u32;
+            plan.reps.push(r as u32);
+        }
+    }
+    for r in 0..rows {
+        let s = plan.src[r] as usize;
+        if s != r {
+            plan.rank[r] = plan.rank[s];
+        }
+    }
+}
+
+/// Aggregation matmul `out = a · b` with row-dedup: gather the plan's
+/// representative rows of `a`, multiply once into `compact`, scatter back
+/// by alias.  Representative rows run the exact [`par_matmul_into`]
+/// per-row loop and duplicates receive bitwise copies of their
+/// representative's result, so the output is bit-identical to the plain
+/// path — with no plan (dedup off) or no duplicates it *is* the plain
+/// path.
+fn agg_matmul(
+    out: &mut Matrix,
+    a: MatRef<'_>,
+    b: MatRef<'_>,
+    plan: Option<&RowDedupPlan>,
+    compact: &mut [f32],
+    stats: &mut AggDedupStats,
+    t: usize,
+) {
+    let plan = match plan {
+        Some(p) if p.reps.len() < a.rows => p,
+        _ => {
+            par_matmul_into(out, a, b, t);
+            return;
+        }
+    };
+    let cols = b.cols;
+    let compact = &mut compact[..plan.reps.len() * cols];
+    par_matmul_gather_into(compact, a, &plan.reps, b, t);
+    for r in 0..a.rows {
+        let c0 = plan.rank[r] as usize * cols;
+        out.row_mut(r).copy_from_slice(&compact[c0..c0 + cols]);
+        if plan.src[r] as usize != r {
+            stats.rows_reused += 1;
+            stats.macs_saved += plan.nnz[r] as u64 * cols as u64;
+        }
+    }
+    stats.dedup_matmuls += 1;
+}
+
+/// Per-step dedup context threaded through the static forward/backward
+/// helpers (split borrows: scratch, plans, compact buffer and the stats
+/// ledger are disjoint backend fields).
+struct DedupCtx<'a> {
+    plan1: Option<&'a RowDedupPlan>,
+    plan2: Option<&'a RowDedupPlan>,
+    compact: &'a mut [f32],
+    stats: &'a mut AggDedupStats,
+}
+
 /// The default compute backend: pure Rust, blocked/tiled parallel
 /// matmuls, transpose-free backward.
 pub struct NativeBackend {
@@ -113,6 +259,21 @@ pub struct NativeBackend {
     /// Loss head selected at prepare() (softmax CE for single-label
     /// datasets, sigmoid BCE for the multi-label ones).
     loss_head: LossHead,
+    /// Redundancy-eliminated aggregation knob: compute each distinct
+    /// adjacency row's aggregation once and scatter by alias.  Results
+    /// are bit-identical either way; off skips the per-step row planning
+    /// entirely.
+    dedup: bool,
+    /// Row-dedup plan for the staged `a1` (n1 rows); `None` with the
+    /// knob off.
+    plan1: Option<RowDedupPlan>,
+    /// Row-dedup plan for the staged `a2` (b rows).
+    plan2: Option<RowDedupPlan>,
+    /// Gather output buffer, sized at prepare() for the widest
+    /// aggregation product.
+    compact: Vec<f32>,
+    /// Cumulative savings since prepare().
+    stats: AggDedupStats,
 }
 
 impl NativeBackend {
@@ -124,12 +285,24 @@ impl NativeBackend {
             scratch: None,
             agco: false,
             loss_head: LossHead::SoftmaxXent,
+            dedup: true,
+            plan1: None,
+            plan2: None,
+            compact: Vec::new(),
+            stats: AggDedupStats::default(),
         }
     }
 
     /// Resolved matmul worker count.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Toggle redundancy-eliminated aggregation (default on).  Call
+    /// before [`ComputeBackend::prepare`]: the plan/gather buffers are
+    /// sized there, and the hot loop never allocates.
+    pub fn set_dedup(&mut self, dedup: bool) {
+        self.dedup = dedup;
     }
 
     fn meta_for(
@@ -166,27 +339,31 @@ impl NativeBackend {
         state: &ModelState,
         agco: bool,
         t: usize,
+        ctx: &mut DedupCtx<'_>,
     ) {
         let x = staged.x.as_mat();
         let a1 = staged.a1.as_mat();
         let a2 = staged.a2.as_mat();
         if agco {
-            par_matmul_into(&mut scratch.p1, a1, x, t);
+            agg_matmul(&mut scratch.p1, a1, x, ctx.plan1, ctx.compact, ctx.stats, t);
             par_matmul_into(&mut scratch.z1, scratch.p1.view(), state.w1.view(), t);
         } else {
             par_matmul_into(&mut scratch.xw1, x, state.w1.view(), t);
-            par_matmul_into(&mut scratch.z1, a1, scratch.xw1.view(), t);
+            let xw1 = scratch.xw1.view();
+            agg_matmul(&mut scratch.z1, a1, xw1, ctx.plan1, ctx.compact, ctx.stats, t);
         }
         scratch.h1.data.copy_from_slice(&scratch.z1.data);
         for v in &mut scratch.h1.data {
             *v = v.max(0.0);
         }
         if agco {
-            par_matmul_into(&mut scratch.q2, a2, scratch.h1.view(), t);
+            let h1 = scratch.h1.view();
+            agg_matmul(&mut scratch.q2, a2, h1, ctx.plan2, ctx.compact, ctx.stats, t);
             par_matmul_into(&mut scratch.z2, scratch.q2.view(), state.w2.view(), t);
         } else {
             par_matmul_into(&mut scratch.h1w2, scratch.h1.view(), state.w2.view(), t);
-            par_matmul_into(&mut scratch.z2, a2, scratch.h1w2.view(), t);
+            let h1w2 = scratch.h1w2.view();
+            agg_matmul(&mut scratch.z2, a2, h1w2, ctx.plan2, ctx.compact, ctx.stats, t);
         }
     }
 
@@ -209,13 +386,21 @@ impl NativeBackend {
     /// activations) from scratch and leaves the weight gradients in
     /// `scratch.g1` / `scratch.g2`.  Under AgCo the forward already
     /// produced `Q2 = A2·H1` and `P1 = A1·X`; CoAg recomputes them here.
-    fn backward(s: &mut Scratch, staged: &StagedBatch, state: &ModelState, agco: bool, t: usize) {
+    fn backward(
+        s: &mut Scratch,
+        staged: &StagedBatch,
+        state: &ModelState,
+        agco: bool,
+        t: usize,
+        ctx: &mut DedupCtx<'_>,
+    ) {
         let a1 = staged.a1.as_mat();
         let a2 = staged.a2.as_mat();
         let x = staged.x.as_mat();
         // dW2 = (A2·H1)ᵀ·dZ2.
         if !agco {
-            par_matmul_into(&mut s.q2, a2, s.h1.view(), t);
+            let h1 = s.h1.view();
+            agg_matmul(&mut s.q2, a2, h1, ctx.plan2, ctx.compact, ctx.stats, t);
         }
         par_matmul_tn_into(&mut s.g2, s.q2.view(), s.dz2.view(), t);
         // dH1 = (A2ᵀ·dZ2)·W2ᵀ, both factors contracted by index swap.
@@ -229,9 +414,29 @@ impl NativeBackend {
         }
         // dW1 = (A1·X)ᵀ·dZ1.
         if !agco {
-            par_matmul_into(&mut s.p1, a1, x, t);
+            agg_matmul(&mut s.p1, a1, x, ctx.plan1, ctx.compact, ctx.stats, t);
         }
         par_matmul_tn_into(&mut s.g1, s.p1.view(), s.dh1.view(), t);
+    }
+
+    /// Per-step setup shared by the step/grad/eval entry points: rebuild
+    /// the row-dedup plans for the staged adjacencies (no-op with the
+    /// knob off) and split-borrow the scratch plus the dedup context —
+    /// all field-disjoint, so the static forward/backward helpers can
+    /// hold both.
+    fn step_ctx(&mut self, staged: &StagedBatch) -> (&mut Scratch, DedupCtx<'_>) {
+        if let (Some(p1), Some(p2)) = (self.plan1.as_mut(), self.plan2.as_mut()) {
+            plan_row_dedup(staged.a1.as_mat(), p1);
+            plan_row_dedup(staged.a2.as_mat(), p2);
+        }
+        let ctx = DedupCtx {
+            plan1: self.plan1.as_ref(),
+            plan2: self.plan2.as_ref(),
+            compact: &mut self.compact,
+            stats: &mut self.stats,
+        };
+        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+        (s, ctx)
     }
 }
 
@@ -265,6 +470,21 @@ impl ComputeBackend for NativeBackend {
         self.scratch = Some(Scratch::new(&meta));
         self.agco = ordering == "agco";
         self.loss_head = loss_head;
+        if self.dedup {
+            // Plan and gather buffers sized once here; per-step
+            // replanning rewrites them in place (zero allocations in the
+            // hot loop).  The gather buffer must fit the widest
+            // aggregation product of either adjacency.
+            self.plan1 = Some(RowDedupPlan::new(meta.n1));
+            self.plan2 = Some(RowDedupPlan::new(meta.b));
+            let widest = (meta.n1 * meta.d.max(meta.h)).max(meta.b * meta.h.max(meta.c));
+            self.compact = vec![0.0; widest];
+        } else {
+            self.plan1 = None;
+            self.plan2 = None;
+            self.compact = Vec::new();
+        }
+        self.stats = AggDedupStats::default();
         self.meta = Some(meta.clone());
         Ok(meta)
     }
@@ -281,11 +501,11 @@ impl ComputeBackend for NativeBackend {
         let t = self.threads;
         let agco = self.agco;
         let head = self.loss_head;
-        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+        let (s, mut ctx) = self.step_ctx(staged);
 
-        Self::forward(s, staged, state, agco, t);
+        Self::forward(s, staged, state, agco, t, &mut ctx);
         let loss = Self::loss_into(s, staged, head);
-        Self::backward(s, staged, state, agco, t);
+        Self::backward(s, staged, state, agco, t, &mut ctx);
         state.apply_gradients(&s.g1.data, &s.g2.data, optimizer, lr);
         Ok(loss)
     }
@@ -306,13 +526,13 @@ impl ComputeBackend for NativeBackend {
         let t = self.threads;
         let agco = self.agco;
         let head = self.loss_head;
-        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
+        let (s, mut ctx) = self.step_ctx(staged);
         // Exactly the train_step pipeline minus the update: same matmuls,
         // same accumulation orders, so the extracted gradients are
         // bit-identical to the ones the fused step would have applied.
-        Self::forward(s, staged, state, agco, t);
+        Self::forward(s, staged, state, agco, t, &mut ctx);
         let loss = Self::loss_into(s, staged, head);
-        Self::backward(s, staged, state, agco, t);
+        Self::backward(s, staged, state, agco, t, &mut ctx);
         grads.g1.data.copy_from_slice(&s.g1.data);
         grads.g2.data.copy_from_slice(&s.g2.data);
         Ok(loss)
@@ -325,11 +545,12 @@ impl ComputeBackend for NativeBackend {
     ) -> anyhow::Result<(f32, f32)> {
         let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
         check_staged(staged, meta)?;
+        let b_rows = meta.b;
         let t = self.threads;
         let agco = self.agco;
         let head = self.loss_head;
-        let s = self.scratch.as_mut().expect("scratch allocated in prepare");
-        Self::forward(s, staged, state, agco, t);
+        let (s, mut ctx) = self.step_ctx(staged);
+        Self::forward(s, staged, state, agco, t, &mut ctx);
         let loss = Self::loss_into(s, staged, head);
         let yhot = staged.yhot.as_mat();
         let argmax = |row: &[f32]| -> usize {
@@ -342,7 +563,7 @@ impl ComputeBackend for NativeBackend {
             best
         };
         let mut correct = 0.0f32;
-        for i in 0..meta.b {
+        for i in 0..b_rows {
             if staged.row_mask.data[i] <= 0.0 {
                 continue;
             }
@@ -352,12 +573,71 @@ impl ComputeBackend for NativeBackend {
         }
         Ok((loss, correct))
     }
+
+    fn dedup_stats(&self) -> AggDedupStats {
+        self.stats
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::executor::TensorIn;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn row_dedup_plan_groups_bitwise_equal_rows() {
+        let mut a = Matrix::zeros(5, 3);
+        a.row_mut(0).copy_from_slice(&[1.0, 0.0, 2.0]);
+        a.row_mut(2).copy_from_slice(&[1.0, 0.0, 2.0]);
+        a.row_mut(4).copy_from_slice(&[3.0, 4.0, 0.0]);
+        let mut plan = RowDedupPlan::new(5);
+        plan_row_dedup(a.view(), &mut plan);
+        // Rows 1 and 3 are the zero-padding case; 2 aliases 0.
+        assert_eq!(plan.src, vec![0, 1, 0, 1, 4]);
+        assert_eq!(plan.reps, vec![0, 1, 4]);
+        assert_eq!(plan.rank, vec![0, 1, 0, 1, 2]);
+        assert_eq!(plan.nnz, vec![2, 0, 2, 0, 2]);
+        // A -0.0 row is bitwise distinct from a +0.0 row: no aliasing.
+        a.row_mut(1)[0] = -0.0;
+        plan_row_dedup(a.view(), &mut plan);
+        assert_eq!(plan.src[3], 3);
+        assert_eq!(plan.reps.len(), 4);
+    }
+
+    #[test]
+    fn agg_matmul_matches_plain_path_bitwise() {
+        let mut rng = SplitMix64::new(5);
+        let mut a = Matrix::randn(8, 6, 1.0, &mut rng);
+        let r0: Vec<f32> = a.row(0).to_vec();
+        a.row_mut(3).copy_from_slice(&r0);
+        a.row_mut(5).copy_from_slice(&r0);
+        a.row_mut(6).fill(0.0);
+        a.row_mut(7).fill(0.0);
+        let b = Matrix::randn(6, 4, 1.0, &mut rng);
+        let mut plain = Matrix::zeros(8, 4);
+        par_matmul_into(&mut plain, a.view(), b.view(), 2);
+        let mut plan = RowDedupPlan::new(8);
+        plan_row_dedup(a.view(), &mut plan);
+        let mut compact = vec![0.0f32; 8 * 4];
+        let mut stats = AggDedupStats::default();
+        let mut out = Matrix::zeros(8, 4);
+        agg_matmul(&mut out, a.view(), b.view(), Some(&plan), &mut compact, &mut stats, 2);
+        assert_eq!(out, plain);
+        assert_eq!(stats.dedup_matmuls, 1);
+        // Rows 3 and 5 alias row 0; one zero row aliases the other.
+        assert_eq!(stats.rows_reused, 3);
+        // Zero rows save no MACs; the dense aliases save nnz × cols each.
+        let expect = (plan.nnz[3] as u64 + plan.nnz[5] as u64) * 4;
+        assert_eq!(stats.macs_saved, expect);
+        // Without a plan (knob off) the call is the plain path and the
+        // ledger is untouched.
+        let mut off = Matrix::zeros(8, 4);
+        let mut stats_off = AggDedupStats::default();
+        agg_matmul(&mut off, a.view(), b.view(), None, &mut [], &mut stats_off, 2);
+        assert_eq!(off, plain);
+        assert_eq!(stats_off, AggDedupStats::default());
+    }
 
     #[test]
     fn resolve_exposes_builtin_shapes() {

@@ -25,8 +25,8 @@ use std::time::Instant;
 use crate::coordinator::sequence_estimator::{SequenceEstimator, ShapeParams};
 use crate::graph::generate::LabeledGraph;
 use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
-use crate::runtime::backend::ComputeBackend;
 use crate::runtime::backend::PjrtBackend;
+use crate::runtime::backend::{AggDedupStats, ComputeBackend};
 use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::native::NativeBackend;
 use crate::train::batch::StagingArena;
@@ -55,6 +55,10 @@ pub struct TrainerConfig {
     /// datasets — Yelp/AmazonProducts select it via
     /// [`crate::graph::datasets::DatasetSpec::loss_head`]).
     pub loss_head: LossHead,
+    /// Redundancy-eliminated aggregation: compute each bitwise-duplicate
+    /// adjacency row's partial sum once and reuse it (exact — loss curves
+    /// are bit-identical with the knob off).  Default on.
+    pub dedup: bool,
 }
 
 impl Default for TrainerConfig {
@@ -70,6 +74,7 @@ impl Default for TrainerConfig {
             log_every: 10,
             threads: 0,
             loss_head: LossHead::SoftmaxXent,
+            dedup: true,
         }
     }
 }
@@ -129,8 +134,9 @@ pub struct Trainer<'g> {
 impl<'g> Trainer<'g> {
     /// Build a trainer on the default native backend — works on any host.
     pub fn new(graph: &'g LabeledGraph, cfg: TrainerConfig) -> anyhow::Result<Self> {
-        let backend = Box::new(NativeBackend::new(cfg.threads));
-        Self::with_backend(graph, cfg, backend)
+        let mut backend = NativeBackend::new(cfg.threads);
+        backend.set_dedup(cfg.dedup);
+        Self::with_backend(graph, cfg, Box::new(backend))
     }
 
     /// Build a trainer on the PJRT executor (fails fast when no artifacts
@@ -219,6 +225,12 @@ impl<'g> Trainer<'g> {
     /// Number of training steps taken so far (survives checkpoints).
     pub fn steps_done(&self) -> u64 {
         self.steps_done
+    }
+
+    /// Cumulative aggregation-dedup ledger from the backend (all zeros
+    /// when the backend doesn't dedup or `cfg.dedup` is off).
+    pub fn dedup_stats(&self) -> AggDedupStats {
+        self.backend.dedup_stats()
     }
 
     /// Draw the next mini-batch's node ids into the recycled buffer.

@@ -279,6 +279,45 @@ pub fn par_matmul_into(out: &mut Matrix, a: MatRef<'_>, b: MatRef<'_>, threads: 
     });
 }
 
+/// `out[i] = a[rows[i]] · b` for a compact list of gathered `a` rows,
+/// written into the caller's `rows.len() × b.cols` row-major buffer.
+/// This is the dedup'd aggregation kernel: the row-dedup plan gathers
+/// only *representative* adjacency rows, computes each shared partial
+/// once, and the caller scatters results back by row alias.  Each output
+/// row's accumulation (k-blocked ascending k, zero-skip on `a`) is
+/// bit-identical to the same row of [`par_matmul_into`], so aliasing
+/// duplicate rows to one gathered computation cannot change any value.
+pub fn par_matmul_gather_into(
+    out: &mut [f32],
+    a: MatRef<'_>,
+    rows: &[u32],
+    b: MatRef<'_>,
+    threads: usize,
+) {
+    assert_eq!(a.cols, b.rows, "contraction mismatch");
+    assert_eq!(out.len(), rows.len() * b.cols, "output shape mismatch");
+    out.fill(0.0);
+    let cols = b.cols;
+    let work = rows.len() * a.cols * cols.max(1);
+    let threads = if work < PAR_MIN_WORK { 1 } else { threads.max(1) };
+    for_each_row_tile(rows.len(), cols, out, threads, |r0, tile| {
+        let nrows = tile.len() / cols.max(1);
+        for kb in (0..a.cols).step_by(K_BLOCK) {
+            let kend = (kb + K_BLOCK).min(a.cols);
+            for i in 0..nrows {
+                let arow = a.row(rows[r0 + i] as usize);
+                let orow = &mut tile[i * cols..(i + 1) * cols];
+                for (k, &av) in arow.iter().enumerate().take(kend).skip(kb) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy_row(orow, av, b.row(k));
+                }
+            }
+        }
+    });
+}
+
 /// `out = aᵀ · b` without materializing `aᵀ`: the column of `a` feeding
 /// each output row is read by index swap (`a[k, m]`), accumulated over
 /// ascending k — the paper's transpose-free weight-gradient contraction
@@ -460,6 +499,30 @@ mod tests {
         let mut out = Matrix::zeros(19, 23);
         par_matmul_nt_into(&mut out, a.view(), b.view(), 4);
         assert!(out.max_abs_diff(&naive) < 1e-6);
+    }
+
+    #[test]
+    fn par_matmul_gather_matches_full_rows_bitwise() {
+        let mut rng = SplitMix64::new(24);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        let b = Matrix::randn(53, 29, 1.0, &mut rng);
+        let mut full = Matrix::zeros(37, 29);
+        par_matmul_into(&mut full, a.view(), b.view(), 4);
+        // Arbitrary gather list with repeats and out-of-order indices.
+        let rows: Vec<u32> = vec![5, 0, 36, 5, 17, 2];
+        let mut out = vec![0.0f32; rows.len() * 29];
+        for threads in [1usize, 2, 8] {
+            par_matmul_gather_into(&mut out, a.view(), &rows, b.view(), threads);
+            for (i, &r) in rows.iter().enumerate() {
+                assert_eq!(
+                    &out[i * 29..(i + 1) * 29],
+                    full.row(r as usize),
+                    "row {i} (source {r}), threads={threads}"
+                );
+            }
+        }
+        // Empty gather list is a no-op.
+        par_matmul_gather_into(&mut [], a.view(), &[], b.view(), 4);
     }
 
     #[test]
