@@ -12,11 +12,19 @@
 //! A recovery drill rides along: kill card 2 of 4 mid-run, roll back to
 //! the last durable checkpoint generation and re-shard N−1 — the modeled
 //! re-shard cost and the steps re-trained land in the baseline too.
+//!
+//! A link-mode sweep (exact/bf16/int8 × overlap off/on at every card
+//! count) records the compression and overlap wins: wire KB/step,
+//! compression ratio, hidden-sync fraction and exposed cycles/step all
+//! land in the baseline, and the sweep asserts the int8 wire cut (≥40%)
+//! plus the overlap-invariance of every mode's loss curve.
 
 mod common;
 
 use common::{banner, compare_baseline, fmt_time, time_it, trials};
-use gcn_noc::cluster::{train_with_recovery, ClusterTrainer, FaultEvent, FaultPlan, GraphSharder};
+use gcn_noc::cluster::{
+    train_with_recovery, ClusterTrainer, FaultEvent, FaultPlan, GraphSharder, Precision,
+};
 use gcn_noc::graph::generate::community_graph;
 use gcn_noc::train::trainer::TrainerConfig;
 use gcn_noc::train::CheckpointStore;
@@ -27,6 +35,20 @@ struct Point {
     steps_per_sec: f64,
     sync_cycles_per_step: f64,
     kb_per_step: f64,
+}
+
+/// One (precision, overlap, cards) point of the link-mode sweep.
+#[derive(Debug)]
+struct ModePoint {
+    shards: usize,
+    mode: &'static str,
+    overlap: bool,
+    steps_per_sec: f64,
+    kb_per_step: f64,
+    wire_kb_per_step: f64,
+    compression_ratio: f64,
+    hidden_frac: f64,
+    exposed_cycles_per_step: f64,
 }
 
 fn main() {
@@ -69,6 +91,89 @@ fn main() {
             kb_per_step: totals.bytes_per_step() / 1e3,
         });
     }
+
+    // --- Link modes: exact/bf16/int8 × overlap off/on. ---
+    banner("link modes: exact/bf16/int8 x overlap off/on (wire KB, hidden sync)");
+    let mut modes: Vec<ModePoint> = Vec::new();
+    for precision in [Precision::Exact, Precision::Bf16, Precision::Int8] {
+        // Loss-curve bits of the non-overlapped run per card count: the
+        // overlapped run must replay them bit for bit (codec streams key
+        // on data, never on worker timing).
+        let mut serial_bits: Vec<Vec<u32>> = Vec::new();
+        for overlap in [false, true] {
+            for (si, shards) in [1usize, 2, 4, 8].into_iter().enumerate() {
+                let plan = GraphSharder::new(shards).shard(&graph);
+                let cfg = TrainerConfig {
+                    batch_size: 32,
+                    steps,
+                    lr: 0.05,
+                    seed: 0xC106,
+                    log_every: 0,
+                    precision,
+                    overlap,
+                    ..Default::default()
+                };
+                let mut trainer = ClusterTrainer::new(&graph, &plan, cfg).unwrap();
+                let mut curve = None;
+                let t = time_it(0, 1, || {
+                    curve = Some(trainer.train().unwrap());
+                });
+                let curve = curve.expect("trained once");
+                assert!(curve.records.iter().all(|r| r.loss.is_finite()));
+                let bits: Vec<u32> = curve.records.iter().map(|r| r.loss.to_bits()).collect();
+                if overlap {
+                    assert_eq!(
+                        bits, serial_bits[si],
+                        "{} curve must be overlap-invariant at {shards} cards",
+                        precision.name()
+                    );
+                } else {
+                    serial_bits.push(bits);
+                }
+                let totals = trainer.traffic_totals();
+                let p = ModePoint {
+                    shards,
+                    mode: precision.name(),
+                    overlap,
+                    steps_per_sec: curve.len() as f64 / t.max(1e-12),
+                    kb_per_step: totals.bytes_per_step() / 1e3,
+                    wire_kb_per_step: totals.wire_bytes_per_step() / 1e3,
+                    compression_ratio: totals.compression_ratio(),
+                    hidden_frac: totals.hidden_fraction(),
+                    exposed_cycles_per_step: totals.exposed_cycles_per_step(),
+                };
+                if shards > 1 {
+                    if precision == Precision::Int8 {
+                        assert!(
+                            p.wire_kb_per_step <= 0.6 * p.kb_per_step,
+                            "int8 must cut link bytes by >= 40%: {p:?}"
+                        );
+                    }
+                    if overlap {
+                        assert!(p.hidden_frac > 0.0, "overlap must hide sync cycles: {p:?}");
+                    }
+                }
+                println!(
+                    "{:>5} overlap={:<5} cards={shards}: {:.1} steps/s, \
+                     {:.1} -> {:.1} KB/step on the wire ({:.2}x), \
+                     {:.0} exposed sync cycles/step ({:.0}% hidden)",
+                    p.mode,
+                    p.overlap,
+                    p.steps_per_sec,
+                    p.kb_per_step,
+                    p.wire_kb_per_step,
+                    p.compression_ratio,
+                    p.exposed_cycles_per_step,
+                    100.0 * p.hidden_frac,
+                );
+                modes.push(p);
+            }
+        }
+    }
+    let headline = modes
+        .iter()
+        .find(|p| p.mode == "int8" && p.overlap && p.shards == 4)
+        .expect("int8+overlap at 4 cards is in the sweep");
 
     // --- Recovery drill: kill card 2 of 4 at step 6, recover N−1. ---
     // Fixed sizes (10 steps, checkpoint every 4) keep the drill cheap
@@ -119,13 +224,39 @@ fn main() {
         })
         .collect::<Vec<_>>()
         .join(",\n");
+    let mode_sweep = modes
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{\"shards\": {}, \"mode\": \"{}\", \"overlap\": {}, \
+                 \"steps_per_sec\": {:.3}, \"kb_per_step\": {:.2}, \
+                 \"wire_kb_per_step\": {:.2}, \"compression_ratio\": {:.2}, \
+                 \"hidden_frac\": {:.3}, \"exposed_cycles_per_step\": {:.1}}}",
+                p.shards,
+                p.mode,
+                p.overlap,
+                p.steps_per_sec,
+                p.kb_per_step,
+                p.wire_kb_per_step,
+                p.compression_ratio,
+                p.hidden_frac,
+                p.exposed_cycles_per_step
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
     let json = format!(
         "{{\n  \"bench\": \"bench_cluster\",\n  \"host_cores\": {cores},\n  \
          \"smoke\": {},\n  \"steps\": {steps},\n  \"sweep\": [\n{sweep}\n  ],\n  \
-         \"sync_cycles_8\": {:.1},\n  \"reshard_cycles\": {},\n  \
-         \"recovery_steps_lost\": {}\n}}\n",
+         \"modes\": [\n{mode_sweep}\n  ],\n  \
+         \"sync_cycles_8\": {:.1},\n  \"wire_kb_int8_4\": {:.2},\n  \
+         \"hidden_frac_int8_4\": {:.3},\n  \"steps_per_sec_int8_overlap_4\": {:.3},\n  \
+         \"reshard_cycles\": {},\n  \"recovery_steps_lost\": {}\n}}\n",
         common::smoke(),
         points[3].sync_cycles_per_step,
+        headline.wire_kb_per_step,
+        headline.hidden_frac,
+        headline.steps_per_sec,
         ev.reshard_cycles,
         ev.steps_lost,
     );
@@ -135,6 +266,12 @@ fn main() {
     // lower is better.
     compare_baseline(path, "steps_per_sec", points[0].steps_per_sec, true);
     compare_baseline(path, "sync_cycles_8", points[3].sync_cycles_per_step, false);
+    // Link-mode headlines (int8 + overlap at 4 cards): wire volume and
+    // exposed-sync wins are costs (lower is better), the hidden fraction
+    // and throughput are wins.
+    compare_baseline(path, "wire_kb_int8_4", headline.wire_kb_per_step, false);
+    compare_baseline(path, "hidden_frac_int8_4", headline.hidden_frac, true);
+    compare_baseline(path, "steps_per_sec_int8_overlap_4", headline.steps_per_sec, true);
     compare_baseline(path, "reshard_cycles", ev.reshard_cycles as f64, false);
     match std::fs::write(path, &json) {
         Ok(()) => println!("\nbaseline written to {path}"),

@@ -17,9 +17,48 @@
 //! applied before the fold; a card that drew no rows this step has
 //! weight 0, which also neutralizes its stale buffers.
 
+//!
+//! # Chunked / compressed folds
+//!
+//! [`weighted_tree_reduce`] folds both weight matrices monolithically —
+//! the exact-mode default.  The per-layer variants split the payload
+//! into gradient **chunks** (layer 2's `g2` first, then layer 1's `g1`)
+//! so the cluster trainer can reduce layer 2 while layer 1's backward
+//! is still running, and round-trip every fold-edge and broadcast
+//! payload through a [`WireCodec`].  Per element the chunked fold runs
+//! the *same* f32 multiply and adds in the *same* schedule order as the
+//! monolithic fold, so with an exact codec the result is bit-identical
+//! to [`weighted_tree_reduce`] (pinned in `rust/tests/linkopt.rs`); and
+//! because the codec streams key on `(step, chunk, edge)` only, the
+//! overlapped and serial spellings of a quantized reduce are bit-equal
+//! too.
+
 use std::sync::Mutex;
 
+use crate::cluster::codec::WireCodec;
 use crate::runtime::backend::GradBuffers;
+use crate::util::matrix::Matrix;
+
+/// Chunk id of the layer-2 gradient (`g2`, reduced first — it is ready
+/// before the layer-1 backward finishes).
+pub const CHUNK_G2: u32 = 0;
+/// Chunk id of the layer-1 gradient (`g1`).
+pub const CHUNK_G1: u32 = 1;
+/// Edge id of a chunk's broadcast-down transfer in the codec key space
+/// (fold edges use their source card index).
+pub const EDGE_BCAST: u32 = u32::MAX;
+
+/// Chunk picker for [`weighted_tree_reduce_layer`]: the layer-1 weight
+/// gradient.
+pub fn pick_g1(g: &mut GradBuffers) -> &mut Matrix {
+    &mut g.g1
+}
+
+/// Chunk picker for [`weighted_tree_reduce_layer`]: the layer-2 weight
+/// gradient.
+pub fn pick_g2(g: &mut GradBuffers) -> &mut Matrix {
+    &mut g.g2
+}
 
 /// The fixed fold schedule over `n` slots: `(dst, src)` pairs in
 /// execution order.  After applying every pair in order, slot 0 holds
@@ -52,6 +91,74 @@ pub fn weighted_tree_reduce(slots: &[Mutex<GradBuffers>], weights: &[f32]) {
         let mut d = slots[dst].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
         let s = slots[src].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
         d.add_assign(&s);
+    }
+}
+
+/// Scale each slot's `pick` matrix by its weight, then fold that chunk
+/// into slot 0 in the fixed tree order, round-tripping every fold-edge
+/// payload (and the final broadcast) through `codec`.  With an exact
+/// codec this performs, element for element, the `pick` share of
+/// [`weighted_tree_reduce`]'s operations in the same order.
+pub fn weighted_tree_reduce_layer(
+    slots: &[Mutex<GradBuffers>],
+    weights: &[f32],
+    pick: fn(&mut GradBuffers) -> &mut Matrix,
+    codec: &WireCodec,
+    step: u64,
+    chunk: u32,
+) {
+    assert_eq!(slots.len(), weights.len());
+    for (slot, &w) in slots.iter().zip(weights) {
+        let mut g = slot.lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
+        scale_mat(pick(&mut g), w);
+    }
+    for (dst, src) in tree_schedule(slots.len()) {
+        let mut d = slots[dst].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
+        let mut s = slots[src].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
+        codec.roundtrip(&mut pick(&mut s).data, step, chunk, src as u32);
+        add_mat(pick(&mut d), pick(&mut s));
+    }
+    if slots.len() > 1 {
+        let mut d = slots[0].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
+        codec.roundtrip(&mut pick(&mut d).data, step, chunk, EDGE_BCAST);
+    }
+}
+
+/// Fold pre-scaled chunk slots into slot 0 (the overlapped path: each
+/// card deposited `w_k · g2` as its layer-2 gradient became ready, and
+/// the last depositor runs this fold on its own worker while the other
+/// cards' layer-1 backwards are still in flight).  Same schedule, same
+/// codec keys, same f32 operations as [`weighted_tree_reduce_layer`]
+/// after its scaling pass.
+pub fn tree_reduce_prescaled(slots: &[Mutex<Matrix>], codec: &WireCodec, step: u64, chunk: u32) {
+    for (dst, src) in tree_schedule(slots.len()) {
+        let mut d = slots[dst].lock().unwrap(); // lint: allow(R5, poisoned chunk slot means a card worker panicked; propagating is correct)
+        let mut s = slots[src].lock().unwrap(); // lint: allow(R5, poisoned chunk slot means a card worker panicked; propagating is correct)
+        codec.roundtrip(&mut s.data, step, chunk, src as u32);
+        add_mat(&mut d, &s);
+    }
+    if slots.len() > 1 {
+        let mut d = slots[0].lock().unwrap(); // lint: allow(R5, poisoned chunk slot means a card worker panicked; propagating is correct)
+        codec.roundtrip(&mut d.data, step, chunk, EDGE_BCAST);
+    }
+}
+
+/// The single spelling of the per-chunk weight scaling — identical f32
+/// multiply to [`GradBuffers::scale`]'s, applied to one matrix.
+#[inline]
+pub fn scale_mat(m: &mut Matrix, s: f32) {
+    for g in &mut m.data {
+        *g *= s;
+    }
+}
+
+/// The single spelling of one fold edge's accumulation — identical f32
+/// add to [`GradBuffers::add_assign`]'s, applied to one matrix.
+#[inline]
+fn add_mat(d: &mut Matrix, s: &Matrix) {
+    debug_assert_eq!(d.shape(), s.shape());
+    for (a, &b) in d.data.iter_mut().zip(&s.data) {
+        *a += b;
     }
 }
 
@@ -117,6 +224,52 @@ mod tests {
         assert_eq!(got.g1.data[0].to_bits(), vals[0].to_bits());
         assert_eq!(got.g1.data[1], 2.0 * vals[0]);
         assert_eq!(got.g2.data[0], -vals[0]);
+    }
+
+    #[test]
+    fn chunked_exact_fold_is_bit_identical_to_monolithic() {
+        use crate::cluster::codec::{Precision, WireCodec};
+        // Awkward values (non-representable sums, negative zeros) so any
+        // reordering or extra operation would flip result bits.
+        let vals = [0.1f32, -7.3, 1e-8, 33.25, -0.0];
+        let mono = buffers(&vals);
+        let chunked = buffers(&vals);
+        let weights = [0.2f32, 0.2, 0.1, 0.5, 0.0];
+        weighted_tree_reduce(&mono, &weights);
+        let codec = WireCodec::new(Precision::Exact, 0xABCD);
+        weighted_tree_reduce_layer(&chunked, &weights, pick_g2, &codec, 3, CHUNK_G2);
+        weighted_tree_reduce_layer(&chunked, &weights, pick_g1, &codec, 3, CHUNK_G1);
+        let m = mono[0].lock().unwrap();
+        let c = chunked[0].lock().unwrap();
+        let bits = |m: &Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&m.g1), bits(&c.g1));
+        assert_eq!(bits(&m.g2), bits(&c.g2));
+    }
+
+    #[test]
+    fn prescaled_fold_matches_weighted_layer_fold() {
+        use crate::cluster::codec::{Precision, WireCodec};
+        let vals = [0.7f32, -1.9, 4.4, 0.03];
+        let weights = [0.4f32, 0.1, 0.25, 0.25];
+        let codec = WireCodec::new(Precision::Bf16, 0x5EED);
+        let slots = buffers(&vals);
+        weighted_tree_reduce_layer(&slots, &weights, pick_g2, &codec, 9, CHUNK_G2);
+        // Overlap spelling: deposit w·g2 per card, then the prescaled fold.
+        let deposited: Vec<Mutex<Matrix>> = vals
+            .iter()
+            .zip(&weights)
+            .map(|(&v, &w)| {
+                let mut m = Matrix::from_vec(1, 1, vec![-v]);
+                scale_mat(&mut m, w);
+                Mutex::new(m)
+            })
+            .collect();
+        tree_reduce_prescaled(&deposited, &codec, 9, CHUNK_G2);
+        assert_eq!(
+            slots[0].lock().unwrap().g2.data[0].to_bits(),
+            deposited[0].lock().unwrap().data[0].to_bits(),
+            "quantized overlap and serial spellings must be bit-equal"
+        );
     }
 
     #[test]

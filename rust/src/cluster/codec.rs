@@ -1,0 +1,279 @@
+//! Link-payload codecs: quantized wire formats for the inter-card flows.
+//!
+//! The cluster's two link flows — halo feature pulls and the gradient
+//! all-reduce — ship f32 payloads.  This module provides the two
+//! compressed wire formats the [`crate::cluster::trainer::ClusterTrainer`]
+//! can select instead of exact fp32:
+//!
+//! - **bf16** — each f32 keeps its top 16 bits (sign + exponent + 7
+//!   mantissa bits): 2 bytes/value.
+//! - **int8** — values are blocked into [`INT8_CHUNK`]-element chunks;
+//!   each chunk carries one f32 scale (`max |v| / 127`) plus one signed
+//!   byte per value: `elems + 4·⌈elems/64⌉` bytes.
+//!
+//! Both formats round **stochastically**: the discarded low bits decide
+//! the round-up probability, with the noise drawn from a
+//! [`SplitMix64`] stream — so quantization is unbiased in expectation
+//! but every rounding decision is a pure function of (payload, stream).
+//! [`WireCodec`] derives each transfer's stream from
+//! `(seed, step, chunk, edge)` and nothing else — never thread timing —
+//! so quantized runs stay **bit-identical at any pool size**, the same
+//! contract the exact path has.
+//!
+//! Non-finite values bypass quantization: NaN stays NaN and ±∞ stays ±∞
+//! through either round trip (a diverged run must stay visibly
+//! diverged, not be masked to zero), and int8 scale selection ignores
+//! them.  Denormals quantize like any other small value (bf16 truncates
+//! their mantissa; int8 flushes them against the chunk scale).
+//!
+//! The simulator never materializes the encoded bytes on the numeric
+//! path: [`Precision::roundtrip`] quantizes and immediately dequantizes
+//! in place (the value a receiver would decode), while
+//! [`Precision::wire_bytes`] gives the modeled on-wire size to
+//! [`crate::cluster::traffic`].  The roundtrip kernels are steady-state
+//! allocation-free (`rust/lint/hot_paths.txt` R3 entries).
+
+use crate::util::rng::SplitMix64;
+
+/// Values per int8 scale block.
+pub const INT8_CHUNK: usize = 64;
+
+/// Wire precision of the cluster link payloads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Exact fp32 — the byte-identical default (no codec on the path).
+    #[default]
+    Exact,
+    /// Truncate-to-bf16 with stochastic rounding (2 bytes/value).
+    Bf16,
+    /// Per-chunk-scaled int8 with stochastic rounding
+    /// (1 byte/value + 4 bytes/chunk).
+    Int8,
+}
+
+impl Precision {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "exact" | "fp32" => Ok(Precision::Exact),
+            "bf16" => Ok(Precision::Bf16),
+            "int8" => Ok(Precision::Int8),
+            other => anyhow::bail!("unknown precision '{other}' (exact|bf16|int8)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Exact => "exact",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Modeled on-wire bytes of one payload of `elems` f32 values.
+    /// Exact = 4/value; bf16 = 2/value; int8 = 1/value + one f32 scale
+    /// per [`INT8_CHUNK`] block.
+    pub fn wire_bytes(self, elems: u64) -> u64 {
+        match self {
+            Precision::Exact => 4 * elems,
+            Precision::Bf16 => 2 * elems,
+            Precision::Int8 => elems + 4 * elems.div_ceil(INT8_CHUNK as u64),
+        }
+    }
+
+    /// Quantize-and-decode `data` in place — the value a receiver of one
+    /// compressed transfer would hold.  Exact is a no-op.
+    pub fn roundtrip(self, data: &mut [f32], rng: &mut SplitMix64) {
+        match self {
+            Precision::Exact => {}
+            Precision::Bf16 => bf16_roundtrip(data, rng),
+            Precision::Int8 => int8_roundtrip(data, rng),
+        }
+    }
+}
+
+/// Stochastically round one f32 to bf16 (its top 16 bits).  The 16
+/// discarded mantissa bits plus a uniform 16-bit draw decide the carry,
+/// so the result is the floor or ceiling bf16 neighbor with probability
+/// proportional to the discarded fraction.  NaN maps to a quiet bf16
+/// NaN (sign kept), ±∞ passes through, and a carry that would overflow
+/// a finite value to ∞ falls back to truncation.
+#[inline]
+pub fn bf16_sr_encode(v: f32, rng: &mut SplitMix64) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16 & 0x8000) | 0x7FC0;
+    }
+    if v.is_infinite() {
+        return (bits >> 16) as u16;
+    }
+    let noise = (rng.next_u64() & 0xFFFF) as u32;
+    let hi = (bits.wrapping_add(noise) >> 16) as u16;
+    if hi & 0x7F80 == 0x7F80 {
+        (bits >> 16) as u16 // finite value carried into the ∞ pattern
+    } else {
+        hi
+    }
+}
+
+/// Decode a bf16 wire value back to f32 (exact: bf16 ⊂ f32).
+#[inline]
+pub fn bf16_decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// One int8 block's scale: `max |v| / 127` over the chunk's finite
+/// values (0.0 for an all-zero or all-non-finite chunk — every finite
+/// value then encodes to 0).
+#[inline]
+pub fn int8_chunk_scale(chunk: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &v in chunk {
+        if v.is_finite() {
+            m = m.max(v.abs());
+        }
+    }
+    m / 127.0
+}
+
+/// Stochastically round one finite f32 to a scaled signed byte in
+/// `[-127, 127]`: the fractional part of `v / scale` is the round-up
+/// probability.  Callers keep non-finite values off this path.
+#[inline]
+pub fn int8_sr_encode(v: f32, scale: f32, rng: &mut SplitMix64) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let x = (v / scale).clamp(-127.0, 127.0);
+    let lo = x.floor();
+    let up = (rng.unit_f32() < x - lo) as i32;
+    (lo as i32 + up).clamp(-127, 127) as i8
+}
+
+/// Decode one int8 wire value against its chunk scale.
+#[inline]
+pub fn int8_decode(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+// lint: hot-path (also listed in rust/lint/hot_paths.txt)
+/// In-place bf16 wire round trip of one payload: every element becomes
+/// the f32 a receiver would decode.  Zero allocations.
+pub fn bf16_roundtrip(data: &mut [f32], rng: &mut SplitMix64) {
+    for v in data.iter_mut() {
+        *v = bf16_decode(bf16_sr_encode(*v, rng));
+    }
+}
+
+// lint: hot-path (also listed in rust/lint/hot_paths.txt)
+/// In-place int8 wire round trip of one payload, one scale per
+/// [`INT8_CHUNK`] block.  Non-finite values pass through untouched.
+/// Zero allocations.
+pub fn int8_roundtrip(data: &mut [f32], rng: &mut SplitMix64) {
+    for chunk in data.chunks_mut(INT8_CHUNK) {
+        let scale = int8_chunk_scale(chunk);
+        for v in chunk.iter_mut() {
+            if v.is_finite() {
+                *v = int8_decode(int8_sr_encode(*v, scale, rng), scale);
+            }
+        }
+    }
+}
+
+/// The deterministic per-transfer codec context of one cluster run.
+///
+/// Every compressed transfer (one fold edge or the broadcast of one
+/// gradient chunk, or one card's halo payload) gets its own rounding
+/// stream, derived from `(seed, step, chunk, edge)` — pure data, so the
+/// quantized path is bit-reproducible across pool sizes and across
+/// reruns, and two transfers never share noise.
+#[derive(Clone, Copy, Debug)]
+pub struct WireCodec {
+    pub precision: Precision,
+    seed: u64,
+}
+
+impl WireCodec {
+    pub fn new(precision: Precision, seed: u64) -> Self {
+        WireCodec { precision, seed }
+    }
+
+    /// The rounding stream of one transfer.
+    fn stream(&self, step: u64, chunk: u32, edge: u32) -> SplitMix64 {
+        let tag = ((chunk as u64) << 32) | edge as u64;
+        SplitMix64::new(
+            self.seed
+                ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ tag.wrapping_mul(0xBF58_476D_1CE4_E5B9),
+        )
+    }
+
+    /// Round-trip one transfer's payload in place (no-op when exact).
+    pub fn roundtrip(&self, data: &mut [f32], step: u64, chunk: u32, edge: u32) {
+        if self.precision == Precision::Exact {
+            return;
+        }
+        let mut rng = self.stream(step, chunk, edge);
+        self.precision.roundtrip(data, &mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exactly_representable_values_are_fixed_points() {
+        // Low 16 bits zero: no draw can carry, any stream yields the
+        // same encoding.
+        let mut rng = SplitMix64::new(1);
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 256.0] {
+            let e = bf16_sr_encode(v, &mut rng);
+            assert_eq!(bf16_decode(e).to_bits(), v.to_bits(), "{v}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_a_neighbor() {
+        // Exactly halfway between two bf16 neighbors: p(round up) = 1/2.
+        let v = f32::from_bits(0x3F80_8000);
+        let lo = f32::from_bits(0x3F80_0000);
+        let hi = f32::from_bits(0x3F81_0000);
+        let mut rng = SplitMix64::new(7);
+        let mut saw = [false, false];
+        for _ in 0..256 {
+            let d = bf16_decode(bf16_sr_encode(v, &mut rng));
+            assert!(d == lo || d == hi, "{d} not in [{lo}, {hi}]");
+            saw[(d == hi) as usize] = true;
+        }
+        assert!(saw[0] && saw[1], "stochastic rounding should visit both neighbors");
+    }
+
+    #[test]
+    fn int8_error_bounded_by_scale() {
+        let mut rng = SplitMix64::new(3);
+        let mut data: Vec<f32> = (0..130).map(|i| (i as f32 - 65.0) * 0.37).collect();
+        let orig = data.clone();
+        int8_roundtrip(&mut data, &mut rng);
+        for (chunk, ochunk) in data.chunks(INT8_CHUNK).zip(orig.chunks(INT8_CHUNK)) {
+            let scale = int8_chunk_scale(ochunk);
+            for (&q, &o) in chunk.iter().zip(ochunk) {
+                assert!((q - o).abs() <= scale + 1e-6, "{q} vs {o} (scale {scale})");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_codec_streams_are_reproducible_and_distinct() {
+        let codec = WireCodec::new(Precision::Int8, 0xC0DE);
+        let base: Vec<f32> = (0..64).map(|i| i as f32 * 0.013 - 0.4).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        codec.roundtrip(&mut a, 5, 0, 2);
+        codec.roundtrip(&mut b, 5, 0, 2);
+        assert_eq!(a, b, "same transfer key, same payload");
+        let mut c = base.clone();
+        codec.roundtrip(&mut c, 5, 1, 2);
+        assert_ne!(a, c, "different chunk id draws different noise");
+    }
+}

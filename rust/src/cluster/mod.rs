@@ -29,6 +29,7 @@
 //!   card narrower, rebuild the replicas and keep training.
 
 pub mod allreduce;
+pub mod codec;
 pub mod fault;
 pub mod recovery;
 pub mod replica;
@@ -36,6 +37,7 @@ pub mod shard;
 pub mod traffic;
 pub mod trainer;
 
+pub use codec::{Precision, WireCodec};
 pub use fault::{CardFailure, FaultEvent, FaultPlan};
 pub use recovery::{train_with_recovery, RecoveryEvent, RecoveryOutcome};
 pub use shard::{GraphShard, GraphSharder, ShardPlan};

@@ -11,6 +11,7 @@
 //! single-card trainer — only the optimizer update is lifted out, into
 //! the cluster-level all-reduce.
 
+use crate::cluster::codec::Precision;
 use crate::cluster::fault::{CardFailure, StepFault};
 use crate::cluster::shard::GraphShard;
 use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
@@ -50,6 +51,13 @@ pub struct ShardReplica<'g> {
     /// [`ShardReplica::grad_step`] — set serially by the cluster
     /// trainer's fault hook, never by the worker itself.
     pub fault: Option<StepFault>,
+    /// Wire precision of the inter-card links.  When not exact, ghost
+    /// feature rows are rewritten with the codec round trip after
+    /// staging — the values this card computes on are the values the
+    /// compressed link would have delivered.  Rounding noise draws from
+    /// this card's own `rng` stream (assigned serially per step), so the
+    /// quantized path stays bit-identical at any pool size.
+    pub precision: Precision,
 }
 
 impl<'g> ShardReplica<'g> {
@@ -80,6 +88,7 @@ impl<'g> ShardReplica<'g> {
             last_batch: 0,
             halo_fetches: vec![0; num_shards],
             fault: None,
+            precision: cfg.precision,
         };
         Ok((replica, meta))
     }
@@ -107,8 +116,60 @@ impl<'g> ShardReplica<'g> {
         self.sampler.sample_into(&self.ids, &mut self.rng, &mut self.scratch, &mut self.sampled);
         self.record_halo();
         self.arena.stage(&self.sampled, &self.shard.graph, false)?;
+        self.quantize_halo_rows();
         self.last_loss = self.backend.train_grads(self.arena.staged(), state, grads)?;
         Ok(())
+    }
+
+    /// [`ShardReplica::grad_step`] with per-layer gradient readiness:
+    /// `on_l2` fires (on this worker's thread) the moment `grads.g2` is
+    /// final, while the layer-1 backward still runs — the cluster
+    /// trainer's overlap path deposits the layer-2 gradient into its
+    /// fold slot from here.  A card with no batch rows still fires the
+    /// callback (its zero all-reduce weight neutralizes the stale
+    /// buffer), so the depositor count always completes.
+    pub fn grad_step_layered(
+        &mut self,
+        state: &ModelState,
+        grads: &mut GradBuffers,
+        on_l2: &mut dyn FnMut(&mut GradBuffers),
+    ) -> anyhow::Result<()> {
+        if let Some(fault) = self.fault.take() {
+            match fault {
+                StepFault::Die => return Err(CardFailure { card: self.shard.id }.into()),
+                StepFault::Panic => {
+                    panic!("injected fault: card {} worker panicked mid-step", self.shard.id)
+                }
+            }
+        }
+        self.last_batch = self.ids.len();
+        self.halo_fetches.iter_mut().for_each(|c| *c = 0);
+        if self.ids.is_empty() {
+            self.last_loss = 0.0;
+            on_l2(grads);
+            return Ok(());
+        }
+        self.sampler.sample_into(&self.ids, &mut self.rng, &mut self.scratch, &mut self.sampled);
+        self.record_halo();
+        self.arena.stage(&self.sampled, &self.shard.graph, false)?;
+        self.quantize_halo_rows();
+        self.last_loss = self.backend.train_grads_layered(self.arena.staged(), state, grads, on_l2)?;
+        Ok(())
+    }
+
+    /// Rewrite staged ghost feature rows with the link codec's round
+    /// trip (no-op in exact mode): compute sees what the compressed
+    /// halo exchange would have delivered.  Owned rows are local reads —
+    /// they never cross a link and stay exact.
+    fn quantize_halo_rows(&mut self) {
+        if self.precision == Precision::Exact {
+            return;
+        }
+        for (i, &l) in self.sampled.input_nodes().iter().enumerate() {
+            if self.shard.is_halo(l) {
+                self.precision.roundtrip(self.arena.x_row_mut(i), &mut self.rng);
+            }
+        }
     }
 
     /// Masked evaluation of the routed ids into the `last_*` slots

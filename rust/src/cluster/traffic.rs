@@ -32,7 +32,28 @@
 //! in [`CardTraffic::retry_bytes`] (and the hop proxy), the extra cycles
 //! in `sync_cycles` with the retry share broken out — so a degraded run
 //! is visibly, reproducibly more expensive in the same report.
+//!
+//! # Compression and overlap
+//!
+//! The model charges link time on **wire bytes** — the payload size after
+//! the configured [`Precision`] codec ([`TrafficModel::set_precision`]).
+//! Logical per-flow columns (`halo_bytes_*`, `allreduce_bytes`) stay in
+//! raw f32 terms so volumes remain comparable across modes, while
+//! [`CardTraffic::wire_bytes`] counts what each card actually put on the
+//! link; in exact mode the two agree byte for byte.  Retransmissions in
+//! degraded windows resend the *compressed* payload, so fault drills and
+//! compression compose (a retried int8 transfer costs int8 bytes, not
+//! fp32 bytes).  HBM serve time stays raw — features are stored fp32,
+//! compression happens at the link.
+//!
+//! [`TrafficModel::set_overlap`] splits the all-reduce into per-layer
+//! gradient chunks, reduced in reverse layer order; the first chunk
+//! (layer 2, extracted before layer 1's backward finishes) hides up to a
+//! modeled compute budget of its fold cycles behind that backward.
+//! `sync_cycles` stays the *total* cost; [`StepTraffic::hidden_cycles`]
+//! is the share overlap absorbs (`exposed = sync − hidden`).
 
+use crate::cluster::codec::Precision;
 use crate::cluster::fault::LinkFaults;
 use crate::core_model::CLOCK_HZ;
 use crate::hbm::simulator::HbmSimulator;
@@ -110,9 +131,15 @@ pub struct CardTraffic {
     pub allreduce_bytes: u64,
     /// Bytes × card-level hops originated here (congestion proxy).
     pub hop_bytes: u64,
-    /// Retransmitted bytes this card originated inside degraded link
-    /// windows (zero on a fault-free run).
+    /// Retransmitted **wire** bytes this card originated inside degraded
+    /// link windows (zero on a fault-free run) — compressed size, so
+    /// fault drills compose with the link codec.
     pub retry_bytes: u64,
+    /// Bytes this card actually put on the link after the configured
+    /// [`Precision`] codec (retransmissions included).  Equals
+    /// [`CardTraffic::sent_bytes`] in exact mode; smaller under bf16 /
+    /// int8.
+    pub wire_bytes: u64,
 }
 
 impl CardTraffic {
@@ -122,10 +149,11 @@ impl CardTraffic {
         self.allreduce_bytes += o.allreduce_bytes;
         self.hop_bytes += o.hop_bytes;
         self.retry_bytes += o.retry_bytes;
+        self.wire_bytes += o.wire_bytes;
     }
 
-    /// Bytes this card put on the inter-card network (retransmissions
-    /// included).
+    /// Logical (uncompressed-equivalent) bytes this card put on the
+    /// inter-card network (retransmissions included).
     pub fn sent_bytes(&self) -> u64 {
         self.halo_bytes_out + self.allreduce_bytes + self.retry_bytes
     }
@@ -141,6 +169,10 @@ pub struct StepTraffic {
     /// The share of `sync_cycles` spent on retries + backoff in degraded
     /// link windows (zero on a fault-free step).
     pub retry_cycles: u64,
+    /// The share of `sync_cycles` the overlapped all-reduce hides behind
+    /// the layer-1 backward (zero with overlap off).  The exposed cost of
+    /// the step is `sync_cycles − hidden_cycles`.
+    pub hidden_cycles: u64,
 }
 
 /// Accumulated traffic over a run.
@@ -150,6 +182,7 @@ pub struct TrafficTotals {
     pub per_card: Vec<CardTraffic>,
     pub sync_cycles: u64,
     pub retry_cycles: u64,
+    pub hidden_cycles: u64,
 }
 
 impl TrafficTotals {
@@ -162,6 +195,7 @@ impl TrafficTotals {
         }
         self.sync_cycles += step.sync_cycles;
         self.retry_cycles += step.retry_cycles;
+        self.hidden_cycles += step.hidden_cycles;
         self.steps += 1;
     }
 
@@ -176,6 +210,7 @@ impl TrafficTotals {
         }
         self.sync_cycles += other.sync_cycles;
         self.retry_cycles += other.retry_cycles;
+        self.hidden_cycles += other.hidden_cycles;
         self.steps += other.steps;
     }
 
@@ -183,10 +218,42 @@ impl TrafficTotals {
         self.sync_cycles as f64 / self.steps.max(1) as f64
     }
 
-    /// Total bytes moved card-to-card per step, averaged over the run.
+    /// Sync cycles per step that actually stall the pipeline (total
+    /// minus the share hidden behind backward compute).
+    pub fn exposed_cycles_per_step(&self) -> f64 {
+        (self.sync_cycles - self.hidden_cycles) as f64 / self.steps.max(1) as f64
+    }
+
+    /// Fraction of the sync cost hidden behind compute (0.0 with
+    /// overlap off).
+    pub fn hidden_fraction(&self) -> f64 {
+        self.hidden_cycles as f64 / self.sync_cycles.max(1) as f64
+    }
+
+    /// Total logical bytes moved card-to-card per step, averaged over
+    /// the run.
     pub fn bytes_per_step(&self) -> f64 {
         let total: u64 = self.per_card.iter().map(|c| c.sent_bytes()).sum();
         total as f64 / self.steps.max(1) as f64
+    }
+
+    /// Total **wire** bytes per step after the link codec (equals
+    /// [`TrafficTotals::bytes_per_step`] in exact mode).
+    pub fn wire_bytes_per_step(&self) -> f64 {
+        let total: u64 = self.per_card.iter().map(|c| c.wire_bytes).sum();
+        total as f64 / self.steps.max(1) as f64
+    }
+
+    /// Logical-over-wire compression ratio (1.0 in exact mode, ~2 for
+    /// bf16, ~3.8 for int8).
+    pub fn compression_ratio(&self) -> f64 {
+        let raw: u64 = self.per_card.iter().map(|c| c.sent_bytes()).sum();
+        let wire: u64 = self.per_card.iter().map(|c| c.wire_bytes).sum();
+        if wire == 0 {
+            1.0
+        } else {
+            raw as f64 / wire as f64
+        }
     }
 }
 
@@ -198,6 +265,17 @@ pub struct TrafficModel {
     pub feat_bytes: u64,
     /// Bytes of one full gradient set ((d·h + h·c) × 4).
     pub grad_bytes: u64,
+    /// Wire codec of the inter-card links (exact by default).
+    precision: Precision,
+    /// All-reduce chunk sizes in f32 elements, in fold order.  A single
+    /// chunk (the default) is the monolithic reduce; with overlap on the
+    /// trainer splits per layer, reverse layer order first.
+    grad_chunk_elems: Vec<u64>,
+    /// Whether the first chunk's fold overlaps the remaining backward.
+    overlap: bool,
+    /// Compute cycles of the layer-1 backward available to hide the
+    /// first chunk's fold behind (0 with overlap off).
+    overlap_budget: u64,
     hbm: HbmSimulator,
 }
 
@@ -207,8 +285,32 @@ impl TrafficModel {
             topo: ClusterTopology::new(cards),
             feat_bytes: 4 * feat_dim as u64,
             grad_bytes: 4 * grad_elems as u64,
+            precision: Precision::Exact,
+            grad_chunk_elems: vec![grad_elems as u64],
+            overlap: false,
+            overlap_budget: 0,
             hbm: HbmSimulator::default(),
         }
+    }
+
+    /// Select the wire codec applied to every inter-card payload.
+    pub fn set_precision(&mut self, precision: Precision) {
+        self.precision = precision;
+    }
+
+    /// Split the all-reduce into `chunk_elems` chunks (fold order) and
+    /// let the first chunk hide up to `budget_cycles` of its fold cost
+    /// behind the layer-1 backward.
+    pub fn set_overlap(&mut self, chunk_elems: &[usize], budget_cycles: u64) {
+        assert!(!chunk_elems.is_empty());
+        debug_assert_eq!(
+            chunk_elems.iter().map(|&e| 4 * e as u64).sum::<u64>(),
+            self.grad_bytes,
+            "chunks must tile the gradient set"
+        );
+        self.grad_chunk_elems = chunk_elems.iter().map(|&e| e as u64).collect();
+        self.overlap = true;
+        self.overlap_budget = budget_cycles;
     }
 
     /// Model one fault-free training step.  `halo_fetches[k][j]` = ghost
@@ -233,34 +335,39 @@ impl TrafficModel {
         let mut per_card = vec![CardTraffic::default(); n];
         let mut retry_cycles = 0u64;
 
-        // --- Halo exchange. ---
+        // --- Halo exchange.  Link-side charges (wire/hop/retry/serial
+        // time) use the codec's wire size; the logical halo columns stay
+        // raw so volumes compare across modes. ---
+        let mut wire_in = vec![0u64; n];
         for (k, fetches) in halo_fetches.iter().enumerate() {
             for (j, &cnt) in fetches.iter().enumerate() {
                 if cnt == 0 || j == k {
                     continue;
                 }
                 let bytes = cnt as u64 * self.feat_bytes;
+                let wire = self.precision.wire_bytes(bytes / 4);
                 let hops = ClusterTopology::card_distance(k, j) as u64;
                 per_card[k].halo_bytes_in += bytes;
                 per_card[j].halo_bytes_out += bytes;
-                per_card[j].hop_bytes += bytes * hops;
+                per_card[j].hop_bytes += wire * hops;
+                per_card[j].wire_bytes += wire;
+                wire_in[k] += wire;
                 if let Some(lf) = faults {
                     if lf.link_degraded(j) || lf.link_degraded(k) {
                         let retries = lf.retries(j, k) as u64;
-                        let extra = bytes * retries;
+                        let extra = wire * retries;
                         per_card[j].retry_bytes += extra;
                         per_card[j].hop_bytes += extra * hops;
+                        per_card[j].wire_bytes += extra;
                         retry_cycles += backoff_cycles(retries)
                             + (extra as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
                     }
                 }
             }
         }
-        let max_link = per_card
-            .iter()
-            .map(|c| c.halo_bytes_in + c.halo_bytes_out + c.retry_bytes)
-            .max()
-            .unwrap_or(0);
+        // Busiest card link: wire bytes pulled in plus wire bytes pushed
+        // out (serves + retransmissions so far — all halo-side here).
+        let max_link = (0..n).map(|c| wire_in[c] + per_card[c].wire_bytes).max().unwrap_or(0);
         // Serve time: each owner reads its served halo bytes from HBM —
         // degraded HBM serves slower; the step waits for the slowest.
         let mut hbm_secs = 0.0f64;
@@ -280,39 +387,59 @@ impl TrafficModel {
         // --- All-reduce: the exact fold tree the reduction executes
         // (`cluster::allreduce::tree_schedule`), up then broadcast back
         // down.  Pairs of one level (same fold gap) touch disjoint
-        // cards, so a level costs one gradient transfer over its longest
-        // edge; every flow is charged to its sender. ---
-        let grad_cycles = (self.grad_bytes as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
+        // cards, so a level costs one chunk transfer over its longest
+        // edge; every flow is charged to its sender.  With a single
+        // chunk (the default) this is the monolithic reduce; with
+        // overlap on, the chunks fold in order and the first (the
+        // layer-2 gradients, ready before layer 1's backward) hides up
+        // to `overlap_budget` of its fold cycles behind that backward.
+        // Retries are never hidden — a degraded window stalls the step.
         let schedule = crate::cluster::allreduce::tree_schedule(n);
-        let mut i = 0;
-        while i < schedule.len() {
-            let gap = schedule[i].1 - schedule[i].0;
-            let mut max_hops = 0u64;
-            while i < schedule.len() && schedule[i].1 - schedule[i].0 == gap {
-                let (dst, src) = schedule[i];
-                let hops = ClusterTopology::card_distance(dst, src) as u64;
-                per_card[src].allreduce_bytes += self.grad_bytes; // reduce up
-                per_card[dst].allreduce_bytes += self.grad_bytes; // broadcast down
-                per_card[src].hop_bytes += self.grad_bytes * hops;
-                per_card[dst].hop_bytes += self.grad_bytes * hops;
-                if let Some(lf) = faults {
-                    if lf.link_degraded(src) || lf.link_degraded(dst) {
-                        let retries = lf.retries(src, dst) as u64;
-                        let extra = self.grad_bytes * retries;
-                        per_card[src].retry_bytes += extra; // re-send up
-                        per_card[dst].retry_bytes += extra; // re-broadcast down
-                        per_card[src].hop_bytes += extra * hops;
-                        per_card[dst].hop_bytes += extra * hops;
-                        retry_cycles += 2 * (backoff_cycles(retries) + retries * grad_cycles);
+        let mut hidden_cycles = 0u64;
+        for (ci, &elems) in self.grad_chunk_elems.iter().enumerate() {
+            let chunk_raw = 4 * elems;
+            let chunk_wire = self.precision.wire_bytes(elems);
+            let chunk_link_cycles = (chunk_wire as f64 / CARD_LINK_BYTES_PER_CYCLE) as u64;
+            let mut chunk_cycles = 0u64;
+            let mut i = 0;
+            while i < schedule.len() {
+                let gap = schedule[i].1 - schedule[i].0;
+                let mut max_hops = 0u64;
+                while i < schedule.len() && schedule[i].1 - schedule[i].0 == gap {
+                    let (dst, src) = schedule[i];
+                    let hops = ClusterTopology::card_distance(dst, src) as u64;
+                    per_card[src].allreduce_bytes += chunk_raw; // reduce up
+                    per_card[dst].allreduce_bytes += chunk_raw; // broadcast down
+                    per_card[src].hop_bytes += chunk_wire * hops;
+                    per_card[dst].hop_bytes += chunk_wire * hops;
+                    per_card[src].wire_bytes += chunk_wire;
+                    per_card[dst].wire_bytes += chunk_wire;
+                    if let Some(lf) = faults {
+                        if lf.link_degraded(src) || lf.link_degraded(dst) {
+                            let retries = lf.retries(src, dst) as u64;
+                            let extra = chunk_wire * retries;
+                            per_card[src].retry_bytes += extra; // re-send up
+                            per_card[dst].retry_bytes += extra; // re-broadcast down
+                            per_card[src].hop_bytes += extra * hops;
+                            per_card[dst].hop_bytes += extra * hops;
+                            per_card[src].wire_bytes += extra;
+                            per_card[dst].wire_bytes += extra;
+                            retry_cycles +=
+                                2 * (backoff_cycles(retries) + retries * chunk_link_cycles);
+                        }
                     }
+                    max_hops = max_hops.max(hops);
+                    i += 1;
                 }
-                max_hops = max_hops.max(hops);
-                i += 1;
+                chunk_cycles += 2 * (chunk_link_cycles + CARD_HOP_LATENCY * max_hops);
             }
-            cycles += 2 * (grad_cycles + CARD_HOP_LATENCY * max_hops);
+            if ci == 0 && self.overlap && self.grad_chunk_elems.len() > 1 {
+                hidden_cycles = chunk_cycles.min(self.overlap_budget);
+            }
+            cycles += chunk_cycles;
         }
         cycles += retry_cycles;
-        StepTraffic { per_card, sync_cycles: cycles, retry_cycles }
+        StepTraffic { per_card, sync_cycles: cycles, retry_cycles, hidden_cycles }
     }
 }
 

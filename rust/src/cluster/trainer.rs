@@ -26,13 +26,36 @@
 //! Checkpoints carry the same payload as [`crate::train::Trainer`] checkpoints
 //! (weights, velocities, step counter, master RNG state), so cluster
 //! runs resume byte-identically and single-card checkpoints interchange.
+//!
+//! # Link compression & overlap
+//!
+//! Two optional link optimizations ride on the same contract
+//! (see [`crate::cluster::codec`]):
+//!
+//! - **Precision** (`cfg.precision`): halo feature rows and all-reduce
+//!   payloads take a deterministic quantize→dequantize round trip
+//!   (bf16 / int8) before use.  Exact — the default — leaves every code
+//!   path of the pre-compression trainer untouched, byte for byte.
+//! - **Overlap** (`cfg.overlap`, multi-shard only): the all-reduce
+//!   splits into per-layer chunks.  Each worker deposits its layer-2
+//!   gradient the moment the backward finishes it; the **last**
+//!   depositor runs the fixed-order layer-2 fold while the other cards'
+//!   layer-1 backwards are still running.  The fold order never depends
+//!   on which worker happens to fold, and in exact mode the chunked
+//!   fold performs the identical f32 operations in the identical order
+//!   as the monolithic reduce — overlap on/off is bit-identical (pinned
+//!   in `rust/tests/linkopt.rs`).
 
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::cluster::allreduce::weighted_tree_reduce;
+use crate::cluster::allreduce::{
+    pick_g1, pick_g2, tree_reduce_prescaled, weighted_tree_reduce, weighted_tree_reduce_layer,
+    CHUNK_G1, CHUNK_G2,
+};
+use crate::cluster::codec::{Precision, WireCodec};
 use crate::cluster::fault::{FaultEvent, FaultPlan, StepFault};
 use crate::cluster::replica::ShardReplica;
 use crate::cluster::shard::ShardPlan;
@@ -43,6 +66,7 @@ use crate::runtime::manifest::ArtifactMeta;
 use crate::runtime::native::NativeBackend;
 use crate::train::metrics::LossCurve;
 use crate::train::trainer::TrainerConfig;
+use crate::util::matrix::Matrix;
 use crate::util::pool;
 use crate::util::rng::SplitMix64;
 
@@ -53,6 +77,16 @@ pub struct ClusterTrainer<'g> {
     pub cfg: TrainerConfig,
     replicas: Vec<Mutex<ShardReplica<'g>>>,
     grad_slots: Vec<Mutex<GradBuffers>>,
+    /// Per-card deposit slots of the overlapped layer-2 fold (scaled g2
+    /// copies — separate from `grad_slots` so depositing never contends
+    /// with the locks workers hold for the whole step).
+    g2_slots: Vec<Mutex<Matrix>>,
+    /// Count of layer-2 deposits this step; the worker that makes it hit
+    /// the shard count runs the layer-2 fold.
+    g2_done: AtomicUsize,
+    /// Link codec: rounding streams keyed on (seed, step, chunk, edge) —
+    /// pure data, so quantized results are pool-size independent.
+    codec: WireCodec,
     /// The synchronized model (all cards hold this after each update).
     pub state: ModelState,
     meta: ArtifactMeta,
@@ -105,7 +139,22 @@ impl<'g> ClusterTrainer<'g> {
         }
         let meta = meta.expect("at least one shard");
         let state = ModelState::glorot(&meta, &mut rng);
-        let traffic = TrafficModel::new(shards, meta.d, meta.d * meta.h + meta.h * meta.c);
+        let mut traffic = TrafficModel::new(shards, meta.d, meta.d * meta.h + meta.h * meta.c);
+        traffic.set_precision(cfg.precision);
+        if cfg.overlap && shards > 1 {
+            // Fold order = readiness order: layer-2 gradients first (they
+            // finish before layer 1's backward even starts), hidden
+            // behind a budget of that backward's modeled compute.
+            traffic.set_overlap(
+                &[meta.h * meta.c, meta.d * meta.h],
+                l1_backward_cycles(&meta),
+            );
+        }
+        // The codec is keyed off the config seed, not a master-RNG draw —
+        // constructing it must not perturb the byte-identical stream.
+        let codec = WireCodec::new(cfg.precision, cfg.seed);
+        let g2_slots =
+            (0..shards).map(|_| Mutex::new(Matrix::zeros(meta.h, meta.c))).collect();
 
         Ok(ClusterTrainer {
             graph,
@@ -113,6 +162,9 @@ impl<'g> ClusterTrainer<'g> {
             cfg,
             replicas,
             grad_slots,
+            g2_slots,
+            g2_done: AtomicUsize::new(0),
+            codec,
             state,
             meta,
             rng,
@@ -209,7 +261,7 @@ impl<'g> ClusterTrainer<'g> {
     /// several cards fail in one step, independent of worker timing).
     fn for_each_card(
         &self,
-        f: impl Fn(&mut ShardReplica<'g>, &mut GradBuffers) -> anyhow::Result<()> + Sync,
+        f: impl Fn(usize, &mut ShardReplica<'g>, &mut GradBuffers) -> anyhow::Result<()> + Sync,
     ) -> anyhow::Result<()> {
         let shards = self.replicas.len();
         let parallelism = shards.min(pool::resolve_threads(self.cfg.threads));
@@ -224,7 +276,7 @@ impl<'g> ClusterTrainer<'g> {
             }
             let mut rep = replicas[k].lock().unwrap(); // lint: allow(R5, poisoned replica slot means a card worker panicked; propagating is correct)
             let mut grads = grad_slots[k].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
-            if let Err(e) = f(&mut rep, &mut grads) {
+            if let Err(e) = f(k, &mut rep, &mut grads) {
                 let mut slot = err_slot.lock().unwrap(); // lint: allow(R5, poisoned error slot means a card worker panicked; propagating is correct)
                 if slot.as_ref().is_none_or(|(c, _)| k < *c) {
                     *slot = Some((k, e));
@@ -273,6 +325,15 @@ impl<'g> ClusterTrainer<'g> {
         for slot in &self.grad_slots {
             slot.clear_poison();
         }
+        for slot in &self.g2_slots {
+            slot.clear_poison();
+        }
+    }
+
+    /// Whether this run folds the layer-2 chunk behind the layer-1
+    /// backward (a single shard has no reduce to overlap).
+    fn overlap_active(&self) -> bool {
+        self.cfg.overlap && self.replicas.len() > 1
     }
 
     /// One data-parallel training step; returns the batch-weighted global
@@ -288,9 +349,47 @@ impl<'g> ClusterTrainer<'g> {
     pub fn step(&mut self) -> anyhow::Result<f32> {
         self.arm_faults();
         self.route_batch();
+        let overlap = self.overlap_active();
+        if overlap {
+            // The all-reduce weights are known before the fan-out (each
+            // card's batch share is its route length — exactly what
+            // `last_batch` will report), and the mid-backward layer-2
+            // deposits need them before the post-barrier collection.
+            let total_b: usize = self.route.iter().map(|r| r.len()).sum();
+            anyhow::ensure!(total_b > 0, "empty global batch");
+            for (w, route) in self.weights.iter_mut().zip(&self.route) {
+                *w = route.len() as f32 / total_b as f32;
+            }
+            self.g2_done.store(0, AtomicOrdering::Release);
+        }
         let state = &self.state;
+        let shards = self.replicas.len();
+        let (codec, step_idx) = (self.codec, self.steps_done);
+        let (weights, g2_slots, g2_done) = (&self.weights, &self.g2_slots, &self.g2_done);
         let fan = panic::catch_unwind(AssertUnwindSafe(|| {
-            self.for_each_card(|rep, grads| rep.grad_step(state, grads))
+            if overlap {
+                self.for_each_card(|k, rep, grads| {
+                    rep.grad_step_layered(state, grads, &mut |g: &mut GradBuffers| {
+                        {
+                            let mut slot = g2_slots[k].lock().unwrap(); // lint: allow(R5, poisoned deposit slot means a card worker panicked; propagating is correct)
+                            slot.data.copy_from_slice(&g.g2.data);
+                            let w = weights[k];
+                            for v in &mut slot.data {
+                                *v *= w;
+                            }
+                        }
+                        // The last depositor runs the fixed-order layer-2
+                        // fold — while the other cards' layer-1 backwards
+                        // are still running.  Which worker folds varies
+                        // with timing; what it computes does not.
+                        if g2_done.fetch_add(1, AtomicOrdering::AcqRel) + 1 == shards {
+                            tree_reduce_prescaled(g2_slots, &codec, step_idx, CHUNK_G2);
+                        }
+                    })
+                })
+            } else {
+                self.for_each_card(|_, rep, grads| rep.grad_step(state, grads))
+            }
         }));
         let fan = match fan {
             Ok(result) => result,
@@ -325,8 +424,45 @@ impl<'g> ClusterTrainer<'g> {
         }
 
         // Fixed-order weighted all-reduce into slot 0, then one update.
-        weighted_tree_reduce(&self.grad_slots, &self.weights);
-        self.apply_update();
+        // The exact non-overlapped default takes the pre-compression
+        // monolithic path unchanged — its byte identity to the pre-knob
+        // trainer is structural, not re-derived.
+        if overlap {
+            // Layer 2 already folded into `g2_slots[0]` mid-backward;
+            // fold layer 1 now that every card's backward is done.
+            weighted_tree_reduce_layer(
+                &self.grad_slots,
+                &self.weights,
+                pick_g1,
+                &self.codec,
+                step_idx,
+                CHUNK_G1,
+            );
+            self.apply_update_overlapped();
+        } else if self.cfg.precision != Precision::Exact {
+            // Same chunk/edge keys as the overlapped spelling, so the
+            // quantized result is independent of the overlap knob.
+            weighted_tree_reduce_layer(
+                &self.grad_slots,
+                &self.weights,
+                pick_g2,
+                &self.codec,
+                step_idx,
+                CHUNK_G2,
+            );
+            weighted_tree_reduce_layer(
+                &self.grad_slots,
+                &self.weights,
+                pick_g1,
+                &self.codec,
+                step_idx,
+                CHUNK_G1,
+            );
+            self.apply_update();
+        } else {
+            weighted_tree_reduce(&self.grad_slots, &self.weights);
+            self.apply_update();
+        }
         let link_faults = self
             .faults
             .as_ref()
@@ -345,6 +481,15 @@ impl<'g> ClusterTrainer<'g> {
     fn apply_update(&mut self) {
         let acc = self.grad_slots[0].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
         self.state.apply_gradients(&acc.g1.data, &acc.g2.data, self.cfg.optimizer, self.cfg.lr);
+    }
+
+    /// [`ClusterTrainer::apply_update`] for the overlapped step: the
+    /// reduced layer-1 gradient sits in `grad_slots[0]` as usual, but
+    /// layer 2 was folded into `g2_slots[0]` mid-backward.
+    fn apply_update_overlapped(&mut self) {
+        let acc1 = self.grad_slots[0].lock().unwrap(); // lint: allow(R5, poisoned grad slot means a card worker panicked; propagating is correct)
+        let acc2 = self.g2_slots[0].lock().unwrap(); // lint: allow(R5, poisoned deposit slot means a card worker panicked; propagating is correct)
+        self.state.apply_gradients(&acc1.g1.data, &acc2.data, self.cfg.optimizer, self.cfg.lr);
     }
 
     /// Run the configured number of steps, recording the loss curve
@@ -379,7 +524,7 @@ impl<'g> ClusterTrainer<'g> {
         for _ in 0..batches {
             self.route_batch();
             let state = &self.state;
-            self.for_each_card(|rep, _| rep.eval_step(state))?;
+            self.for_each_card(|_, rep, _| rep.eval_step(state))?;
             self.reclaim_master_stream();
             let mut batch_rows = 0usize;
             for slot in &self.replicas {
@@ -418,6 +563,19 @@ impl<'g> ClusterTrainer<'g> {
         // retires handled deaths from the plan instead).
         Ok(())
     }
+}
+
+/// Modeled compute cycles of the layer-1 backward chain — the window the
+/// overlapped layer-2 fold hides behind.  MAC count of the three big
+/// products after dW2 (`dH1`'s two factors and `dW1`), spread over one
+/// card's full MAC array ([`crate::core_model::MACS_PER_CORE`] ×
+/// [`crate::core_model::NUM_CORES`] per cycle).
+fn l1_backward_cycles(meta: &ArtifactMeta) -> u64 {
+    let macs = meta.b * meta.n1 * meta.c // A2ᵀ·dZ2
+        + meta.n1 * meta.c * meta.h // (A2ᵀ·dZ2)·W2ᵀ
+        + meta.n1 * meta.d * meta.h; // P1ᵀ·dZ1
+    let macs_per_cycle = (crate::core_model::MACS_PER_CORE * crate::core_model::NUM_CORES) as u64;
+    (macs as u64) / macs_per_cycle
 }
 
 /// Best-effort text of a caught panic payload.

@@ -16,7 +16,7 @@
 use gcn_noc::baselines::{paper_row, GpuBaseline, HpGnnBaseline};
 use gcn_noc::cli::Args;
 use gcn_noc::cluster::traffic::TrafficTotals;
-use gcn_noc::cluster::{recovery, ClusterTrainer, FaultPlan, GraphSharder};
+use gcn_noc::cluster::{recovery, ClusterTrainer, FaultPlan, GraphSharder, Precision};
 use gcn_noc::config;
 use gcn_noc::coordinator::epoch::{EpochModel, ModelKind};
 use gcn_noc::coordinator::sequence_estimator::{Ordering, SequenceEstimator, ShapeParams};
@@ -79,9 +79,14 @@ commands:
              deterministic faults and recovers N-1 from card deaths, with
              durable rotated checkpoints: --keep-checkpoints K
              --ckpt-every N --ckpt-dir DIR; --dedup on|off toggles
-             redundancy-eliminated aggregation, exact either way)
+             redundancy-eliminated aggregation, exact either way;
+             --precision exact|bf16|int8 compresses inter-card link
+             payloads, --overlap on|off hides the layer-2 all-reduce
+             behind the layer-1 backward — exact/off is the
+             byte-identical default)
   cluster    multi-card scaling report: steps/s + modeled traffic at
-             1/2/4/8 shards (--dataset --nodes --steps --batch)
+             1/2/4/8 shards (--dataset --nodes --steps --batch
+             --precision exact|bf16|int8 --overlap on|off)
   route      Fig. 9 routing-cycle experiment (Fuse 1..4)
   hbm        Fig. 1 HBM bandwidth scenarios
   epoch      Table 2 single row (ours vs HP-GNN vs GPU)
@@ -121,6 +126,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // sigmoid+BCE head, matching their published objective.
         loss_head: spec.loss_head(),
         dedup: args.get_or("dedup", "on") != "off",
+        precision: Precision::parse(args.get_or("precision", "exact"))?,
+        overlap: parse_overlap(args)?,
     };
     let shards = args.get_usize("shards", 0)?;
     if shards > 0 {
@@ -287,6 +294,15 @@ fn cmd_train_cluster_recovery(
     Ok(())
 }
 
+/// Shared `--overlap on|off` parsing (off by default).
+fn parse_overlap(args: &Args) -> anyhow::Result<bool> {
+    match args.get_or("overlap", "off") {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("unknown --overlap '{other}' (on|off)"),
+    }
+}
+
 /// Render the per-card traffic table + sync estimate of a cluster run.
 fn print_traffic_report(trainer: &ClusterTrainer<'_>) {
     let model = trainer.traffic_model();
@@ -306,6 +322,7 @@ fn print_traffic_totals(totals: &TrafficTotals, cards: usize, card_dims: u32) {
         "halo out MB",
         "allreduce MB",
         "retry MB",
+        "wire MB",
         "hop-MB",
     ]);
     for (k, c) in totals.per_card.iter().enumerate() {
@@ -315,19 +332,34 @@ fn print_traffic_totals(totals: &TrafficTotals, cards: usize, card_dims: u32) {
             format!("{:.3}", c.halo_bytes_out as f64 / 1e6),
             format!("{:.3}", c.allreduce_bytes as f64 / 1e6),
             format!("{:.3}", c.retry_bytes as f64 / 1e6),
+            format!("{:.3}", c.wire_bytes as f64 / 1e6),
             format!("{:.3}", c.hop_bytes as f64 / 1e6),
         ]);
     }
     println!("{}", table.render());
     println!(
-        "sync: {:.0} cycles/step (~{:.1} us at 250 MHz), {:.1} KB moved/step",
+        "sync: {:.0} cycles/step (~{:.1} us at 250 MHz), {:.1} KB moved/step \
+         ({:.1} KB on the wire, {:.2}x compression)",
         totals.cycles_per_step(),
         totals.cycles_per_step() / gcn_noc::core_model::CLOCK_HZ * 1e6,
-        totals.bytes_per_step() / 1e3
+        totals.bytes_per_step() / 1e3,
+        totals.wire_bytes_per_step() / 1e3,
+        totals.compression_ratio()
     );
+    if totals.hidden_cycles > 0 {
+        println!(
+            "overlap: {:.0} of {:.0} sync cycles/step hidden behind backward \
+             ({:.1}% — exposed {:.0})",
+            totals.hidden_cycles as f64 / totals.steps.max(1) as f64,
+            totals.cycles_per_step(),
+            100.0 * totals.hidden_fraction(),
+            totals.exposed_cycles_per_step()
+        );
+    }
     if totals.retry_cycles > 0 {
         println!(
-            "degraded windows: {} retry cycles total ({:.1}% of sync)",
+            "degraded windows: {} retry cycles total ({:.1}% of sync, \
+             retries resend compressed payloads)",
             totals.retry_cycles,
             100.0 * totals.retry_cycles as f64 / totals.sync_cycles.max(1) as f64
         );
@@ -345,6 +377,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     // staged shapes (n1 = 256) at the default fanouts.
     let batch = args.get_usize("batch", 32)?;
     let seed = args.get_u64("seed", 0xF00D)?;
+    let precision = Precision::parse(args.get_or("precision", "exact"))?;
+    let overlap = parse_overlap(args)?;
     let mut rng = SplitMix64::new(seed);
     eprintln!("instantiating {dataset} replica ({nodes} nodes)...");
     let graph = spec.instantiate(nodes, &mut rng);
@@ -354,7 +388,10 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "final loss",
         "halo KB/step",
         "allreduce KB/step",
+        "wire KB/step",
+        "ratio",
         "sync cycles/step",
+        "hidden %",
     ]);
     for shards in [1usize, 2, 4, 8] {
         let plan = GraphSharder::new(shards).shard(&graph);
@@ -364,6 +401,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             seed,
             log_every: 0,
             loss_head: spec.loss_head(),
+            precision,
+            overlap,
             ..Default::default()
         };
         let mut trainer = ClusterTrainer::new(&graph, &plan, cfg)?;
@@ -380,11 +419,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             format!("{:.4}", curve.records.last().map(|r| r.loss).unwrap_or(f32::NAN)),
             format!("{:.1}", per_step(halo)),
             format!("{:.1}", per_step(allreduce)),
+            format!("{:.1}", totals.wire_bytes_per_step() / 1e3),
+            format!("{:.2}x", totals.compression_ratio()),
             format!("{:.0}", totals.cycles_per_step()),
+            format!("{:.1}", 100.0 * totals.hidden_fraction()),
         ]);
     }
     println!(
-        "multi-card scaling, {dataset} replica ({nodes} nodes, batch {batch}, {steps} steps):\n{}",
+        "multi-card scaling, {dataset} replica ({nodes} nodes, batch {batch}, {steps} steps, \
+         {} links, overlap {}):\n{}",
+        precision.name(),
+        if overlap { "on" } else { "off" },
         table.render()
     );
     Ok(())

@@ -253,6 +253,28 @@ pub trait ComputeBackend {
         anyhow::bail!("backend '{}' does not expose per-step gradients", self.name())
     }
 
+    /// [`ComputeBackend::train_grads`] with **per-layer gradient
+    /// readiness**: `on_l2` fires as soon as the layer-2 gradient
+    /// (`grads.g2`) is final — for the native backward that is *before*
+    /// the layer-1 gradient is computed, which is what lets the cluster
+    /// layer start reducing layer 2 while layer 1's backward still runs.
+    /// When the callback fires, only `grads.g2` is meaningful; `grads.g1`
+    /// is finalized by the time this method returns.  The default shim
+    /// satisfies the contract trivially (callback after the full
+    /// backward), so overlap degrades to no-overlap on backends without
+    /// staged extraction rather than erroring.
+    fn train_grads_layered(
+        &mut self,
+        staged: &StagedBatch,
+        state: &ModelState,
+        grads: &mut GradBuffers,
+        on_l2: &mut dyn FnMut(&mut GradBuffers),
+    ) -> anyhow::Result<f32> {
+        let loss = self.train_grads(staged, state, grads)?;
+        on_l2(grads);
+        Ok(loss)
+    }
+
     /// Masked evaluation on one staged batch → `(mean loss, correct count)`.
     ///
     /// The batch arrives staged to the shapes [`ComputeBackend::prepare`]

@@ -394,6 +394,24 @@ impl NativeBackend {
         t: usize,
         ctx: &mut DedupCtx<'_>,
     ) {
+        Self::backward_hooked(s, staged, state, agco, t, ctx, |_| {});
+    }
+
+    /// [`NativeBackend::backward`] with a layer-readiness hook: `on_g2`
+    /// fires the moment `scratch.g2` (dW2) is final — the layer-1 chain
+    /// (`dH1` → ReLU gate → dW1) has not started yet, so a caller can
+    /// ship the layer-2 gradient while this thread keeps computing.  The
+    /// hook runs on the caller's thread; the gradient math is identical
+    /// to the un-hooked backward (same matmuls, same order).
+    fn backward_hooked(
+        s: &mut Scratch,
+        staged: &StagedBatch,
+        state: &ModelState,
+        agco: bool,
+        t: usize,
+        ctx: &mut DedupCtx<'_>,
+        on_g2: impl FnOnce(&Matrix),
+    ) {
         let a1 = staged.a1.as_mat();
         let a2 = staged.a2.as_mat();
         let x = staged.x.as_mat();
@@ -403,6 +421,7 @@ impl NativeBackend {
             agg_matmul(&mut s.q2, a2, h1, ctx.plan2, ctx.compact, ctx.stats, t);
         }
         par_matmul_tn_into(&mut s.g2, s.q2.view(), s.dz2.view(), t);
+        on_g2(&s.g2);
         // dH1 = (A2ᵀ·dZ2)·W2ᵀ, both factors contracted by index swap.
         par_matmul_tn_into(&mut s.r2, a2, s.dz2.view(), t);
         par_matmul_nt_into(&mut s.dh1, s.r2.view(), state.w2.view(), t);
@@ -535,6 +554,38 @@ impl ComputeBackend for NativeBackend {
         Self::backward(s, staged, state, agco, t, &mut ctx);
         grads.g1.data.copy_from_slice(&s.g1.data);
         grads.g2.data.copy_from_slice(&s.g2.data);
+        Ok(loss)
+    }
+
+    fn train_grads_layered(
+        &mut self,
+        staged: &StagedBatch,
+        state: &ModelState,
+        grads: &mut GradBuffers,
+        on_l2: &mut dyn FnMut(&mut GradBuffers),
+    ) -> anyhow::Result<f32> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
+        check_staged(staged, meta)?;
+        anyhow::ensure!(
+            grads.g1.shape() == (meta.d, meta.h) && grads.g2.shape() == (meta.h, meta.c),
+            "gradient buffers shaped for a different artifact than {}",
+            meta.name
+        );
+        let t = self.threads;
+        let agco = self.agco;
+        let head = self.loss_head;
+        let (s, mut ctx) = self.step_ctx(staged);
+        Self::forward(s, staged, state, agco, t, &mut ctx);
+        let loss = Self::loss_into(s, staged, head);
+        // Same pipeline as `train_grads`, but the layer-2 gradient is
+        // published the instant the backward finishes it — the layer-1
+        // chain below the hook is the compute the cluster overlap hides
+        // its first all-reduce chunk behind.
+        Self::backward_hooked(s, staged, state, agco, t, &mut ctx, |g2| {
+            grads.g2.data.copy_from_slice(&g2.data);
+            on_l2(grads);
+        });
+        grads.g1.data.copy_from_slice(&s.g1.data);
         Ok(loss)
     }
 

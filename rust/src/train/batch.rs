@@ -145,6 +145,16 @@ impl StagingArena {
         self.staged
     }
 
+    /// Mutable view of one staged feature row (`row` indexes the 2-hop
+    /// input frontier, the order [`StagingArena::stage`] filled `x` in).
+    /// This is the cluster layer's halo-quantization hook: ghost rows
+    /// arrive over a compressed link, so the replica rewrites them with
+    /// the wire round trip before compute.
+    pub fn x_row_mut(&mut self, row: usize) -> &mut [f32] {
+        let d = self.meta.d;
+        &mut self.staged.x.data[row * d..(row + 1) * d]
+    }
+
     /// Stage `batch` into the arena slots, gathering features/labels from
     /// `graph`.  Tensor contents equal [`stage`]'s output exactly.
     pub fn stage(

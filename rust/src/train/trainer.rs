@@ -22,6 +22,7 @@
 
 use std::time::Instant;
 
+use crate::cluster::codec::Precision;
 use crate::coordinator::sequence_estimator::{SequenceEstimator, ShapeParams};
 use crate::graph::generate::LabeledGraph;
 use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
@@ -59,6 +60,15 @@ pub struct TrainerConfig {
     /// adjacency row's partial sum once and reuse it (exact — loss curves
     /// are bit-identical with the knob off).  Default on.
     pub dedup: bool,
+    /// Wire precision of the cluster's inter-card links (halo + all-reduce
+    /// payloads).  `Exact` (the default) keeps the byte-identical fp32
+    /// path; `Bf16`/`Int8` quantize with deterministic stochastic
+    /// rounding.  Ignored by the single-card trainer — there is no link.
+    pub precision: Precision,
+    /// Overlap the layer-2 gradient all-reduce with the layer-1 backward
+    /// (cluster only).  Exact results are bit-identical with the knob on
+    /// or off; the traffic model reports the hidden sync share.
+    pub overlap: bool,
 }
 
 impl Default for TrainerConfig {
@@ -75,6 +85,8 @@ impl Default for TrainerConfig {
             threads: 0,
             loss_head: LossHead::SoftmaxXent,
             dedup: true,
+            precision: Precision::Exact,
+            overlap: false,
         }
     }
 }

@@ -1,0 +1,326 @@
+//! Link-optimization tests — codec contracts (wire sizes, stochastic
+//! rounding determinism, non-finite handling), chunked-reduce bit
+//! identity, the exact-mode overlap-invariance pin, quantized
+//! cross-pool-size determinism, the quantized loss-quality bound, and
+//! the traffic model's compressed/hidden accounting.
+
+use gcn_noc::cluster::codec::{
+    bf16_roundtrip, int8_chunk_scale, int8_roundtrip, Precision, WireCodec, INT8_CHUNK,
+};
+use gcn_noc::cluster::traffic::TrafficModel;
+use gcn_noc::cluster::{ClusterTrainer, FaultEvent, FaultPlan, GraphSharder};
+use gcn_noc::graph::generate::{community_graph, LabeledGraph};
+use gcn_noc::train::trainer::TrainerConfig;
+use gcn_noc::util::rng::SplitMix64;
+
+/// A small learnable graph matching the "small" tag's feature/class dims.
+fn small_graph(seed: u64) -> LabeledGraph {
+    let mut rng = SplitMix64::new(seed);
+    community_graph(1200, 10.0, 2.3, 64, 8, 0.7, &mut rng)
+}
+
+fn cfg(steps: usize, threads: usize, seed: u64) -> TrainerConfig {
+    TrainerConfig { steps, lr: 0.1, log_every: 0, threads, seed, ..Default::default() }
+}
+
+fn quant_cfg(precision: Precision, overlap: bool, threads: usize) -> TrainerConfig {
+    TrainerConfig { precision, overlap, ..cfg(12, threads, 0x11E0) }
+}
+
+/// Loss-curve bits + final weights of one cluster run.
+fn run_bits(g: &LabeledGraph, shards: usize, cfg: TrainerConfig) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let plan = GraphSharder::new(shards).shard(g);
+    let mut trainer = ClusterTrainer::new(g, &plan, cfg).unwrap();
+    let curve = trainer.train().unwrap();
+    let loss_bits: Vec<u32> = curve.records.iter().map(|r| r.loss.to_bits()).collect();
+    let w1: Vec<u32> = trainer.state.w1.data.iter().map(|v| v.to_bits()).collect();
+    let w2: Vec<u32> = trainer.state.w2.data.iter().map(|v| v.to_bits()).collect();
+    (loss_bits, w1, w2)
+}
+
+// --- Codec contracts. ---
+
+#[test]
+fn wire_sizes_shrink_as_specified() {
+    // One "small"-artifact gradient set: 64×32 + 32×8 = 2304 elements.
+    let elems = 2304u64;
+    let exact = Precision::Exact.wire_bytes(elems);
+    let bf16 = Precision::Bf16.wire_bytes(elems);
+    let int8 = Precision::Int8.wire_bytes(elems);
+    assert_eq!(exact, 4 * elems);
+    assert_eq!(bf16, 2 * elems);
+    assert_eq!(int8, elems + 4 * elems.div_ceil(INT8_CHUNK as u64));
+    // The acceptance bar: int8 cuts wire bytes by at least 40%.
+    assert!((int8 as f64) <= 0.6 * exact as f64, "int8 {int8} vs exact {exact}");
+    assert!((bf16 as f64) <= 0.5 * exact as f64 + 1.0);
+    // Ragged payloads round the scale count up, never down.
+    assert_eq!(Precision::Int8.wire_bytes(65), 65 + 8);
+    assert_eq!(Precision::Int8.wire_bytes(0), 0);
+}
+
+#[test]
+fn bf16_roundtrip_lands_on_a_neighbor_and_is_seed_deterministic() {
+    let vals: Vec<f32> = vec![
+        1.337,
+        -0.00042,
+        123456.78,
+        -3.0e-39, // denormal
+        f32::MIN_POSITIVE / 4.0,
+        0.0,
+        -0.0,
+        2.5e37,
+    ];
+    let mut a = vals.clone();
+    let mut b = vals.clone();
+    bf16_roundtrip(&mut a, &mut SplitMix64::new(0xB16));
+    bf16_roundtrip(&mut b, &mut SplitMix64::new(0xB16));
+    for ((&q, &q2), &v) in a.iter().zip(&b).zip(&vals) {
+        assert_eq!(q.to_bits(), q2.to_bits(), "same seed must round identically");
+        // q is one of v's two enclosing bf16 values (toward-zero
+        // truncation or one bf16 step away from zero).
+        let lo = f32::from_bits(v.to_bits() & 0xFFFF_0000);
+        let hi = f32::from_bits((v.to_bits() & 0xFFFF_0000).wrapping_add(0x0001_0000));
+        assert!(
+            q.to_bits() == lo.to_bits() || q.to_bits() == hi.to_bits(),
+            "{q} is not a bf16 neighbor of {v}"
+        );
+    }
+}
+
+#[test]
+fn bf16_passes_non_finite_values_through() {
+    let mut data = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -f32::NAN];
+    bf16_roundtrip(&mut data, &mut SplitMix64::new(1));
+    assert!(data[0].is_nan() && data[0].is_sign_positive());
+    assert_eq!(data[1], f32::INFINITY);
+    assert_eq!(data[2], f32::NEG_INFINITY);
+    assert!(data[3].is_nan() && data[3].is_sign_negative());
+    // Values on the brink of bf16 overflow must never be rounded to ∞.
+    let mut huge = vec![f32::MAX, -f32::MAX];
+    for trial in 0..64 {
+        huge[0] = f32::MAX;
+        huge[1] = -f32::MAX;
+        bf16_roundtrip(&mut huge, &mut SplitMix64::new(trial));
+        assert!(huge[0].is_finite() && huge[1].is_finite(), "finite input rounded to ∞");
+    }
+}
+
+#[test]
+fn int8_scale_comes_from_finite_values_only() {
+    let mut chunk = vec![0.5f32; INT8_CHUNK];
+    chunk[3] = f32::INFINITY;
+    chunk[7] = f32::NAN;
+    chunk[11] = -2.0; // the finite max
+    assert_eq!(int8_chunk_scale(&chunk), 2.0 / 127.0);
+    let orig = chunk.clone();
+    int8_roundtrip(&mut chunk, &mut SplitMix64::new(9));
+    assert_eq!(chunk[3], f32::INFINITY, "non-finite values pass through");
+    assert!(chunk[7].is_nan());
+    let scale = 2.0 / 127.0;
+    for (&q, &o) in chunk.iter().zip(&orig) {
+        if o.is_finite() {
+            assert!((q - o).abs() <= scale + 1e-6, "{q} vs {o}");
+        }
+    }
+    // All-zero chunks encode to exact zeros.
+    let mut zeros = vec![0.0f32; INT8_CHUNK];
+    int8_roundtrip(&mut zeros, &mut SplitMix64::new(2));
+    assert!(zeros.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn wire_codec_is_a_pure_function_of_its_key() {
+    let payload: Vec<f32> = (0..200).map(|i| (i as f32 * 0.73).sin()).collect();
+    let codec = WireCodec::new(Precision::Bf16, 0xFEED);
+    let mut a = payload.clone();
+    let mut b = payload.clone();
+    codec.roundtrip(&mut a, 7, 1, 3);
+    codec.roundtrip(&mut b, 7, 1, 3);
+    assert_eq!(a, b, "identical key must quantize identically");
+    let mut c = payload.clone();
+    codec.roundtrip(&mut c, 8, 1, 3);
+    assert_ne!(a, c, "a different step must draw different noise");
+    // An exact codec is the identity, bit for bit.
+    let mut d = payload.clone();
+    WireCodec::new(Precision::Exact, 0xFEED).roundtrip(&mut d, 7, 1, 3);
+    assert_eq!(
+        d.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        payload.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+// --- Trainer-level contracts. ---
+
+#[test]
+fn exact_overlap_is_bit_identical_to_exact_serial() {
+    // The chunked, mid-backward fold performs the same f32 ops in the
+    // same order as the monolithic reduce — overlap must be a pure
+    // scheduling change in exact mode.
+    let g = small_graph(0x0E11);
+    let base = run_bits(&g, 4, quant_cfg(Precision::Exact, false, 2));
+    let overlapped = run_bits(&g, 4, quant_cfg(Precision::Exact, true, 2));
+    assert_eq!(base.0, overlapped.0, "loss curve changed under overlap");
+    assert_eq!(base.1, overlapped.1, "w1 changed under overlap");
+    assert_eq!(base.2, overlapped.2, "w2 changed under overlap");
+}
+
+#[test]
+fn quantized_overlap_matches_quantized_serial() {
+    // Codec streams key on (seed, step, chunk, edge) — never on worker
+    // timing — so the overlapped spelling of a quantized reduce is
+    // bit-equal to the serial one.
+    let g = small_graph(0x0E12);
+    let serial = run_bits(&g, 4, quant_cfg(Precision::Int8, false, 2));
+    let overlapped = run_bits(&g, 4, quant_cfg(Precision::Int8, true, 2));
+    assert_eq!(serial.0, overlapped.0);
+    assert_eq!(serial.1, overlapped.1);
+    assert_eq!(serial.2, overlapped.2);
+}
+
+#[test]
+fn quantized_runs_are_bit_deterministic_across_pool_sizes() {
+    let g = small_graph(0x0E13);
+    for precision in [Precision::Bf16, Precision::Int8] {
+        let mut reference: Option<(Vec<u32>, Vec<u32>, Vec<u32>)> = None;
+        for threads in [1usize, 2, 8] {
+            let got = run_bits(&g, 4, quant_cfg(precision, true, threads));
+            assert!(got.0.iter().all(|&b| f32::from_bits(b).is_finite()));
+            match &reference {
+                None => reference = Some(got),
+                Some(r) => {
+                    assert_eq!(&got.0, &r.0, "{precision:?} curve diverges at {threads} threads");
+                    assert_eq!(&got.1, &r.1, "{precision:?} w1 diverges at {threads} threads");
+                    assert_eq!(&got.2, &r.2, "{precision:?} w2 diverges at {threads} threads");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_training_still_learns_within_a_bound_of_exact() {
+    let g = small_graph(0x0E14);
+    let plan = GraphSharder::new(4).shard(&g);
+    let mut exact = ClusterTrainer::new(&g, &plan, cfg(40, 2, 0x0E15)).unwrap();
+    let exact_curve = exact.train().unwrap();
+    let (exact_head, exact_tail) = exact_curve.head_tail_means(10);
+    assert!(exact_tail < exact_head);
+
+    for precision in [Precision::Bf16, Precision::Int8] {
+        let qcfg = TrainerConfig { precision, overlap: true, ..cfg(40, 2, 0x0E15) };
+        let mut q = ClusterTrainer::new(&g, &plan, qcfg).unwrap();
+        let curve = q.train().unwrap();
+        assert!(curve.records.iter().all(|r| r.loss.is_finite()));
+        let (head, tail) = curve.head_tail_means(10);
+        assert!(tail < head, "{precision:?} failed to learn: {head} -> {tail}");
+        // Quality bound: quantization noise must not cost more than half
+        // of the loss reduction the exact run achieved.
+        let exact_gain = exact_head - exact_tail;
+        assert!(
+            tail <= exact_tail + 0.5 * exact_gain,
+            "{precision:?} tail {tail} too far above exact tail {exact_tail} (head {exact_head})"
+        );
+        // And the wire must actually have been compressed.
+        let totals = q.traffic_totals();
+        let raw: u64 = totals.per_card.iter().map(|c| c.sent_bytes()).sum();
+        let wire: u64 = totals.per_card.iter().map(|c| c.wire_bytes).sum();
+        assert!(wire < raw, "{precision:?} wire {wire} not below raw {raw}");
+        if precision == Precision::Int8 {
+            assert!(
+                (wire as f64) <= 0.6 * raw as f64,
+                "int8 must cut link bytes by ≥ 40%: wire {wire}, raw {raw}"
+            );
+        }
+        assert!(totals.hidden_cycles > 0, "overlap must hide some sync cycles");
+        assert!(totals.hidden_cycles <= totals.sync_cycles);
+    }
+}
+
+#[test]
+fn one_shard_quantized_matches_exact_byte_for_byte() {
+    // A single card has no links: nothing to compress, nothing to fold —
+    // every mode degenerates to the same computation.
+    let g = small_graph(0x0E16);
+    let exact = run_bits(&g, 1, quant_cfg(Precision::Exact, false, 2));
+    for precision in [Precision::Bf16, Precision::Int8] {
+        for overlap in [false, true] {
+            let got = run_bits(&g, 1, quant_cfg(precision, overlap, 2));
+            assert_eq!(exact.0, got.0, "{precision:?}/overlap={overlap}");
+            assert_eq!(exact.1, got.1);
+            assert_eq!(exact.2, got.2);
+        }
+    }
+}
+
+// --- Traffic-model accounting. ---
+
+#[test]
+fn traffic_wire_bytes_track_the_codec() {
+    let fetches = vec![vec![0u32, 40, 0, 2], vec![0; 4], vec![0; 4], vec![0; 4]];
+    let mut exact = TrafficModel::new(4, 16, 1000);
+    exact.set_precision(Precision::Exact);
+    let e = exact.step(&fetches);
+    let mut int8 = TrafficModel::new(4, 16, 1000);
+    int8.set_precision(Precision::Int8);
+    let q = int8.step(&fetches);
+    // Logical columns stay raw and identical across modes.
+    for (a, b) in e.per_card.iter().zip(&q.per_card) {
+        assert_eq!(a.halo_bytes_in, b.halo_bytes_in);
+        assert_eq!(a.halo_bytes_out, b.halo_bytes_out);
+        assert_eq!(a.allreduce_bytes, b.allreduce_bytes);
+    }
+    // Wire bytes equal raw in exact mode and shrink under int8.
+    let e_wire: u64 = e.per_card.iter().map(|c| c.wire_bytes).sum();
+    let e_raw: u64 = e.per_card.iter().map(|c| c.sent_bytes()).sum();
+    assert_eq!(e_wire, e_raw);
+    let q_wire: u64 = q.per_card.iter().map(|c| c.wire_bytes).sum();
+    assert!(q_wire < e_wire);
+    assert!((q_wire as f64) <= 0.6 * e_wire as f64, "int8 wire {q_wire} vs exact {e_wire}");
+    // Less wire ⇒ fewer sync cycles.
+    assert!(q.sync_cycles < e.sync_cycles);
+    assert_eq!(e.hidden_cycles, 0);
+    assert_eq!(q.hidden_cycles, 0);
+}
+
+#[test]
+fn overlap_classifies_first_chunk_cycles_as_hidden() {
+    let fetches = vec![vec![0u32; 4]; 4];
+    let flat = TrafficModel::new(4, 16, 2304);
+    let flat_step = flat.step(&fetches);
+    let mut over = TrafficModel::new(4, 16, 2304);
+    // Chunks mirror the trainer's split: layer-2 (32×8) first, then
+    // layer-1 (64×32); a generous compute budget hides chunk 0 fully.
+    over.set_overlap(&[256, 2048], 1_000_000);
+    let over_step = over.step(&fetches);
+    assert!(over_step.hidden_cycles > 0, "overlap must hide the layer-2 fold");
+    assert!(over_step.hidden_cycles < over_step.sync_cycles);
+    // Total all-reduce volume is chunking-invariant.
+    let flat_ar: u64 = flat_step.per_card.iter().map(|c| c.allreduce_bytes).sum();
+    let over_ar: u64 = over_step.per_card.iter().map(|c| c.allreduce_bytes).sum();
+    assert_eq!(flat_ar, over_ar);
+    // A tight budget hides less.
+    let mut tight = TrafficModel::new(4, 16, 2304);
+    tight.set_overlap(&[256, 2048], 10);
+    assert_eq!(tight.step(&fetches).hidden_cycles, 10);
+}
+
+#[test]
+fn degraded_retries_resend_compressed_payloads() {
+    // Satellite fix: LinkDegrade retry volume must be charged at the
+    // wire size, so fault drills and compression compose.
+    let fetches = vec![vec![0u32, 40, 0, 2], vec![0; 4], vec![0; 4], vec![0; 4]];
+    let window = FaultEvent::LinkDegrade { from: 0, to: 4, card: 1 };
+    let plan = FaultPlan::new(0xD16).with(window);
+    let lf = plan.link_faults_at(2);
+    let mut exact = TrafficModel::new(4, 16, 1000);
+    exact.set_precision(Precision::Exact);
+    let e = exact.step_with_faults(&fetches, Some(&lf));
+    let mut int8 = TrafficModel::new(4, 16, 1000);
+    int8.set_precision(Precision::Int8);
+    let q = int8.step_with_faults(&fetches, Some(&lf));
+    let e_retry: u64 = e.per_card.iter().map(|c| c.retry_bytes).sum();
+    let q_retry: u64 = q.per_card.iter().map(|c| c.retry_bytes).sum();
+    assert!(e_retry > 0 && q_retry > 0, "the drill must actually retry");
+    assert!(q_retry < e_retry, "retries must resend compressed bytes: {q_retry} vs {e_retry}");
+    assert!(q.retry_cycles < e.retry_cycles);
+}
