@@ -1,0 +1,186 @@
+//! **Inference serving bench** — sustained throughput and queue-delay
+//! percentiles of the deadline-batched serving engine on one synthetic
+//! replica, plus the serving twins of the repo's two standing contracts:
+//!
+//! - **bit-identity**: the pool sweep (1/2/8 lanes) asserts every lane
+//!   count serves byte-identical logits for the same trace;
+//! - **zero steady-state allocations**: a warmed single-lane engine
+//!   replays the trace with the counting allocator armed and must not
+//!   touch the heap on the serving thread.
+//!
+//! A hot-swap exercise rides along: train a newer generation into the
+//! store mid-bench, poll the watcher, and serve it — the swap latency
+//! (probe + verified restore + install) lands in the baseline.
+//!
+//! Writes `BENCH_serve.json`; `req_per_sec` (higher is better) and
+//! `p99_us` (queue delay, lower is better) gate regressions.
+
+mod common;
+
+use common::{banner, compare_baseline, fmt_time, time_it, trials};
+use gcn_noc::graph::generate::community_graph;
+use gcn_noc::serve::{
+    open_loop_trace, ModelSnapshot, ServeConfig, ServeEngine, SnapshotSlot, SwapOutcome,
+    SwapWatcher,
+};
+use gcn_noc::train::trainer::{Trainer, TrainerConfig};
+use gcn_noc::train::CheckpointStore;
+use gcn_noc::util::alloc_probe::{allocs_on_this_thread, CountingAlloc};
+use gcn_noc::util::rng::SplitMix64;
+
+// Main-thread allocation counter (shared impl in `util::alloc_probe`):
+// arms the steady-state serving probe below.
+#[global_allocator]
+static COUNTING_ALLOC: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let mut rng = SplitMix64::new(0x5E7E);
+    let graph = community_graph(4096, 12.0, 2.3, 64, 8, 0.6, &mut rng);
+    let cfg = TrainerConfig {
+        batch_size: 32,
+        steps: 0,
+        lr: 0.05,
+        seed: 0x5E7F,
+        log_every: 0,
+        ..Default::default()
+    };
+
+    banner("bootstrap: train a checkpoint generation to serve");
+    let boot_steps = trials(40);
+    let dir = std::env::temp_dir().join("gcn_noc_bench_serve_ck");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = CheckpointStore::open(&dir, 3).unwrap();
+    let mut trainer = Trainer::new(&graph, cfg.clone()).unwrap();
+    for _ in 0..boot_steps {
+        trainer.step().unwrap();
+    }
+    store.save(&trainer.checkpoint()).unwrap();
+    let restored = store.load_latest().unwrap().unwrap();
+    let snap =
+        ModelSnapshot::from_checkpoint(&graph, &cfg, &restored.checkpoint, restored.generation)
+            .unwrap();
+    println!(
+        "serving generation {} (step {}, artifact {}, ordering {})",
+        snap.generation(),
+        snap.step(),
+        snap.meta().name,
+        snap.ordering()
+    );
+
+    let requests = if common::smoke() { 256 } else { 4096 };
+    let rate = 50_000.0f64;
+    let trace = open_loop_trace(0x10AD, requests, rate, graph.num_nodes());
+
+    // --- Pool sweep: throughput at 1/2/8 lanes, bit-identity asserted. ---
+    banner("open-loop serve: pool sweep 1/2/8 lanes (bit-identity asserted)");
+    let mut sweep: Vec<(usize, usize, f64)> = Vec::new();
+    let mut reference_bits: Option<Vec<u32>> = None;
+    let mut best_rps = 0.0f64;
+    let mut p50 = 0.0f64;
+    let mut p99 = 0.0f64;
+    for threads in [1usize, 2, 8] {
+        let scfg = ServeConfig { deadline_us: 200, max_batch: 32, threads, seed: 0x5EED };
+        let mut engine = ServeEngine::new(&graph, &cfg, scfg, &snap).unwrap();
+        let slot = SnapshotSlot::new(snap.clone());
+        let secs = time_it(1, 3, || {
+            engine.serve_trace(&trace, &slot).unwrap();
+        });
+        let report = engine.report();
+        let bits: Vec<u32> = report.logits.iter().map(|v| v.to_bits()).collect();
+        match &reference_bits {
+            None => reference_bits = Some(bits),
+            Some(want) => {
+                assert_eq!(want, &bits, "pool size {threads} must serve byte-identical logits")
+            }
+        }
+        let (loss, acc) = report.eval_equivalent();
+        assert!(loss.is_finite(), "served loss must be finite");
+        p50 = report.queue_p50_us();
+        p99 = report.queue_p99_us();
+        let rps = requests as f64 / secs.max(1e-12);
+        best_rps = best_rps.max(rps);
+        println!(
+            "lanes={}: {} / pass ({rps:.0} req/s) | queue p50 {p50:.0} us, p99 {p99:.0} us \
+             | accuracy {:.1}%",
+            engine.lanes(),
+            fmt_time(secs),
+            acc * 100.0
+        );
+        sweep.push((threads, engine.lanes(), rps));
+    }
+
+    // --- Steady-state allocation probe (single lane: the warm pass and
+    // the probed pass replay the identical batch stream, so every
+    // recycled buffer is already at its high-water mark). ---
+    banner("steady-state allocation probe (serve_trace on a warmed engine)");
+    let scfg = ServeConfig { deadline_us: 200, max_batch: 32, threads: 1, seed: 0x5EED };
+    let mut engine = ServeEngine::new(&graph, &cfg, scfg, &snap).unwrap();
+    let slot = SnapshotSlot::new(snap.clone());
+    engine.serve_trace(&trace, &slot).unwrap();
+    let before = allocs_on_this_thread();
+    engine.serve_trace(&trace, &slot).unwrap();
+    let n = allocs_on_this_thread() - before;
+    println!("heap allocations over one steady-state serve pass (main thread): {n}");
+    assert_eq!(n, 0, "steady-state serving must not allocate on the serving thread");
+
+    // --- Hot swap: a newer generation lands mid-bench. ---
+    banner("hot swap: train a newer generation, poll, serve it");
+    let mut watcher = SwapWatcher::new(store);
+    watcher.mark_current().unwrap();
+    for _ in 0..trials(10).max(2) {
+        trainer.step().unwrap();
+    }
+    let saved = watcher.store().save(&trainer.checkpoint()).unwrap();
+    let mut outcome = None;
+    let swap_secs = time_it(0, 1, || {
+        outcome = Some(watcher.poll(&graph, &cfg, &slot).unwrap());
+    });
+    match outcome.expect("polled once") {
+        SwapOutcome::Swapped { generation, step, .. } => {
+            assert_eq!(generation, saved);
+            println!(
+                "swapped to generation {generation} (step {step}) in {}",
+                fmt_time(swap_secs)
+            );
+        }
+        other => panic!("expected a swap to generation {saved}, got {other:?}"),
+    }
+    {
+        let report = engine.serve_trace(&trace, &slot).unwrap();
+        assert!(
+            report.batch_generation.iter().all(|&g| g == saved),
+            "post-swap pass must serve the new generation"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+
+    // --- Baseline artifact. ---
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let sweep_json = sweep
+        .iter()
+        .map(|(threads, lanes, rps)| {
+            format!("    {{\"threads\": {threads}, \"lanes\": {lanes}, \"rps\": {rps:.1}}}")
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"bench_serve\",\n  \"host_cores\": {cores},\n  \"smoke\": {},\n  \
+         \"requests\": {requests},\n  \"rate_rps\": {rate:.0},\n  \"deadline_us\": 200,\n  \
+         \"max_batch\": 32,\n  \"sweep\": [\n{sweep_json}\n  ],\n  \
+         \"req_per_sec\": {best_rps:.1},\n  \"p50_us\": {p50:.1},\n  \"p99_us\": {p99:.1},\n  \
+         \"swap_ms\": {:.3}\n}}\n",
+        common::smoke(),
+        swap_secs * 1e3,
+    );
+    let path = "BENCH_serve.json";
+    // Throughput is a win (higher is better); tail queue delay is a
+    // cost.  The sweep keys its per-point throughput "rps" so these
+    // top-level gates stay the first occurrence of their names.
+    compare_baseline(path, "req_per_sec", best_rps, true);
+    compare_baseline(path, "p99_us", p99, false);
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nbaseline written to {path}"),
+        Err(e) => println!("\ncould not write {path}: {e}"),
+    }
+    common::check_exit();
+}

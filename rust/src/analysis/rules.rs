@@ -10,7 +10,8 @@ use crate::analysis::source::{FileClass, SourceFile};
 /// Top-level modules whose outputs are bit-determinism contracts
 /// (routing reports, loss curves, shard cuts): R4 bans wall-clock and
 /// entropy here.
-pub const DETERMINISTIC_MODULES: &[&str] = &["noc", "coordinator", "cluster", "train", "graph"];
+pub const DETERMINISTIC_MODULES: &[&str] =
+    &["noc", "coordinator", "cluster", "train", "graph", "serve"];
 
 fn is_ident(c: char) -> bool {
     c.is_alphanumeric() || c == '_'

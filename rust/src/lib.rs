@@ -36,5 +36,6 @@ pub mod noc;
 pub mod perf;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod util;

@@ -51,6 +51,7 @@ fn main() {
 fn run(args: &Args) -> anyhow::Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(args),
+        "serve" => cmd_serve(args),
         "cluster" => cmd_cluster(args),
         "route" => cmd_route(args),
         "hbm" => cmd_hbm(),
@@ -84,6 +85,12 @@ commands:
              payloads, --overlap on|off hides the layer-2 all-reduce
              behind the layer-1 backward — exact/off is the
              byte-identical default)
+  serve      deadline-batched inference serving from a checkpoint store
+             (--ckpt-dir DIR --deadline-us N --max-batch N --threads N
+             --requests N --rate RPS; bootstraps --bootstrap-steps of
+             training when DIR is empty; --refresh-steps N --refreshes K
+             keeps training between serve passes and atomically
+             hot-swaps each newly saved generation in)
   cluster    multi-card scaling report: steps/s + modeled traffic at
              1/2/4/8 shards (--dataset --nodes --steps --batch
              --precision exact|bf16|int8 --overlap on|off)
@@ -178,6 +185,157 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         curve.write_csv(path)?;
         println!("loss curve written to {path}");
     }
+    Ok(())
+}
+
+/// `serve`: forward-only deadline-batched inference from the newest
+/// durable checkpoint generation, with atomic hot-swap of generations
+/// saved while serving (`--refresh-steps`/`--refreshes`).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use gcn_noc::serve::{
+        open_loop_trace, ModelSnapshot, ServeConfig, ServeEngine, SnapshotSlot, SwapOutcome,
+        SwapWatcher,
+    };
+
+    let dataset = args.get_or("dataset", "flickr");
+    let spec = by_name(dataset).ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset}"))?;
+    let nodes = args.get_usize("nodes", 4096)?;
+    let seed = args.get_u64("seed", 0xF00D)?;
+    let mut rng = SplitMix64::new(seed);
+    eprintln!("instantiating {dataset} replica ({nodes} nodes)...");
+    let graph = spec.instantiate(nodes, &mut rng);
+    let cfg = TrainerConfig {
+        artifact_tag: args.get_or("tag", "small").to_string(),
+        optimizer: Optimizer::Sgd,
+        lr: args.get_f64("lr", 0.05)? as f32,
+        batch_size: args.get_usize("batch", 32)?,
+        fanouts: vec![args.get_usize("fanout1", 4)?, args.get_usize("fanout2", 4)?],
+        steps: 0,
+        seed,
+        log_every: args.get_usize("log-every", 10)?,
+        threads: args.get_usize("threads", 0)?,
+        loss_head: spec.loss_head(),
+        dedup: args.get_or("dedup", "on") != "off",
+        precision: Precision::Exact,
+        overlap: false,
+    };
+    let keep = args.get_usize("keep-checkpoints", 3)?;
+    let dir = config::checkpoint_store_dir(args.get("ckpt-dir"));
+    let store = gcn_noc::train::CheckpointStore::open(&dir, keep)?;
+
+    // An empty store cannot serve: bootstrap-train a first durable
+    // generation (the demo path; production points --ckpt-dir at a
+    // store the training job keeps saving into).
+    if store.generations()?.is_empty() {
+        let boot = args.get_usize("bootstrap-steps", 60)?;
+        anyhow::ensure!(
+            boot > 0,
+            "checkpoint store {} is empty and --bootstrap-steps is 0",
+            dir.display()
+        );
+        eprintln!(
+            "checkpoint store {} is empty; bootstrap-training {boot} steps...",
+            dir.display()
+        );
+        let mut trainer = Trainer::new(&graph, cfg.clone())?;
+        for _ in 0..boot {
+            trainer.step()?;
+        }
+        let generation = store.save(&trainer.checkpoint())?;
+        eprintln!("bootstrap checkpoint saved as generation {generation}");
+    }
+
+    let restored = store
+        .load_latest()?
+        .ok_or_else(|| anyhow::anyhow!("no loadable checkpoint in {}", dir.display()))?;
+    if restored.fell_back > 0 {
+        eprintln!("skipped {} torn/corrupt newer generation(s)", restored.fell_back);
+    }
+    let snapshot =
+        ModelSnapshot::from_checkpoint(&graph, &cfg, &restored.checkpoint, restored.generation)?;
+    eprintln!(
+        "serving generation {} (step {}, artifact {}, ordering {})",
+        snapshot.generation(),
+        snapshot.step(),
+        snapshot.meta().name,
+        snapshot.ordering()
+    );
+    let slot = SnapshotSlot::new(snapshot);
+    let mut watcher = SwapWatcher::new(store);
+    watcher.mark_current()?;
+
+    let scfg = ServeConfig {
+        deadline_us: args.get_u64("deadline-us", 200)?,
+        max_batch: args.get_usize("max-batch", cfg.batch_size)?,
+        threads: args.get_usize("threads", 0)?,
+        seed: args.get_u64("serve-seed", 0x5EED)?,
+    };
+    let requests = args.get_usize("requests", 2048)?;
+    let rate = args.get_f64("rate", 20_000.0)?;
+    let trace = open_loop_trace(seed ^ 0x5E7E, requests, rate, graph.num_nodes());
+    let current = slot.current();
+    let mut engine = ServeEngine::new(&graph, &cfg, scfg, &current)?;
+    drop(current);
+    eprintln!(
+        "engine: {} lanes, deadline {} us, max batch {}, {} requests at {rate} req/s (virtual)",
+        engine.lanes(),
+        scfg.deadline_us,
+        scfg.max_batch,
+        trace.len()
+    );
+
+    let refresh_steps = args.get_usize("refresh-steps", 0)?;
+    let refreshes = if refresh_steps > 0 { args.get_usize("refreshes", 1)? } else { 0 };
+    let mut trainer = if refreshes > 0 {
+        let mut t = Trainer::new(&graph, cfg.clone())?;
+        t.restore(&restored.checkpoint)?;
+        Some(t)
+    } else {
+        None
+    };
+
+    for pass in 0..=refreshes {
+        let t0 = std::time::Instant::now();
+        let (p50, p99, loss, acc, batches, generation);
+        {
+            let report = engine.serve_trace(&trace, &slot)?;
+            p50 = report.queue_p50_us();
+            p99 = report.queue_p99_us();
+            (loss, acc) = report.eval_equivalent();
+            batches = report.batches;
+            generation = report.batch_generation.last().copied().unwrap_or(0);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "pass {pass}: {} requests / {batches} batches | queue p50 {p50:.0} us, p99 {p99:.0} us \
+             | {:.0} req/s served | eval loss {loss:.4}, accuracy {:.1}% | generation {generation}",
+            trace.len(),
+            trace.len() as f64 / wall.max(1e-9),
+            acc * 100.0
+        );
+        if pass < refreshes {
+            let t = trainer.as_mut().expect("trainer exists whenever refreshes > 0");
+            for _ in 0..refresh_steps {
+                t.step()?;
+            }
+            let saved = watcher.store().save(&t.checkpoint())?;
+            match watcher.poll(&graph, &cfg, &slot)? {
+                SwapOutcome::Swapped { generation, step, fell_back } => eprintln!(
+                    "hot-swapped to generation {generation} (step {step}, {fell_back} torn skipped)"
+                ),
+                SwapOutcome::Unchanged => {
+                    eprintln!("saved generation {saved} but nothing newer to swap in")
+                }
+                SwapOutcome::Rejected { generation, reason } => {
+                    eprintln!("generation {generation} rejected: {reason}")
+                }
+            }
+        }
+    }
+    println!(
+        "hot-swap: {} swaps, {} fallbacks, {} rejects",
+        watcher.swaps, watcher.fallbacks, watcher.rejects
+    );
     Ok(())
 }
 

@@ -275,6 +275,24 @@ pub trait ComputeBackend {
         Ok(loss)
     }
 
+    /// Forward-only inference on one staged batch: write the raw logits
+    /// into `logits` (shaped `[b, c]` per the prepared artifact) without
+    /// any of the loss/label plumbing.  The contract the serving engine
+    /// builds on: this runs **exactly** the forward of
+    /// [`ComputeBackend::eval_batch`] — same matmuls, same accumulation
+    /// orders — so a served logit is bit-identical to what evaluation
+    /// computed on the same staged batch.  Backends without a
+    /// forward-only entry (the AOT PJRT artifacts fuse the loss) keep
+    /// this default error.
+    fn forward_logits(
+        &mut self,
+        _staged: &StagedBatch,
+        _state: &ModelState,
+        _logits: &mut Matrix,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("backend '{}' does not expose forward-only logits", self.name())
+    }
+
     /// Masked evaluation on one staged batch → `(mean loss, correct count)`.
     ///
     /// The batch arrives staged to the shapes [`ComputeBackend::prepare`]

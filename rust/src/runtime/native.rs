@@ -589,6 +589,30 @@ impl ComputeBackend for NativeBackend {
         Ok(loss)
     }
 
+    fn forward_logits(
+        &mut self,
+        staged: &StagedBatch,
+        state: &ModelState,
+        logits: &mut Matrix,
+    ) -> anyhow::Result<()> {
+        let meta = self.meta.as_ref().ok_or_else(|| anyhow::anyhow!("backend not prepared"))?;
+        check_staged(staged, meta)?;
+        anyhow::ensure!(
+            logits.shape() == (meta.b, meta.c),
+            "logits buffer shaped {:?} but artifact {} stages [{}, {}]",
+            logits.shape(),
+            meta.name,
+            meta.b,
+            meta.c
+        );
+        let t = self.threads;
+        let agco = self.agco;
+        let (s, mut ctx) = self.step_ctx(staged);
+        Self::forward(s, staged, state, agco, t, &mut ctx);
+        logits.data.copy_from_slice(&s.z2.data);
+        Ok(())
+    }
+
     fn eval_batch(
         &mut self,
         staged: &StagedBatch,

@@ -1,0 +1,158 @@
+//! Deadline micro-batching: fold a sorted arrival stream into flush
+//! plans.
+//!
+//! The batcher is pure planning — no queues, no clocks, no I/O.  Given
+//! an arrival-sorted request trace it emits contiguous `[lo, hi)` batch
+//! ranges with the virtual-clock instant each batch flushes at, under
+//! the classic two-trigger policy:
+//!
+//! - **deadline flush** — a batch opens at its first request's arrival
+//!   and flushes `deadline_us` later, whatever has accumulated;
+//! - **max-batch flush** — if the batch fills to `max_batch` first, it
+//!   flushes immediately at the filling request's arrival.
+//!
+//! Per-request queue delay is then `flush_us - arrival_us`, fully
+//! determined by the trace — which is what makes the latency numbers in
+//! the tests and `BENCH_serve.json` bit-reproducible.
+
+use crate::serve::loadgen::Request;
+
+/// One planned micro-batch: requests `trace[lo..hi]`, flushed at
+/// `flush_us` on the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPlan {
+    pub lo: usize,
+    pub hi: usize,
+    pub flush_us: u64,
+}
+
+impl BatchPlan {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// The deadline/max-batch micro-batcher.
+#[derive(Clone, Copy, Debug)]
+pub struct DeadlineBatcher {
+    deadline_us: u64,
+    max_batch: usize,
+}
+
+impl DeadlineBatcher {
+    pub fn new(deadline_us: u64, max_batch: usize) -> Self {
+        assert!(max_batch >= 1, "a batch must hold at least one request");
+        DeadlineBatcher { deadline_us, max_batch }
+    }
+
+    pub fn deadline_us(&self) -> u64 {
+        self.deadline_us
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Plan flush boundaries over an arrival-sorted trace into the
+    /// recycled `out` buffer.  Every request lands in exactly one plan;
+    /// plans are contiguous and in trace order.
+    // lint: hot-path
+    pub fn plan(&self, trace: &[Request], out: &mut Vec<BatchPlan>) {
+        debug_assert!(
+            trace.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+            "batcher requires an arrival-sorted trace"
+        );
+        out.clear();
+        let mut lo = 0usize;
+        while lo < trace.len() {
+            let deadline = trace[lo].arrival_us.saturating_add(self.deadline_us);
+            let mut hi = lo + 1;
+            while hi < trace.len() && hi - lo < self.max_batch && trace[hi].arrival_us <= deadline
+            {
+                hi += 1;
+            }
+            // Filled to capacity → flush the instant the filling request
+            // arrived; otherwise wait out the deadline.
+            let flush_us =
+                if hi - lo == self.max_batch { trace[hi - 1].arrival_us } else { deadline };
+            out.push(BatchPlan { lo, hi, flush_us });
+            lo = hi;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn at(arrivals: &[u64]) -> Vec<Request> {
+        arrivals.iter().map(|&t| Request { node: 0, arrival_us: t }).collect()
+    }
+
+    #[test]
+    fn max_batch_flushes_at_the_filling_arrival() {
+        // Burst of 5 with max_batch 4: the 4th request fills batch 0 at
+        // t=3 (before the t=100 deadline); the straggler waits out its
+        // own deadline alone.
+        let trace = at(&[0, 1, 2, 3, 50]);
+        let mut plans = Vec::new();
+        DeadlineBatcher::new(100, 4).plan(&trace, &mut plans);
+        assert_eq!(
+            plans,
+            vec![
+                BatchPlan { lo: 0, hi: 4, flush_us: 3 },
+                BatchPlan { lo: 4, hi: 5, flush_us: 150 },
+            ]
+        );
+    }
+
+    #[test]
+    fn deadline_flushes_whatever_accumulated() {
+        // Nothing fills: batch 0 opens at t=0, collects the t=30
+        // request, flushes at t=100; t=200 opens the next batch.
+        let trace = at(&[0, 30, 200]);
+        let mut plans = Vec::new();
+        DeadlineBatcher::new(100, 4).plan(&trace, &mut plans);
+        assert_eq!(
+            plans,
+            vec![
+                BatchPlan { lo: 0, hi: 2, flush_us: 100 },
+                BatchPlan { lo: 2, hi: 3, flush_us: 300 },
+            ]
+        );
+    }
+
+    #[test]
+    fn arrival_on_the_deadline_edge_is_included() {
+        let trace = at(&[0, 100, 101]);
+        let mut plans = Vec::new();
+        DeadlineBatcher::new(100, 8).plan(&trace, &mut plans);
+        assert_eq!(
+            plans,
+            vec![
+                BatchPlan { lo: 0, hi: 2, flush_us: 100 },
+                BatchPlan { lo: 2, hi: 3, flush_us: 201 },
+            ]
+        );
+    }
+
+    #[test]
+    fn every_request_lands_in_exactly_one_contiguous_plan() {
+        let trace = crate::serve::loadgen::open_loop_trace(3, 400, 30_000.0, 64);
+        let mut plans = Vec::new();
+        DeadlineBatcher::new(200, 16).plan(&trace, &mut plans);
+        let mut cursor = 0usize;
+        for p in &plans {
+            assert_eq!(p.lo, cursor);
+            assert!(!p.is_empty() && p.len() <= 16);
+            assert!(p.flush_us >= trace[p.hi - 1].arrival_us, "flush precedes an arrival");
+            cursor = p.hi;
+        }
+        assert_eq!(cursor, trace.len());
+    }
+}

@@ -1,0 +1,435 @@
+//! The forward-only serving engine: deadline-batched inference over
+//! pooled lanes.
+//!
+//! An engine owns N **lanes** (N = resolved worker count, capped), each
+//! a complete recycled inference pipeline — prepared [`NativeBackend`],
+//! [`NeighborSampler`] scratch, [`StagingArena`], logits buffer — so
+//! batches execute concurrently on [`crate::util::pool`] workers with
+//! zero steady-state heap allocations.  Two entry points:
+//!
+//! - [`ServeEngine::serve_ids`] — the serial replay path: serve explicit
+//!   node ids sampling from the **caller's** RNG.  Fed the trainer's id
+//!   and RNG stream this is bit-identical to [`Trainer::evaluate`],
+//!   which is the subsystem's correctness anchor (pinned in
+//!   `rust/tests/serve.rs`).
+//! - [`ServeEngine::serve_trace`] — the production path: plan a sorted
+//!   arrival trace into deadline/max-batch flushes, fan batches out
+//!   across lanes, and commit results by batch index so the report is
+//!   **bit-identical at any pool size**.  Each batch derives its own
+//!   sampling stream from `(serve seed, batch index)` and captures the
+//!   current snapshot `Arc` when it opens — a concurrent hot-swap only
+//!   affects batches that open after it ([`crate::serve::swap`]).
+//!
+//! [`Trainer::evaluate`]: crate::train::Trainer::evaluate
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::graph::generate::LabeledGraph;
+use crate::graph::sampler::{NeighborSampler, SampleScratch, SampledBatch};
+use crate::runtime::backend::ComputeBackend;
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::native::NativeBackend;
+use crate::serve::batcher::{BatchPlan, DeadlineBatcher};
+use crate::serve::loadgen::Request;
+use crate::serve::snapshot::ModelSnapshot;
+use crate::serve::swap::SnapshotSlot;
+use crate::train::batch::StagingArena;
+use crate::train::reference::{sigmoid_bce_into, softmax_xent_into};
+use crate::train::trainer::{LossHead, TrainerConfig};
+use crate::util::matrix::Matrix;
+use crate::util::pool;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::percentile;
+
+/// Upper bound on lane count: each lane carries a full staged-batch
+/// arena plus backend scratch, and more in-flight batches than this
+/// stop improving throughput before they stop costing memory.
+const MAX_LANES: usize = 8;
+
+/// Serving knobs (the trainer-side shape/sampling config rides in the
+/// [`TrainerConfig`] the engine is built with).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Micro-batch latency deadline on the virtual clock.
+    pub deadline_us: u64,
+    /// Flush early once a batch holds this many requests (must fit the
+    /// artifact's staged batch capacity).
+    pub max_batch: usize,
+    /// Pool workers / lanes (0 = one per available CPU).  Results are
+    /// bit-identical at any value.
+    pub threads: usize,
+    /// Seed of the per-batch sampling streams — serving's own stream,
+    /// decoupled from the training RNG.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { deadline_us: 200, max_batch: 32, threads: 0, seed: 0x5EED }
+    }
+}
+
+/// One recycled inference pipeline; lanes are checked out under a mutex
+/// for the duration of one batch.
+struct Lane<'g> {
+    backend: NativeBackend,
+    sampler: NeighborSampler<'g>,
+    arena: StagingArena,
+    scratch: SampleScratch,
+    sampled: SampledBatch,
+    ids: Vec<u32>,
+    /// Forward output, `[meta.b, meta.c]`.
+    logits: Matrix,
+    /// Loss-head scratch (the heads write an error buffer we discard).
+    dz2: Matrix,
+    head: LossHead,
+}
+
+impl Lane<'_> {
+    /// Serve the requests of one planned batch.  Registered hot
+    /// (`rust/lint/hot_paths.txt`): recycled buffers only.
+    fn infer_batch(
+        &mut self,
+        graph: &LabeledGraph,
+        trace: &[Request],
+        plan: BatchPlan,
+        rng: &mut SplitMix64,
+        snap: &ModelSnapshot,
+    ) -> anyhow::Result<(f32, f32)> {
+        self.ids.clear();
+        for r in &trace[plan.lo..plan.hi] {
+            self.ids.push(r.node);
+        }
+        self.infer_ids(graph, rng, snap)
+    }
+
+    /// Sample → stage → forward-only logits → loss/argmax for the ids
+    /// already in `self.ids`.  This replays `Trainer::evaluate`'s batch
+    /// body exactly (same sampler, same staging, the same forward via
+    /// [`ComputeBackend::forward_logits`], the same loss-head function
+    /// on the same bits) — the bit-identity contract lives here.
+    /// Registered hot (`rust/lint/hot_paths.txt`).
+    fn infer_ids(
+        &mut self,
+        graph: &LabeledGraph,
+        rng: &mut SplitMix64,
+        snap: &ModelSnapshot,
+    ) -> anyhow::Result<(f32, f32)> {
+        self.sampler.sample_into(&self.ids, rng, &mut self.scratch, &mut self.sampled);
+        self.arena.stage(&self.sampled, graph, false)?;
+        let staged = self.arena.staged();
+        self.backend.forward_logits(staged, snap.state(), &mut self.logits)?;
+        let yhot = staged.yhot.as_mat();
+        let loss = match self.head {
+            LossHead::SoftmaxXent => softmax_xent_into(
+                &self.logits,
+                yhot,
+                &staged.row_mask.data,
+                staged.nvalid(),
+                &mut self.dz2,
+            ),
+            LossHead::SigmoidBce => sigmoid_bce_into(
+                &self.logits,
+                yhot,
+                &staged.row_mask.data,
+                staged.nvalid(),
+                &mut self.dz2,
+            ),
+        };
+        let mut correct = 0.0f32;
+        for i in 0..self.ids.len() {
+            if argmax(self.logits.row(i)) == argmax(yhot.row(i)) {
+                correct += 1.0;
+            }
+        }
+        Ok((loss, correct))
+    }
+}
+
+/// First-maximum argmax — the exact expression `eval_batch` counts
+/// correctness with (ties resolve to the lower index).
+#[inline]
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (j, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Everything one [`ServeEngine::serve_trace`] call produced, in
+/// recycled buffers (cleared and refilled per call).
+#[derive(Default)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    /// Class count `c` — row width of [`ServeReport::logits`].
+    pub classes_width: usize,
+    /// Per request: virtual-clock queue delay (flush − arrival), µs.
+    pub queue_us: Vec<f64>,
+    /// Per request: argmax class.
+    pub classes: Vec<u32>,
+    /// Per request: raw logits, row-major `requests × classes_width`.
+    pub logits: Vec<f32>,
+    /// Per batch: masked mean loss (observability — serving has labels
+    /// only because the synthetic graphs do).
+    pub batch_loss: Vec<f32>,
+    /// Per batch: correct-prediction count.
+    pub batch_correct: Vec<f32>,
+    /// Per batch: request count.
+    pub batch_valid: Vec<usize>,
+    /// Per batch: generation of the snapshot that served it — the
+    /// hot-swap audit trail.
+    pub batch_generation: Vec<u64>,
+}
+
+impl ServeReport {
+    fn reset(&mut self, requests: usize, batches: usize, classes_width: usize) {
+        self.requests = requests;
+        self.batches = batches;
+        self.classes_width = classes_width;
+        self.queue_us.clear();
+        self.queue_us.resize(requests, 0.0);
+        self.classes.clear();
+        self.classes.resize(requests, 0);
+        self.logits.clear();
+        self.logits.resize(requests * classes_width, 0.0);
+        self.batch_loss.clear();
+        self.batch_loss.resize(batches, 0.0);
+        self.batch_correct.clear();
+        self.batch_correct.resize(batches, 0.0);
+        self.batch_valid.clear();
+        self.batch_valid.resize(batches, 0);
+        self.batch_generation.clear();
+        self.batch_generation.resize(batches, 0);
+    }
+
+    /// Fold the per-batch results with `Trainer::evaluate`'s exact
+    /// accumulation expressions → `(mean loss, accuracy)`.
+    pub fn eval_equivalent(&self) -> (f32, f32) {
+        let mut total_loss = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut seen = 0usize;
+        for b in 0..self.batches {
+            total_loss += self.batch_loss[b];
+            correct += self.batch_correct[b];
+            seen += self.batch_valid[b];
+        }
+        (total_loss / self.batches.max(1) as f32, correct / seen.max(1) as f32)
+    }
+
+    /// Median virtual-clock queue delay, µs.
+    pub fn queue_p50_us(&self) -> f64 {
+        percentile(&self.queue_us, 50.0)
+    }
+
+    /// 99th-percentile virtual-clock queue delay, µs.
+    pub fn queue_p99_us(&self) -> f64 {
+        percentile(&self.queue_us, 99.0)
+    }
+}
+
+/// The serving engine.  See the module docs for the two entry points
+/// and their determinism contracts.
+pub struct ServeEngine<'g> {
+    graph: &'g LabeledGraph,
+    cfg: ServeConfig,
+    meta: ArtifactMeta,
+    batcher: DeadlineBatcher,
+    lanes: Vec<Mutex<Lane<'g>>>,
+    plans: Vec<BatchPlan>,
+    report: ServeReport,
+}
+
+impl<'g> ServeEngine<'g> {
+    /// Build an engine whose lanes are prepared for exactly the artifact
+    /// `snapshot` serves under (tag/optimizer/fanouts/loss head from
+    /// `tcfg`, ordering replayed by the snapshot).
+    pub fn new(
+        graph: &'g LabeledGraph,
+        tcfg: &TrainerConfig,
+        cfg: ServeConfig,
+        snapshot: &ModelSnapshot,
+    ) -> anyhow::Result<ServeEngine<'g>> {
+        let meta = snapshot.meta().clone();
+        anyhow::ensure!(
+            cfg.max_batch >= 1 && cfg.max_batch <= meta.b,
+            "max batch {} outside the staged capacity 1..={} of artifact {}",
+            cfg.max_batch,
+            meta.b,
+            meta.name
+        );
+        let lanes_n = crate::util::pool::resolve_threads(cfg.threads).min(MAX_LANES);
+        let mut lanes = Vec::with_capacity(lanes_n);
+        for _ in 0..lanes_n {
+            let mut backend = NativeBackend::new(cfg.threads);
+            backend.set_dedup(tcfg.dedup);
+            let lane_meta = backend.prepare(
+                &tcfg.artifact_tag,
+                tcfg.optimizer,
+                snapshot.ordering(),
+                tcfg.loss_head,
+            )?;
+            anyhow::ensure!(
+                lane_meta.name == meta.name,
+                "lane prepared {} but the snapshot serves {} — config drift",
+                lane_meta.name,
+                meta.name
+            );
+            lanes.push(Mutex::new(Lane {
+                backend,
+                sampler: NeighborSampler::new(&graph.adj, tcfg.fanouts.clone()),
+                arena: StagingArena::new(&meta),
+                scratch: SampleScratch::default(),
+                sampled: SampledBatch::default(),
+                ids: Vec::new(),
+                logits: Matrix::zeros(meta.b, meta.c),
+                dz2: Matrix::zeros(meta.b, meta.c),
+                head: tcfg.loss_head,
+            }));
+        }
+        Ok(ServeEngine {
+            graph,
+            cfg,
+            meta,
+            batcher: DeadlineBatcher::new(cfg.deadline_us, cfg.max_batch),
+            lanes,
+            plans: Vec::new(),
+            report: ServeReport::default(),
+        })
+    }
+
+    /// Staged-shape metadata the lanes were prepared for.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Lane count (= concurrent in-flight batches).
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The last [`ServeEngine::serve_trace`] report.
+    pub fn report(&self) -> &ServeReport {
+        &self.report
+    }
+
+    /// Serial replay path: serve explicit node ids, sampling from the
+    /// caller's RNG → `(mean loss, correct count, batch size)`.  Fed the
+    /// trainer's id/RNG stream this is bit-identical to one
+    /// `Trainer::evaluate` batch.
+    pub fn serve_ids(
+        &mut self,
+        ids: &[u32],
+        rng: &mut SplitMix64,
+        snap: &ModelSnapshot,
+    ) -> anyhow::Result<(f32, f32, usize)> {
+        anyhow::ensure!(
+            ids.len() <= self.meta.b,
+            "{} ids exceed the staged batch capacity {} of artifact {}",
+            ids.len(),
+            self.meta.b,
+            self.meta.name
+        );
+        let mut lane = self.lanes[0].lock().unwrap(); // lint: allow(R5, a poisoned lane means a batch worker panicked mid-inference; serving must not continue on half-written scratch)
+        lane.ids.clear();
+        lane.ids.extend_from_slice(ids);
+        let (loss, correct) = lane.infer_ids(self.graph, rng, snap)?;
+        Ok((loss, correct, ids.len()))
+    }
+
+    /// Production path: plan `trace` into deadline/max-batch flushes and
+    /// serve the batches across all lanes.  `slot` is read once per
+    /// batch (at open), so a hot-swap lands between batches, never
+    /// inside one.  The report is committed by batch index — bit-identical
+    /// at any pool size.
+    pub fn serve_trace(
+        &mut self,
+        trace: &[Request],
+        slot: &SnapshotSlot,
+    ) -> anyhow::Result<&ServeReport> {
+        self.batcher.plan(trace, &mut self.plans);
+        let c = self.meta.c;
+        self.report.reset(trace.len(), self.plans.len(), c);
+
+        let graph = self.graph;
+        let seed = self.cfg.seed;
+        let meta_name = &self.meta.name;
+        let plans = &self.plans;
+        let lanes = &self.lanes;
+        let next = AtomicUsize::new(0);
+        let report_mtx = Mutex::new(&mut self.report);
+        let err_mtx: Mutex<Option<(usize, anyhow::Error)>> = Mutex::new(None);
+
+        // Pool parallelism == lane count, so a free lane always exists
+        // for every running worker; try_lock treats poisoned as busy.
+        pool::global().run(lanes.len(), || loop {
+            let b = next.fetch_add(1, Ordering::Relaxed);
+            if b >= plans.len() {
+                break;
+            }
+            let plan = plans[b];
+            // Snapshot captured at batch open: an in-flight batch keeps
+            // serving the weights it started with across a hot-swap.
+            let snap: Arc<ModelSnapshot> = slot.current();
+            let mut lane = 'acquire: loop {
+                for l in lanes {
+                    if let Ok(guard) = l.try_lock() {
+                        break 'acquire guard;
+                    }
+                }
+                std::thread::yield_now();
+            };
+            // Per-batch sampling stream derived from (serve seed, batch
+            // index) — independent of lane assignment and pool size.
+            let mut derive = SplitMix64::new(seed.wrapping_add(b as u64));
+            let mut rng = SplitMix64::new(derive.next_u64());
+            let result = if snap.meta().name == *meta_name {
+                lane.infer_batch(graph, trace, plan, &mut rng, &snap)
+            } else {
+                Err(anyhow::anyhow!(
+                    "snapshot artifact {} does not match engine artifact {}",
+                    snap.meta().name,
+                    meta_name
+                ))
+            };
+            match result {
+                Ok((loss, correct)) => {
+                    let mut rep = report_mtx.lock().unwrap(); // lint: allow(R5, a poisoned report means a sibling batch panicked; partial reports must not be returned)
+                    rep.batch_loss[b] = loss;
+                    rep.batch_correct[b] = correct;
+                    rep.batch_valid[b] = plan.len();
+                    rep.batch_generation[b] = snap.generation();
+                    for i in 0..plan.len() {
+                        let g = plan.lo + i;
+                        rep.queue_us[g] = (plan.flush_us - trace[g].arrival_us) as f64;
+                        let row = lane.logits.row(i);
+                        rep.classes[g] = argmax(row) as u32;
+                        rep.logits[g * c..(g + 1) * c].copy_from_slice(row);
+                    }
+                }
+                Err(e) => {
+                    let mut slot_e = err_mtx.lock().unwrap(); // lint: allow(R5, a poisoned error slot means a sibling batch panicked while reporting; propagating is correct)
+                    // Lowest batch index wins: deterministic error choice.
+                    let replace = match slot_e.as_ref() {
+                        Some((first, _)) => b < *first,
+                        None => true,
+                    };
+                    if replace {
+                        *slot_e = Some((b, e));
+                    }
+                }
+            }
+        });
+
+        drop(report_mtx);
+        let first_err = err_mtx.into_inner().unwrap(); // lint: allow(R5, a poisoned error slot after the barrier means a worker panicked; propagating is correct)
+        if let Some((_, e)) = first_err {
+            return Err(e);
+        }
+        Ok(&self.report)
+    }
+}

@@ -1,0 +1,35 @@
+//! Deadline-batched inference serving with atomic snapshot hot-swap.
+//!
+//! The serving subsystem turns a trained checkpoint into a forward-only
+//! engine that answers node-classification requests under a latency
+//! deadline, without ever leaving the repo's determinism contract:
+//!
+//! - [`snapshot`] — a verified checkpoint restored into an immutable
+//!   [`ModelSnapshot`], shared by `Arc`;
+//! - [`batcher`] — pure deadline/max-batch planning over a sorted
+//!   arrival trace;
+//! - [`engine`] — forward-only execution across recycled lanes, reusing
+//!   the training stack's sampler/arena/backend so a served logit is
+//!   bit-identical to `Trainer::evaluate` on the same node stream;
+//! - [`swap`] — checkpoint-store watching and atomic snapshot
+//!   replacement between batches (torn or checksum-failed generations
+//!   are never served);
+//! - [`loadgen`] — deterministic open-loop Poisson load on a virtual
+//!   clock.
+//!
+//! Everything runs on SplitMix64 streams and virtual microseconds — no
+//! wall clock, no entropy — so a full serve run is bit-reproducible at
+//! any pool size (pinned in `rust/tests/serve.rs`, measured in
+//! `rust/benches/bench_serve.rs`).
+
+pub mod batcher;
+pub mod engine;
+pub mod loadgen;
+pub mod snapshot;
+pub mod swap;
+
+pub use batcher::{BatchPlan, DeadlineBatcher};
+pub use engine::{ServeConfig, ServeEngine, ServeReport};
+pub use loadgen::{open_loop_trace, Request};
+pub use snapshot::ModelSnapshot;
+pub use swap::{SnapshotSlot, SwapOutcome, SwapWatcher};

@@ -1,0 +1,97 @@
+//! Immutable model snapshots: a verified checkpoint turned into the
+//! shareable unit of serving.
+//!
+//! A [`ModelSnapshot`] is built once from a durable checkpoint and never
+//! mutated again — the engine's lanes read it through `Arc` clones, so a
+//! hot-swap is one pointer replacement and an in-flight batch keeps the
+//! `Arc` it captured until it finishes.  Construction replays the
+//! trainer's master-RNG init prefix ([`choose_ordering`]) so the ordering
+//! the snapshot serves under is exactly the ordering the checkpoint was
+//! trained under, and restores the weights through the shape-validated
+//! [`ModelState::restore_from`] path — a checkpoint written under a
+//! different artifact tag is a descriptive error, never silently served.
+
+use std::sync::Arc;
+
+use crate::graph::generate::LabeledGraph;
+use crate::runtime::backend::ComputeBackend;
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::native::NativeBackend;
+use crate::train::trainer::{choose_ordering, ModelState, TrainerConfig};
+use crate::train::Checkpoint;
+use crate::util::matrix::Matrix;
+use crate::util::rng::SplitMix64;
+
+/// An immutable, shape-validated model image plus the serving metadata
+/// derived from it.  Shared via `Arc`; see the module docs for the
+/// hot-swap contract.
+pub struct ModelSnapshot {
+    state: ModelState,
+    meta: ArtifactMeta,
+    ordering: &'static str,
+    step: u64,
+    rng_state: u64,
+    generation: u64,
+}
+
+impl ModelSnapshot {
+    /// Build a snapshot from a verified checkpoint.  `generation` is the
+    /// [`crate::train::CheckpointStore`] generation the bytes came from
+    /// (0 for a checkpoint outside a store); the swap watcher uses it to
+    /// refuse downgrades.
+    pub fn from_checkpoint(
+        graph: &LabeledGraph,
+        cfg: &TrainerConfig,
+        ck: &Checkpoint,
+        generation: u64,
+    ) -> anyhow::Result<Arc<ModelSnapshot>> {
+        // Replay the trainer's master-RNG init prefix exactly: probe
+        // draws → probe sample → ordering choice.  This is what pins the
+        // served forward to the trained one — a different ordering would
+        // still be mathematically equal but not bit-identical.
+        let mut rng = SplitMix64::new(cfg.seed);
+        let mut backend = NativeBackend::new(1);
+        backend.set_dedup(cfg.dedup);
+        let ordering = choose_ordering(graph, cfg, &backend, &mut rng)?;
+        let meta = backend.prepare(&cfg.artifact_tag, cfg.optimizer, ordering, cfg.loss_head)?;
+        let mut state = ModelState {
+            w1: Matrix::zeros(meta.d, meta.h),
+            w2: Matrix::zeros(meta.h, meta.c),
+            v1: Matrix::zeros(meta.d, meta.h),
+            v2: Matrix::zeros(meta.h, meta.c),
+        };
+        let (step, rng_state) = state.restore_from(ck)?;
+        Ok(Arc::new(ModelSnapshot { state, meta, ordering, step, rng_state, generation }))
+    }
+
+    /// The restored weights (immutable — lanes only read them).
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    /// Staged-shape metadata of the artifact this snapshot serves under.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Forward ordering replayed from the training seed.
+    pub fn ordering(&self) -> &'static str {
+        self.ordering
+    }
+
+    /// Training step the checkpoint was written at.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// Trainer RNG cursor at checkpoint time — `SplitMix64::new` of this
+    /// replays the exact sample stream `Trainer::evaluate` would draw.
+    pub fn rng_state(&self) -> u64 {
+        self.rng_state
+    }
+
+    /// Store generation the snapshot was restored from.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}

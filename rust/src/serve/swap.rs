@@ -1,0 +1,158 @@
+//! Atomic snapshot hot-swap: watch a checkpoint store, install new
+//! generations between batches, never serve torn weights.
+//!
+//! Two pieces:
+//!
+//! - [`SnapshotSlot`] — the single mutable cell of the serving data
+//!   path: a mutex-guarded `Arc<ModelSnapshot>`.  Readers clone the
+//!   `Arc` (one lock, one refcount bump); installers replace it.  An
+//!   in-flight batch keeps the clone it captured at batch open, so a
+//!   swap is only ever observed at a batch boundary.
+//! - [`SwapWatcher`] — polls [`CheckpointStore::latest_generation`] (a
+//!   cheap 8-byte footer probe, no parse) and only on a changed probe
+//!   runs the full verified restore.  Every failure mode keeps the old
+//!   snapshot serving: a torn newest generation falls back to the
+//!   newest durable one (and is refused if that would be a downgrade),
+//!   a checksum-failed or shape-mismatched restore counts as a reject.
+//!   The watcher never installs bytes that did not pass the checkpoint
+//!   checksum and the shape-validated restore path.
+
+use std::sync::{Arc, Mutex};
+
+use crate::graph::generate::LabeledGraph;
+use crate::serve::snapshot::ModelSnapshot;
+use crate::train::trainer::TrainerConfig;
+use crate::train::{CheckpointStore, GenerationProbe};
+
+/// The swap point: current snapshot behind a mutex, shared with every
+/// serving worker.
+pub struct SnapshotSlot {
+    inner: Mutex<Arc<ModelSnapshot>>,
+}
+
+impl SnapshotSlot {
+    pub fn new(snapshot: Arc<ModelSnapshot>) -> Self {
+        SnapshotSlot { inner: Mutex::new(snapshot) }
+    }
+
+    /// Clone the current snapshot handle (called once per batch open).
+    pub fn current(&self) -> Arc<ModelSnapshot> {
+        self.inner.lock().unwrap().clone() // lint: allow(R5, a poisoned slot means an installer panicked mid-swap; serving must not continue on unknown weights)
+    }
+
+    /// Replace the served snapshot; returns the generation it displaced.
+    pub fn install(&self, snapshot: Arc<ModelSnapshot>) -> u64 {
+        let mut cur = self.inner.lock().unwrap(); // lint: allow(R5, a poisoned slot means an installer panicked mid-swap; a second installer must not race unknown state)
+        let old = cur.generation();
+        *cur = snapshot;
+        old
+    }
+}
+
+/// What one [`SwapWatcher::poll`] did.
+#[derive(Debug)]
+pub enum SwapOutcome {
+    /// Nothing new, or the newest durable generation is not ahead of
+    /// what the slot already serves.
+    Unchanged,
+    /// A newer verified generation was installed.
+    Swapped {
+        generation: u64,
+        step: u64,
+        /// Torn/corrupt newer files skipped on the way to this one.
+        fell_back: usize,
+    },
+    /// The store changed but nothing servable came out of it — the old
+    /// snapshot keeps serving.
+    Rejected { generation: u64, reason: String },
+}
+
+/// Polls a [`CheckpointStore`] and hot-swaps a [`SnapshotSlot`].
+pub struct SwapWatcher {
+    store: CheckpointStore,
+    /// Last probe we acted on — an unchanged footer means no restore.
+    acted_on: Option<GenerationProbe>,
+    pub swaps: u64,
+    pub fallbacks: u64,
+    pub rejects: u64,
+}
+
+impl SwapWatcher {
+    pub fn new(store: CheckpointStore) -> Self {
+        SwapWatcher { store, acted_on: None, swaps: 0, fallbacks: 0, rejects: 0 }
+    }
+
+    pub fn store(&self) -> &CheckpointStore {
+        &self.store
+    }
+
+    /// Record the store's current probe as already acted on, so the
+    /// first poll after building the initial snapshot from this store
+    /// skips the redundant restore.
+    pub fn mark_current(&mut self) -> anyhow::Result<()> {
+        self.acted_on = self.store.latest_generation()?;
+        Ok(())
+    }
+
+    /// One poll: cheap probe → (on change) verified restore → install if
+    /// strictly newer.  Errors out of this function are store-level I/O
+    /// failures (unreadable directory); content failures (torn file,
+    /// checksum mismatch, wrong shapes) are [`SwapOutcome::Rejected`] or
+    /// a counted fallback, and the slot is untouched by them.
+    pub fn poll(
+        &mut self,
+        graph: &LabeledGraph,
+        cfg: &TrainerConfig,
+        slot: &SnapshotSlot,
+    ) -> anyhow::Result<SwapOutcome> {
+        let Some(probe) = self.store.latest_generation()? else {
+            return Ok(SwapOutcome::Unchanged);
+        };
+        if self.acted_on == Some(probe) {
+            return Ok(SwapOutcome::Unchanged);
+        }
+        self.acted_on = Some(probe);
+        let restored = match self.store.load_latest() {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(SwapOutcome::Unchanged),
+            Err(e) => {
+                // Every generation failed verification; keep serving.
+                self.rejects += 1;
+                return Ok(SwapOutcome::Rejected {
+                    generation: probe.generation,
+                    reason: e.to_string(),
+                });
+            }
+        };
+        self.fallbacks += restored.fell_back as u64;
+        if restored.generation <= slot.current().generation() {
+            // The newest durable generation is what we already serve
+            // (e.g. the probed newest file was torn and load_latest fell
+            // back); never downgrade.
+            return Ok(SwapOutcome::Unchanged);
+        }
+        let restore =
+            ModelSnapshot::from_checkpoint(graph, cfg, &restored.checkpoint, restored.generation);
+        let snapshot = match restore {
+            Ok(s) => s,
+            Err(e) => {
+                // Checksum passed but the contents don't fit this
+                // serving config (wrong artifact shapes, missing
+                // cursors) — refuse, keep serving.
+                self.rejects += 1;
+                return Ok(SwapOutcome::Rejected {
+                    generation: restored.generation,
+                    reason: e.to_string(),
+                });
+            }
+        };
+        let step = snapshot.step();
+        slot.install(snapshot);
+        self.swaps += 1;
+        Ok(SwapOutcome::Swapped {
+            generation: restored.generation,
+            step,
+            fell_back: restored.fell_back,
+        })
+    }
+}

@@ -207,6 +207,19 @@ pub struct CheckpointStore {
     keep: usize,
 }
 
+/// Cheap identity of the newest on-disk generation: the generation
+/// number (from the filename) plus the file's trailing 8 bytes — the v3
+/// checksum footer for a complete file, arbitrary payload bytes for a
+/// torn one.  Either way it is a **change-detection fingerprint**, never
+/// an integrity proof: the serving-side swap watcher polls this per tick
+/// and only pays for a full (verified) [`CheckpointStore::load_latest`]
+/// when the probe differs from the last one it acted on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenerationProbe {
+    pub generation: u64,
+    pub fingerprint: u64,
+}
+
 /// What [`CheckpointStore::load_latest`] found.
 pub struct RestoredCheckpoint {
     pub checkpoint: Checkpoint,
@@ -293,6 +306,38 @@ impl CheckpointStore {
             }
         }
         Ok(())
+    }
+
+    /// Probe the newest generation without parsing or verifying it: a
+    /// directory listing plus one 8-byte read of the file's tail (the v3
+    /// checksum footer when the write completed).  `Ok(None)` when the
+    /// store is empty.  Overwriting a generation in place (e.g. a good
+    /// write landing over a previously torn file of the same step)
+    /// changes the fingerprint even though the generation number does
+    /// not, so a poller never misses the repair.
+    pub fn latest_generation(&self) -> anyhow::Result<Option<GenerationProbe>> {
+        use std::io::{Seek, SeekFrom};
+        let gens = self.generations()?;
+        let Some(&generation) = gens.last() else { return Ok(None) };
+        let path = self.gen_path(generation);
+        let mut f = std::fs::File::open(&path)
+            .map_err(|e| anyhow::anyhow!("probe checkpoint {}: {e}", path.display()))?;
+        let len = f
+            .metadata()
+            .map_err(|e| anyhow::anyhow!("probe checkpoint {}: {e}", path.display()))?
+            .len();
+        let fingerprint = if len >= 8 {
+            f.seek(SeekFrom::End(-8))
+                .map_err(|e| anyhow::anyhow!("probe checkpoint {}: {e}", path.display()))?;
+            let mut tail = [0u8; 8];
+            f.read_exact(&mut tail)
+                .map_err(|e| anyhow::anyhow!("probe checkpoint {}: {e}", path.display()))?;
+            u64::from_le_bytes(tail)
+        } else {
+            // Degenerate sub-footer file: the length is all we have.
+            len
+        };
+        Ok(Some(GenerationProbe { generation, fingerprint }))
     }
 
     /// Load the newest generation that parses, falling back past torn or
@@ -472,6 +517,53 @@ mod tests {
         assert_eq!(restored.generation, 10, "must fall back to generation K-1");
         assert_eq!(restored.fell_back, 1);
         assert_eq!(restored.checkpoint.scalar("step"), Some(10));
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn latest_generation_probe_tracks_saves_without_parsing() {
+        let store = fresh_store("probe", 3);
+        assert!(store.latest_generation().unwrap().is_none());
+        store.save(&stamped(5)).unwrap();
+        let p5 = store.latest_generation().unwrap().unwrap();
+        assert_eq!(p5.generation, 5);
+        // The fingerprint of a complete file is the v3 checksum footer.
+        let bytes = stamped(5).to_bytes();
+        let footer = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        assert_eq!(p5.fingerprint, footer);
+        // Polling is stable: no write, no change.
+        assert_eq!(store.latest_generation().unwrap().unwrap(), p5);
+        store.save(&stamped(10)).unwrap();
+        let p10 = store.latest_generation().unwrap().unwrap();
+        assert_eq!(p10.generation, 10);
+        assert_ne!(p10, p5);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn latest_generation_probe_survives_the_torn_write_race() {
+        // The race the swap watcher must live through: the newest
+        // generation lands torn (writer died mid-write), then a later
+        // writer completes the same step.  The probe must (a) still
+        // answer on the torn file, (b) report a change when the good
+        // bytes land over it, and (c) never be confused with
+        // verification — load_latest is what decides the torn file is
+        // unusable and falls back.
+        let store = fresh_store("probe_torn", 3);
+        store.save(&stamped(10)).unwrap();
+        store.save_torn(&stamped(15)).unwrap();
+        let torn = store.latest_generation().unwrap().unwrap();
+        assert_eq!(torn.generation, 15, "probe sees the newest file, torn or not");
+        let restored = store.load_latest().unwrap().unwrap();
+        assert_eq!(restored.generation, 10, "verification falls back past the torn file");
+        assert_eq!(restored.fell_back, 1);
+        // Good bytes land over the torn generation: same filename, new
+        // fingerprint (payload tail != checksum footer for this data).
+        store.save(&stamped(15)).unwrap();
+        let good = store.latest_generation().unwrap().unwrap();
+        assert_eq!(good.generation, 15);
+        assert_ne!(good.fingerprint, torn.fingerprint, "in-place repair must be visible");
+        assert_eq!(store.load_latest().unwrap().unwrap().generation, 15);
         std::fs::remove_dir_all(store.dir()).ok();
     }
 

@@ -14,6 +14,6 @@ pub mod reference;
 pub mod trainer;
 
 pub use batch::StagedBatch;
-pub use checkpoint::{Checkpoint, CheckpointStore, RestoredCheckpoint};
+pub use checkpoint::{Checkpoint, CheckpointStore, GenerationProbe, RestoredCheckpoint};
 pub use metrics::LossCurve;
 pub use trainer::{LossHead, ModelState, Optimizer, Trainer, TrainerConfig};
